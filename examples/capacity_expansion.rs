@@ -1,0 +1,14 @@
+//! Fig 18 scenario: instead of pocketing the cost savings, spend them on
+//! *more* secondary memory — a 32 GB-DRAM server gains 128 GB of CXL memory
+//! (scaled 1000× here). The Aerospike-like store fits 1.9 M items that OOM
+//! the DRAM-only box; the RocksDB-like store gets a 4× block cache; the
+//! CacheLib-like store gets a 4× tier-1 cache.
+//!
+//! Run: `cargo run --release --example capacity_expansion`
+
+use cxlkvs::coordinator::experiments::fig18;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    fig18(fast_mode()).print();
+}

@@ -1,0 +1,16 @@
+//! §5.1 cost-performance analysis: measure throughput degradation of all
+//! three KV stores on flash-class memory (5 µs + tail-latency profile) and
+//! compressed-DRAM-class memory (0.8 µs), then compute Table 6's
+//! cost-performance ratios with Eq 16.
+//!
+//! Run: `cargo run --release --example cost_perf` (CXLKVS_FAST=1 for quick)
+
+use cxlkvs::coordinator::experiments::table6;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let report = table6(fast_mode());
+    report.print();
+    println!("CPR r > 1 means replacing DRAM with the secondary memory");
+    println!("improves system cost-performance despite the slowdown.");
+}

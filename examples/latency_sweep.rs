@@ -1,0 +1,28 @@
+//! End-to-end driver (the repo's headline validation): run the full stack —
+//! three KV stores on the simulated testbed, sweeping memory latency from
+//! DRAM-class to 10 µs, overlaying the throughput models evaluated through
+//! the AOT-compiled JAX+Pallas artifact via PJRT — and report the paper's
+//! headline metric (normalized throughput vs memory latency).
+//!
+//! This exercises every layer: L1 Pallas kernel (inside the artifact),
+//! L2 JAX model (the artifact), L3 Rust (simulator + KV stores + PJRT
+//! runtime + coordinator).
+//!
+//! Run: `make artifacts && cargo run --release --example latency_sweep`
+//! (set CXLKVS_FAST=1 for a quicker pass)
+
+use cxlkvs::coordinator::experiments::{fig11_kvs, ModelBackend};
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let mut backend = ModelBackend::auto();
+    println!("model backend: {}", backend.name());
+    if matches!(backend, ModelBackend::Native) {
+        eprintln!("hint: run `make artifacts` to evaluate models through PJRT");
+    }
+    let fast = fast_mode();
+    for report in fig11_kvs(&mut backend, fast) {
+        report.print();
+    }
+    println!("(normalized-throughput columns: measured vs masking-only vs our model)");
+}

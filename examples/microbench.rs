@@ -1,0 +1,62 @@
+//! The paper's §4.1 microbenchmark (Fig 9): M pointer-chasing accesses on
+//! microsecond-latency memory followed by one SSD IO, driven by user-level
+//! threads with prefetch+yield. Prints measured vs model throughput across
+//! latencies and thread counts.
+//!
+//! Run: `cargo run --release --example microbench [M] [T_mem_ns]`
+
+use cxlkvs::coordinator::runner::{best_threads, run_microbench, SweepCfg};
+use cxlkvs::microbench::MicrobenchConfig;
+use cxlkvs::model::{theta_mask_recip, theta_prob_recip, OpParams, SysParams};
+use cxlkvs::sim::Dur;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let m: u32 = args.first().and_then(|s| s.parse().ok()).unwrap_or(10);
+    let t_mem_ns: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100.0);
+
+    let mb = MicrobenchConfig {
+        m,
+        t_mem: Dur::ns(t_mem_ns),
+        ..Default::default()
+    };
+    let op = OpParams {
+        m: m as f64,
+        t_mem: t_mem_ns / 1000.0,
+        t_pre: 1.5,
+        t_post: 0.2,
+    };
+    let sys = SysParams::measured_testbed(1_000_000);
+
+    println!("microbenchmark: M={m} T_mem={t_mem_ns}ns T_pre=1.5us T_post=0.2us");
+    println!(
+        "{:>9} {:>8} {:>12} {:>9} {:>9} {:>9}",
+        "L_mem", "threads", "ops/sec", "norm", "masking", "ours"
+    );
+    let mut dram = 0.0;
+    let (mask0, prob0) = (
+        theta_mask_recip(&op, 0.1, &sys),
+        theta_prob_recip(&op, 0.1, &sys),
+    );
+    for l in [0.1, 0.3, 0.5, 1.0, 2.0, 3.0, 5.0, 8.0, 10.0] {
+        let sweep = SweepCfg {
+            l_mem: Dur::us(l),
+            ..Default::default()
+        };
+        let (n, st) = best_threads(&sweep.thread_candidates.clone(), |n| {
+            run_microbench(&mb, &sweep, n)
+        });
+        if dram == 0.0 {
+            dram = st.ops_per_sec;
+        }
+        println!(
+            "{:>7.1}us {:>8} {:>12.0} {:>9.3} {:>9.3} {:>9.3}",
+            l,
+            n,
+            st.ops_per_sec,
+            st.ops_per_sec / dram,
+            mask0 / theta_mask_recip(&op, l, &sys),
+            prob0 / theta_prob_recip(&op, l, &sys),
+        );
+    }
+}

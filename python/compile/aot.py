@@ -1,0 +1,56 @@
+"""AOT compilation: lower the Layer-2 JAX models to HLO *text* artifacts the
+Rust runtime loads through the PJRT C API (`xla` crate).
+
+HLO text — not `lowered.compile().serialize()` — is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+image's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(batch: int):
+    """Return {artifact_name: hlo_text} for every exported entry point."""
+    base_spec = jax.ShapeDtypeStruct((batch, model.BASE_COLS), jnp.float32)
+    ext_spec = jax.ShapeDtypeStruct((batch, model.EXT_COLS), jnp.float32)
+    return {
+        f"model_base_b{batch}.hlo.txt": to_hlo_text(jax.jit(model.eval_base).lower(base_spec)),
+        f"model_extended_b{batch}.hlo.txt": to_hlo_text(
+            jax.jit(model.eval_extended).lower(ext_spec)
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=model.BATCH)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, text in lower_all(args.batch).items():
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

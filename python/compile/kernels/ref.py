@@ -1,0 +1,177 @@
+"""Pure-jnp reference oracle for the throughput-model kernels.
+
+This module is the correctness ground truth for the Pallas kernel in
+``throughput.py`` (tested by pytest/hypothesis), and the oracle the
+Rust-native implementation (rust/src/model/) is cross-validated against
+through the AOT artifact.
+
+All equations follow the paper's §3 (see DESIGN.md §5 for the mapping).
+Times are in microseconds. Everything is batched: parameter arrays of
+shape [B] produce outputs of shape [B].
+"""
+
+import jax.numpy as jnp
+from jax.scipy.special import gammaln
+
+# Static grid bounds for the truncated (j, k) expectation sums. The paper's
+# P is ~10-12 and the multinomial tail vanishes geometrically with base
+# 1/(M+2) <= 1/3, so K_MAX=64 is far past f32 underflow.
+J_MAX = 16  # j ranges over 0..=J_MAX (masked by the runtime P)
+K_MAX = 64  # k ranges over 0..=K_MAX
+
+
+def ln_choose_terms(p, j, k):
+    """log[(P+k)! / ((P-j)! j! k!)] with float P (gammaln-based)."""
+    return (
+        gammaln(p + k + 1.0)
+        - gammaln(p - j + 1.0)
+        - gammaln(j + 1.0)
+        - gammaln(k + 1.0)
+    )
+
+
+def theta_single_recip(t_mem, l_mem):
+    """Eq 1."""
+    return t_mem + l_mem
+
+
+def theta_multi_recip(t_mem, l_mem, t_sw, n):
+    """Eq 2."""
+    return jnp.maximum(t_mem + t_sw, (t_mem + l_mem) / n)
+
+
+def theta_mem_recip(t_mem, l_mem, t_sw, p, n):
+    """Eq 3."""
+    return jnp.maximum(theta_multi_recip(t_mem, l_mem, t_sw, n), l_mem / p)
+
+
+def e_offset(t_pre, t_post, t_sw):
+    """Eq 6."""
+    return t_pre + t_post + 2.0 * t_sw
+
+
+def theta_mask_recip(m, t_mem, t_pre, t_post, l_mem, t_sw, p, n):
+    """Eq 5."""
+    return m * theta_mem_recip(t_mem, l_mem, t_sw, p, n) + e_offset(t_pre, t_post, t_sw)
+
+
+def theta_best_recip(m, t_mem, t_pre, t_post, l_mem, t_sw, p):
+    """Eq 7."""
+    e = e_offset(t_pre, t_post, t_sw)
+    return jnp.maximum(m * (t_mem + t_sw) + e, m * l_mem / p)
+
+
+def wait_subop(m, t_mem, t_pre, t_post, l_mem, t_sw, p):
+    """Eq 10-12: expected prefetch wait time per suboperation.
+
+    All arguments are [B] float arrays (`p` is the integer prefetch depth as
+    a float).
+    """
+    b = m.shape[0]
+    j = jnp.arange(J_MAX + 1, dtype=jnp.float32)[None, :, None]  # [1,J,1]
+    k = jnp.arange(K_MAX + 1, dtype=jnp.float32)[None, None, :]  # [1,1,K]
+    m_ = m[:, None, None]
+    p_ = p[:, None, None]
+
+    ln_q_mem = jnp.log(m_ / (m_ + 2.0))
+    ln_q_io = -jnp.log(m_ + 2.0)
+    ln_pr = ln_choose_terms(p_, j, k) + (p_ - j) * ln_q_mem + (j + k) * ln_q_io
+    valid = j <= p_
+    pr = jnp.where(valid, jnp.exp(ln_pr), 0.0)
+
+    t_wait = jnp.maximum(
+        0.0,
+        l_mem[:, None, None]
+        - p_ * (t_mem + t_sw)[:, None, None]
+        - j * (t_pre - t_mem)[:, None, None]
+        - k * (t_post + t_sw)[:, None, None],
+    )
+    num = jnp.sum(pr * t_wait, axis=(1, 2))
+    den = jnp.sum(pr * (p_ + k), axis=(1, 2))
+    out = jnp.where(den > 0.0, num / jnp.maximum(den, 1e-30), 0.0)
+    return out.reshape(b)
+
+
+def theta_prob_recip(m, t_mem, t_pre, t_post, l_mem, t_sw, p):
+    """Eq 13."""
+    w = wait_subop(m, t_mem, t_pre, t_post, l_mem, t_sw, p)
+    return m * (t_mem + t_sw) + e_offset(t_pre, t_post, t_sw) + (m + 2.0) * w
+
+
+# ---------------------------------------------------------------------------
+# Extended model (Eq 14-15): the §3.2.3 three-category generalization.
+# ---------------------------------------------------------------------------
+
+K1_MAX = 48  # post-IO insertions
+K2_MAX = 32  # post-eviction insertions
+
+
+def theta_rev_recip(
+    m, t_mem, t_pre, t_post, l_mem, t_sw, p, rho, eps, a_mem, b_mem, l_dram
+):
+    """Θ_rev⁻¹ with tiering ρ, eviction ε, and the memory-bandwidth floor."""
+    b = m.shape[0]
+    j = jnp.arange(J_MAX + 1, dtype=jnp.float32)[None, :, None, None]
+    k1 = jnp.arange(K1_MAX + 1, dtype=jnp.float32)[None, None, :, None]
+    k2 = jnp.arange(K2_MAX + 1, dtype=jnp.float32)[None, None, None, :]
+    m_ = m[:, None, None, None]
+    p_ = p[:, None, None, None]
+
+    l_tier = rho * l_mem + (1.0 - rho) * l_dram  # [B]
+    l_tier_ = l_tier[:, None, None, None]
+    bw_floor = (p_ - j) * (a_mem / b_mem)[:, None, None, None]
+    l_eff = jnp.maximum(l_tier_, bw_floor)
+
+    q_mem = (1.0 - eps) * m / (m + 2.0)
+    q_pre = 1.0 / (m + 2.0)
+    q_post = 1.0 / (m + 2.0)
+    q_ev = eps * m / (m + 2.0)
+
+    tiny = 1e-30
+    ln_pr = (
+        gammaln(p_ + k1 + k2 + 1.0)
+        - gammaln(p_ - j + 1.0)
+        - gammaln(j + 1.0)
+        - gammaln(k1 + 1.0)
+        - gammaln(k2 + 1.0)
+        + (p_ - j) * jnp.log(jnp.maximum(q_mem, tiny))[:, None, None, None]
+        + j * jnp.log(q_pre)[:, None, None, None]
+        + k1 * jnp.log(q_post)[:, None, None, None]
+        + k2 * jnp.log(jnp.maximum(q_ev, tiny))[:, None, None, None]
+    )
+    valid = j <= p_
+    # When eps == 0, only k2 == 0 contributes (q_ev^0 = 1).
+    eps_ = eps[:, None, None, None]
+    k2_ok = jnp.logical_or(eps_ > 0.0, k2 == 0.0)
+    pr = jnp.where(jnp.logical_and(valid, k2_ok), jnp.exp(ln_pr), 0.0)
+
+    t_wait = jnp.maximum(
+        0.0,
+        l_eff
+        - p_ * (t_mem + t_sw)[:, None, None, None]
+        - j * (t_pre - t_mem)[:, None, None, None]
+        - k1 * (t_post + t_sw)[:, None, None, None]
+        - k2 * (l_tier_ + t_sw[:, None, None, None]),
+    )
+    num = jnp.sum(pr * t_wait, axis=(1, 2, 3))
+    den = jnp.sum(pr * (p_ + k1 + k2), axis=(1, 2, 3))
+    w = jnp.where(den > 0.0, num / jnp.maximum(den, tiny), 0.0).reshape(b)
+
+    return (
+        m * (t_mem + t_sw)
+        + e_offset(t_pre, t_post, t_sw)
+        + (m + 2.0) * w
+        + eps * m * l_tier
+    )
+
+
+def theta_extended_recip(
+    m, t_mem, t_pre, t_post, l_mem, t_sw, p,
+    rho, eps, a_mem, b_mem, l_dram, a_io, b_io, r_io, s,
+):
+    """Eq 14: whole-op reciprocal with S IOs and the SSD floors."""
+    per_io = theta_rev_recip(
+        m, t_mem, t_pre, t_post, l_mem, t_sw, p, rho, eps, a_mem, b_mem, l_dram
+    )
+    whole = s * per_io
+    return jnp.maximum(jnp.maximum(whole, s * a_io / b_io), s / r_io)

@@ -1,0 +1,95 @@
+"""Layer-1 Pallas kernel: batched expected-prefetch-wait computation.
+
+The compute hot-spot of the reproduction's model layer is Eq 12's truncated
+multinomial expectation — for every parameter tuple, a reduction over a
+(J_MAX+1) x (K_MAX+1) grid of window configurations. The kernel evaluates a
+block of `BB` parameter tuples per grid step with the whole (j, k) reduction
+unrolled in-block.
+
+TPU-adaptation notes (DESIGN.md §3): the batch is the grid dimension, the
+per-block working set is BB x (J_MAX+1) x (K_MAX+1) f32 ≈ 280 kB at BB=64 —
+comfortably VMEM-resident; the reduction feeds the VPU (it is elementwise +
+reduce, not a matmul, so the MXU is idle by design). `interpret=True` is
+required: the CPU PJRT plugin cannot execute Mosaic custom-calls, and the
+AOT artifact must run on the Rust CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.scipy.special import gammaln
+
+from . import ref
+
+J_MAX = ref.J_MAX
+K_MAX = ref.K_MAX
+
+# Default batch-block size. The AOT batch is 64, done in one grid step.
+BB = 64
+
+
+def _wait_kernel(params_ref, out_ref):
+    """params_ref: [BB, 8] f32 (m, t_mem, t_pre, t_post, l_mem, t_sw, p, _pad).
+
+    out_ref: [BB] f32 — expected prefetch wait per suboperation (Eq 12).
+    """
+    params = params_ref[...]
+    m = params[:, 0][:, None, None]
+    t_mem = params[:, 1][:, None, None]
+    t_pre = params[:, 2][:, None, None]
+    t_post = params[:, 3][:, None, None]
+    l_mem = params[:, 4][:, None, None]
+    t_sw = params[:, 5][:, None, None]
+    p = params[:, 6][:, None, None]
+
+    j = jax.lax.broadcasted_iota(jnp.float32, (1, J_MAX + 1, K_MAX + 1), 1)
+    k = jax.lax.broadcasted_iota(jnp.float32, (1, J_MAX + 1, K_MAX + 1), 2)
+
+    ln_q_mem = jnp.log(m / (m + 2.0))
+    ln_q_io = -jnp.log(m + 2.0)
+    ln_pr = (
+        gammaln(p + k + 1.0)
+        - gammaln(p - j + 1.0)
+        - gammaln(j + 1.0)
+        - gammaln(k + 1.0)
+        + (p - j) * ln_q_mem
+        + (j + k) * ln_q_io
+    )
+    pr = jnp.where(j <= p, jnp.exp(ln_pr), 0.0)
+
+    t_wait = jnp.maximum(
+        0.0,
+        l_mem - p * (t_mem + t_sw) - j * (t_pre - t_mem) - k * (t_post + t_sw),
+    )
+    num = jnp.sum(pr * t_wait, axis=(1, 2))
+    den = jnp.sum(pr * (p + k), axis=(1, 2))
+    out_ref[...] = jnp.where(den > 0.0, num / jnp.maximum(den, 1e-30), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def wait_subop_pallas(params, block=BB):
+    """Batched Eq 12 via the Pallas kernel.
+
+    params: [B, 8] f32 with columns (m, t_mem, t_pre, t_post, l_mem, t_sw, p,
+    pad). B must be a multiple of `block`.
+    """
+    b = params.shape[0]
+    assert b % block == 0, f"batch {b} not a multiple of block {block}"
+    return pl.pallas_call(
+        _wait_kernel,
+        grid=(b // block,),
+        in_specs=[pl.BlockSpec((block, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(params)
+
+
+def theta_prob_recip_pallas(params, block=BB):
+    """Eq 13 assembled around the kernel. params as in wait_subop_pallas."""
+    w = wait_subop_pallas(params, block=block)
+    m, t_mem, t_pre, t_post = params[:, 0], params[:, 1], params[:, 2], params[:, 3]
+    t_sw = params[:, 5]
+    return m * (t_mem + t_sw) + ref.e_offset(t_pre, t_post, t_sw) + (m + 2.0) * w

@@ -1,0 +1,61 @@
+"""Layer-2 JAX model: the full family of §3 throughput models, assembled
+around the Layer-1 Pallas kernel, as jit-able functions with a fixed batch.
+
+Two entry points are AOT-lowered (see aot.py) and executed from Rust:
+
+- ``eval_base(x)``   — x: [B, 8]  → [B, 6] reciprocal throughputs
+  columns in:  (M, T_mem, T_pre, T_post, L_mem, T_sw, P, N)
+  columns out: (single, multi, mem, mask, best, prob)
+
+- ``eval_extended(x)`` — x: [B, 16] → [B, 2] reciprocal throughputs
+  columns in:  (M, T_mem, T_pre, T_post, L_mem, T_sw, P,
+                rho, eps, A_mem, B_mem, L_dram, A_IO, B_IO, R_IO, S)
+  columns out: (rev, extended)
+
+Times in µs, sizes in bytes, bandwidths in bytes/µs, rates in IO/µs —
+identical to rust/src/model/. Python runs only at `make artifacts` time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.throughput import theta_prob_recip_pallas
+
+BATCH = 64
+
+BASE_COLS = 8
+EXT_COLS = 16
+
+
+def eval_base(x):
+    """[B, 8] → [B, 6]: all §3.1/§3.2 base-model reciprocal throughputs."""
+    m, t_mem, t_pre, t_post = x[:, 0], x[:, 1], x[:, 2], x[:, 3]
+    l_mem, t_sw, p, n = x[:, 4], x[:, 5], x[:, 6], x[:, 7]
+
+    single = ref.theta_single_recip(t_mem, l_mem)
+    multi = ref.theta_multi_recip(t_mem, l_mem, t_sw, n)
+    mem = ref.theta_mem_recip(t_mem, l_mem, t_sw, p, n)
+    mask = ref.theta_mask_recip(m, t_mem, t_pre, t_post, l_mem, t_sw, p, n)
+    best = ref.theta_best_recip(m, t_mem, t_pre, t_post, l_mem, t_sw, p)
+    # The hot path: Eq 13 via the Pallas kernel. The kernel consumes the
+    # first 8 columns directly (col 7 is ignored as padding there).
+    prob = theta_prob_recip_pallas(x)
+
+    return jnp.stack([single, multi, mem, mask, best, prob], axis=1)
+
+
+def eval_extended(x):
+    """[B, 16] → [B, 2]: Θ_rev⁻¹ and Θ_extended⁻¹ (Eq 14-15)."""
+    (m, t_mem, t_pre, t_post, l_mem, t_sw, p) = (
+        x[:, 0], x[:, 1], x[:, 2], x[:, 3], x[:, 4], x[:, 5], x[:, 6],
+    )
+    (rho, eps, a_mem, b_mem, l_dram, a_io, b_io, r_io) = (
+        x[:, 7], x[:, 8], x[:, 9], x[:, 10], x[:, 11], x[:, 12], x[:, 13], x[:, 14],
+    )
+    s = x[:, 15]
+
+    rev = ref.theta_rev_recip(
+        m, t_mem, t_pre, t_post, l_mem, t_sw, p, rho, eps, a_mem, b_mem, l_dram
+    )
+    ext = jnp.maximum(jnp.maximum(s * rev, s * a_io / b_io), s / r_io)
+    return jnp.stack([rev, ext], axis=1)

@@ -1,0 +1,108 @@
+"""L1 correctness: the Pallas kernel against the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.throughput import BB, theta_prob_recip_pallas, wait_subop_pallas
+
+
+def pack(m, t_mem, t_pre, t_post, l_mem, t_sw, p, batch=BB):
+    """Broadcast scalars/arrays into a [batch, 8] parameter matrix."""
+    cols = [m, t_mem, t_pre, t_post, l_mem, t_sw, p, 0.0]
+    out = np.zeros((batch, 8), dtype=np.float32)
+    for i, c in enumerate(cols):
+        out[:, i] = c
+    return jnp.asarray(out)
+
+
+def table1_row(l_mem):
+    return dict(m=10.0, t_mem=0.1, t_pre=4.0, t_post=3.0, l_mem=l_mem, t_sw=0.05, p=10.0)
+
+
+class TestKernelVsRef:
+    def test_wait_matches_ref_at_table1(self):
+        for l in [0.1, 0.5, 1.0, 2.0, 5.0, 10.0]:
+            params = pack(**table1_row(l))
+            got = wait_subop_pallas(params)
+            want = ref.wait_subop(
+                params[:, 0], params[:, 1], params[:, 2], params[:, 3],
+                params[:, 4], params[:, 5], params[:, 6],
+            )
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_theta_prob_matches_ref(self):
+        params = pack(**table1_row(5.0))
+        got = theta_prob_recip_pallas(params)
+        want = ref.theta_prob_recip(
+            params[:, 0], params[:, 1], params[:, 2], params[:, 3],
+            params[:, 4], params[:, 5], params[:, 6],
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_heterogeneous_batch(self):
+        """Each batch row gets independent parameters."""
+        rng = np.random.default_rng(0)
+        x = np.zeros((BB, 8), dtype=np.float32)
+        x[:, 0] = rng.integers(1, 16, BB)          # M
+        x[:, 1] = rng.uniform(0.05, 0.2, BB)       # T_mem
+        x[:, 2] = rng.uniform(0.5, 4.0, BB)        # T_pre
+        x[:, 3] = rng.uniform(0.1, 3.0, BB)        # T_post
+        x[:, 4] = rng.uniform(0.1, 10.0, BB)       # L_mem
+        x[:, 5] = 0.05                             # T_sw
+        x[:, 6] = rng.integers(4, ref.J_MAX, BB)   # P
+        got = wait_subop_pallas(jnp.asarray(x))
+        want = ref.wait_subop(
+            *(jnp.asarray(x[:, i]) for i in range(7))
+        )
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+    def test_multiple_grid_blocks(self):
+        """B > BB exercises the batch grid dimension."""
+        params = jnp.concatenate(
+            [pack(**table1_row(2.0)), pack(**table1_row(8.0))], axis=0
+        )
+        got = wait_subop_pallas(params, block=BB)
+        assert got.shape == (2 * BB,)
+        np.testing.assert_allclose(got[:BB], got[0], rtol=1e-6)
+        assert float(got[BB]) > float(got[0])
+
+    def test_batch_must_be_block_multiple(self):
+        with pytest.raises(AssertionError):
+            wait_subop_pallas(jnp.zeros((BB + 1, 8), jnp.float32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=15),
+    t_mem=st.floats(min_value=0.05, max_value=0.25),
+    t_pre=st.floats(min_value=0.2, max_value=4.0),
+    t_post=st.floats(min_value=0.1, max_value=3.0),
+    l_mem=st.floats(min_value=0.05, max_value=12.0),
+    p=st.integers(min_value=2, max_value=ref.J_MAX),
+)
+def test_hypothesis_kernel_equals_ref(m, t_mem, t_pre, t_post, l_mem, p):
+    params = pack(m=float(m), t_mem=t_mem, t_pre=t_pre, t_post=t_post,
+                  l_mem=l_mem, t_sw=0.05, p=float(p))
+    got = wait_subop_pallas(params)
+    want = ref.wait_subop(
+        params[:, 0], params[:, 1], params[:, 2], params[:, 3],
+        params[:, 4], params[:, 5], params[:, 6],
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    batch_blocks=st.integers(min_value=1, max_value=3),
+    l_mem=st.floats(min_value=0.1, max_value=10.0),
+)
+def test_hypothesis_shapes(batch_blocks, l_mem):
+    b = batch_blocks * BB
+    params = pack(**table1_row(l_mem), batch=b)
+    out = wait_subop_pallas(params)
+    assert out.shape == (b,)
+    assert bool(jnp.all(out >= 0.0))
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,104 @@
+"""L2 model properties: paper's worked examples and structural invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def arr(v, b=4):
+    return jnp.full((b,), v, dtype=jnp.float32)
+
+
+def base_x(l_mem, b=model.BATCH, m=10.0, t_mem=0.1, t_pre=4.0, t_post=3.0,
+           t_sw=0.05, p=10.0, n=1e6):
+    x = np.zeros((b, model.BASE_COLS), dtype=np.float32)
+    x[:] = [m, t_mem, t_pre, t_post, l_mem, t_sw, p, n]
+    return jnp.asarray(x)
+
+
+def ext_x(l_mem, b=model.BATCH, m=10.0, t_mem=0.1, t_pre=4.0, t_post=3.0,
+          t_sw=0.05, p=10.0, rho=1.0, eps=0.0, a_mem=64.0, b_mem=1e9,
+          l_dram=0.09, a_io=1536.0, b_io=10000.0, r_io=2.2, s=1.0):
+    x = np.zeros((b, model.EXT_COLS), dtype=np.float32)
+    x[:] = [m, t_mem, t_pre, t_post, l_mem, t_sw, p,
+            rho, eps, a_mem, b_mem, l_dram, a_io, b_io, r_io, s]
+    return jnp.asarray(x)
+
+
+class TestPaperExamples:
+    def test_eq4_memonly_knee(self):
+        """L* = P(T_mem+T_sw) = 1.5 µs with Table 1 values."""
+        sw, p, t_mem = 0.05, 10.0, 0.1
+        assert abs(p * (t_mem + sw) - 1.5) < 1e-12
+
+    def test_masking_29pct_at_5us(self):
+        out_d = model.eval_base(base_x(0.1))
+        out_5 = model.eval_base(base_x(5.0))
+        degr = 1.0 - float(out_d[0, 3] / out_5[0, 3])
+        assert abs(degr - 0.29) < 0.02, degr
+
+    def test_prob_7pct_at_5us(self):
+        out_d = model.eval_base(base_x(0.1))
+        out_5 = model.eval_base(base_x(5.0))
+        degr = 1.0 - float(out_d[0, 5] / out_5[0, 5])
+        assert abs(degr - 0.07) < 0.02, degr
+
+    def test_ordering_best_prob_mask(self):
+        for l in [0.1, 1.0, 3.0, 5.0, 10.0]:
+            out = model.eval_base(base_x(l))
+            best, mask, prob = float(out[0, 4]), float(out[0, 3]), float(out[0, 5])
+            assert best <= prob + 1e-6 <= mask + 1e-5, (l, best, prob, mask)
+
+
+class TestExtended:
+    def test_reduces_to_base(self):
+        for l in [0.5, 2.0, 5.0, 10.0]:
+            rev = float(model.eval_extended(ext_x(l))[0, 0])
+            prob = float(model.eval_base(base_x(l))[0, 5])
+            np.testing.assert_allclose(rev, prob, rtol=1e-4)
+
+    def test_io_bandwidth_floor(self):
+        out = model.eval_extended(ext_x(0.1, a_io=131072.0, b_io=2500.0))
+        assert abs(float(out[0, 1]) - 131072.0 / 2500.0) < 1e-3
+
+    def test_iops_floor(self):
+        out = model.eval_extended(ext_x(0.1, r_io=0.075))
+        np.testing.assert_allclose(float(out[0, 1]), 1.0 / 0.075, rtol=1e-5)
+
+    def test_tiering_monotone_in_rho(self):
+        revs = [float(model.eval_extended(ext_x(10.0, rho=r))[0, 0])
+                for r in [0.0, 0.3, 0.7, 1.0]]
+        assert all(a < b + 1e-6 for a, b in zip(revs, revs[1:])), revs
+
+    def test_eviction_penalty(self):
+        clean = float(model.eval_extended(ext_x(5.0))[0, 0])
+        dirty = float(model.eval_extended(ext_x(5.0, eps=0.05))[0, 0])
+        assert dirty > clean + 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    l_mem=st.floats(min_value=0.1, max_value=10.0),
+    m=st.integers(min_value=1, max_value=15),
+    p=st.integers(min_value=2, max_value=ref.J_MAX),
+)
+def test_hypothesis_monotone_in_latency(l_mem, m, p):
+    lo = model.eval_base(base_x(l_mem, m=float(m), p=float(p)))
+    hi = model.eval_base(base_x(l_mem * 1.2 + 0.05, m=float(m), p=float(p)))
+    # All reciprocal throughputs are non-decreasing in memory latency.
+    assert bool(jnp.all(hi[0] >= lo[0] - 1e-5))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    l_mem=st.floats(min_value=0.1, max_value=10.0),
+    rho=st.floats(min_value=0.0, max_value=1.0),
+    eps=st.floats(min_value=0.0, max_value=0.2),
+)
+def test_hypothesis_extended_finite_positive(l_mem, rho, eps):
+    out = model.eval_extended(ext_x(l_mem, rho=rho, eps=eps))
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert bool(jnp.all(out > 0.0))

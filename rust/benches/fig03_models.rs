@@ -1,0 +1,15 @@
+//! `cargo bench --bench fig03_models` — regenerates the paper's Fig 3 (model curves, Table 1 example values).
+//! Respects CXLKVS_FAST=1 for a pruned smoke run.
+
+use cxlkvs::coordinator::experiments as exp;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let fast = fast_mode();
+    let t0 = std::time::Instant::now();
+    let mut backend = exp::ModelBackend::auto();
+    eprintln!("model backend: {}", backend.name());
+    exp::fig03(&mut backend).print();
+    let _ = fast;
+    eprintln!("[fig03_models] regenerated in {:.1?}", t0.elapsed());
+}

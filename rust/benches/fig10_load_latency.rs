@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig10_load_latency` — regenerates Fig 10 (load-latency distributions + eviction ratio).
+//! Respects CXLKVS_FAST=1 for a pruned smoke run.
+
+use cxlkvs::coordinator::experiments as exp;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let fast = fast_mode();
+    let t0 = std::time::Instant::now();
+    for r in exp::fig10(fast) { r.print(); }
+    eprintln!("[fig10_load_latency] regenerated in {:.1?}", t0.elapsed());
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig11_kvs` — regenerates Fig 11(c)(d)(e) (KV stores vs models, single core).
+//! Respects CXLKVS_FAST=1 for a pruned smoke run.
+
+use cxlkvs::coordinator::experiments as exp;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let fast = fast_mode();
+    let t0 = std::time::Instant::now();
+    let mut backend = exp::ModelBackend::auto();
+    eprintln!("model backend: {}", backend.name());
+    for r in exp::fig11_kvs(&mut backend, fast) { r.print(); }
+    eprintln!("[fig11_kvs] regenerated in {:.1?}", t0.elapsed());
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig12_extended` — regenerates Fig 12 (extended-model scenarios).
+//! Respects CXLKVS_FAST=1 for a pruned smoke run.
+
+use cxlkvs::coordinator::experiments as exp;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let fast = fast_mode();
+    let t0 = std::time::Instant::now();
+    let mut backend = exp::ModelBackend::auto();
+    eprintln!("model backend: {}", backend.name());
+    for r in exp::fig12(&mut backend, fast) { r.print(); }
+    eprintln!("[fig12_extended] regenerated in {:.1?}", t0.elapsed());
+}

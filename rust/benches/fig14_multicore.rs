@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig14_multicore` — regenerates Fig 14 (multicore scaling).
+//! Respects CXLKVS_FAST=1 for a pruned smoke run.
+
+use cxlkvs::coordinator::experiments as exp;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let fast = fast_mode();
+    let t0 = std::time::Instant::now();
+    for r in exp::fig14(fast) { r.print(); }
+    eprintln!("[fig14_multicore] regenerated in {:.1?}", t0.elapsed());
+}

@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig15_settings` — regenerates Fig 15 (Table 5 setting variations).
+//! Respects CXLKVS_FAST=1 for a pruned smoke run.
+
+use cxlkvs::coordinator::experiments as exp;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let fast = fast_mode();
+    let t0 = std::time::Instant::now();
+    exp::fig15(fast).print();
+    eprintln!("[fig15_settings] regenerated in {:.1?}", t0.elapsed());
+}

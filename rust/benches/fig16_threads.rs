@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig16_threads` — regenerates Fig 16 (throughput vs thread count).
+//! Respects CXLKVS_FAST=1 for a pruned smoke run.
+
+use cxlkvs::coordinator::experiments as exp;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let fast = fast_mode();
+    let t0 = std::time::Instant::now();
+    exp::fig16(fast).print();
+    eprintln!("[fig16_threads] regenerated in {:.1?}", t0.elapsed());
+}

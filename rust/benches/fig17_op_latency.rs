@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig17_op_latency` — regenerates Fig 17 (KV operation latency).
+//! Respects CXLKVS_FAST=1 for a pruned smoke run.
+
+use cxlkvs::coordinator::experiments as exp;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let fast = fast_mode();
+    let t0 = std::time::Instant::now();
+    exp::fig17(fast).print();
+    eprintln!("[fig17_op_latency] regenerated in {:.1?}", t0.elapsed());
+}

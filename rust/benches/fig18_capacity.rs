@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig18_capacity` — regenerates Fig 18 (capacity-expansion scenarios).
+//! Respects CXLKVS_FAST=1 for a pruned smoke run.
+
+use cxlkvs::coordinator::experiments as exp;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let fast = fast_mode();
+    let t0 = std::time::Instant::now();
+    exp::fig18(fast).print();
+    eprintln!("[fig18_capacity] regenerated in {:.1?}", t0.elapsed());
+}

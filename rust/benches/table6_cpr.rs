@@ -1,0 +1,12 @@
+//! `cargo bench --bench table6_cpr` — regenerates Table 6 (cost-performance ratios).
+//! Respects CXLKVS_FAST=1 for a pruned smoke run.
+
+use cxlkvs::coordinator::experiments as exp;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let fast = fast_mode();
+    let t0 = std::time::Instant::now();
+    exp::table6(fast).print();
+    eprintln!("[table6_cpr] regenerated in {:.1?}", t0.elapsed());
+}

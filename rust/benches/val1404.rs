@@ -1,0 +1,14 @@
+//! `cargo bench --bench val1404` — regenerates the 1,404-combination model-validation sweep (§4.1.2).
+//! Respects CXLKVS_FAST=1 for a pruned smoke run.
+
+use cxlkvs::coordinator::experiments as exp;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let fast = fast_mode();
+    let t0 = std::time::Instant::now();
+    let mut backend = exp::ModelBackend::auto();
+    eprintln!("model backend: {}", backend.name());
+    exp::val1404(&mut backend, fast).print();
+    eprintln!("[val1404] regenerated in {:.1?}", t0.elapsed());
+}

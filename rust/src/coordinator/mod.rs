@@ -1,0 +1,11 @@
+//! The experiment coordinator: regenerates every figure and table of the
+//! paper's evaluation (§4–§5) on the simulated testbed, overlaying the
+//! analytic models evaluated through the AOT-compiled JAX+Pallas artifact
+//! (falling back to the native Rust model when artifacts are absent).
+
+pub mod experiments;
+pub mod report;
+pub mod runner;
+
+pub use report::Report;
+pub use runner::{best_threads, StoreKind, SweepCfg};

@@ -1,0 +1,129 @@
+//! Tabular experiment reports: printed as aligned text (the "rows/series the
+//! paper reports") and written as CSV under `reports/`.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+
+/// One experiment's output table.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: &str, headers: &[&str]) -> Report {
+        Report {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:>w$}", h, w = widths[i]))
+            .collect();
+        let _ = writeln!(out, "{}", hdr.join("  "));
+        let _ = writeln!(out, "{}", "-".repeat(hdr.join("  ").len()));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            let _ = writeln!(out, "{}", cells.join("  "));
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Write `reports/<name>.csv`.
+    pub fn write_csv(&self, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all("reports")?;
+        let mut f = std::fs::File::create(format!("reports/{name}.csv"))?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// Format helpers used across experiments.
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+pub fn kops(x: f64) -> String {
+    format!("{:.1}k", x / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut r = Report::new("T", &["a", "bbbb"]);
+        r.row(vec!["1".into(), "2".into()]);
+        r.row(vec!["100".into(), "2000".into()]);
+        r.note("hello");
+        let s = r.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("note: hello"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut r = Report::new("T", &["a", "b"]);
+        r.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut r = Report::new("T", &["a", "b"]);
+        r.row(vec!["1".into(), "2".into()]);
+        r.write_csv("_test_report").unwrap();
+        let s = std::fs::read_to_string("reports/_test_report.csv").unwrap();
+        assert_eq!(s, "a,b\n1,2\n");
+        let _ = std::fs::remove_file("reports/_test_report.csv");
+    }
+}

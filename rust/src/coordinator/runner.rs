@@ -1,0 +1,318 @@
+//! Sweep execution: build a machine for one (store, latency, threads, cores)
+//! point, run it, and search thread counts for the best throughput — the
+//! paper's per-point optimization ("for each latency, we optimize the number
+//! of threads"). Points run in parallel across host threads.
+
+use crate::kvs::{CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, TreeKv, TreeKvConfig};
+use crate::microbench::{Microbench, MicrobenchConfig};
+use crate::sim::{Dur, Machine, MachineConfig, MemConfig, Rng, RunStats, TailProfile};
+
+/// Which KV store design a sweep drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreKind {
+    Tree,
+    Lsm,
+    Cache,
+}
+
+impl StoreKind {
+    pub const ALL: [StoreKind; 3] = [StoreKind::Tree, StoreKind::Lsm, StoreKind::Cache];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreKind::Tree => "treekv(aerospike)",
+            StoreKind::Lsm => "lsmkv(rocksdb)",
+            StoreKind::Cache => "cachekv(cachelib)",
+        }
+    }
+}
+
+/// Common sweep configuration.
+#[derive(Debug, Clone)]
+pub struct SweepCfg {
+    pub cores: usize,
+    /// Thread counts to try per point (best wins).
+    pub thread_candidates: Vec<usize>,
+    pub warmup: Dur,
+    pub window: Dur,
+    /// Secondary memory latency.
+    pub l_mem: Dur,
+    /// Inject the §5.1 tail-latency profile.
+    pub tail: bool,
+    /// Memory bandwidth (bytes/sec; INFINITY = unlimited).
+    pub mem_bandwidth: f64,
+    /// CPU cache capacity in lines.
+    pub cache_lines: u64,
+    pub seed: u64,
+}
+
+impl Default for SweepCfg {
+    fn default() -> Self {
+        SweepCfg {
+            cores: 1,
+            thread_candidates: vec![16, 32, 64, 96],
+            warmup: Dur::ms(3.0),
+            window: Dur::ms(20.0),
+            l_mem: Dur::us(5.0),
+            tail: false,
+            mem_bandwidth: f64::INFINITY,
+            cache_lines: 1_000_000,
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl SweepCfg {
+    /// Machine config for one point at `threads` threads/core.
+    pub fn machine(&self, threads: usize) -> MachineConfig {
+        let mut mem = MemConfig::fpga(self.l_mem).with_bandwidth(self.mem_bandwidth);
+        if self.tail {
+            mem = mem.with_tail(TailProfile::paper_flash());
+        }
+        MachineConfig {
+            cores: self.cores,
+            threads_per_core: threads,
+            cache_lines: self.cache_lines,
+            mem,
+            n_locks: 64,
+            contention_factor: 0.025,
+            seed: self.seed,
+            ..MachineConfig::default()
+        }
+    }
+
+    pub fn at_latency(&self, l: Dur) -> SweepCfg {
+        SweepCfg {
+            l_mem: l,
+            ..self.clone()
+        }
+    }
+
+    /// The paper's latency grid (§4.1.2), DRAM first for normalization.
+    pub fn latency_grid() -> Vec<f64> {
+        vec![0.1, 0.3, 0.5, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]
+    }
+
+    /// A pruned grid for quick runs (CXLKVS_FAST=1).
+    pub fn latency_grid_fast() -> Vec<f64> {
+        vec![0.1, 0.5, 1.0, 2.0, 3.0, 5.0, 8.0, 10.0]
+    }
+}
+
+/// True when CXLKVS_FAST=1: benches prune grids to smoke-test duration.
+pub fn fast_mode() -> bool {
+    std::env::var("CXLKVS_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Run one store at one point.
+pub fn run_store(kind: StoreKind, sweep: &SweepCfg, threads: usize) -> RunStats {
+    let mcfg = sweep.machine(threads);
+    let mut rng = Rng::new(sweep.seed ^ 0xfeed);
+    match kind {
+        StoreKind::Tree => {
+            let kv = TreeKv::new(TreeKvConfig::default(), &mut rng)
+                .with_background(mcfg.cores, threads);
+            Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
+        }
+        StoreKind::Lsm => {
+            let kv = LsmKv::new(LsmKvConfig::default(), &mut rng).with_background(threads);
+            Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
+        }
+        StoreKind::Cache => {
+            let kv = CacheKv::new(CacheKvConfig::default(), &mut rng);
+            Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
+        }
+    }
+}
+
+/// Run a store with custom KV configs (the Fig 15 / Fig 18 variations).
+pub fn run_tree_with(cfg: TreeKvConfig, sweep: &SweepCfg, threads: usize) -> RunStats {
+    let mcfg = sweep.machine(threads);
+    let mut rng = Rng::new(sweep.seed ^ 0xfeed);
+    let kv = TreeKv::new(cfg, &mut rng).with_background(mcfg.cores, threads);
+    Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
+}
+
+pub fn run_lsm_with(cfg: LsmKvConfig, sweep: &SweepCfg, threads: usize) -> RunStats {
+    let mcfg = sweep.machine(threads);
+    let mut rng = Rng::new(sweep.seed ^ 0xfeed);
+    let kv = LsmKv::new(cfg, &mut rng).with_background(threads);
+    Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
+}
+
+pub fn run_cache_with(cfg: CacheKvConfig, sweep: &SweepCfg, threads: usize) -> RunStats {
+    let mcfg = sweep.machine(threads);
+    let mut rng = Rng::new(sweep.seed ^ 0xfeed);
+    let kv = CacheKv::new(cfg, &mut rng);
+    Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
+}
+
+/// Run the microbenchmark at one point.
+pub fn run_microbench(cfg: &MicrobenchConfig, sweep: &SweepCfg, threads: usize) -> RunStats {
+    let mcfg = sweep.machine(threads);
+    let mut rng = Rng::new(sweep.seed ^ 0xbead);
+    let mb = Microbench::new(cfg.clone(), &mut rng);
+    Machine::new(mcfg, mb).run(sweep.warmup, sweep.window)
+}
+
+/// Try all thread candidates, return (best_threads, best_stats).
+pub fn best_threads<F>(candidates: &[usize], mut run: F) -> (usize, RunStats)
+where
+    F: FnMut(usize) -> RunStats,
+{
+    let mut best: Option<(usize, RunStats)> = None;
+    for &n in candidates {
+        let st = run(n);
+        match &best {
+            Some((_, b)) if b.ops_per_sec >= st.ops_per_sec => {}
+            _ => best = Some((n, st)),
+        }
+    }
+    best.expect("no thread candidates")
+}
+
+/// Run `jobs` closures in parallel on host threads (sweep points are
+/// independent simulations), preserving output order.
+pub fn parallel_map<T, F>(jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let max_par = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let mut results: Vec<Option<T>> = Vec::new();
+    for _ in 0..jobs.len() {
+        results.push(None);
+    }
+    let mut jobs: Vec<Option<F>> = jobs.into_iter().map(Some).collect();
+    let n = jobs.len();
+    for chunk_start in (0..n).step_by(max_par) {
+        let chunk_end = (chunk_start + max_par).min(n);
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (i, job) in jobs[chunk_start..chunk_end].iter_mut().enumerate() {
+                let f = job.take().unwrap();
+                handles.push((chunk_start + i, s.spawn(f)));
+            }
+            for (i, h) in handles {
+                results[i] = Some(h.join().expect("sweep worker panicked"));
+            }
+        });
+    }
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Measured model parameters extracted from a (DRAM-placement) run.
+#[derive(Debug, Clone, Copy)]
+pub struct MeasuredParams {
+    pub m: f64,
+    pub s: f64,
+    /// Per-access compute (µs).
+    pub t_mem: f64,
+    /// Per-IO pre/post CPU suboperation times (µs).
+    pub t_pre: f64,
+    pub t_post: f64,
+}
+
+impl MeasuredParams {
+    /// Derive from run stats given the store's per-IO CPU suboperation times
+    /// (device base + the store's extra, which is configured and therefore
+    /// known — the paper instead instruments timestamps around yields).
+    pub fn from_stats(st: &RunStats, t_pre: f64, t_post: f64) -> MeasuredParams {
+        let m = st.mean_m.max(0.01);
+        let s = st.mean_s;
+        let compute_us = st.mean_compute.as_us();
+        let t_mem = ((compute_us - s * (t_pre + t_post)) / m).max(0.01);
+        MeasuredParams {
+            m,
+            s,
+            t_mem,
+            t_pre,
+            t_post,
+        }
+    }
+
+    /// Per-IO split (Sec 3.2.3): M per IO for the model when S ≠ 1.
+    pub fn m_per_io(&self) -> f64 {
+        if self.s > 0.0 {
+            self.m / self.s
+        } else {
+            self.m
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_threads_picks_max() {
+        let table = [(8usize, 100.0), (16, 300.0), (32, 200.0)];
+        let (n, st) = best_threads(&[8, 16, 32], |t| {
+            let ops = table.iter().find(|(c, _)| *c == t).unwrap().1;
+            fake_stats(ops)
+        });
+        assert_eq!(n, 16);
+        assert_eq!(st.ops_per_sec, 300.0);
+    }
+
+    fn fake_stats(ops: f64) -> RunStats {
+        RunStats {
+            ops_per_sec: ops,
+            ops: ops as u64,
+            op_latency_mean: Dur::ZERO,
+            op_latency_p50: Dur::ZERO,
+            op_latency_p99: Dur::ZERO,
+            mean_m: 10.0,
+            mean_s: 1.0,
+            mean_compute: Dur::us(2.0),
+            eviction_ratio: 0.0,
+            load_wait_mean: Dur::ZERO,
+            load_wait_p99: Dur::ZERO,
+            io_reads: 0,
+            io_writes: 0,
+            io_bytes: 0,
+            lock_contention: 0.0,
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..20usize)
+            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let out = parallel_map(jobs);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn measured_params_algebra() {
+        let st = fake_stats(1000.0); // mean_compute 2us, m=10, s=1
+        let p = MeasuredParams::from_stats(&st, 0.5, 0.3);
+        // t_mem = (2 - 1*(0.8)) / 10 = 0.12
+        assert!((p.t_mem - 0.12).abs() < 1e-9, "t_mem={}", p.t_mem);
+        assert!((p.m_per_io() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn store_kinds_run_quickly() {
+        // Smoke: every store produces sensible throughput on a short window.
+        let sweep = SweepCfg {
+            window: Dur::ms(5.0),
+            warmup: Dur::ms(2.0),
+            l_mem: Dur::us(1.0),
+            ..Default::default()
+        };
+        for kind in StoreKind::ALL {
+            let st = run_store(kind, &sweep, 32);
+            assert!(
+                st.ops_per_sec > 10_000.0,
+                "{}: {}",
+                kind.name(),
+                st.ops_per_sec
+            );
+        }
+    }
+}

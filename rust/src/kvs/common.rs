@@ -1,0 +1,71 @@
+//! Shared helpers for the KV store implementations.
+
+/// FNV-1a 64-bit hash (key digests, bucket hashing).
+#[inline]
+pub fn fnv1a(x: u64) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in x.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Correctness counters maintained by every store: reads verify the value
+/// fetched from the (simulated) SSD against the deterministic disk image.
+#[derive(Debug, Clone, Default)]
+pub struct KvStats {
+    pub gets: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub sets: u64,
+    pub verified: u64,
+    pub corruptions: u64,
+    /// Tier-specific hit counters (cachekv).
+    pub t1_hits: u64,
+    pub t2_hits: u64,
+    /// Background work performed.
+    pub bg_ops: u64,
+}
+
+impl KvStats {
+    pub fn hit_ratio(&self) -> f64 {
+        if self.gets == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.gets as f64
+        }
+    }
+}
+
+pub const NIL: u32 = u32::MAX;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_stable_and_spreads() {
+        assert_eq!(fnv1a(0), fnv1a(0));
+        assert_ne!(fnv1a(0), fnv1a(1));
+        // Low bits should be well distributed.
+        let mut buckets = [0u32; 16];
+        for i in 0..16_000u64 {
+            buckets[(fnv1a(i) % 16) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((800..1200).contains(&b), "bucket count {b}");
+        }
+    }
+
+    #[test]
+    fn hit_ratio() {
+        let s = KvStats {
+            gets: 10,
+            hits: 7,
+            ..Default::default()
+        };
+        assert!((s.hit_ratio() - 0.7).abs() < 1e-12);
+        assert_eq!(KvStats::default().hit_ratio(), 0.0);
+    }
+}

@@ -1,0 +1,707 @@
+//! RocksDB-like SSD-based KV store (paper §4.2, Fig 13 middle).
+//!
+//! An LSM-tree's data blocks live on SSD; an in-memory **block cache**
+//! (sharded hash + LRU, RocksDB's `LRUCache`) lives on secondary memory and
+//! is the store's dominant DRAM consumer that the paper offloads. A get
+//! first probes the memtable (host DRAM), then the block cache: the shard's
+//! hash-bucket chain walk and the LRU list manipulation are dependent
+//! secondary-memory accesses; the in-block sorted-key traversal (restart
+//! array binary search) also runs over cached block bytes on secondary
+//! memory. A cache miss fetches the block from SSD (one IO) and inserts it,
+//! evicting the shard's LRU tail. Writes go to the memtable; a background
+//! thread flushes and compacts (bulk IO).
+//!
+//! With Zipf-skewed keys the cache hit ratio lands near the paper's 67%, so
+//! the average IOs per operation S ≈ 0.33 and the extended model's per-IO
+//! split (§3.2.3) applies.
+
+use super::common::{fnv1a, KvStats, NIL};
+use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
+use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, ValueSize};
+
+#[derive(Debug, Clone)]
+pub struct LsmKvConfig {
+    pub n_items: u64,
+    /// Entries per data block (RocksDB 4 kB blocks / (key+value) bytes).
+    pub keys_per_block: u32,
+    /// Block cache capacity in blocks.
+    pub cache_blocks: u32,
+    /// Cache shards (RocksDB default 2^6).
+    pub shards: u32,
+    /// Hash buckets per shard.
+    pub buckets_per_shard: u32,
+    pub key_dist: KeyDist,
+    pub mix: OpMix,
+    pub value_size: ValueSize,
+    /// CPU cost per pointer hop / key comparison.
+    pub t_node: Dur,
+    /// Memtable capacity (writes before a flush cycle is signalled).
+    pub memtable_cap: u32,
+    /// Run the background flush/compaction thread.
+    pub compaction: bool,
+}
+
+impl Default for LsmKvConfig {
+    fn default() -> Self {
+        LsmKvConfig {
+            // Paper: 1B items, 32 GB cache, Zipf 0.99, hit ratio 67%. Scaled:
+            // cache_blocks / n_blocks tuned to land at the same hit ratio.
+            n_items: 1_000_000,
+            keys_per_block: 8,
+            cache_blocks: 6_000,
+            shards: 64,
+            buckets_per_shard: 128,
+            // Scrambled: hot ranks are hashed across the keyspace (YCSB /
+            // db_bench behaviour), so hot keys land in *different* blocks
+            // and cache shards rather than piling onto one shard lock.
+            key_dist: KeyDist::Zipf {
+                s: 0.99,
+                scrambled: true,
+            },
+            mix: OpMix::READ_ONLY,
+            value_size: ValueSize::Fixed(400),
+            t_node: Dur::ns(100.0),
+            memtable_cap: 4096,
+            compaction: true,
+        }
+    }
+}
+
+/// One block-cache entry: intrusive hash chain + LRU links (secondary mem).
+#[derive(Debug, Clone, Copy)]
+struct CacheEntry {
+    block: u32,
+    hash_next: u32,
+    lru_prev: u32,
+    lru_next: u32,
+    /// Entry currently valid (false = free slot awaiting reuse).
+    live: bool,
+}
+
+/// One cache shard: bucket heads + LRU list head/tail.
+#[derive(Debug, Clone)]
+struct Shard {
+    buckets: Vec<u32>,
+    lru_head: u32, // most recent
+    lru_tail: u32, // eviction candidate
+    len: u32,
+}
+
+pub struct LsmKv {
+    pub cfg: LsmKvConfig,
+    keygen: KeyGen,
+    shards: Vec<Shard>,
+    entries: Vec<CacheEntry>,
+    free: Vec<u32>,
+    cap_per_shard: u32,
+    /// Total number of data blocks in the (simulated) LSM keyspace.
+    pub n_blocks: u32,
+    /// Pending writes in the memtable.
+    memtable_fill: u32,
+    /// Flush backlog (memtable generations awaiting the background thread).
+    flush_backlog: u32,
+    pub stats: KvStats,
+    bg_tid_floor: usize,
+    bg_threads_per_core: usize,
+}
+
+#[derive(Debug)]
+pub enum LsmOp {
+    /// Probe the memtable (DRAM accesses), then go to the cache.
+    Memtable { kind: OpKind, key: u64, probes: u8 },
+    /// Walk the shard's hash chain looking for the block.
+    ChainWalk {
+        key: u64,
+        entry: u32,
+        first: bool,
+    },
+    /// Found in cache: splice the entry to the LRU head (3 dependent
+    /// accesses: prev, next, head), then search inside the block.
+    LruPromote { key: u64, entry: u32, hops: u8 },
+    /// Cache miss: fetch the block from SSD.
+    Fetch { key: u64 },
+    /// Insert fetched block: evict tail if needed, link into bucket + LRU.
+    Insert { key: u64, hops: u8 },
+    /// Binary search over the block's restart array + final linear scan.
+    InBlock {
+        key: u64,
+        lo: u32,
+        hi: u32,
+        compute_done: bool,
+    },
+    /// Write path: memtable insert (DRAM) + occasional flush signal.
+    WriteMem { probes: u8 },
+    /// Background flush/compaction bulk IO.
+    BgFlush { ios_left: u8, write: bool },
+    BgPause,
+    BgYield,
+    Finished,
+}
+
+impl LsmKv {
+    pub fn new(cfg: LsmKvConfig, rng: &mut Rng) -> LsmKv {
+        let n_blocks = ((cfg.n_items + cfg.keys_per_block as u64 - 1)
+            / cfg.keys_per_block as u64) as u32;
+        let shards = (0..cfg.shards)
+            .map(|_| Shard {
+                buckets: vec![NIL; cfg.buckets_per_shard as usize],
+                lru_head: NIL,
+                lru_tail: NIL,
+                len: 0,
+            })
+            .collect();
+        let cap = cfg.cache_blocks / cfg.shards;
+        let keygen = KeyGen::new(cfg.n_items, cfg.key_dist);
+        let mut kv = LsmKv {
+            shards,
+            entries: Vec::with_capacity(cfg.cache_blocks as usize),
+            free: Vec::new(),
+            cap_per_shard: cap.max(2),
+            n_blocks,
+            memtable_fill: 0,
+            flush_backlog: 0,
+            stats: KvStats::default(),
+            bg_tid_floor: usize::MAX,
+            bg_threads_per_core: 1,
+            keygen,
+            cfg,
+        };
+        // Warm the cache with draws from the workload distribution so the
+        // measured window starts near steady state (the paper warms up for
+        // hours; we warm structurally and then still run a sim warmup).
+        let mut wrng = rng.fork(0x15a);
+        let draws = kv.cfg.cache_blocks as u64 * 4;
+        for _ in 0..draws {
+            let key = kv.keygen.sample(&mut wrng);
+            let block = kv.block_of(key);
+            if kv.cache_lookup(block).is_none() {
+                kv.cache_insert(block);
+            }
+        }
+        kv
+    }
+
+    pub fn with_background(mut self, threads_per_core: usize) -> LsmKv {
+        if self.cfg.compaction && self.cfg.mix.read_ratio < 1.0 {
+            self.bg_tid_floor = threads_per_core - 1;
+            self.bg_threads_per_core = threads_per_core;
+        }
+        self
+    }
+
+    fn is_bg(&self, tid: usize) -> bool {
+        self.bg_tid_floor != usize::MAX && tid % self.bg_threads_per_core == self.bg_tid_floor
+    }
+
+    #[inline]
+    fn block_of(&self, key: u64) -> u32 {
+        (key / self.cfg.keys_per_block as u64) as u32
+    }
+
+    #[inline]
+    fn shard_of(&self, block: u32) -> usize {
+        (fnv1a(block as u64) % self.cfg.shards as u64) as usize
+    }
+
+    #[inline]
+    fn bucket_of(&self, block: u32) -> usize {
+        ((fnv1a(block as u64) >> 8) % self.cfg.buckets_per_shard as u64) as usize
+    }
+
+    /// Pure lookup (no timing): entry id if cached.
+    fn cache_lookup(&self, block: u32) -> Option<u32> {
+        let s = &self.shards[self.shard_of(block)];
+        let mut cur = s.buckets[self.bucket_of(block)];
+        while cur != NIL {
+            let e = &self.entries[cur as usize];
+            if e.live && e.block == block {
+                return Some(cur);
+            }
+            cur = e.hash_next;
+        }
+        None
+    }
+
+    /// Unlink from LRU list (structure mutation only).
+    fn lru_unlink(&mut self, sid: usize, id: u32) {
+        let e = self.entries[id as usize];
+        if e.lru_prev != NIL {
+            self.entries[e.lru_prev as usize].lru_next = e.lru_next;
+        } else {
+            self.shards[sid].lru_head = e.lru_next;
+        }
+        if e.lru_next != NIL {
+            self.entries[e.lru_next as usize].lru_prev = e.lru_prev;
+        } else {
+            self.shards[sid].lru_tail = e.lru_prev;
+        }
+    }
+
+    fn lru_push_front(&mut self, sid: usize, id: u32) {
+        let head = self.shards[sid].lru_head;
+        self.entries[id as usize].lru_prev = NIL;
+        self.entries[id as usize].lru_next = head;
+        if head != NIL {
+            self.entries[head as usize].lru_prev = id;
+        } else {
+            self.shards[sid].lru_tail = id;
+        }
+        self.shards[sid].lru_head = id;
+    }
+
+    fn bucket_remove(&mut self, sid: usize, id: u32) {
+        let block = self.entries[id as usize].block;
+        let b = self.bucket_of(block);
+        let mut cur = self.shards[sid].buckets[b];
+        if cur == id {
+            self.shards[sid].buckets[b] = self.entries[id as usize].hash_next;
+            return;
+        }
+        while cur != NIL {
+            let next = self.entries[cur as usize].hash_next;
+            if next == id {
+                self.entries[cur as usize].hash_next = self.entries[id as usize].hash_next;
+                return;
+            }
+            cur = next;
+        }
+        debug_assert!(false, "entry not in its bucket");
+    }
+
+    /// Insert a block (evicting if full); returns (entry, evicted?).
+    fn cache_insert(&mut self, block: u32) -> (u32, bool) {
+        let sid = self.shard_of(block);
+        let mut evicted = false;
+        if self.shards[sid].len >= self.cap_per_shard {
+            let tail = self.shards[sid].lru_tail;
+            debug_assert_ne!(tail, NIL);
+            self.lru_unlink(sid, tail);
+            self.bucket_remove(sid, tail);
+            self.entries[tail as usize].live = false;
+            self.free.push(tail);
+            self.shards[sid].len -= 1;
+            evicted = true;
+        }
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                self.entries.push(CacheEntry {
+                    block: 0,
+                    hash_next: NIL,
+                    lru_prev: NIL,
+                    lru_next: NIL,
+                    live: false,
+                });
+                (self.entries.len() - 1) as u32
+            }
+        };
+        let b = self.bucket_of(block);
+        let head = self.shards[sid].buckets[b];
+        self.entries[id as usize] = CacheEntry {
+            block,
+            hash_next: head,
+            lru_prev: NIL,
+            lru_next: NIL,
+            live: true,
+        };
+        self.shards[sid].buckets[b] = id;
+        self.lru_push_front(sid, id);
+        self.shards[sid].len += 1;
+        (id, evicted)
+    }
+
+    /// Measured cache hit ratio over the metrics window.
+    pub fn hit_ratio(&self) -> f64 {
+        self.stats.hit_ratio()
+    }
+
+    fn lock_of(&self, block: u32) -> u32 {
+        (self.shard_of(block) as u32) % 64
+    }
+}
+
+impl Service for LsmKv {
+    type Op = LsmOp;
+
+    fn next_op(&mut self, tid: usize, rng: &mut Rng) -> LsmOp {
+        if self.is_bg(tid) {
+            if self.flush_backlog > 0 {
+                self.flush_backlog -= 1;
+                return LsmOp::BgFlush {
+                    ios_left: 8,
+                    write: false,
+                };
+            }
+            return LsmOp::BgPause;
+        }
+        let key = self.keygen.sample(rng);
+        match self.cfg.mix.sample(rng) {
+            OpKind::Read => {
+                self.stats.gets += 1;
+                LsmOp::Memtable {
+                    kind: OpKind::Read,
+                    key,
+                    probes: 3,
+                }
+            }
+            OpKind::Write => {
+                self.stats.sets += 1;
+                LsmOp::WriteMem { probes: 4 }
+            }
+        }
+    }
+
+    fn step(&mut self, _tid: usize, op: &mut LsmOp, _rng: &mut Rng) -> Step {
+        match op {
+            LsmOp::Memtable { kind, key, probes } => {
+                // Skiplist probe in host DRAM: inline accesses, no yield.
+                if *probes > 0 {
+                    *probes -= 1;
+                    return Step::MemAccess(Tier::Dram);
+                }
+                debug_assert_eq!(*kind, OpKind::Read);
+                let k = *key;
+                let block = self.block_of(k);
+                let sid = self.shard_of(block);
+                let first = self.shards[sid].buckets[self.bucket_of(block)];
+                *op = LsmOp::ChainWalk {
+                    key: k,
+                    entry: first,
+                    first: true,
+                };
+                Step::Compute(self.cfg.t_node)
+            }
+            LsmOp::ChainWalk { key, entry, first } => {
+                let k = *key;
+                let block = self.block_of(k);
+                if *first {
+                    // Reading the bucket head itself is one secondary access.
+                    *first = false;
+                    if *entry == NIL {
+                        self.stats.misses += 1;
+                        *op = LsmOp::Fetch { key: k };
+                    }
+                    return Step::MemAccess(Tier::Secondary);
+                }
+                let id = *entry;
+                if id == NIL {
+                    self.stats.misses += 1;
+                    *op = LsmOp::Fetch { key: k };
+                    return Step::Compute(self.cfg.t_node);
+                }
+                let e = self.entries[id as usize];
+                if e.live && e.block == block {
+                    self.stats.hits += 1;
+                    self.stats.t1_hits += 1;
+                    // Neighbor read happens unlocked; only the splice runs
+                    // under the shard lock (holding a lock across
+                    // prefetch+yield accesses would make hold time grow
+                    // with memory latency and serialize hot shards).
+                    *op = LsmOp::LruPromote {
+                        key: k,
+                        entry: id,
+                        hops: 0,
+                    };
+                    return Step::MemAccess(Tier::Secondary);
+                }
+                *entry = e.hash_next;
+                if *entry == NIL {
+                    self.stats.misses += 1;
+                    *op = LsmOp::Fetch { key: k };
+                    return Step::Compute(self.cfg.t_node);
+                }
+                Step::MemAccess(Tier::Secondary)
+            }
+            LsmOp::LruPromote { key, entry, hops } => {
+                let k = *key;
+                let block = self.block_of(k);
+                match *hops {
+                    0 => {
+                        *hops = 1;
+                        Step::Lock(self.lock_of(block))
+                    }
+                    1 => {
+                        // Splice under the lock: the entry and neighbors were
+                        // just read (unlocked), so the pointer writes hit the
+                        // CPU cache — charge compute, not a long-latency
+                        // access, and release quickly.
+                        *hops = 2;
+                        let sid = self.shard_of(block);
+                        let id = *entry;
+                        self.lru_unlink(sid, id);
+                        self.lru_push_front(sid, id);
+                        Step::Compute(self.cfg.t_node)
+                    }
+                    _ => {
+                        *op = LsmOp::InBlock {
+                            key: k,
+                            lo: block * self.cfg.keys_per_block,
+                            hi: (block + 1) * self.cfg.keys_per_block,
+                            compute_done: false,
+                        };
+                        Step::Unlock(self.lock_of(block))
+                    }
+                }
+            }
+            LsmOp::Fetch { key } => {
+                let k = *key;
+                *op = LsmOp::Insert { key: k, hops: 0 };
+                Step::Io {
+                    kind: IoKind::Read,
+                    bytes: self.cfg.keys_per_block
+                        * (self.cfg.value_size.mean() as u32 + 20 + 8),
+                    // Calibrated to RocksDB's measured per-read CPU cost:
+                    // block-handle resolution + file offset (pre), CRC32 of
+                    // the 4 kB block, decompression stub, and block-object
+                    // construction (post).
+                    extra_pre: Dur::us(1.5),
+                    extra_post: Dur::us(3.0),
+                }
+            }
+            LsmOp::Insert { key, hops } => {
+                let k = *key;
+                let block = self.block_of(k);
+                // Eviction-candidate walk (3 accesses) runs unlocked; the
+                // lock covers only the final structural mutation.
+                if *hops < 3 {
+                    *hops += 1;
+                    return Step::MemAccess(Tier::Secondary);
+                }
+                if *hops == 3 {
+                    *hops = 4;
+                    return Step::Lock(self.lock_of(block));
+                }
+                if *hops == 4 {
+                    *hops = 5;
+                    if self.cache_lookup(block).is_none() {
+                        self.cache_insert(block);
+                    }
+                    // Mutation writes hit lines brought in by the unlocked
+                    // walk: short critical section.
+                    return Step::Compute(self.cfg.t_node * 2);
+                }
+                *op = LsmOp::InBlock {
+                    key: k,
+                    lo: block * self.cfg.keys_per_block,
+                    hi: (block + 1) * self.cfg.keys_per_block,
+                    compute_done: false,
+                };
+                Step::Unlock(self.lock_of(block))
+            }
+            LsmOp::InBlock {
+                key,
+                lo,
+                hi,
+                compute_done,
+            } => {
+                // RocksDB block layout: binary-search the restart array
+                // (blocks this small have ~2 restart points), then scan one
+                // restart interval. Each probe = compute + secondary access.
+                if !*compute_done {
+                    *compute_done = true;
+                    return Step::Compute(self.cfg.t_node);
+                }
+                *compute_done = false;
+                let width = *hi - *lo;
+                if width <= self.cfg.keys_per_block / 2 {
+                    // Within one restart interval: single sequential scan
+                    // access resolves the entry (length-prefixed entries in
+                    // adjacent lines).
+                    debug_assert!((*lo..*hi).contains(&(*key as u32)));
+                    self.stats.verified += 1;
+                    *op = LsmOp::Finished;
+                    return Step::MemAccess(Tier::Secondary);
+                }
+                let mid = (*lo + *hi) / 2;
+                if (*key as u32) < mid {
+                    *hi = mid;
+                } else {
+                    *lo = mid;
+                }
+                Step::MemAccess(Tier::Secondary)
+            }
+            LsmOp::WriteMem { probes } => {
+                // Memtable skiplist insert: DRAM accesses only.
+                if *probes > 0 {
+                    *probes -= 1;
+                    return Step::MemAccess(Tier::Dram);
+                }
+                self.memtable_fill += 1;
+                if self.memtable_fill >= self.cfg.memtable_cap {
+                    self.memtable_fill = 0;
+                    self.flush_backlog += 1;
+                }
+                *op = LsmOp::Finished;
+                Step::Compute(Dur::ns(150.0)) // WAL append (buffered)
+            }
+            LsmOp::BgFlush { ios_left, write } => {
+                self.stats.bg_ops += 1;
+                if *ios_left == 0 {
+                    *op = LsmOp::Finished;
+                    return Step::Compute(Dur::us(1.0));
+                }
+                *ios_left -= 1;
+                let kind = if *write {
+                    IoKind::Write
+                } else {
+                    IoKind::Read
+                };
+                *write = !*write;
+                Step::Io {
+                    kind,
+                    bytes: 32 * 1024, // bulk compaction IO
+                    extra_pre: Dur::ns(500.0),
+                    extra_post: Dur::us(2.0), // merge work
+                }
+            }
+            LsmOp::BgPause => {
+                // Pace, then cooperatively yield (see treekv::DefragPause).
+                *op = LsmOp::BgYield;
+                Step::Compute(Dur::us(5.0))
+            }
+            LsmOp::BgYield => {
+                *op = LsmOp::Finished;
+                Step::Yield
+            }
+            LsmOp::Finished => Step::Done,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Machine, MachineConfig, MemConfig};
+
+    fn small_cfg() -> LsmKvConfig {
+        LsmKvConfig {
+            n_items: 100_000,
+            cache_blocks: 1024,
+            shards: 16,
+            buckets_per_shard: 64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cache_structure_invariants() {
+        let mut rng = Rng::new(1);
+        let mut kv = LsmKv::new(small_cfg(), &mut rng);
+        // Insert many blocks; shard lengths never exceed capacity and
+        // lookups find exactly what was inserted last.
+        for b in 0..5000u32 {
+            if kv.cache_lookup(b).is_none() {
+                kv.cache_insert(b);
+            }
+        }
+        for s in &kv.shards {
+            assert!(s.len <= kv.cap_per_shard);
+            // LRU list length == shard len.
+            let mut cur = s.lru_head;
+            let mut cnt = 0;
+            let mut prev = NIL;
+            while cur != NIL {
+                assert_eq!(kv.entries[cur as usize].lru_prev, prev);
+                prev = cur;
+                cur = kv.entries[cur as usize].lru_next;
+                cnt += 1;
+                assert!(cnt <= s.len, "LRU list longer than shard");
+            }
+            assert_eq!(cnt, s.len);
+            assert_eq!(s.lru_tail, prev);
+        }
+    }
+
+    #[test]
+    fn eviction_is_lru_order() {
+        let mut rng = Rng::new(2);
+        let mut kv = LsmKv::new(
+            LsmKvConfig {
+                cache_blocks: 32,
+                shards: 1,
+                buckets_per_shard: 16,
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        // Clear warmup state by filling with known blocks.
+        for b in 1000..1032u32 {
+            if kv.cache_lookup(b).is_none() {
+                kv.cache_insert(b);
+            }
+        }
+        // 1000 is now the tail (oldest of ours) unless warmup left newer.
+        // Insert one more: some block must be evicted and it must not be
+        // the most recently inserted.
+        kv.cache_insert(2000);
+        assert!(kv.cache_lookup(2000).is_some());
+        assert!(kv.cache_lookup(1031).is_some(), "MRU must survive");
+    }
+
+    #[test]
+    fn zipf_hit_ratio_in_paper_range() {
+        let mut rng = Rng::new(3);
+        let kv = LsmKv::new(small_cfg(), &mut rng);
+        let mut m = Machine::new(
+            MachineConfig {
+                threads_per_core: 32,
+                n_locks: 64,
+                mem: MemConfig::fpga(Dur::us(1.0)),
+                ..Default::default()
+            },
+            kv,
+        );
+        let _ = m.run(Dur::ms(5.0), Dur::ms(20.0));
+        let hr = m.service.hit_ratio();
+        // Paper: 67% with Zipf 0.99 and a 32/400 GB cache. Our scaled cache
+        // (1024*8 / 100k ≈ 8% of keys) under Zipf 0.99 lands nearby.
+        assert!((0.5..0.85).contains(&hr), "hit ratio {hr}");
+        assert_eq!(m.service.stats.corruptions, 0);
+        assert!(m.service.stats.verified > 500);
+    }
+
+    #[test]
+    fn misses_cause_io_and_s_below_one() {
+        let mut rng = Rng::new(4);
+        let kv = LsmKv::new(small_cfg(), &mut rng);
+        let mut m = Machine::new(
+            MachineConfig {
+                threads_per_core: 32,
+                n_locks: 64,
+                ..Default::default()
+            },
+            kv,
+        );
+        let st = m.run(Dur::ms(5.0), Dur::ms(20.0));
+        assert!(st.mean_s > 0.05 && st.mean_s < 0.9, "S = {}", st.mean_s);
+        assert!(st.io_reads > 100);
+        // M per op: bucket walk + LRU + in-block ≈ 6-12.
+        assert!((4.0..15.0).contains(&st.mean_m), "M = {}", st.mean_m);
+    }
+
+    #[test]
+    fn write_mix_triggers_flushes() {
+        let mut rng = Rng::new(5);
+        let kv = LsmKv::new(
+            LsmKvConfig {
+                mix: OpMix::ratio(1, 1),
+                memtable_cap: 256,
+                ..small_cfg()
+            },
+            &mut rng,
+        )
+        .with_background(32);
+        let mut m = Machine::new(
+            MachineConfig {
+                threads_per_core: 32,
+                n_locks: 64,
+                ..Default::default()
+            },
+            kv,
+        );
+        let st = m.run(Dur::ms(5.0), Dur::ms(30.0));
+        assert!(m.service.stats.sets > 1000);
+        assert!(m.service.stats.bg_ops > 0, "compaction never ran");
+        assert!(st.io_writes > 0);
+    }
+}

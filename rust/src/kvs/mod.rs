@@ -1,0 +1,28 @@
+//! SSD-based KV store designs built on the simulator, mirroring the paper's
+//! three modified systems (Fig 13):
+//!
+//! - [`treekv`] — Aerospike-like: in-memory search trees (sprigs) of 64-byte
+//!   index entries on secondary memory; values on SSD; log-structured writes
+//!   with a background defragmenter.
+//! - [`lsmkv`] — RocksDB-like: LSM-tree on SSD with an in-memory sharded-LRU
+//!   block cache on secondary memory; memtable in host DRAM; background
+//!   flush/compaction.
+//! - [`cachekv`] — CacheLib-like: two-tier cache; tier-1 chained hash items +
+//!   LRU lists on secondary memory (bucket array in DRAM), tier-2 small-object
+//!   cache on SSD.
+//!
+//! Each store holds *real* data structures: every simulated pointer
+//! dereference corresponds to an actual traversal step over actual keys, so
+//! the per-operation access count M varies operation-to-operation exactly the
+//! way the paper's probabilistic model assumes. Reads verify data integrity
+//! against a deterministic disk image.
+
+pub mod cachekv;
+pub mod common;
+pub mod lsmkv;
+pub mod treekv;
+
+pub use cachekv::{CacheKv, CacheKvConfig};
+pub use common::{fnv1a, KvStats};
+pub use lsmkv::{LsmKv, LsmKvConfig};
+pub use treekv::{TieringPolicy, TreeKv, TreeKvConfig};

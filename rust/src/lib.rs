@@ -1,0 +1,31 @@
+//! # cxlkvs
+//!
+//! A reproduction of *"Analysis and Evaluation of Using Microsecond-Latency
+//! Memory for In-Memory Indices and Caches in SSD-Based Key-Value Stores"*
+//! (Proc. ACM Manag. Data 3(6), 2025, DOI 10.1145/3769759).
+//!
+//! The crate provides:
+//!
+//! - [`sim`] — a discrete-event simulator of the paper's testbed (cores with
+//!   a depth-`P` prefetch queue, user-level threads, microsecond-latency
+//!   memory with tail/bandwidth knobs, SSDs with bandwidth/IOPS caps).
+//! - [`model`] — the paper's analytic throughput models (Eq 1–16), native.
+//! - [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX+Pallas
+//!   implementation of the same models (`artifacts/*.hlo.txt`) and evaluates
+//!   them in batch from Rust. Python never runs at experiment time.
+//! - [`microbench`] — the paper's §4.1 microbenchmark (pointer chasing + IO).
+//! - [`kvs`] — three SSD-based KV store designs mirroring the paper's
+//!   modified Aerospike / RocksDB / CacheLib, built on the simulator.
+//! - [`workload`] — key/value/operation generators (uniform, Zipf, Gaussian,
+//!   hotset; read:write mixes).
+//! - [`coordinator`] — the experiment registry and sweep runner that
+//!   regenerates every figure and table in the paper's evaluation.
+
+pub mod coordinator;
+pub mod kvs;
+pub mod microbench;
+pub mod model;
+pub mod prop;
+pub mod runtime;
+pub mod sim;
+pub mod workload;

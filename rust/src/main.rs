@@ -1,0 +1,77 @@
+//! cxlkvs CLI — run any of the paper's experiments from the command line.
+//!
+//! Usage:
+//!   cxlkvs list
+//!   cxlkvs run <experiment> [--fast]
+//!   cxlkvs all [--fast]
+//!
+//! Experiments: fig3 fig10 fig11micro fig11kvs fig12 fig14 fig15 fig16
+//!              fig17 fig18 table6 val1404
+//! (The offline image has no argument-parsing crate; parsing is by hand.)
+
+use cxlkvs::coordinator::experiments::{self, ModelBackend};
+
+const EXPERIMENTS: &[&str] = &[
+    "fig3", "fig10", "fig11micro", "fig11kvs", "fig12", "fig14", "fig15", "fig16", "fig17",
+    "fig18", "table6", "val1404",
+];
+
+fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
+    match name {
+        "fig3" => experiments::fig03(backend).print(),
+        "fig10" => experiments::fig10(fast).iter().for_each(|r| r.print()),
+        "fig11micro" => experiments::fig11_micro(backend, fast)
+            .iter()
+            .for_each(|r| r.print()),
+        "fig11kvs" => experiments::fig11_kvs(backend, fast)
+            .iter()
+            .for_each(|r| r.print()),
+        "fig12" => experiments::fig12(backend, fast).iter().for_each(|r| r.print()),
+        "fig14" => experiments::fig14(fast).iter().for_each(|r| r.print()),
+        "fig15" => experiments::fig15(fast).print(),
+        "fig16" => experiments::fig16(fast).print(),
+        "fig17" => experiments::fig17(fast).print(),
+        "fig18" => experiments::fig18(fast).print(),
+        "table6" => experiments::table6(fast).print(),
+        "val1404" => experiments::val1404(backend, fast).print(),
+        _ => return false,
+    }
+    true
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let fast = args.iter().any(|a| a == "--fast")
+        || cxlkvs::coordinator::runner::fast_mode();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+
+    match cmd {
+        "list" => {
+            println!("experiments:");
+            for e in EXPERIMENTS {
+                println!("  {e}");
+            }
+        }
+        "run" => {
+            let name = args.get(1).map(String::as_str).unwrap_or("");
+            let mut backend = ModelBackend::auto();
+            eprintln!("model backend: {}", backend.name());
+            if !run_one(name, &mut backend, fast) {
+                eprintln!("unknown experiment '{name}'; try `cxlkvs list`");
+                std::process::exit(2);
+            }
+        }
+        "all" => {
+            let mut backend = ModelBackend::auto();
+            eprintln!("model backend: {}", backend.name());
+            for e in EXPERIMENTS {
+                eprintln!(">> {e}");
+                run_one(e, &mut backend, fast);
+            }
+        }
+        _ => {
+            println!("usage: cxlkvs list | run <experiment> [--fast] | all [--fast]");
+            std::process::exit(if cmd == "help" { 0 } else { 2 });
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! The paper's §4.1 microbenchmark: each operation performs `M` dependent
+//! pointer-chasing accesses on a permuted chain placed on (simulated)
+//! secondary memory, then issues one SSD IO (Fig 9). Each memory suboperation
+//! costs `T_mem` of compute (the paper generates variations with `pause`
+//! spin loops); the IO suboperation times are the SSD's `t_pre`/`t_post` plus
+//! configurable extras (the paper's +1/+2 µs variations).
+//!
+//! Setting `io: false` gives the memory-only benchmark used to estimate `P`
+//! and `T_sw` via Eq 3; `m: 0` gives the IO-only benchmark used to estimate
+//! `T_IO^pre`/`T_IO^post`.
+
+use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
+
+/// Microbenchmark parameters (one §4.1.2 combination).
+#[derive(Debug, Clone)]
+pub struct MicrobenchConfig {
+    /// Memory accesses per operation, M.
+    pub m: u32,
+    /// Compute per memory access, T_mem.
+    pub t_mem: Dur,
+    /// Extra CPU time added to IO submission (T_IO^pre − base submit cost).
+    pub extra_pre: Dur,
+    /// Extra CPU time added to IO completion handling.
+    pub extra_post: Dur,
+    /// Whether each op ends with an IO.
+    pub io: bool,
+    /// IO transfer size (paper: raw block reads; A_IO in Table 2).
+    pub io_bytes: u32,
+    /// Fraction of IOs that are writes (paper reports read results; writes
+    /// behaved the same).
+    pub write_ratio: f64,
+    /// Pointer-chain length in cachelines (paper: 1G × 64 B = 64 GB; we scale
+    /// down — the chain length only affects locality, which is deliberately
+    /// destroyed by permutation anyway).
+    pub chain_len: u32,
+}
+
+impl Default for MicrobenchConfig {
+    fn default() -> Self {
+        MicrobenchConfig {
+            m: 10,
+            t_mem: Dur::ns(100.0),
+            extra_pre: Dur::ZERO,
+            extra_post: Dur::ZERO,
+            io: true,
+            io_bytes: 1536,
+            write_ratio: 0.0,
+            chain_len: 1 << 20,
+        }
+    }
+}
+
+/// The microbenchmark service: owns the real pointer chain.
+pub struct Microbench {
+    pub cfg: MicrobenchConfig,
+    chain: Vec<u32>,
+    /// Sum of visited chain values (prevents the chase from being optimized
+    /// away and doubles as a determinism check).
+    pub checksum: u64,
+}
+
+#[derive(Debug)]
+pub struct MbOp {
+    cur: u32,
+    left: u32,
+    phase: Phase,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Compute,
+    Access,
+    Io,
+    Done,
+}
+
+impl Microbench {
+    pub fn new(cfg: MicrobenchConfig, rng: &mut Rng) -> Microbench {
+        // Sattolo's algorithm: a single-cycle permutation, so any M-hop walk
+        // from any start visits M distinct lines with no short cycles.
+        let n = cfg.chain_len as usize;
+        let mut chain: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = rng.below(i as u64) as usize;
+            chain.swap(i, j);
+        }
+        Microbench {
+            cfg,
+            chain,
+            checksum: 0,
+        }
+    }
+}
+
+impl Service for Microbench {
+    type Op = MbOp;
+
+    fn next_op(&mut self, _tid: usize, rng: &mut Rng) -> MbOp {
+        let start = rng.below(self.cfg.chain_len as u64) as u32;
+        MbOp {
+            cur: start,
+            left: self.cfg.m,
+            phase: if self.cfg.m > 0 {
+                Phase::Compute
+            } else if self.cfg.io {
+                Phase::Io
+            } else {
+                Phase::Done
+            },
+        }
+    }
+
+    fn step(&mut self, _tid: usize, op: &mut MbOp, rng: &mut Rng) -> Step {
+        match op.phase {
+            Phase::Compute => {
+                op.phase = Phase::Access;
+                Step::Compute(self.cfg.t_mem)
+            }
+            Phase::Access => {
+                // The real dependent load: follow the chain.
+                op.cur = self.chain[op.cur as usize];
+                self.checksum = self.checksum.wrapping_add(op.cur as u64);
+                op.left -= 1;
+                op.phase = if op.left > 0 {
+                    Phase::Compute
+                } else if self.cfg.io {
+                    Phase::Io
+                } else {
+                    Phase::Done
+                };
+                Step::MemAccess(Tier::Secondary)
+            }
+            Phase::Io => {
+                op.phase = Phase::Done;
+                let kind = if self.cfg.write_ratio > 0.0 && rng.chance(self.cfg.write_ratio) {
+                    IoKind::Write
+                } else {
+                    IoKind::Read
+                };
+                Step::Io {
+                    kind,
+                    bytes: self.cfg.io_bytes,
+                    extra_pre: self.cfg.extra_pre,
+                    extra_post: self.cfg.extra_post,
+                }
+            }
+            Phase::Done => Step::Done,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Machine, MachineConfig, MemConfig};
+
+    #[test]
+    fn chain_is_single_cycle() {
+        let mut rng = Rng::new(3);
+        let mb = Microbench::new(
+            MicrobenchConfig {
+                chain_len: 1024,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let mut seen = vec![false; 1024];
+        let mut cur = 0u32;
+        for _ in 0..1024 {
+            assert!(!seen[cur as usize], "short cycle at {cur}");
+            seen[cur as usize] = true;
+            cur = mb.chain[cur as usize];
+        }
+        assert_eq!(cur, 0, "walk should return to start after n hops");
+    }
+
+    #[test]
+    fn ops_have_m_accesses_and_one_io() {
+        let mut rng = Rng::new(4);
+        let mut mb = Microbench::new(
+            MicrobenchConfig {
+                m: 5,
+                chain_len: 4096,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let mut op = mb.next_op(0, &mut rng);
+        let (mut mems, mut ios, mut computes) = (0, 0, 0);
+        loop {
+            match mb.step(0, &mut op, &mut rng) {
+                Step::MemAccess(_) => mems += 1,
+                Step::Io { .. } => ios += 1,
+                Step::Compute(_) => computes += 1,
+                Step::Done => break,
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(mems, 5);
+        assert_eq!(ios, 1);
+        assert_eq!(computes, 5);
+    }
+
+    #[test]
+    fn memory_only_mode_has_no_io() {
+        let mut rng = Rng::new(5);
+        let mut mb = Microbench::new(
+            MicrobenchConfig {
+                m: 3,
+                io: false,
+                chain_len: 4096,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let mut op = mb.next_op(0, &mut rng);
+        loop {
+            match mb.step(0, &mut op, &mut rng) {
+                Step::Io { .. } => panic!("io in memory-only mode"),
+                Step::Done => break,
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn end_to_end_throughput_sane() {
+        let mut rng = Rng::new(6);
+        let mb = Microbench::new(MicrobenchConfig::default(), &mut rng);
+        let mut m = Machine::new(
+            MachineConfig {
+                threads_per_core: 48,
+                mem: MemConfig::fpga(Dur::us(1.0)),
+                ..Default::default()
+            },
+            mb,
+        );
+        let st = m.run(Dur::ms(2.0), Dur::ms(20.0));
+        // Floor: M(T_mem+T_sw)+E = 10*0.15 + 1.5+0.2+0.1 = 3.3 µs/op →
+        // ~300k ops/s; with some waits it's below that but well above 150k.
+        assert!(
+            st.ops_per_sec > 150_000.0 && st.ops_per_sec < 320_000.0,
+            "ops/sec = {}",
+            st.ops_per_sec
+        );
+        assert!((st.mean_m - 10.0).abs() < 1e-9);
+        assert!((st.mean_s - 1.0).abs() < 1e-9);
+        assert!(m.service.checksum != 0);
+    }
+
+    #[test]
+    fn write_mix_produces_writes() {
+        let mut rng = Rng::new(7);
+        let mb = Microbench::new(
+            MicrobenchConfig {
+                write_ratio: 0.5,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let mut m = Machine::new(MachineConfig::default(), mb);
+        let st = m.run(Dur::ms(1.0), Dur::ms(5.0));
+        assert!(st.io_writes > 0 && st.io_reads > 0);
+        let frac = st.io_writes as f64 / (st.io_writes + st.io_reads) as f64;
+        assert!((frac - 0.5).abs() < 0.1, "write frac {frac}");
+    }
+}

@@ -1,0 +1,329 @@
+//! Equations 1–13: memory-only, masking-only, best-case, and the paper's
+//! probabilistic memory-and-IO throughput model.
+
+/// Per-operation parameters (Table 1). One "operation" here is the Sec 3.2.3
+/// split unit: `m` memory accesses followed by one IO. Times in µs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpParams {
+    /// Average number of memory accesses per IO (M).
+    pub m: f64,
+    /// Memory suboperation time T_mem (compute before requesting next line).
+    pub t_mem: f64,
+    /// Pre-IO suboperation time T_IO^pre.
+    pub t_pre: f64,
+    /// Post-IO suboperation time T_IO^post.
+    pub t_post: f64,
+}
+
+impl OpParams {
+    /// Table 1's example values.
+    pub fn table1_example() -> OpParams {
+        OpParams {
+            m: 10.0,
+            t_mem: 0.1,
+            t_pre: 4.0,
+            t_post: 3.0,
+        }
+    }
+
+    /// The IO CPU-time offset E = T_pre + T_post + 2 T_sw (Eq 6).
+    #[inline]
+    pub fn e(&self, t_sw: f64) -> f64 {
+        self.t_pre + self.t_post + 2.0 * t_sw
+    }
+}
+
+/// System parameters (Table 1). Times in µs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SysParams {
+    /// Context switch time T_sw of the user-level threads.
+    pub t_sw: f64,
+    /// Prefetch queue depth P per core.
+    pub p: usize,
+    /// Number of user-level threads N per core.
+    pub n: usize,
+}
+
+impl SysParams {
+    /// Table 1's example values (P=10, T_sw=0.05), with "enough" threads.
+    pub fn table1_example() -> SysParams {
+        SysParams {
+            t_sw: 0.05,
+            p: 10,
+            n: 1_000_000,
+        }
+    }
+
+    /// The paper's measured testbed values (§4.1.3: T_sw=50ns, P=12).
+    pub fn measured_testbed(n: usize) -> SysParams {
+        SysParams {
+            t_sw: 0.05,
+            p: 12,
+            n,
+        }
+    }
+}
+
+/// Eq 1 — single-threaded memory-only reciprocal throughput.
+#[inline]
+pub fn theta_single_recip(t_mem: f64, l_mem: f64) -> f64 {
+    t_mem + l_mem
+}
+
+/// Eq 2 — multi-threaded memory-only reciprocal throughput (no prefetch limit).
+#[inline]
+pub fn theta_multi_recip(t_mem: f64, l_mem: f64, sys: &SysParams) -> f64 {
+    (t_mem + sys.t_sw).max((t_mem + l_mem) / sys.n as f64)
+}
+
+/// Eq 3 — multi-threaded memory-only reciprocal throughput with the
+/// prefetch-queue-depth limit.
+#[inline]
+pub fn theta_mem_recip(t_mem: f64, l_mem: f64, sys: &SysParams) -> f64 {
+    theta_multi_recip(t_mem, l_mem, sys).max(l_mem / sys.p as f64)
+}
+
+/// Eq 4 — the latency beyond which the memory-only throughput degrades.
+#[inline]
+pub fn l_star_memonly(t_mem: f64, sys: &SysParams) -> f64 {
+    sys.p as f64 * (t_mem + sys.t_sw)
+}
+
+/// Eq 5 — masking-only model: IO time merely added to M memory-only units.
+#[inline]
+pub fn theta_mask_recip(op: &OpParams, l_mem: f64, sys: &SysParams) -> f64 {
+    op.m * theta_mem_recip(op.t_mem, l_mem, sys) + op.e(sys.t_sw)
+}
+
+/// Eq 7 — best-case (perfectly misaligned) memory-and-IO model.
+#[inline]
+pub fn theta_best_recip(op: &OpParams, l_mem: f64, sys: &SysParams) -> f64 {
+    (op.m * (op.t_mem + sys.t_sw) + op.e(sys.t_sw)).max(op.m * l_mem / sys.p as f64)
+}
+
+/// Eq 8 — the latency beyond which the best-case throughput degrades.
+#[inline]
+pub fn l_star_io(op: &OpParams, sys: &SysParams) -> f64 {
+    sys.p as f64 * (op.t_mem + sys.t_sw) + sys.p as f64 * op.e(sys.t_sw) / op.m
+}
+
+/// Eq 9 — prefetch wait time for a window of P suboperations in which `j`
+/// memory suboperations were replaced by pre-IOs and `k` post-IOs were
+/// inserted.
+#[inline]
+pub fn t_wait(j: usize, k: usize, op: &OpParams, l_mem: f64, sys: &SysParams) -> f64 {
+    let w = l_mem
+        - sys.p as f64 * (op.t_mem + sys.t_sw)
+        - j as f64 * (op.t_pre - op.t_mem)
+        - k as f64 * (op.t_post + sys.t_sw);
+    w.max(0.0)
+}
+
+/// Natural log of n! (exact iterative; used for the test oracle).
+#[cfg(test)]
+fn ln_factorial(n: usize) -> f64 {
+    let mut acc = 0.0;
+    for i in 2..=n {
+        acc += (i as f64).ln();
+    }
+    acc
+}
+
+/// Upper k-summation bound: p(j,k) vanishes fast; 512 is far past underflow
+/// for the paper's parameter ranges.
+const K_MAX: usize = 512;
+
+/// Cumulative log-factorial table 0..=n (perf: building it per index via
+/// `ln_factorial` made `wait_subop` O(K²); a single cumulative pass is O(K)).
+fn ln_fact_table(n: usize) -> Vec<f64> {
+    let mut t = vec![0.0f64; n + 1];
+    for i in 2..=n {
+        t[i] = t[i - 1] + (i as f64).ln();
+    }
+    t
+}
+
+/// Eq 10–12 — expected prefetch wait time per suboperation.
+///
+/// The probability of the (j,k) window is
+/// `p(j,k) = (P+k)! / ((P-j)! j! k!) * (M/(M+2))^(P-j) * (1/(M+2))^(j+k)`
+/// and the expectation is `Σ p·T_wait / Σ p·(P+k)`.
+pub fn wait_subop(op: &OpParams, l_mem: f64, sys: &SysParams) -> f64 {
+    let p = sys.p;
+    let m = op.m;
+    let ln_q_mem = (m / (m + 2.0)).ln();
+    let ln_q_io = (1.0 / (m + 2.0)).ln();
+    let ln_fact = ln_fact_table(K_MAX.max(p) + 1);
+    let ln_fact_p_minus: Vec<f64> = (0..=p).map(|j| ln_fact[p - j]).collect();
+
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for j in 0..=p {
+        // T_wait decreases linearly in k; once zero it stays zero, but p(j,k)
+        // still contributes to the denominator, so sum k fully (to underflow).
+        let mut tail_negligible = 0;
+        for k in 0..=K_MAX {
+            let ln_p = ln_fact[p + k] - ln_fact_p_minus[j] - ln_fact[j] - ln_fact[k]
+                + (p - j) as f64 * ln_q_mem
+                + (j + k) as f64 * ln_q_io;
+            let pr = ln_p.exp();
+            if pr < 1e-18 {
+                tail_negligible += 1;
+                if tail_negligible > 4 && k > p {
+                    break;
+                }
+                continue;
+            }
+            tail_negligible = 0;
+            num += pr * t_wait(j, k, op, l_mem, sys);
+            den += pr * (p + k) as f64;
+        }
+    }
+    if den <= 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Eq 13 — the paper's probabilistic memory-and-IO reciprocal throughput.
+pub fn theta_prob_recip(op: &OpParams, l_mem: f64, sys: &SysParams) -> f64 {
+    op.m * (op.t_mem + sys.t_sw) + op.e(sys.t_sw) + (op.m + 2.0) * wait_subop(op, l_mem, sys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> SysParams {
+        SysParams::table1_example()
+    }
+    fn op() -> OpParams {
+        OpParams::table1_example()
+    }
+
+    #[test]
+    fn eq1_eq2_eq3_limits() {
+        // Single thread: throughput degrades linearly.
+        assert_eq!(theta_single_recip(0.1, 5.0), 5.1);
+        // Many threads, small latency: bounded by T_mem + T_sw.
+        let s = sys();
+        assert!((theta_multi_recip(0.1, 0.1, &s) - 0.15).abs() < 1e-12);
+        // Depth wall: at L=5 with P=10, L/P = 0.5 dominates.
+        assert!((theta_mem_recip(0.1, 5.0, &s) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq4_example_value() {
+        // Paper: L* = 10 × (0.1 + 0.05) = 1.5 µs.
+        assert!((l_star_memonly(0.1, &sys()) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq6_e_example() {
+        // E = 4 + 3 + 2(0.05) = 7.1 µs.
+        assert!((op().e(0.05) - 7.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq8_example_value() {
+        // Paper: L* = 1.5 + PE/M = 1.5 + 7.1 = 8.6 µs.
+        assert!((l_star_io(&op(), &sys()) - 8.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn masking_paper_example_29pct_at_5us() {
+        // Paper (§3.2.1): masking-only predicts ~29% degradation at 5 µs with
+        // Table 1 values.
+        let s = sys();
+        let o = op();
+        let at_dram = theta_mask_recip(&o, 0.1, &s);
+        let at_5us = theta_mask_recip(&o, 5.0, &s);
+        let degradation = 1.0 - at_dram / at_5us;
+        assert!(
+            (degradation - 0.29).abs() < 0.02,
+            "degradation={degradation}"
+        );
+    }
+
+    #[test]
+    fn prob_paper_example_7pct_at_5us() {
+        // Paper (§3.2.2): the probabilistic model predicts ~7% degradation at
+        // 5 µs with Table 1 values.
+        let s = sys();
+        let o = op();
+        let at_dram = theta_prob_recip(&o, 0.1, &s);
+        let at_5us = theta_prob_recip(&o, 5.0, &s);
+        let degradation = 1.0 - at_dram / at_5us;
+        assert!(
+            (degradation - 0.07).abs() < 0.02,
+            "degradation={degradation}"
+        );
+    }
+
+    #[test]
+    fn prob_at_short_latency_has_no_wait() {
+        // At DRAM-ish latency the wait term vanishes and Eq 13 reduces to
+        // M(T_mem+T_sw) + E.
+        let s = sys();
+        let o = op();
+        let recip = theta_prob_recip(&o, 0.1, &s);
+        let floor = o.m * (o.t_mem + s.t_sw) + o.e(s.t_sw);
+        assert!((recip - floor).abs() < 1e-9, "recip={recip} floor={floor}");
+    }
+
+    #[test]
+    fn prob_bounded_by_masking_and_best() {
+        // Θ_best⁻¹ ≤ Θ_prob⁻¹ ≤ Θ_mask⁻¹ across latencies: the probabilistic
+        // model sits between the perfectly-misaligned and aligned extremes.
+        let s = sys();
+        let o = op();
+        for l in [0.1, 0.5, 1.0, 2.0, 3.0, 5.0, 8.0, 10.0] {
+            let prob = theta_prob_recip(&o, l, &s);
+            let mask = theta_mask_recip(&o, l, &s);
+            let best = theta_best_recip(&o, l, &s);
+            assert!(
+                prob <= mask + 1e-9,
+                "L={l}: prob={prob} > mask={mask}"
+            );
+            assert!(
+                best <= prob + 1e-9,
+                "L={l}: best={best} > prob={prob}"
+            );
+        }
+    }
+
+    #[test]
+    fn prob_monotone_in_latency() {
+        let s = sys();
+        let o = op();
+        let mut prev = 0.0;
+        for i in 1..=100 {
+            let l = i as f64 * 0.1;
+            let r = theta_prob_recip(&o, l, &s);
+            assert!(r >= prev - 1e-12, "not monotone at L={l}");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn wait_subop_zero_when_latency_tiny() {
+        assert_eq!(wait_subop(&op(), 0.01, &sys()), 0.0);
+    }
+
+    #[test]
+    fn ln_factorial_values() {
+        assert_eq!(ln_factorial(0), 0.0);
+        assert_eq!(ln_factorial(1), 0.0);
+        assert!((ln_factorial(5) - 120f64.ln()).abs() < 1e-12);
+        assert!((ln_factorial(10) - 3628800f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ln_fact_table_matches_iterative() {
+        let t = ln_fact_table(64);
+        for n in [0usize, 1, 2, 5, 10, 32, 64] {
+            assert!((t[n] - ln_factorial(n)).abs() < 1e-9, "n={n}");
+        }
+    }
+}

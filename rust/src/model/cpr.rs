@@ -1,0 +1,94 @@
+//! Equation 16: cost-performance ratio of replacing part of the host DRAM by
+//! secondary memory (§5.1, Table 6).
+
+/// A §5.1 cost-performance scenario.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CprScenario {
+    /// Cost share of the replaced DRAM relative to the whole server (c < 1).
+    pub c: f64,
+    /// Relative bit cost of the secondary memory vs DRAM (b < 1).
+    pub b: f64,
+    /// Throughput degradation caused by the secondary memory (d < 1).
+    pub d: f64,
+}
+
+/// Eq 16 — r = (1-d) / (c·b + (1-c)). r > 1 means the replacement improves
+/// cost-performance.
+pub fn cpr(s: &CprScenario) -> f64 {
+    (1.0 - s.d) / (s.c * s.b + (1.0 - s.c))
+}
+
+impl CprScenario {
+    /// The paper's hypothetical: DRAM is half the server cost, 80% of it is
+    /// replaced → c = 0.4.
+    pub fn paper_c() -> f64 {
+        0.5 * 0.8
+    }
+
+    /// Table 6 rows: compressed DRAM (b 1/3–1/2, d 0–2%).
+    pub fn compressed_dram() -> [CprScenario; 2] {
+        let c = Self::paper_c();
+        [
+            CprScenario { c, b: 1.0 / 3.0, d: 0.0 },
+            CprScenario { c, b: 0.5, d: 0.02 },
+        ]
+    }
+
+    /// Table 6 rows: low-latency SLC flash (b 0.15–0.2, d 2–19%).
+    pub fn low_latency_flash() -> [CprScenario; 2] {
+        let c = Self::paper_c();
+        [
+            CprScenario { c, b: 0.15, d: 0.02 },
+            CprScenario { c, b: 0.2, d: 0.19 },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_case() {
+        // No degradation, same bit cost: r = 1.
+        assert!((cpr(&CprScenario { c: 0.4, b: 1.0, d: 0.0 }) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table6_compressed_dram_range() {
+        // Paper: CPR 1.23–1.36 for compressed DRAM.
+        let rs: Vec<f64> = CprScenario::compressed_dram().iter().map(cpr).collect();
+        let lo = rs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = rs.iter().cloned().fold(0.0, f64::max);
+        assert!((lo - 1.23).abs() < 0.02, "lo={lo}");
+        assert!((hi - 1.36).abs() < 0.02, "hi={hi}");
+    }
+
+    #[test]
+    fn table6_flash_range() {
+        // Paper: CPR 1.19–1.50 for low-latency flash.
+        let rs: Vec<f64> = CprScenario::low_latency_flash().iter().map(cpr).collect();
+        let lo = rs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = rs.iter().cloned().fold(0.0, f64::max);
+        assert!((lo - 1.19).abs() < 0.02, "lo={lo}");
+        assert!((hi - 1.50).abs() < 0.02, "hi={hi}");
+    }
+
+    #[test]
+    fn worse_with_more_degradation() {
+        let base = CprScenario { c: 0.4, b: 0.2, d: 0.05 };
+        let worse = CprScenario { d: 0.5, ..base };
+        assert!(cpr(&worse) < cpr(&base));
+    }
+
+    #[test]
+    fn breakeven_degradation() {
+        // r = 1 at d* = 1 - (cb + 1 - c); cheaper memory tolerates more
+        // degradation.
+        let s = CprScenario { c: 0.4, b: 0.15, d: 0.0 };
+        let d_star = 1.0 - (s.c * s.b + (1.0 - s.c));
+        let at_break = CprScenario { d: d_star, ..s };
+        assert!((cpr(&at_break) - 1.0).abs() < 1e-12);
+        assert!((d_star - 0.34).abs() < 1e-9);
+    }
+}

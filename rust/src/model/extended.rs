@@ -1,0 +1,278 @@
+//! Equations 14–15: the extended model with SSD bandwidth/IOPS caps, memory
+//! bandwidth, DRAM/secondary tiering (ρ), and premature cache eviction (ε).
+//!
+//! §3.2.3's extension replaces the latency in Eq 9 by
+//! `L ← max(ρ·L_mem + (1-ρ)·L_DRAM, (P-j)·A_mem/B_mem)` and splits the memory
+//! suboperation into pre-/post-eviction cases; a post-eviction load behaves
+//! like a post-IO suboperation whose time is the (tiered) memory latency.
+
+use super::analytic::{OpParams, SysParams};
+
+/// Extended system parameters (Table 2). Times µs, sizes bytes, rates per µs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExtParams {
+    /// Offloading ratio ρ of indices/caches to secondary memory (by access).
+    pub rho: f64,
+    /// DRAM latency (µs).
+    pub l_dram: f64,
+    /// Premature CPU-cache eviction ratio ε.
+    pub eps: f64,
+    /// Memory access size A_mem (bytes).
+    pub a_mem: f64,
+    /// Max memory bandwidth B_mem (bytes per µs; e.g. 10 GB/s = 10_000 B/µs).
+    pub b_mem: f64,
+    /// Average IO size A_IO (bytes).
+    pub a_io: f64,
+    /// Max SSD bandwidth B_IO (bytes per µs).
+    pub b_io: f64,
+    /// Max SSD random-access rate R_IO (IOs per µs; 2.2 MIOPS = 2.2 IO/µs).
+    pub r_io: f64,
+    /// Average IOs per (whole) KV operation, S (§3.2.3 splits ops per IO).
+    pub s: f64,
+}
+
+impl ExtParams {
+    /// Table 2's example values: full offload, no eviction, testbed devices.
+    pub fn table2_example() -> ExtParams {
+        ExtParams {
+            rho: 1.0,
+            l_dram: 0.09,
+            eps: 0.0,
+            a_mem: 64.0,
+            b_mem: 10_000.0, // 10 GB/s
+            a_io: 1536.0,
+            b_io: 10_000.0,  // 10 GB/s
+            r_io: 2.2,       // 2.2 MIOPS
+            s: 1.0,
+        }
+    }
+}
+
+/// Tiered average latency: ρ·L + (1-ρ)·L_DRAM (Eq 15 first term).
+#[inline]
+fn tiered_latency(l_mem: f64, ext: &ExtParams) -> f64 {
+    ext.rho * l_mem + (1.0 - ext.rho) * ext.l_dram
+}
+
+/// Effective Eq-9 latency for a window with `j` pre-IO replacements (Eq 15).
+#[inline]
+fn l_eff(j: usize, l_mem: f64, ext: &ExtParams, sys: &SysParams) -> f64 {
+    let bw_floor = (sys.p - j) as f64 * ext.a_mem / ext.b_mem;
+    tiered_latency(l_mem, ext).max(bw_floor)
+}
+
+const K_MAX: usize = 256;
+
+/// Θ_rev⁻¹: the probabilistic model revised for tiering, memory bandwidth,
+/// and eviction. Falls back to the base model's behaviour when
+/// ρ=1, ε=0, and B_mem is large.
+///
+/// Suboperation categories (per §3.2.3):
+/// - pre-eviction memory: probability (1-ε)·M/(M+2) — behaves like `mem`,
+/// - post-eviction memory: probability ε·M/(M+2) — behaves like post-IO with
+///   time = tiered memory latency,
+/// - pre-IO: 1/(M+2), post-IO: 1/(M+2).
+///
+/// A window holds P "slot" suboperations of which j are pre-IO, plus k1
+/// post-IO and k2 post-eviction insertions.
+pub fn theta_rev_recip(op: &OpParams, l_mem: f64, ext: &ExtParams, sys: &SysParams) -> f64 {
+    let p = sys.p;
+    let m = op.m;
+    let l_tier = tiered_latency(l_mem, ext);
+
+    let q_mem = (1.0 - ext.eps) * m / (m + 2.0);
+    let q_pre = 1.0 / (m + 2.0);
+    let q_post = 1.0 / (m + 2.0);
+    let q_ev = ext.eps * m / (m + 2.0);
+
+    let ln_q_mem = q_mem.ln();
+    let ln_q_pre = q_pre.ln();
+    let ln_q_post = q_post.ln();
+    let ln_q_ev = if q_ev > 0.0 { q_ev.ln() } else { f64::NEG_INFINITY };
+
+    let max_n = p + 2 * K_MAX + 2;
+    let mut ln_fact = vec![0.0f64; max_n + 1];
+    for i in 2..=max_n {
+        ln_fact[i] = ln_fact[i - 1] + (i as f64).ln();
+    }
+
+    let k2_max = if ext.eps > 0.0 { K_MAX } else { 0 };
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for j in 0..=p {
+        let le = l_eff(j, l_mem, ext, sys);
+        let base =
+            le - p as f64 * (op.t_mem + sys.t_sw) - j as f64 * (op.t_pre - op.t_mem);
+        for k1 in 0..=K_MAX {
+            let after_k1 = base - k1 as f64 * (op.t_post + sys.t_sw);
+            let ln_p1 = ln_fact[p + k1] - ln_fact[p - j] - ln_fact[j] - ln_fact[k1]
+                + (p - j) as f64 * ln_q_mem
+                + j as f64 * ln_q_pre
+                + k1 as f64 * ln_q_post;
+            if ln_p1 < -60.0 && k1 > p {
+                break;
+            }
+            for k2 in 0..=k2_max {
+                let ln_pr = if k2 == 0 {
+                    ln_p1
+                } else {
+                    // extend the multinomial with k2 post-eviction insertions
+                    ln_fact[p + k1 + k2] - ln_fact[p - j] - ln_fact[j] - ln_fact[k1]
+                        - ln_fact[k2]
+                        + (p - j) as f64 * ln_q_mem
+                        + j as f64 * ln_q_pre
+                        + k1 as f64 * ln_q_post
+                        + k2 as f64 * ln_q_ev
+                };
+                if ln_pr < -60.0 {
+                    if k2 > 0 {
+                        break;
+                    }
+                    continue;
+                }
+                let pr = ln_pr.exp();
+                let w = (after_k1 - k2 as f64 * (l_tier + sys.t_sw)).max(0.0);
+                num += pr * w;
+                den += pr * (p + k1 + k2) as f64;
+            }
+        }
+    }
+    let t_wait_subop = if den > 0.0 { num / den } else { 0.0 };
+
+    // Eq 13 assembly plus the expected synchronous-refetch cost of evicted
+    // loads (ε·M loads pay the tiered latency again).
+    op.m * (op.t_mem + sys.t_sw)
+        + op.e(sys.t_sw)
+        + (op.m + 2.0) * t_wait_subop
+        + ext.eps * op.m * l_tier
+}
+
+/// Eq 14 — the full extended reciprocal throughput of a *whole* KV operation
+/// with S IOs: S split-operations plus the SSD bandwidth/IOPS floors.
+pub fn theta_extended_recip(op: &OpParams, l_mem: f64, ext: &ExtParams, sys: &SysParams) -> f64 {
+    let per_io = theta_rev_recip(op, l_mem, ext, sys);
+    let whole = ext.s * per_io;
+    let bw_floor = ext.s * ext.a_io / ext.b_io;
+    let iops_floor = ext.s / ext.r_io;
+    whole.max(bw_floor).max(iops_floor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::analytic::{theta_prob_recip, OpParams, SysParams};
+    use super::*;
+
+    fn op() -> OpParams {
+        OpParams::table1_example()
+    }
+    fn sys() -> SysParams {
+        SysParams::table1_example()
+    }
+
+    #[test]
+    fn reduces_to_base_model() {
+        // ρ=1, ε=0, huge B_mem → Θ_rev == Θ_prob.
+        let ext = ExtParams {
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        };
+        for l in [0.1, 1.0, 3.0, 5.0, 10.0] {
+            let a = theta_rev_recip(&op(), l, &ext, &sys());
+            let b = theta_prob_recip(&op(), l, &sys());
+            assert!((a - b).abs() < 1e-6, "L={l}: rev={a} prob={b}");
+        }
+    }
+
+    #[test]
+    fn tiering_interpolates() {
+        let sys = sys();
+        let mk = |rho| ExtParams {
+            rho,
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        };
+        let full = theta_rev_recip(&op(), 10.0, &mk(1.0), &sys);
+        let half = theta_rev_recip(&op(), 10.0, &mk(0.5), &sys);
+        let none = theta_rev_recip(&op(), 10.0, &mk(0.0), &sys);
+        assert!(none < half && half < full, "none={none} half={half} full={full}");
+        // ρ=0 equals running at DRAM latency.
+        let dram = theta_prob_recip(&op(), 0.09, &sys);
+        assert!((none - dram).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eviction_hurts() {
+        let sys = sys();
+        let clean = ExtParams {
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        };
+        let dirty = ExtParams { eps: 0.05, ..clean };
+        let a = theta_rev_recip(&op(), 5.0, &clean, &sys);
+        let b = theta_rev_recip(&op(), 5.0, &dirty, &sys);
+        assert!(b > a, "eviction should slow things down: {a} vs {b}");
+        // ε=5% of M=10 loads paying 5 µs ≈ +2.5 µs on ~8.7 µs: substantial.
+        assert!(b - a > 1.5, "expected sizable penalty, got {}", b - a);
+    }
+
+    #[test]
+    fn io_bandwidth_floor_caps_throughput() {
+        let sys = sys();
+        // Huge IOs on a slow device: A_IO/B_IO dominates at short latency.
+        let ext = ExtParams {
+            a_io: 128.0 * 1024.0,
+            b_io: 2_500.0, // 2.5 GB/s
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        };
+        let recip_dram = theta_extended_recip(&op(), 0.1, &ext, &sys);
+        let floor = ext.a_io / ext.b_io;
+        assert!((recip_dram - floor).abs() < 1e-9);
+        // The cap makes short-latency throughput flat: 0.1 and 2 µs agree.
+        let recip_2us = theta_extended_recip(&op(), 2.0, &ext, &sys);
+        assert_eq!(recip_dram, recip_2us);
+    }
+
+    #[test]
+    fn iops_floor_caps_throughput() {
+        let sys = sys();
+        let ext = ExtParams {
+            r_io: 0.075, // 75 KIOPS SATA
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        };
+        let recip = theta_extended_recip(&op(), 0.1, &ext, &sys);
+        assert!((recip - 1.0 / 0.075).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mem_bandwidth_floor_raises_wait() {
+        let sys = sys();
+        // Throttle memory bandwidth hard: 64B per (P·64/B) window forces
+        // waits even at DRAM-like latency.
+        let slow = ExtParams {
+            b_mem: 50.0, // 50 MB/s
+            ..ExtParams::table2_example()
+        };
+        let fast = ExtParams {
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        };
+        let a = theta_rev_recip(&op(), 0.5, &slow, &sys);
+        let b = theta_rev_recip(&op(), 0.5, &fast, &sys);
+        assert!(a > b * 1.2, "bandwidth floor should bite: {a} vs {b}");
+    }
+
+    #[test]
+    fn s_scales_whole_op() {
+        let sys = sys();
+        let mk = |s| ExtParams {
+            s,
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        };
+        let one = theta_extended_recip(&op(), 1.0, &mk(1.0), &sys);
+        let two = theta_extended_recip(&op(), 1.0, &mk(2.0), &sys);
+        assert!((two - 2.0 * one).abs() < 1e-9);
+    }
+}

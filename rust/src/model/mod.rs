@@ -1,0 +1,20 @@
+//! The paper's analytic throughput models (§3), implemented natively in Rust.
+//!
+//! The same equations are implemented in JAX+Pallas (python/compile/) and
+//! AOT-compiled to an HLO artifact executed through [`crate::runtime`]; this
+//! native version exists to cross-validate the artifact and to serve
+//! latency-insensitive call sites (single evaluations in tests).
+//!
+//! All times are in **microseconds** (the paper's Table 1 units); throughputs
+//! are in operations per microsecond (reciprocals are µs/op).
+
+pub mod analytic;
+pub mod cpr;
+pub mod extended;
+
+pub use analytic::{
+    l_star_io, l_star_memonly, theta_best_recip, theta_mask_recip, theta_mem_recip,
+    theta_multi_recip, theta_prob_recip, theta_single_recip, wait_subop, OpParams, SysParams,
+};
+pub use cpr::{cpr, CprScenario};
+pub use extended::{theta_extended_recip, theta_rev_recip, ExtParams};

@@ -1,0 +1,153 @@
+//! Minimal property-based testing support.
+//!
+//! The offline image has no `proptest`/`quickcheck`, so this module provides
+//! the subset the test suite needs: seeded generators, a runner that reports
+//! the failing case, and shrinking for integer tuples (halving toward the
+//! minimum). Deliberately tiny — tests pass explicit generator closures.
+
+use crate::sim::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropCfg {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropCfg {
+    fn default() -> Self {
+        PropCfg {
+            cases: 64,
+            seed: 0x9e3779b97f4a7c15,
+        }
+    }
+}
+
+/// Run `check` on `cases` values from `gen`. On failure, try to shrink via
+/// `shrink` (which yields "smaller" candidates) and panic with the smallest
+/// failing input.
+pub fn forall<T, G, S, C>(cfg: PropCfg, mut gen: G, shrink: S, mut check: C)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            // Greedy shrink: repeatedly take the first shrunk candidate that
+            // still fails.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 64 {
+                improved = false;
+                rounds += 1;
+                for cand in shrink(&best) {
+                    if let Err(m) = check(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  input: {best:?}\n  error: {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// No shrinking (for types where it isn't worth it).
+pub fn no_shrink<T: Clone>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+/// Shrink a `u64` toward `lo` by halving the distance.
+pub fn shrink_u64(lo: u64) -> impl Fn(&u64) -> Vec<u64> {
+    move |&x| {
+        if x <= lo {
+            Vec::new()
+        } else {
+            let mid = lo + (x - lo) / 2;
+            if mid == x {
+                vec![lo]
+            } else {
+                vec![mid, x - 1]
+            }
+        }
+    }
+}
+
+/// Shrink an `f64` toward a reference point.
+pub fn shrink_f64(lo: f64) -> impl Fn(&f64) -> Vec<f64> {
+    move |&x| {
+        if (x - lo).abs() < 1e-9 {
+            Vec::new()
+        } else {
+            vec![lo + (x - lo) / 2.0]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            PropCfg::default(),
+            |rng| rng.below(1000),
+            no_shrink,
+            |&x| {
+                if x < 1000 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} out of range"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                PropCfg {
+                    cases: 200,
+                    seed: 3,
+                },
+                |rng| rng.below(10_000),
+                shrink_u64(0),
+                |&x| {
+                    if x < 500 {
+                        Ok(())
+                    } else {
+                        Err("too big".into())
+                    }
+                },
+            );
+        });
+        assert!(result.is_err(), "property should have failed");
+    }
+
+    #[test]
+    fn shrink_u64_halves() {
+        let s = shrink_u64(0);
+        assert_eq!(s(&8), vec![4, 7]);
+        assert!(s(&0).is_empty());
+    }
+
+    #[test]
+    fn shrink_f64_midpoint() {
+        let s = shrink_f64(0.0);
+        assert_eq!(s(&8.0), vec![4.0]);
+        assert!(s(&0.0).is_empty());
+    }
+}

@@ -1,0 +1,195 @@
+//! Batched model evaluation through PJRT.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Compiled-in batch size of the AOT artifacts (python/compile/model.py).
+pub const BATCH: usize = 64;
+/// Input columns of the base artifact.
+pub const BASE_COLS: usize = 8;
+/// Output columns of the base artifact.
+pub const BASE_OUTS: usize = 6;
+/// Input columns of the extended artifact.
+pub const EXT_COLS: usize = 16;
+/// Output columns of the extended artifact.
+pub const EXT_OUTS: usize = 2;
+
+/// One base-model parameter tuple (times in µs; mirrors Table 1).
+#[derive(Debug, Clone, Copy)]
+pub struct BaseIn {
+    pub m: f32,
+    pub t_mem: f32,
+    pub t_pre: f32,
+    pub t_post: f32,
+    pub l_mem: f32,
+    pub t_sw: f32,
+    pub p: f32,
+    pub n: f32,
+}
+
+/// Reciprocal throughputs (µs/op) of all §3 base models for one input.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BaseOut {
+    pub single: f32,
+    pub multi: f32,
+    pub mem: f32,
+    pub mask: f32,
+    pub best: f32,
+    pub prob: f32,
+}
+
+/// One extended-model parameter tuple (Table 2; µs / bytes / bytes-per-µs /
+/// IOs-per-µs).
+#[derive(Debug, Clone, Copy)]
+pub struct ExtIn {
+    pub m: f32,
+    pub t_mem: f32,
+    pub t_pre: f32,
+    pub t_post: f32,
+    pub l_mem: f32,
+    pub t_sw: f32,
+    pub p: f32,
+    pub rho: f32,
+    pub eps: f32,
+    pub a_mem: f32,
+    pub b_mem: f32,
+    pub l_dram: f32,
+    pub a_io: f32,
+    pub b_io: f32,
+    pub r_io: f32,
+    pub s: f32,
+}
+
+/// Reciprocal throughputs of the extended models for one input.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExtOut {
+    pub rev: f32,
+    pub extended: f32,
+}
+
+impl BaseIn {
+    fn row(&self) -> [f32; BASE_COLS] {
+        [
+            self.m, self.t_mem, self.t_pre, self.t_post, self.l_mem, self.t_sw, self.p,
+            self.n,
+        ]
+    }
+}
+
+impl ExtIn {
+    fn row(&self) -> [f32; EXT_COLS] {
+        [
+            self.m, self.t_mem, self.t_pre, self.t_post, self.l_mem, self.t_sw, self.p,
+            self.rho, self.eps, self.a_mem, self.b_mem, self.l_dram, self.a_io, self.b_io,
+            self.r_io, self.s,
+        ]
+    }
+}
+
+/// Owns the PJRT client and the two compiled model executables.
+pub struct ModelEvaluator {
+    client: xla::PjRtClient,
+    base_exe: xla::PjRtLoadedExecutable,
+    ext_exe: xla::PjRtLoadedExecutable,
+    /// Number of PJRT executions performed (perf accounting).
+    pub executions: u64,
+}
+
+impl ModelEvaluator {
+    /// Load from an artifacts directory (default: `artifacts/` at the repo
+    /// root, overridable with `CXLKVS_ARTIFACTS`).
+    pub fn load_default() -> Result<ModelEvaluator> {
+        let dir = std::env::var("CXLKVS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn load(dir: &Path) -> Result<ModelEvaluator> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let base = Self::compile(&client, &dir.join(format!("model_base_b{BATCH}.hlo.txt")))?;
+        let ext = Self::compile(&client, &dir.join(format!("model_extended_b{BATCH}.hlo.txt")))?;
+        Ok(ModelEvaluator {
+            client,
+            base_exe: base,
+            ext_exe: ext,
+            executions: 0,
+        })
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &PathBuf) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse HLO text {path:?} (run `make artifacts`)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile {path:?}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Evaluate the base models for an arbitrary number of inputs; inputs are
+    /// padded to the artifact's static batch internally.
+    pub fn eval_base(&mut self, inputs: &[BaseIn]) -> Result<Vec<BaseOut>> {
+        let mut out = Vec::with_capacity(inputs.len());
+        for chunk in inputs.chunks(BATCH) {
+            let mut flat = vec![0f32; BATCH * BASE_COLS];
+            for (i, inp) in chunk.iter().enumerate() {
+                flat[i * BASE_COLS..(i + 1) * BASE_COLS].copy_from_slice(&inp.row());
+            }
+            // Pad with the last row (keeps every lane numerically benign).
+            if let Some(last) = chunk.last() {
+                for i in chunk.len()..BATCH {
+                    flat[i * BASE_COLS..(i + 1) * BASE_COLS].copy_from_slice(&last.row());
+                }
+            }
+            let lit = xla::Literal::vec1(&flat).reshape(&[BATCH as i64, BASE_COLS as i64])?;
+            let res = self.base_exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            self.executions += 1;
+            let tup = res.to_tuple1()?;
+            let vals = tup.to_vec::<f32>()?;
+            anyhow::ensure!(vals.len() == BATCH * BASE_OUTS, "bad output size");
+            for (i, _) in chunk.iter().enumerate() {
+                let r = &vals[i * BASE_OUTS..(i + 1) * BASE_OUTS];
+                out.push(BaseOut {
+                    single: r[0],
+                    multi: r[1],
+                    mem: r[2],
+                    mask: r[3],
+                    best: r[4],
+                    prob: r[5],
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Evaluate the extended models (Eq 14–15) for arbitrary many inputs.
+    pub fn eval_extended(&mut self, inputs: &[ExtIn]) -> Result<Vec<ExtOut>> {
+        let mut out = Vec::with_capacity(inputs.len());
+        for chunk in inputs.chunks(BATCH) {
+            let mut flat = vec![0f32; BATCH * EXT_COLS];
+            for (i, inp) in chunk.iter().enumerate() {
+                flat[i * EXT_COLS..(i + 1) * EXT_COLS].copy_from_slice(&inp.row());
+            }
+            if let Some(last) = chunk.last() {
+                for i in chunk.len()..BATCH {
+                    flat[i * EXT_COLS..(i + 1) * EXT_COLS].copy_from_slice(&last.row());
+                }
+            }
+            let lit = xla::Literal::vec1(&flat).reshape(&[BATCH as i64, EXT_COLS as i64])?;
+            let res = self.ext_exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            self.executions += 1;
+            let tup = res.to_tuple1()?;
+            let vals = tup.to_vec::<f32>()?;
+            anyhow::ensure!(vals.len() == BATCH * EXT_OUTS, "bad output size");
+            for (i, _) in chunk.iter().enumerate() {
+                out.push(ExtOut {
+                    rev: vals[i * EXT_OUTS],
+                    extended: vals[i * EXT_OUTS + 1],
+                });
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load the AOT-compiled JAX+Pallas model artifacts
+//! (`artifacts/*.hlo.txt`) and evaluate them in batch from Rust.
+//!
+//! Python runs only at `make artifacts` time; this module is the whole
+//! request-path story: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `client.compile` → `execute`. HLO *text* is the interchange format (the
+//! image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos; the text
+//! parser reassigns ids).
+
+pub mod evaluator;
+
+pub use evaluator::{BaseIn, BaseOut, ExtIn, ExtOut, ModelEvaluator};

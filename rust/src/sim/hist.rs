@@ -1,0 +1,205 @@
+//! Log-bucketed latency histograms (the simulator's replacement for the
+//! paper's PEBS `perf mem` load-latency sampling, Fig 10, and for the KV
+//! operation latency percentiles, Fig 17).
+
+use super::time::Dur;
+
+/// A histogram over durations with logarithmic buckets.
+///
+/// Bucket `i` covers `[lo * g^i, lo * g^(i+1))` where `g` is chosen so that
+/// `n_buckets` buckets span `[lo, hi)`. Values below `lo` land in bucket 0
+/// (that bucket therefore means "effectively zero wait" — cache hits);
+/// values at or above `hi` land in the last bucket.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    counts: Vec<u64>,
+    lo_ps: f64,
+    log_g: f64,
+    total: u64,
+    sum_ps: u128,
+    max_ps: u64,
+}
+
+impl LatencyHist {
+    /// Default: 1 ns .. 100 µs over 120 buckets (≈10 buckets per decade).
+    pub fn new() -> LatencyHist {
+        LatencyHist::with_range(Dur::ns(1.0), Dur::us(100.0), 120)
+    }
+
+    pub fn with_range(lo: Dur, hi: Dur, n_buckets: usize) -> LatencyHist {
+        assert!(n_buckets >= 2 && hi > lo && lo.0 > 0);
+        let lo_ps = lo.0 as f64;
+        let hi_ps = hi.0 as f64;
+        let log_g = (hi_ps / lo_ps).ln() / n_buckets as f64;
+        LatencyHist {
+            counts: vec![0; n_buckets],
+            lo_ps,
+            log_g,
+            total: 0,
+            sum_ps: 0,
+            max_ps: 0,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, d: Dur) {
+        // Perf fast path: the overwhelmingly common case on the simulator's
+        // hot path is a zero/near-zero wait (prefetch hit) — skip the ln().
+        if d.0 == 0 {
+            self.counts[0] += 1;
+            self.total += 1;
+            return;
+        }
+        let idx = if (d.0 as f64) < self.lo_ps {
+            0
+        } else {
+            let i = ((d.0 as f64 / self.lo_ps).ln() / self.log_g) as usize;
+            i.min(self.counts.len() - 1)
+        };
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_ps += d.0 as u128;
+        self.max_ps = self.max_ps.max(d.0);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> Dur {
+        if self.total == 0 {
+            Dur::ZERO
+        } else {
+            Dur((self.sum_ps / self.total as u128) as u64)
+        }
+    }
+
+    pub fn max(&self) -> Dur {
+        Dur(self.max_ps)
+    }
+
+    /// Quantile (0.0..=1.0) estimated as the upper edge of the containing bucket.
+    pub fn quantile(&self, q: f64) -> Dur {
+        if self.total == 0 {
+            return Dur::ZERO;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let edge = self.lo_ps * ((i as f64 + 1.0) * self.log_g).exp();
+                return Dur(edge as u64);
+            }
+        }
+        Dur(self.max_ps)
+    }
+
+    /// Fraction of samples at or above a threshold (used to estimate the
+    /// premature-eviction ratio ε from the load-wait distribution).
+    pub fn frac_at_least(&self, d: Dur) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let upper = self.lo_ps * ((i as f64 + 1.0) * self.log_g).exp();
+            if upper as u64 > d.0 {
+                acc += c;
+            }
+        }
+        acc as f64 / self.total as f64
+    }
+
+    /// (bucket_upper_edge, count) pairs for non-empty buckets — the Fig 10 series.
+    pub fn buckets(&self) -> Vec<(Dur, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let edge = self.lo_ps * ((i as f64 + 1.0) * self.log_g).exp();
+                (Dur(edge as u64), c)
+            })
+            .collect()
+    }
+
+    pub fn merge(&mut self, other: &LatencyHist) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ps += other.sum_ps;
+        self.max_ps = self.max_ps.max(other.max_ps);
+    }
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_counts() {
+        let mut h = LatencyHist::new();
+        for _ in 0..10 {
+            h.record(Dur::us(1.0));
+        }
+        assert_eq!(h.total(), 10);
+        assert_eq!(h.mean(), Dur::us(1.0));
+        assert_eq!(h.max(), Dur::us(1.0));
+    }
+
+    #[test]
+    fn quantiles_are_ordered_and_bracket() {
+        let mut h = LatencyHist::new();
+        for i in 1..=1000u64 {
+            h.record(Dur::ns(i as f64 * 10.0)); // 10ns .. 10us uniform
+        }
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        assert!(p50 < p99);
+        // ~5us median, bucket resolution ~12%
+        assert!(p50.as_us() > 3.5 && p50.as_us() < 7.0, "p50={p50}");
+        assert!(p99.as_us() > 8.0, "p99={p99}");
+    }
+
+    #[test]
+    fn frac_at_least_splits() {
+        let mut h = LatencyHist::new();
+        for _ in 0..90 {
+            h.record(Dur::ns(5.0));
+        }
+        for _ in 0..10 {
+            h.record(Dur::us(9.0));
+        }
+        let f = h.frac_at_least(Dur::us(1.0));
+        assert!((f - 0.10).abs() < 0.01, "f={f}");
+    }
+
+    #[test]
+    fn zero_and_overflow_clamp() {
+        let mut h = LatencyHist::new();
+        h.record(Dur::ZERO);
+        h.record(Dur::secs(1.0)); // way past hi
+        assert_eq!(h.total(), 2);
+        assert_eq!(h.buckets().len(), 2);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        a.record(Dur::us(1.0));
+        b.record(Dur::us(2.0));
+        a.merge(&b);
+        assert_eq!(a.total(), 2);
+        assert!(a.mean() > Dur::us(1.0));
+    }
+}

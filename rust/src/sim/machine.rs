@@ -1,0 +1,944 @@
+//! The simulated testbed machine: cores, user-level threads, prefetch queues,
+//! the CPU cache, locks, one secondary-memory device, and one SSD (array).
+//!
+//! This is the substitute for the paper's Xeon + FPGA-CXL + Optane testbed
+//! (DESIGN.md §2). It implements the *mechanisms* the paper's model
+//! approximates — run-to-yield user-level threads with context-switch cost
+//! `T_sw`, a per-core prefetch queue of depth `P` whose entries complete
+//! `L_mem` after they start, core stalls on not-yet-arrived lines, premature
+//! cache eviction, asynchronous IO with pre/post CPU suboperations — so that
+//! comparing simulator measurements against the analytic model is the same
+//! experiment the paper runs against its hardware.
+//!
+//! ## Execution semantics (one "slice")
+//!
+//! A core repeatedly pops the front of its FIFO ready queue and runs that
+//! thread until it yields. Steps a thread's state machine can request:
+//!
+//! - `Compute(d)`       — core busy for `d`; no yield.
+//! - `MemAccess(Dram)`  — inline load (~`L_DRAM`); no yield.
+//! - `MemAccess(Secondary)` — issue a prefetch (subject to the depth-`P`
+//!   queue and the device bandwidth server), charge `T_sw`, yield to the back
+//!   of the ready queue. When rescheduled, the load completes: if the line
+//!   has not arrived the core *stalls* until it does (Fig 5's gray bars); if
+//!   the line was prematurely evicted (ε path) the core performs a fresh
+//!   synchronous fetch.
+//! - `Io{..}`           — charge `T_IO_pre` (+ any extra), submit to the SSD,
+//!   charge `T_sw`, block until the completion event; when rescheduled charge
+//!   `T_sw` (the model's second switch in `E`) + `T_IO_post` (+ extra).
+//! - `Lock(id)`/`Unlock(id)` — FIFO mutex; contended acquires block.
+//! - `Done`             — operation complete; the service supplies the next
+//!   operation and the thread continues within the same slice.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::mem::{MemConfig, MemDevice};
+use super::metrics::{CoreBreakdown, Metrics};
+use super::rng::Rng;
+use super::ssd::{IoKind, SsdConfig, SsdDevice};
+use super::time::{Dur, Time};
+
+/// Which memory a (simulated) pointer dereference goes to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Host DRAM — short inline latency, no prefetch+yield needed.
+    Dram,
+    /// Secondary (microsecond-latency) memory — prefetch+yield path.
+    Secondary,
+}
+
+/// One suboperation requested by an operation state machine.
+#[derive(Debug, Clone, Copy)]
+pub enum Step {
+    /// CPU-only work.
+    Compute(Dur),
+    /// One dependent memory access (pointer chase hop).
+    MemAccess(Tier),
+    /// One asynchronous IO. `extra_pre`/`extra_post` are CPU work attributed
+    /// to the IO suboperations beyond the device's configured `t_pre`/`t_post`
+    /// (the microbenchmark's +1/+2 µs variations; block parsing in KV stores).
+    Io {
+        kind: IoKind,
+        bytes: u32,
+        extra_pre: Dur,
+        extra_post: Dur,
+    },
+    /// Acquire a simulated lock (FIFO; blocks if held).
+    Lock(u32),
+    /// Release a simulated lock.
+    Unlock(u32),
+    /// Cooperative yield (T_sw, back of the ready queue) without a memory
+    /// access — used by background workers' pacing loops.
+    Yield,
+    /// Operation finished.
+    Done,
+}
+
+/// A workload/service drives each thread's operations. The service owns the
+/// real data structures (pointer chains, trees, caches); the machine owns
+/// all timing.
+pub trait Service {
+    /// Per-thread operation state machine.
+    type Op;
+    /// Create the next operation for a thread.
+    fn next_op(&mut self, tid: usize, rng: &mut Rng) -> Self::Op;
+    /// Advance the operation; called repeatedly until `Step::Done`.
+    fn step(&mut self, tid: usize, op: &mut Self::Op, rng: &mut Rng) -> Step;
+    /// Notification that the op's outstanding IO completed (deliver data).
+    fn io_done(&mut self, _tid: usize, _op: &mut Self::Op) {}
+}
+
+/// Machine configuration (the Table 2/Table 3 knobs).
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    pub cores: usize,
+    pub threads_per_core: usize,
+    /// Prefetch queue depth P per core (paper measures P=12 on the Xeon).
+    pub prefetch_depth: usize,
+    /// Context switch time of the user-level threads.
+    pub t_sw: Dur,
+    /// Inline DRAM access latency.
+    pub dram_latency: Dur,
+    /// CPU cache capacity in lines for prefetched-data survival. A line is
+    /// prematurely evicted if at least this many later line-fills happened
+    /// before it is consumed (LRU approximation; see DESIGN.md §6).
+    pub cache_lines: u64,
+    /// Secondary memory device.
+    pub mem: MemConfig,
+    /// SSD (array).
+    pub ssd: SsdConfig,
+    /// Number of simulated locks available to the service.
+    pub n_locks: usize,
+    /// Per-extra-core inflation of Compute durations, modeling cross-core
+    /// cache/coherence contention (κ; Fig 14's sublinear scaling).
+    pub contention_factor: f64,
+    /// Charge `T_sw` when a thread resumes from IO wait (the model's `2 T_sw`
+    /// per IO in Eq 6). Default true.
+    pub charge_resume_switch: bool,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for MachineConfig {
+    fn default() -> Self {
+        MachineConfig {
+            cores: 1,
+            threads_per_core: 48,
+            prefetch_depth: 12,
+            t_sw: Dur::ns(50.0),
+            dram_latency: Dur::ns(90.0),
+            cache_lines: 1_000_000, // ~60 MB L3 / 64 B
+            mem: MemConfig::fpga(Dur::us(5.0)),
+            ssd: SsdConfig::optane_array(),
+            n_locks: 0,
+            contention_factor: 0.0,
+            charge_resume_switch: true,
+            seed: 0x5eed,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ThreadState {
+    Ready,
+    WaitIo,
+    WaitLock,
+}
+
+/// A pending prefetched line to be consumed at the thread's next slice.
+#[derive(Debug, Clone, Copy)]
+struct PendingLine {
+    ready_at: Time,
+    /// Core line-fill sequence number at issue (for the eviction check).
+    seq: u64,
+}
+
+struct ThreadSlot<Op> {
+    core: usize,
+    state: ThreadState,
+    op: Option<Op>,
+    pending: Option<PendingLine>,
+    /// Charge post-IO CPU time at next slice start.
+    resume_post_io: Option<Dur>,
+    /// Bytes of the outstanding IO (its DMA pollutes the CPU cache on
+    /// completion, DDIO-style — counted as line fills for the ε model).
+    pending_io_bytes: u32,
+    // Per-op measurement state.
+    op_start: Time,
+    op_mem_accesses: u32,
+    op_ios: u32,
+    op_compute: Dur,
+}
+
+struct Core {
+    time: Time,
+    ready: VecDeque<usize>,
+    /// Completion times of in-flight prefetches (FIFO, ≤ P entries).
+    pf_ring: VecDeque<Time>,
+    /// Line-fill sequence counter (prefetch issues).
+    fetch_seq: u64,
+    breakdown: CoreBreakdown,
+}
+
+#[derive(Debug, Default)]
+struct SimLock {
+    holder: Option<usize>,
+    waiters: VecDeque<usize>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKind {
+    IoDone(usize),
+    LockGrant(usize),
+}
+
+/// The simulated machine, generic over the service (workload/KV store).
+pub struct Machine<S: Service> {
+    pub cfg: MachineConfig,
+    pub service: S,
+    pub mem: MemDevice,
+    pub ssd: SsdDevice,
+    pub metrics: Metrics,
+    threads: Vec<ThreadSlot<S::Op>>,
+    cores: Vec<Core>,
+    locks: Vec<SimLock>,
+    events: BinaryHeap<Reverse<(Time, u64, EventKind)>>,
+    event_seq: u64,
+    rng: Rng,
+    /// Compute-duration multiplier from cross-core contention (fixed-point /1024).
+    contention_mul_1024: u64,
+}
+
+impl<S: Service> Machine<S> {
+    pub fn new(cfg: MachineConfig, service: S) -> Machine<S> {
+        let mut rng = Rng::new(cfg.seed);
+        let n_threads = cfg.cores * cfg.threads_per_core;
+        let mut threads = Vec::with_capacity(n_threads);
+        let mut cores = Vec::with_capacity(cfg.cores);
+        for c in 0..cfg.cores {
+            let mut ready = VecDeque::with_capacity(cfg.threads_per_core);
+            for i in 0..cfg.threads_per_core {
+                ready.push_back(c * cfg.threads_per_core + i);
+            }
+            cores.push(Core {
+                // Stagger core start times slightly to avoid artificial lockstep.
+                time: Time::ZERO + Dur(rng.below(1000) * 100),
+                ready,
+                pf_ring: VecDeque::with_capacity(cfg.prefetch_depth),
+                fetch_seq: 0,
+                breakdown: CoreBreakdown::default(),
+            });
+        }
+        for c in 0..cfg.cores {
+            for _ in 0..cfg.threads_per_core {
+                threads.push(ThreadSlot {
+                    core: c,
+                    state: ThreadState::Ready,
+                    op: None,
+                    pending: None,
+                    resume_post_io: None,
+                    pending_io_bytes: 0,
+                    op_start: Time::ZERO,
+                    op_mem_accesses: 0,
+                    op_ios: 0,
+                    op_compute: Dur::ZERO,
+                });
+            }
+        }
+        let contention_mul_1024 =
+            (1024.0 * (1.0 + cfg.contention_factor * (cfg.cores as f64 - 1.0))) as u64;
+        let locks = (0..cfg.n_locks).map(|_| SimLock::default()).collect();
+        Machine {
+            mem: MemDevice::new(cfg.mem.clone()),
+            ssd: SsdDevice::new(cfg.ssd.clone()),
+            metrics: Metrics::new(cfg.cores),
+            threads,
+            cores,
+            locks,
+            events: BinaryHeap::new(),
+            event_seq: 0,
+            rng,
+            contention_mul_1024,
+            cfg,
+            service,
+        }
+    }
+
+    /// Simulated time = max over cores (for reporting).
+    pub fn now(&self) -> Time {
+        self.cores.iter().map(|c| c.time).max().unwrap_or(Time::ZERO)
+    }
+
+    #[inline]
+    fn push_event(&mut self, t: Time, k: EventKind) {
+        self.event_seq += 1;
+        self.events.push(Reverse((t, self.event_seq, k)));
+    }
+
+    /// Run a measurement: `warmup` of untimed execution, then reset counters
+    /// and run `window`; metrics then describe the window only.
+    pub fn run(&mut self, warmup: Dur, window: Dur) -> RunStats {
+        let t0 = self.now();
+        self.run_until(t0 + warmup);
+        self.metrics.reset();
+        self.mem.reset_stats();
+        self.ssd.reset_stats();
+        let w_start = self.now();
+        let w_end = w_start + window;
+        self.metrics.window_start = w_start;
+        self.metrics.window_end = w_end;
+        self.run_until(w_end);
+        RunStats::from_metrics(&self.metrics, window, &self.mem, &self.ssd)
+    }
+
+    /// Advance the simulation until every core's local clock reaches `t_end`.
+    pub fn run_until(&mut self, t_end: Time) {
+        loop {
+            // Pick the entity with the smallest time: a runnable core or the
+            // earliest pending event.
+            let mut best_core: Option<(Time, usize)> = None;
+            for (i, c) in self.cores.iter().enumerate() {
+                if !c.ready.is_empty() {
+                    match best_core {
+                        Some((t, _)) if t <= c.time => {}
+                        _ => best_core = Some((c.time, i)),
+                    }
+                }
+            }
+            let ev_time = self.events.peek().map(|Reverse((t, _, _))| *t);
+            match (best_core, ev_time) {
+                (Some((ct, ci)), Some(et)) => {
+                    if et < ct {
+                        if et >= t_end {
+                            break;
+                        }
+                        self.deliver_event();
+                    } else {
+                        if ct >= t_end {
+                            break;
+                        }
+                        self.run_slice(ci);
+                    }
+                }
+                (Some((ct, ci)), None) => {
+                    if ct >= t_end {
+                        break;
+                    }
+                    self.run_slice(ci);
+                }
+                (None, Some(et)) => {
+                    if et >= t_end {
+                        break;
+                    }
+                    self.deliver_event();
+                }
+                (None, None) => break, // fully quiescent
+            }
+        }
+    }
+
+    fn deliver_event(&mut self) {
+        let Reverse((t, _, kind)) = self.events.pop().unwrap();
+        match kind {
+            EventKind::IoDone(tid) => {
+                let op = self.threads[tid].op.as_mut().unwrap();
+                self.service.io_done(tid, op);
+                // IO DMA lands in the LLC (DDIO): its lines push prefetched
+                // data toward eviction.
+                let lines = (self.threads[tid].pending_io_bytes / 64) as u64;
+                let core_id = self.threads[tid].core;
+                self.cores[core_id].fetch_seq += lines;
+                self.make_ready(tid, t);
+            }
+            EventKind::LockGrant(tid) => {
+                self.make_ready(tid, t);
+            }
+        }
+    }
+
+    fn make_ready(&mut self, tid: usize, t: Time) {
+        let core_id = self.threads[tid].core;
+        let core = &mut self.cores[core_id];
+        self.threads[tid].state = ThreadState::Ready;
+        if core.ready.is_empty() && core.time < t {
+            core.breakdown.idle += t - core.time;
+            core.time = t;
+        }
+        core.ready.push_back(tid);
+    }
+
+    #[inline]
+    fn scaled(&self, d: Dur) -> Dur {
+        if self.contention_mul_1024 == 1024 {
+            d
+        } else {
+            Dur(d.0 * self.contention_mul_1024 / 1024)
+        }
+    }
+
+    /// Run one thread until it yields.
+    fn run_slice(&mut self, core_id: usize) {
+        let tid = self.cores[core_id].ready.pop_front().unwrap();
+        debug_assert_eq!(self.threads[tid].state, ThreadState::Ready);
+
+        // 1. Consume a pending prefetched line, if any.
+        if let Some(p) = self.threads[tid].pending.take() {
+            let core = &mut self.cores[core_id];
+            let evicted = core.fetch_seq - p.seq >= self.cfg.cache_lines;
+            if evicted {
+                // ε path: the prefetched line is gone; synchronous demand fetch.
+                let done = self.mem.transfer(core.time, &mut self.rng);
+                let wait = done - core.time;
+                core.breakdown.stall += wait;
+                core.time = done;
+                self.metrics.load_wait.record(wait);
+                self.metrics.evictions += 1;
+                self.metrics.loads += 1;
+            } else if p.ready_at > core.time {
+                // Late prefetch (queue-depth limited): stall until arrival.
+                let wait = p.ready_at - core.time;
+                core.breakdown.stall += wait;
+                core.time = p.ready_at;
+                self.metrics.load_wait.record(wait);
+                self.metrics.loads += 1;
+            } else {
+                // Cache hit — the common case the whole scheme exists for.
+                self.metrics.load_wait.record(Dur::ZERO);
+                self.metrics.loads += 1;
+            }
+        }
+
+        // 2. Charge post-IO CPU time if resuming from IO.
+        if let Some(post) = self.threads[tid].resume_post_io.take() {
+            let mut d = self.scaled(post);
+            let core = &mut self.cores[core_id];
+            if self.cfg.charge_resume_switch {
+                d += self.cfg.t_sw;
+            }
+            core.time += d;
+            core.breakdown.busy += d;
+            self.threads[tid].op_compute += post;
+        }
+
+        // 3. Run steps until the thread yields.
+        loop {
+            if self.threads[tid].op.is_none() {
+                let op = self.service.next_op(tid, &mut self.rng);
+                let th = &mut self.threads[tid];
+                th.op = Some(op);
+                th.op_start = self.cores[core_id].time;
+                th.op_mem_accesses = 0;
+                th.op_ios = 0;
+                th.op_compute = Dur::ZERO;
+            }
+            let step = {
+                let th = &mut self.threads[tid];
+                self.service.step(tid, th.op.as_mut().unwrap(), &mut self.rng)
+            };
+            match step {
+                Step::Compute(d) => {
+                    let dd = self.scaled(d);
+                    let core = &mut self.cores[core_id];
+                    core.time += dd;
+                    core.breakdown.busy += dd;
+                    self.threads[tid].op_compute += d;
+                }
+                Step::MemAccess(Tier::Dram) => {
+                    let core = &mut self.cores[core_id];
+                    core.time += self.cfg.dram_latency;
+                    core.breakdown.busy += self.cfg.dram_latency;
+                    self.metrics.dram_accesses += 1;
+                    // Inline access: no yield; continue the slice.
+                }
+                Step::MemAccess(Tier::Secondary) => {
+                    let core = &mut self.cores[core_id];
+                    // Prefetch queue depth P: if full, the new prefetch starts
+                    // only when the oldest in-flight one completes.
+                    let start = if core.pf_ring.len() >= self.cfg.prefetch_depth {
+                        let oldest = core.pf_ring.pop_front().unwrap();
+                        oldest.max(core.time)
+                    } else {
+                        core.time
+                    };
+                    let completion = self.mem.transfer(start, &mut self.rng);
+                    core.pf_ring.push_back(completion);
+                    core.fetch_seq += 1;
+                    let seq = core.fetch_seq;
+                    // Yield: charge T_sw, go to the back of the ready queue.
+                    core.time += self.cfg.t_sw;
+                    core.breakdown.busy += self.cfg.t_sw;
+                    core.ready.push_back(tid);
+                    let th = &mut self.threads[tid];
+                    th.pending = Some(PendingLine {
+                        ready_at: completion,
+                        seq,
+                    });
+                    th.op_mem_accesses += 1;
+                    self.metrics.secondary_accesses += 1;
+                    return;
+                }
+                Step::Io {
+                    kind,
+                    bytes,
+                    extra_pre,
+                    extra_post,
+                } => {
+                    let t_pre = self.scaled(self.cfg.ssd.t_pre + extra_pre);
+                    let core = &mut self.cores[core_id];
+                    core.time += t_pre;
+                    core.breakdown.busy += t_pre;
+                    let submit = core.time;
+                    let completion = self.ssd.submit(submit, kind, bytes, &mut self.rng);
+                    // Yield: T_sw, block until completion.
+                    let core = &mut self.cores[core_id];
+                    core.time += self.cfg.t_sw;
+                    core.breakdown.busy += self.cfg.t_sw;
+                    let th = &mut self.threads[tid];
+                    th.state = ThreadState::WaitIo;
+                    th.resume_post_io = Some(self.cfg.ssd.t_post + extra_post);
+                    th.pending_io_bytes = bytes;
+                    th.op_ios += 1;
+                    th.op_compute += self.cfg.ssd.t_pre + extra_pre;
+                    self.metrics.ios += 1;
+                    self.metrics.io_latency.record(completion - submit);
+                    self.push_event(completion, EventKind::IoDone(tid));
+                    return;
+                }
+                Step::Lock(id) => {
+                    let lock = &mut self.locks[id as usize];
+                    match lock.holder {
+                        None => {
+                            lock.holder = Some(tid);
+                            self.metrics.lock_acquires += 1;
+                        }
+                        Some(h) => {
+                            debug_assert_ne!(h, tid, "recursive lock");
+                            lock.waiters.push_back(tid);
+                            let core = &mut self.cores[core_id];
+                            core.time += self.cfg.t_sw;
+                            core.breakdown.busy += self.cfg.t_sw;
+                            self.threads[tid].state = ThreadState::WaitLock;
+                            self.metrics.lock_contended += 1;
+                            return;
+                        }
+                    }
+                }
+                Step::Unlock(id) => {
+                    let now = self.cores[core_id].time;
+                    let lock = &mut self.locks[id as usize];
+                    debug_assert_eq!(lock.holder, Some(tid), "unlock by non-holder");
+                    if let Some(next) = lock.waiters.pop_front() {
+                        lock.holder = Some(next);
+                        self.metrics.lock_acquires += 1;
+                        self.push_event(now, EventKind::LockGrant(next));
+                    } else {
+                        lock.holder = None;
+                    }
+                }
+                Step::Yield => {
+                    let core = &mut self.cores[core_id];
+                    core.time += self.cfg.t_sw;
+                    core.breakdown.busy += self.cfg.t_sw;
+                    core.ready.push_back(tid);
+                    return;
+                }
+                Step::Done => {
+                    let now = self.cores[core_id].time;
+                    let th = &mut self.threads[tid];
+                    self.metrics.record_op(
+                        now,
+                        now - th.op_start,
+                        th.op_mem_accesses,
+                        th.op_ios,
+                        th.op_compute,
+                    );
+                    th.op = None;
+                    // Continue in the same slice: the next op's first memory
+                    // access or IO will yield naturally.
+                }
+            }
+        }
+    }
+
+    /// Per-core busy/stall/idle breakdown (for reports and perf analysis).
+    pub fn breakdowns(&self) -> Vec<CoreBreakdown> {
+        self.cores.iter().map(|c| c.breakdown.clone()).collect()
+    }
+}
+
+/// Summary of one measurement window.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    /// Operations completed per second of simulated time.
+    pub ops_per_sec: f64,
+    pub ops: u64,
+    /// Mean KV-op latency and quantiles.
+    pub op_latency_mean: Dur,
+    pub op_latency_p50: Dur,
+    pub op_latency_p99: Dur,
+    /// Mean secondary-memory accesses per op (the measured M).
+    pub mean_m: f64,
+    /// Mean IOs per op (the measured S).
+    pub mean_s: f64,
+    /// Mean compute time per op (→ T_mem estimation).
+    pub mean_compute: Dur,
+    /// Premature-eviction ratio ε (evictions / secondary loads).
+    pub eviction_ratio: f64,
+    /// Load-wait distribution (Fig 10).
+    pub load_wait_mean: Dur,
+    pub load_wait_p99: Dur,
+    /// IO statistics.
+    pub io_reads: u64,
+    pub io_writes: u64,
+    pub io_bytes: u64,
+    /// Lock contention ratio.
+    pub lock_contention: f64,
+}
+
+impl RunStats {
+    fn from_metrics(m: &Metrics, window: Dur, _mem: &MemDevice, ssd: &SsdDevice) -> RunStats {
+        let ops = m.ops;
+        let secs = window.as_secs();
+        RunStats {
+            ops_per_sec: ops as f64 / secs,
+            ops,
+            op_latency_mean: m.op_latency.mean(),
+            op_latency_p50: m.op_latency.quantile(0.5),
+            op_latency_p99: m.op_latency.quantile(0.99),
+            mean_m: if ops > 0 {
+                m.sum_mem_accesses as f64 / ops as f64
+            } else {
+                0.0
+            },
+            mean_s: if ops > 0 {
+                m.sum_ios as f64 / ops as f64
+            } else {
+                0.0
+            },
+            mean_compute: if ops > 0 {
+                Dur(m.sum_compute.0 / ops)
+            } else {
+                Dur::ZERO
+            },
+            eviction_ratio: if m.loads > 0 {
+                m.evictions as f64 / m.loads as f64
+            } else {
+                0.0
+            },
+            load_wait_mean: m.load_wait.mean(),
+            load_wait_p99: m.load_wait.quantile(0.99),
+            io_reads: ssd.reads,
+            io_writes: ssd.writes,
+            io_bytes: ssd.bytes,
+            lock_contention: if m.lock_acquires > 0 {
+                m.lock_contended as f64 / m.lock_acquires as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+// `mem` is used for symmetry in from_metrics signatures today; keep the
+// parameter so device-level stats can be surfaced without changing callers.
+#[allow(dead_code)]
+fn _use(_m: &MemDevice) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A trivial service: fixed M memory accesses + one IO per op.
+    struct FixedOps {
+        m: u32,
+        t_mem: Dur,
+        tier: Tier,
+    }
+    #[derive(Debug)]
+    struct FixedOp {
+        left: u32,
+        io_done: bool,
+        compute_next: bool,
+    }
+    impl Service for FixedOps {
+        type Op = FixedOp;
+        fn next_op(&mut self, _tid: usize, _rng: &mut Rng) -> FixedOp {
+            FixedOp {
+                left: self.m,
+                io_done: false,
+                compute_next: true,
+            }
+        }
+        fn step(&mut self, _tid: usize, op: &mut FixedOp, _rng: &mut Rng) -> Step {
+            if op.left > 0 {
+                if op.compute_next {
+                    op.compute_next = false;
+                    return Step::Compute(self.t_mem);
+                }
+                op.left -= 1;
+                op.compute_next = true;
+                return Step::MemAccess(self.tier);
+            }
+            if !op.io_done {
+                op.io_done = true;
+                return Step::Io {
+                    kind: IoKind::Read,
+                    bytes: 1536,
+                    extra_pre: Dur::ZERO,
+                    extra_post: Dur::ZERO,
+                };
+            }
+            Step::Done
+        }
+    }
+
+    fn base_cfg() -> MachineConfig {
+        MachineConfig {
+            threads_per_core: 48,
+            mem: MemConfig::fpga(Dur::us(1.0)),
+            ssd: SsdConfig {
+                jitter_frac: 0.0, // exact timings for the arithmetic tests
+                ..SsdConfig::optane_array()
+            },
+            ..MachineConfig::default()
+        }
+    }
+
+    #[test]
+    fn single_thread_single_op_timing() {
+        // One thread, M=2, DRAM-tier accesses are inline: op time is
+        // deterministic: 2*(T_mem + L_dram) + T_pre + L_IO + T_sw(yield)
+        // + T_sw(resume) + T_post.
+        let cfg = MachineConfig {
+            threads_per_core: 1,
+            ..base_cfg()
+        };
+        let mut m = Machine::new(
+            cfg,
+            FixedOps {
+                m: 2,
+                t_mem: Dur::ns(100.0),
+                tier: Tier::Dram,
+            },
+        );
+        let stats = m.run(Dur::ms(1.0), Dur::ms(10.0));
+        // The submit-side T_sw overlaps the IO latency (the switch happens
+        // while the IO is in flight), so op latency is:
+        // 2(T_mem+L_dram) + T_pre + L_IO + T_sw(resume) + T_post.
+        let expect = 2.0 * (0.1 + 0.09) + 1.5 + 10.0 + 0.05 + 0.2; // us
+        let got = stats.op_latency_mean.as_us();
+        assert!(
+            (got - expect).abs() < 0.02,
+            "op latency {got} vs expected {expect}"
+        );
+        assert!((stats.mean_m - 0.0).abs() < 1e-9); // DRAM accesses aren't "M"
+        assert!((stats.mean_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multithreading_hides_io_latency() {
+        // Single-threaded: each op takes >11.6us (IO latency dominates).
+        // 48 threads: IO latency is hidden; throughput approaches
+        // 1/(M(T_mem+T_sw) + E) per core.
+        let svc = || FixedOps {
+            m: 10,
+            t_mem: Dur::ns(100.0),
+            tier: Tier::Secondary,
+        };
+        let mut single = Machine::new(
+            MachineConfig {
+                threads_per_core: 1,
+                mem: MemConfig::fpga(Dur::ns(100.0)),
+                ..base_cfg()
+            },
+            svc(),
+        );
+        let s1 = single.run(Dur::ms(1.0), Dur::ms(20.0));
+        let mut multi = Machine::new(
+            MachineConfig {
+                threads_per_core: 64,
+                mem: MemConfig::fpga(Dur::ns(100.0)),
+                ..base_cfg()
+            },
+            svc(),
+        );
+        let sn = multi.run(Dur::ms(1.0), Dur::ms(20.0));
+        assert!(
+            sn.ops_per_sec > 4.0 * s1.ops_per_sec,
+            "single={} multi={}",
+            s1.ops_per_sec,
+            sn.ops_per_sec
+        );
+        // Reciprocal throughput should be near M(T_mem+T_sw)+E
+        // = 10*0.15 + (1.5+0.2+2*0.05) = 3.3 us
+        // (plus small prefetch waits at 100ns latency: none).
+        let recip_us = 1e6 / sn.ops_per_sec;
+        assert!(
+            (recip_us - 3.3).abs() < 0.3,
+            "recip_us={recip_us} expected ~3.3"
+        );
+    }
+
+    #[test]
+    fn prefetch_depth_wall_appears_without_io() {
+        // Memory-only service: no IO. At L=10us with P=12,
+        // reciprocal >= L/P = 0.833us per access.
+        struct MemOnly;
+        impl Service for MemOnly {
+            type Op = (u32, bool);
+            fn next_op(&mut self, _t: usize, _r: &mut Rng) -> (u32, bool) {
+                (1, true)
+            }
+            fn step(&mut self, _t: usize, op: &mut (u32, bool), _r: &mut Rng) -> Step {
+                if op.1 {
+                    op.1 = false;
+                    return Step::Compute(Dur::ns(100.0));
+                }
+                if op.0 > 0 {
+                    op.0 -= 1;
+                    return Step::MemAccess(Tier::Secondary);
+                }
+                Step::Done
+            }
+        }
+        let mut m = Machine::new(
+            MachineConfig {
+                threads_per_core: 64,
+                mem: MemConfig::fpga(Dur::us(10.0)),
+                ..base_cfg()
+            },
+            MemOnly,
+        );
+        let st = m.run(Dur::ms(1.0), Dur::ms(20.0));
+        let recip_us = 1e6 / st.ops_per_sec;
+        // L/P = 10/12 = 0.833us; with T_mem+T_sw=0.15 the wall dominates.
+        assert!(
+            (recip_us - 10.0 / 12.0).abs() < 0.05,
+            "recip_us={recip_us} expected ~0.833"
+        );
+        // And the load-wait histogram must show real stalls.
+        assert!(st.load_wait_mean > Dur::ns(100.0));
+    }
+
+    #[test]
+    fn eviction_ratio_rises_with_tiny_cache() {
+        let svc = FixedOps {
+            m: 10,
+            t_mem: Dur::ns(100.0),
+            tier: Tier::Secondary,
+        };
+        let mut m = Machine::new(
+            MachineConfig {
+                threads_per_core: 64,
+                cache_lines: 40, // smaller than the thread count
+                mem: MemConfig::fpga(Dur::us(5.0)),
+                ..base_cfg()
+            },
+            svc,
+        );
+        let st = m.run(Dur::ms(1.0), Dur::ms(10.0));
+        assert!(
+            st.eviction_ratio > 0.01,
+            "eviction_ratio={}",
+            st.eviction_ratio
+        );
+    }
+
+    #[test]
+    fn no_evictions_with_large_cache() {
+        let svc = FixedOps {
+            m: 10,
+            t_mem: Dur::ns(100.0),
+            tier: Tier::Secondary,
+        };
+        let mut m = Machine::new(
+            MachineConfig {
+                threads_per_core: 64,
+                mem: MemConfig::fpga(Dur::us(5.0)),
+                ..base_cfg()
+            },
+            svc,
+        );
+        let st = m.run(Dur::ms(1.0), Dur::ms(10.0));
+        assert_eq!(st.eviction_ratio, 0.0);
+    }
+
+    #[test]
+    fn multicore_scales() {
+        let svc = || FixedOps {
+            m: 10,
+            t_mem: Dur::ns(100.0),
+            tier: Tier::Secondary,
+        };
+        let run = |cores: usize| {
+            let mut m = Machine::new(
+                MachineConfig {
+                    cores,
+                    threads_per_core: 48,
+                    contention_factor: 0.025,
+                    mem: MemConfig::fpga(Dur::us(5.0)),
+                    ..base_cfg()
+                },
+                svc(),
+            );
+            m.run(Dur::ms(1.0), Dur::ms(10.0)).ops_per_sec
+        };
+        let t1 = run(1);
+        let t4 = run(4);
+        assert!(t4 > 3.0 * t1, "t1={t1} t4={t4}");
+        assert!(t4 < 4.0 * t1, "contention should make scaling sublinear");
+    }
+
+    #[test]
+    fn locks_serialize() {
+        // Every op takes the same lock around its memory access; with many
+        // threads, throughput should be far below the lock-free case.
+        struct Locked;
+        impl Service for Locked {
+            type Op = u32; // 0=lock,1=mem,2=unlock,3=done
+            fn next_op(&mut self, _t: usize, _r: &mut Rng) -> u32 {
+                0
+            }
+            fn step(&mut self, _t: usize, op: &mut u32, _r: &mut Rng) -> Step {
+                let s = *op;
+                *op += 1;
+                match s {
+                    0 => Step::Lock(0),
+                    1 => Step::MemAccess(Tier::Secondary),
+                    2 => Step::Unlock(0),
+                    _ => Step::Done,
+                }
+            }
+        }
+        let mut m = Machine::new(
+            MachineConfig {
+                threads_per_core: 32,
+                n_locks: 1,
+                mem: MemConfig::fpga(Dur::us(5.0)),
+                ..base_cfg()
+            },
+            Locked,
+        );
+        let st = m.run(Dur::ms(1.0), Dur::ms(10.0));
+        // Lock held across the 5us access: throughput ~1/5us = 200k ops/s.
+        let recip_us = 1e6 / st.ops_per_sec;
+        assert!(recip_us > 4.0, "recip_us={recip_us}: lock did not serialize");
+        assert!(st.lock_contention > 0.5);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let svc = || FixedOps {
+            m: 5,
+            t_mem: Dur::ns(120.0),
+            tier: Tier::Secondary,
+        };
+        let mut a = Machine::new(base_cfg(), svc());
+        let mut b = Machine::new(base_cfg(), svc());
+        let sa = a.run(Dur::ms(1.0), Dur::ms(5.0));
+        let sb = b.run(Dur::ms(1.0), Dur::ms(5.0));
+        assert_eq!(sa.ops, sb.ops);
+        assert_eq!(sa.op_latency_mean, sb.op_latency_mean);
+    }
+}

@@ -1,0 +1,308 @@
+//! Memory device models.
+//!
+//! This module stands in for the paper's testbed memory parts (Table 3):
+//! host DRAM, a commercial CXL memory expander (~300 ns), and the FPGA-based
+//! CXL memory whose latency is **user-configurable in the microsecond range**
+//! and which can (a) throttle bandwidth and (b) inject a tail-latency profile
+//! (§5.1: 14 µs at 9.9% and 48 µs at 0.1% on top of a 5 µs base, fitted to a
+//! low-latency SSD's latency distribution).
+//!
+//! The device is modeled as a latency draw plus a completion-rate server:
+//! consecutive line transfers cannot complete closer together than
+//! `A_mem / B_mem` (Eq 15's second term).
+
+use super::rng::Rng;
+use super::time::{Dur, Time};
+
+/// Probabilistic extra-latency profile (longer latencies with probabilities).
+#[derive(Debug, Clone, Default)]
+pub struct TailProfile {
+    /// (latency, probability) entries; probabilities must sum to < 1.
+    /// The remaining mass uses the base latency.
+    pub entries: Vec<(Dur, f64)>,
+}
+
+impl TailProfile {
+    /// The §5.1 profile: 14 µs at 9.9%, 48 µs at 0.1%.
+    pub fn paper_flash() -> TailProfile {
+        TailProfile {
+            entries: vec![(Dur::us(14.0), 0.099), (Dur::us(48.0), 0.001)],
+        }
+    }
+
+    /// Expected latency given a base latency.
+    pub fn mean_latency(&self, base: Dur) -> Dur {
+        let tail_p: f64 = self.entries.iter().map(|&(_, p)| p).sum();
+        let mut mean = base.0 as f64 * (1.0 - tail_p);
+        for &(d, p) in &self.entries {
+            mean += d.0 as f64 * p;
+        }
+        Dur(mean as u64)
+    }
+}
+
+/// §5.2.4 extension: an on-device cache in front of the slow medium.
+/// Commercial µs-latency devices (e.g. CXL flash with a DRAM buffer) serve
+/// a fraction of loads at near-DRAM latency.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceCache {
+    /// Fraction of transfers served by the on-device cache.
+    pub hit_ratio: f64,
+    /// Latency of a device-cache hit.
+    pub hit_latency: Dur,
+}
+
+/// Configuration of one memory device (a NUMA node in the paper's setup).
+#[derive(Debug, Clone)]
+pub struct MemConfig {
+    /// Base load-to-use latency of the device.
+    pub latency: Dur,
+    /// Cacheline transfer size A_mem (bytes).
+    pub line_bytes: u32,
+    /// Max bandwidth B_mem in bytes/sec; `f64::INFINITY` disables the server.
+    pub bandwidth_bps: f64,
+    /// Optional tail-latency profile.
+    pub tail: Option<TailProfile>,
+    /// Optional on-device cache (§5.2.4 extension).
+    pub device_cache: Option<DeviceCache>,
+}
+
+impl MemConfig {
+    /// Host DRAM: ~90 ns, effectively unlimited bandwidth at our scale.
+    pub fn dram() -> MemConfig {
+        MemConfig {
+            latency: Dur::ns(90.0),
+            line_bytes: 64,
+            bandwidth_bps: f64::INFINITY,
+            tail: None,
+            device_cache: None,
+        }
+    }
+
+    /// Commercial CXL memory expander (~300 ns measured in the paper).
+    pub fn cxl_expander() -> MemConfig {
+        MemConfig {
+            latency: Dur::ns(300.0),
+            line_bytes: 64,
+            bandwidth_bps: f64::INFINITY,
+            tail: None,
+            device_cache: None,
+        }
+    }
+
+    /// FPGA-based adjustable microsecond-latency memory. The paper's device
+    /// bottoms out at 0.5 µs; we accept any latency (DRAM-placement runs use
+    /// the same code path with a ~0.1 µs setting).
+    pub fn fpga(latency: Dur) -> MemConfig {
+        MemConfig {
+            latency,
+            line_bytes: 64,
+            bandwidth_bps: f64::INFINITY,
+            tail: None,
+            device_cache: None,
+        }
+    }
+
+    pub fn with_bandwidth(mut self, bps: f64) -> MemConfig {
+        self.bandwidth_bps = bps;
+        self
+    }
+
+    pub fn with_tail(mut self, tail: TailProfile) -> MemConfig {
+        self.tail = Some(tail);
+        self
+    }
+
+    /// §5.2.4 extension: add an on-device cache.
+    pub fn with_device_cache(mut self, hit_ratio: f64, hit_latency: Dur) -> MemConfig {
+        self.device_cache = Some(DeviceCache {
+            hit_ratio,
+            hit_latency,
+        });
+        self
+    }
+
+    /// Mean latency including the tail profile.
+    pub fn mean_latency(&self) -> Dur {
+        match &self.tail {
+            Some(t) => t.mean_latency(self.latency),
+            None => self.latency,
+        }
+    }
+}
+
+/// Runtime state of a memory device.
+#[derive(Debug, Clone)]
+pub struct MemDevice {
+    pub cfg: MemConfig,
+    /// Completion-rate server: earliest time the next transfer may complete.
+    next_completion_floor: Time,
+    /// Minimum spacing between completions (A_mem / B_mem), 0 if unlimited.
+    spacing: Dur,
+    /// Stats.
+    pub transfers: u64,
+    pub tail_hits: u64,
+}
+
+impl MemDevice {
+    pub fn new(cfg: MemConfig) -> MemDevice {
+        let spacing = if cfg.bandwidth_bps.is_finite() && cfg.bandwidth_bps > 0.0 {
+            Dur::secs(cfg.line_bytes as f64 / cfg.bandwidth_bps)
+        } else {
+            Dur::ZERO
+        };
+        MemDevice {
+            cfg,
+            next_completion_floor: Time::ZERO,
+            spacing,
+            transfers: 0,
+            tail_hits: 0,
+        }
+    }
+
+    /// Draw the latency for one transfer.
+    #[inline]
+    pub fn draw_latency(&mut self, rng: &mut Rng) -> Dur {
+        // On-device cache hits short-circuit both the slow medium and the
+        // tail profile (the tail models the medium, not the buffer).
+        if let Some(dc) = &self.cfg.device_cache {
+            if rng.f64() < dc.hit_ratio {
+                return dc.hit_latency;
+            }
+        }
+        if let Some(tail) = &self.cfg.tail {
+            let x = rng.f64();
+            let mut acc = 0.0;
+            for &(d, p) in &tail.entries {
+                acc += p;
+                if x < acc {
+                    self.tail_hits += 1;
+                    return d;
+                }
+            }
+        }
+        self.cfg.latency
+    }
+
+    /// Issue a line transfer starting at `start`; returns its completion time,
+    /// honoring both the latency draw and the bandwidth server.
+    #[inline]
+    pub fn transfer(&mut self, start: Time, rng: &mut Rng) -> Time {
+        let lat = self.draw_latency(rng);
+        let mut done = start + lat;
+        if !self.spacing.is_zero() {
+            if done < self.next_completion_floor {
+                done = self.next_completion_floor;
+            }
+            self.next_completion_floor = done + self.spacing;
+        }
+        self.transfers += 1;
+        done
+    }
+
+    /// Reset server state & stats (between measurement windows).
+    pub fn reset_stats(&mut self) {
+        self.transfers = 0;
+        self.tail_hits = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_latency_no_bandwidth_limit() {
+        let mut dev = MemDevice::new(MemConfig::fpga(Dur::us(5.0)));
+        let mut rng = Rng::new(1);
+        let t0 = Time::ZERO + Dur::us(1.0);
+        assert_eq!(dev.transfer(t0, &mut rng), t0 + Dur::us(5.0));
+        // Unlimited bandwidth: back-to-back transfers complete at the same time.
+        assert_eq!(dev.transfer(t0, &mut rng), t0 + Dur::us(5.0));
+    }
+
+    #[test]
+    fn bandwidth_server_spaces_completions() {
+        // 64B lines at 64 GB/s -> 1 ns spacing.
+        let cfg = MemConfig::fpga(Dur::us(1.0)).with_bandwidth(64e9);
+        let mut dev = MemDevice::new(cfg);
+        let mut rng = Rng::new(1);
+        let t0 = Time::ZERO;
+        let c1 = dev.transfer(t0, &mut rng);
+        let c2 = dev.transfer(t0, &mut rng);
+        let c3 = dev.transfer(t0, &mut rng);
+        assert_eq!(c1, t0 + Dur::us(1.0));
+        assert_eq!(c2, c1 + Dur::ns(1.0));
+        assert_eq!(c3, c2 + Dur::ns(1.0));
+    }
+
+    #[test]
+    fn tail_profile_frequencies() {
+        let cfg = MemConfig::fpga(Dur::us(5.0)).with_tail(TailProfile::paper_flash());
+        let mut dev = MemDevice::new(cfg);
+        let mut rng = Rng::new(99);
+        let n = 200_000;
+        let mut long = 0;
+        let mut very_long = 0;
+        for _ in 0..n {
+            let l = dev.draw_latency(&mut rng);
+            if l == Dur::us(14.0) {
+                long += 1;
+            } else if l == Dur::us(48.0) {
+                very_long += 1;
+            } else {
+                assert_eq!(l, Dur::us(5.0));
+            }
+        }
+        let p_long = long as f64 / n as f64;
+        let p_very = very_long as f64 / n as f64;
+        assert!((p_long - 0.099).abs() < 0.005, "p_long={p_long}");
+        assert!((p_very - 0.001).abs() < 0.0005, "p_very={p_very}");
+    }
+
+    #[test]
+    fn tail_mean_latency() {
+        let t = TailProfile::paper_flash();
+        let mean = t.mean_latency(Dur::us(5.0)).as_us();
+        // 0.9*5 + 0.099*14 + 0.001*48 = 4.5 + 1.386 + 0.048 = 5.934
+        assert!((mean - 5.934).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn device_cache_mixes_latencies() {
+        let cfg = MemConfig::fpga(Dur::us(5.0)).with_device_cache(0.3, Dur::ns(400.0));
+        let mut dev = MemDevice::new(cfg);
+        let mut rng = Rng::new(21);
+        let n = 100_000;
+        let mut hits = 0;
+        for _ in 0..n {
+            let l = dev.draw_latency(&mut rng);
+            if l == Dur::ns(400.0) {
+                hits += 1;
+            } else {
+                assert_eq!(l, Dur::us(5.0));
+            }
+        }
+        let hr = hits as f64 / n as f64;
+        assert!((hr - 0.3).abs() < 0.01, "hit ratio {hr}");
+    }
+
+    #[test]
+    fn device_cache_beats_tail_profile() {
+        // Cache hits bypass the tail draws.
+        let cfg = MemConfig::fpga(Dur::us(5.0))
+            .with_tail(TailProfile::paper_flash())
+            .with_device_cache(1.0, Dur::ns(400.0));
+        let mut dev = MemDevice::new(cfg);
+        let mut rng = Rng::new(22);
+        for _ in 0..1000 {
+            assert_eq!(dev.draw_latency(&mut rng), Dur::ns(400.0));
+        }
+    }
+
+    #[test]
+    fn presets_are_sane() {
+        assert!(MemConfig::dram().latency < MemConfig::cxl_expander().latency);
+        assert!(MemConfig::cxl_expander().latency < MemConfig::fpga(Dur::us(1.0)).latency);
+    }
+}

@@ -1,0 +1,105 @@
+//! Measurement-window counters and histograms collected by the machine.
+
+use super::hist::LatencyHist;
+use super::time::{Dur, Time};
+
+/// Per-core time breakdown (busy = useful CPU work incl. context switches,
+/// stall = waiting for late prefetches / evicted lines, idle = no runnable
+/// thread).
+#[derive(Debug, Clone, Default)]
+pub struct CoreBreakdown {
+    pub busy: Dur,
+    pub stall: Dur,
+    pub idle: Dur,
+}
+
+/// Counters for one measurement window.
+#[derive(Debug)]
+pub struct Metrics {
+    pub window_start: Time,
+    pub window_end: Time,
+    /// Completed operations.
+    pub ops: u64,
+    /// Secondary-memory accesses (prefetch+yield path) issued.
+    pub secondary_accesses: u64,
+    /// Inline DRAM accesses.
+    pub dram_accesses: u64,
+    /// Loads of prefetched lines (consumption events).
+    pub loads: u64,
+    /// Premature cache evictions observed at load time.
+    pub evictions: u64,
+    /// IOs issued.
+    pub ios: u64,
+    /// Lock statistics.
+    pub lock_acquires: u64,
+    pub lock_contended: u64,
+    /// Sum over completed ops (for measured model parameters).
+    pub sum_mem_accesses: u64,
+    pub sum_ios: u64,
+    pub sum_compute: Dur,
+    /// Distribution of load waits (Fig 10) — 0 means the prefetch fully hid
+    /// the latency.
+    pub load_wait: LatencyHist,
+    /// Distribution of whole-operation latency (Fig 17).
+    pub op_latency: LatencyHist,
+    /// Distribution of device-side IO latency.
+    pub io_latency: LatencyHist,
+    #[allow(dead_code)]
+    cores: usize,
+}
+
+impl Metrics {
+    pub fn new(cores: usize) -> Metrics {
+        Metrics {
+            window_start: Time::ZERO,
+            window_end: Time::ZERO,
+            ops: 0,
+            secondary_accesses: 0,
+            dram_accesses: 0,
+            loads: 0,
+            evictions: 0,
+            ios: 0,
+            lock_acquires: 0,
+            lock_contended: 0,
+            sum_mem_accesses: 0,
+            sum_ios: 0,
+            sum_compute: Dur::ZERO,
+            load_wait: LatencyHist::new(),
+            op_latency: LatencyHist::with_range(Dur::ns(10.0), Dur::ms(10.0), 160),
+            io_latency: LatencyHist::with_range(Dur::ns(100.0), Dur::ms(10.0), 120),
+            cores,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        let cores = self.cores;
+        *self = Metrics::new(cores);
+    }
+
+    #[inline]
+    pub fn record_op(&mut self, _now: Time, latency: Dur, mem_accesses: u32, ios: u32, compute: Dur) {
+        self.ops += 1;
+        self.sum_mem_accesses += mem_accesses as u64;
+        self.sum_ios += ios as u64;
+        self.sum_compute += compute;
+        self.op_latency.record(latency);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_reset() {
+        let mut m = Metrics::new(2);
+        m.record_op(Time::ZERO, Dur::us(3.0), 10, 1, Dur::us(1.0));
+        m.record_op(Time::ZERO, Dur::us(5.0), 12, 2, Dur::us(1.2));
+        assert_eq!(m.ops, 2);
+        assert_eq!(m.sum_mem_accesses, 22);
+        assert_eq!(m.sum_ios, 3);
+        m.reset();
+        assert_eq!(m.ops, 0);
+        assert_eq!(m.op_latency.total(), 0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Discrete-event testbed simulator.
+//!
+//! Substitutes for the paper's hardware testbed (Table 3): Xeon cores with a
+//! depth-P prefetch queue, FPGA-based CXL memory with adjustable microsecond
+//! latency, Optane SSDs, and Argobots-style user-level threads. See
+//! DESIGN.md §2 (substitution table) and §6 (execution semantics).
+
+pub mod hist;
+pub mod machine;
+pub mod mem;
+pub mod metrics;
+pub mod rng;
+pub mod ssd;
+pub mod time;
+
+pub use hist::LatencyHist;
+pub use machine::{Machine, MachineConfig, RunStats, Service, Step, Tier};
+pub use mem::{MemConfig, MemDevice, TailProfile};
+pub use metrics::{CoreBreakdown, Metrics};
+pub use rng::Rng;
+pub use ssd::{IoKind, SsdConfig, SsdDevice};
+pub use time::{Dur, Time};

@@ -1,0 +1,286 @@
+//! SSD device model.
+//!
+//! Stands in for the paper's Optane 900P NVMe drives accessed as block
+//! devices through io_uring. One IO is (1) a pre-IO CPU suboperation
+//! `T_IO_pre` (address computation + non-blocking submission), (2) device
+//! latency `L_IO`, (3) a post-IO CPU suboperation `T_IO_post` (completion
+//! check + buffer copy). The CPU suboperation times are charged by the core
+//! (see `machine.rs`); this module models the device side: latency plus
+//! three servers enforcing the Table 2 limits — queue depth, bandwidth
+//! `B_IO` (bytes/sec), and random-access rate `R_IO` (IOPS).
+
+use super::rng::Rng;
+use super::time::{Dur, Time};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoKind {
+    Read,
+    Write,
+}
+
+#[derive(Debug, Clone)]
+pub struct SsdConfig {
+    /// Device read latency (submission to completion, uncontended).
+    pub read_latency: Dur,
+    /// Device write latency (writes land in the device buffer; Optane-class).
+    pub write_latency: Dur,
+    /// Max sustained bandwidth in bytes/sec (aggregate over the array).
+    pub bandwidth_bps: f64,
+    /// Max random-access rate in IO/sec (aggregate).
+    pub iops: f64,
+    /// Device queue depth (in-flight IOs beyond this wait in the submission queue).
+    pub queue_depth: u32,
+    /// Default CPU-side suboperation times (can be overridden per workload).
+    pub t_pre: Dur,
+    pub t_post: Dur,
+    /// Relative latency jitter (uniform in ±jitter_frac·latency). Real
+    /// devices are not clock-exact; this jitter is also what naturally
+    /// misaligns thread phases (§3.2.2's "timing will be mostly random") —
+    /// a perfectly deterministic device can lock threads into the Fig 7(a)
+    /// aligned pattern.
+    pub jitter_frac: f64,
+}
+
+impl SsdConfig {
+    /// The paper's array: 4× Optane 900P. Combined ~2.2 MIOPS random reads,
+    /// ~10 GB/s, ~10 µs read latency; deep queues.
+    pub fn optane_array() -> SsdConfig {
+        SsdConfig {
+            read_latency: Dur::us(10.0),
+            write_latency: Dur::us(10.0),
+            bandwidth_bps: 10e9,
+            iops: 2.2e6,
+            queue_depth: 1024,
+            t_pre: Dur::us(1.5),
+            t_post: Dur::us(0.2),
+            jitter_frac: 0.15,
+        }
+    }
+
+    /// A single Optane 900P (Fig 12(a): B_IO-limited scenario).
+    pub fn optane_single() -> SsdConfig {
+        SsdConfig {
+            bandwidth_bps: 2.5e9,
+            iops: 550e3,
+            ..SsdConfig::optane_array()
+        }
+    }
+
+    /// A slow SATA SSD (Fig 12(b): R_IO-limited scenario).
+    pub fn sata_slow() -> SsdConfig {
+        SsdConfig {
+            read_latency: Dur::us(80.0),
+            write_latency: Dur::us(80.0),
+            bandwidth_bps: 0.5e9,
+            iops: 75e3,
+            queue_depth: 32,
+            t_pre: Dur::us(1.5),
+            t_post: Dur::us(0.2),
+            jitter_frac: 0.3,
+        }
+    }
+
+    pub fn with_latency(mut self, d: Dur) -> SsdConfig {
+        self.read_latency = d;
+        self.write_latency = d;
+        self
+    }
+}
+
+/// Runtime state of the SSD (array): latency + rate servers.
+#[derive(Debug, Clone)]
+pub struct SsdDevice {
+    pub cfg: SsdConfig,
+    /// Bandwidth server: time the device's data channel frees up.
+    bw_free: Time,
+    /// IOPS server: time the command processor frees up.
+    iops_free: Time,
+    /// Completion times of in-flight IOs (bounded by queue_depth). Kept as a
+    /// sorted-ish ring: completions are monotone given monotone submissions.
+    inflight: std::collections::VecDeque<Time>,
+    pub reads: u64,
+    pub writes: u64,
+    pub bytes: u64,
+}
+
+impl SsdDevice {
+    pub fn new(cfg: SsdConfig) -> SsdDevice {
+        SsdDevice {
+            cfg,
+            bw_free: Time::ZERO,
+            iops_free: Time::ZERO,
+            inflight: std::collections::VecDeque::new(),
+            reads: 0,
+            writes: 0,
+            bytes: 0,
+        }
+    }
+
+    /// Submit one IO at time `submit`; returns its completion time.
+    pub fn submit(&mut self, submit: Time, kind: IoKind, bytes: u32, rng: &mut Rng) -> Time {
+        // Queue-depth server: if the device queue is full, the IO effectively
+        // starts when the oldest in-flight IO completes.
+        while let Some(&front) = self.inflight.front() {
+            if front <= submit || self.inflight.len() < self.cfg.queue_depth as usize {
+                if front <= submit {
+                    self.inflight.pop_front();
+                    continue;
+                }
+            }
+            break;
+        }
+        let mut start = submit;
+        if self.inflight.len() >= self.cfg.queue_depth as usize {
+            // wait for a slot
+            start = self.inflight.pop_front().unwrap().max(start);
+        }
+
+        // IOPS server.
+        if self.cfg.iops.is_finite() && self.cfg.iops > 0.0 {
+            let gap = Dur::secs(1.0 / self.cfg.iops);
+            if start < self.iops_free {
+                start = self.iops_free;
+            }
+            self.iops_free = start + gap;
+        }
+
+        // Bandwidth server: transfer occupies bytes/B_IO of channel time.
+        let base = match kind {
+            IoKind::Read => self.cfg.read_latency,
+            IoKind::Write => self.cfg.write_latency,
+        };
+        let lat = if self.cfg.jitter_frac > 0.0 {
+            let f = 1.0 + self.cfg.jitter_frac * (2.0 * rng.f64() - 1.0);
+            Dur((base.0 as f64 * f) as u64)
+        } else {
+            base
+        };
+        let mut done = start + lat;
+        if self.cfg.bandwidth_bps.is_finite() && self.cfg.bandwidth_bps > 0.0 {
+            let xfer = Dur::secs(bytes as f64 / self.cfg.bandwidth_bps);
+            let chan_start = self.bw_free.max(start);
+            let chan_done = chan_start + xfer;
+            self.bw_free = chan_done;
+            done = done.max(chan_done);
+        }
+
+        self.inflight.push_back(done);
+        match kind {
+            IoKind::Read => self.reads += 1,
+            IoKind::Write => self.writes += 1,
+        }
+        self.bytes += bytes as u64;
+        done
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.reads = 0;
+        self.writes = 0;
+        self.bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jitter_symmetric_and_bounded() {
+        let mut d = SsdDevice::new(SsdConfig {
+            iops: f64::INFINITY,
+            bandwidth_bps: f64::INFINITY,
+            ..SsdConfig::optane_array() // keeps the 15% jitter
+        });
+        let mut rng = Rng::new(5);
+        let mut sum = 0.0;
+        let n = 20_000;
+        for i in 0..n {
+            // Space submissions so the queue-depth server stays idle.
+            let t = Time::ZERO + Dur::us(20.0) * i;
+            let done = d.submit(t, IoKind::Read, 512, &mut rng);
+            let lat = (done - t).as_us();
+            assert!((8.5..=11.5).contains(&lat), "lat {lat}");
+            sum += lat;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 10.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn uncontended_read_latency() {
+        let mut d = SsdDevice::new(SsdConfig {
+            jitter_frac: 0.0,
+            ..SsdConfig::optane_array()
+        });
+        let mut rng = Rng::new(1);
+        let t0 = Time::ZERO + Dur::us(100.0);
+        let done = d.submit(t0, IoKind::Read, 4096, &mut rng);
+        assert_eq!(done, t0 + Dur::us(10.0));
+        assert_eq!(d.reads, 1);
+    }
+
+    #[test]
+    fn iops_cap_enforced() {
+        // 1 MIOPS -> 1 us between command starts.
+        let cfg = SsdConfig {
+            iops: 1e6,
+            bandwidth_bps: f64::INFINITY,
+            jitter_frac: 0.0,
+            ..SsdConfig::optane_array()
+        };
+        let mut d = SsdDevice::new(cfg);
+        let mut rng = Rng::new(1);
+        let t0 = Time::ZERO;
+        let c1 = d.submit(t0, IoKind::Read, 512, &mut rng);
+        let c2 = d.submit(t0, IoKind::Read, 512, &mut rng);
+        let c3 = d.submit(t0, IoKind::Read, 512, &mut rng);
+        assert_eq!(c2 - c1, Dur::us(1.0));
+        assert_eq!(c3 - c2, Dur::us(1.0));
+    }
+
+    #[test]
+    fn bandwidth_cap_enforced() {
+        // 1 GB/s, 1 MB IOs -> 1 ms per transfer dominates latency.
+        let cfg = SsdConfig {
+            bandwidth_bps: 1e9,
+            iops: f64::INFINITY,
+            jitter_frac: 0.0,
+            ..SsdConfig::optane_array()
+        };
+        let mut d = SsdDevice::new(cfg);
+        let mut rng = Rng::new(1);
+        let t0 = Time::ZERO;
+        let c1 = d.submit(t0, IoKind::Read, 1_000_000, &mut rng);
+        let c2 = d.submit(t0, IoKind::Read, 1_000_000, &mut rng);
+        assert_eq!(c1, t0 + Dur::ms(1.0));
+        assert_eq!(c2, t0 + Dur::ms(2.0));
+    }
+
+    #[test]
+    fn queue_depth_backpressure() {
+        let cfg = SsdConfig {
+            queue_depth: 2,
+            bandwidth_bps: f64::INFINITY,
+            iops: f64::INFINITY,
+            jitter_frac: 0.0,
+            ..SsdConfig::optane_array()
+        };
+        let mut d = SsdDevice::new(cfg);
+        let mut rng = Rng::new(1);
+        let t0 = Time::ZERO;
+        let c1 = d.submit(t0, IoKind::Read, 512, &mut rng);
+        let _c2 = d.submit(t0, IoKind::Read, 512, &mut rng);
+        // Third IO at t0 with QD=2 waits for c1 to finish.
+        let c3 = d.submit(t0, IoKind::Read, 512, &mut rng);
+        assert_eq!(c3, c1 + Dur::us(10.0));
+    }
+
+    #[test]
+    fn write_counts() {
+        let mut d = SsdDevice::new(SsdConfig::optane_array());
+        let mut rng = Rng::new(1);
+        d.submit(Time::ZERO, IoKind::Write, 2048, &mut rng);
+        assert_eq!(d.writes, 1);
+        assert_eq!(d.bytes, 2048);
+    }
+}

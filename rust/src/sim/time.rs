@@ -1,0 +1,200 @@
+//! Virtual time for the discrete-event testbed.
+//!
+//! All simulated time is kept in integer **picoseconds** so that event ordering
+//! is exact and runs are bit-reproducible. The paper's quantities span ~50 ns
+//! (context switch) to ~50 µs (tail latency), so picoseconds give >4 decimal
+//! digits of headroom on the smallest quantity while `u64` still allows ~200
+//! days of simulated time.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, Sub, SubAssign};
+
+/// An instant in simulated time (picoseconds since simulation start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Time(pub u64);
+
+/// A span of simulated time (picoseconds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Dur(pub u64);
+
+pub const PS_PER_NS: u64 = 1_000;
+pub const PS_PER_US: u64 = 1_000_000;
+pub const PS_PER_MS: u64 = 1_000_000_000;
+pub const PS_PER_S: u64 = 1_000_000_000_000;
+
+impl Dur {
+    pub const ZERO: Dur = Dur(0);
+
+    /// Construct from nanoseconds (fractional allowed; rounded to ps).
+    #[inline]
+    pub fn ns(v: f64) -> Dur {
+        Dur((v * PS_PER_NS as f64).round() as u64)
+    }
+    /// Construct from microseconds.
+    #[inline]
+    pub fn us(v: f64) -> Dur {
+        Dur((v * PS_PER_US as f64).round() as u64)
+    }
+    /// Construct from milliseconds.
+    #[inline]
+    pub fn ms(v: f64) -> Dur {
+        Dur((v * PS_PER_MS as f64).round() as u64)
+    }
+    /// Construct from seconds.
+    #[inline]
+    pub fn secs(v: f64) -> Dur {
+        Dur((v * PS_PER_S as f64).round() as u64)
+    }
+    #[inline]
+    pub fn as_ns(self) -> f64 {
+        self.0 as f64 / PS_PER_NS as f64
+    }
+    #[inline]
+    pub fn as_us(self) -> f64 {
+        self.0 as f64 / PS_PER_US as f64
+    }
+    #[inline]
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 / PS_PER_S as f64
+    }
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        self.0 == 0
+    }
+    #[inline]
+    pub fn saturating_sub(self, rhs: Dur) -> Dur {
+        Dur(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Time {
+    pub const ZERO: Time = Time(0);
+
+    #[inline]
+    pub fn as_us(self) -> f64 {
+        self.0 as f64 / PS_PER_US as f64
+    }
+    #[inline]
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 / PS_PER_S as f64
+    }
+    /// Span since an earlier instant (saturating: returns ZERO if `earlier` is later).
+    #[inline]
+    pub fn since(self, earlier: Time) -> Dur {
+        Dur(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl Add<Dur> for Time {
+    type Output = Time;
+    #[inline]
+    fn add(self, rhs: Dur) -> Time {
+        Time(self.0 + rhs.0)
+    }
+}
+impl AddAssign<Dur> for Time {
+    #[inline]
+    fn add_assign(&mut self, rhs: Dur) {
+        self.0 += rhs.0;
+    }
+}
+impl Sub<Time> for Time {
+    type Output = Dur;
+    #[inline]
+    fn sub(self, rhs: Time) -> Dur {
+        Dur(self.0 - rhs.0)
+    }
+}
+impl Add<Dur> for Dur {
+    type Output = Dur;
+    #[inline]
+    fn add(self, rhs: Dur) -> Dur {
+        Dur(self.0 + rhs.0)
+    }
+}
+impl AddAssign<Dur> for Dur {
+    #[inline]
+    fn add_assign(&mut self, rhs: Dur) {
+        self.0 += rhs.0;
+    }
+}
+impl Sub<Dur> for Dur {
+    type Output = Dur;
+    #[inline]
+    fn sub(self, rhs: Dur) -> Dur {
+        Dur(self.0 - rhs.0)
+    }
+}
+impl SubAssign<Dur> for Dur {
+    #[inline]
+    fn sub_assign(&mut self, rhs: Dur) {
+        self.0 -= rhs.0;
+    }
+}
+impl Mul<u64> for Dur {
+    type Output = Dur;
+    #[inline]
+    fn mul(self, rhs: u64) -> Dur {
+        Dur(self.0 * rhs)
+    }
+}
+impl Div<u64> for Dur {
+    type Output = Dur;
+    #[inline]
+    fn div(self, rhs: u64) -> Dur {
+        Dur(self.0 / rhs)
+    }
+}
+
+impl fmt::Display for Dur {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= PS_PER_MS {
+            write!(f, "{:.3}ms", self.0 as f64 / PS_PER_MS as f64)
+        } else if self.0 >= PS_PER_US {
+            write!(f, "{:.3}us", self.0 as f64 / PS_PER_US as f64)
+        } else {
+            write!(f, "{:.1}ns", self.0 as f64 / PS_PER_NS as f64)
+        }
+    }
+}
+impl fmt::Display for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t+{}", Dur(self.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_round_trip() {
+        assert_eq!(Dur::ns(1.0).0, 1_000);
+        assert_eq!(Dur::us(1.0).0, 1_000_000);
+        assert_eq!(Dur::ms(1.0).0, 1_000_000_000);
+        assert_eq!(Dur::secs(1.0).0, 1_000_000_000_000);
+        assert!((Dur::us(0.05).as_ns() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let t = Time::ZERO + Dur::us(1.0);
+        assert_eq!((t + Dur::ns(500.0)) - t, Dur::ns(500.0));
+        assert_eq!(Dur::us(2.0) / 4, Dur::ns(500.0));
+        assert_eq!(Dur::ns(100.0) * 3, Dur::ns(300.0));
+    }
+
+    #[test]
+    fn since_saturates() {
+        let a = Time(100);
+        let b = Time(50);
+        assert_eq!(b.since(a), Dur::ZERO);
+        assert_eq!(a.since(b), Dur(50));
+    }
+
+    #[test]
+    fn display_picks_unit() {
+        assert_eq!(format!("{}", Dur::ns(50.0)), "50.0ns");
+        assert_eq!(format!("{}", Dur::us(5.0)), "5.000us");
+    }
+}

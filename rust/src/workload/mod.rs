@@ -1,0 +1,8 @@
+//! Workload generation: key distributions, operation mixes, and value sizes
+//! (the paper's Table 5 settings).
+
+pub mod keygen;
+pub mod opgen;
+
+pub use keygen::{KeyDist, KeyGen};
+pub use opgen::{OpKind, OpMix, ValueSize};

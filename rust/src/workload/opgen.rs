@@ -1,0 +1,95 @@
+//! Operation mixes and value sizes (Table 5 rows "Read:write", "Value size").
+
+use crate::sim::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Read,
+    Write,
+}
+
+/// A read:write mix (paper notation "1:0", "2:1", "1:1").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpMix {
+    pub read_ratio: f64,
+}
+
+impl OpMix {
+    pub const READ_ONLY: OpMix = OpMix { read_ratio: 1.0 };
+
+    /// "r:w" ratios, e.g. `OpMix::ratio(2, 1)` for 2:1.
+    pub fn ratio(r: u32, w: u32) -> OpMix {
+        OpMix {
+            read_ratio: r as f64 / (r + w) as f64,
+        }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> OpKind {
+        if rng.chance(self.read_ratio) {
+            OpKind::Read
+        } else {
+            OpKind::Write
+        }
+    }
+}
+
+/// Value-size distributions (fixed or uniform range, as in Table 5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ValueSize {
+    Fixed(u32),
+    Range(u32, u32),
+}
+
+impl ValueSize {
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        match *self {
+            ValueSize::Fixed(b) => b,
+            ValueSize::Range(lo, hi) => rng.range(lo as u64, hi as u64) as u32,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match *self {
+            ValueSize::Fixed(b) => b as f64,
+            ValueSize::Range(lo, hi) => (lo + hi) as f64 / 2.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_math() {
+        assert_eq!(OpMix::ratio(1, 0).read_ratio, 1.0);
+        assert_eq!(OpMix::ratio(1, 1).read_ratio, 0.5);
+        assert!((OpMix::ratio(2, 1).read_ratio - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mix_sampling_matches_ratio() {
+        let mix = OpMix::ratio(2, 1);
+        let mut rng = Rng::new(1);
+        let n = 100_000;
+        let reads = (0..n)
+            .filter(|_| mix.sample(&mut rng) == OpKind::Read)
+            .count();
+        let frac = reads as f64 / n as f64;
+        assert!((frac - 2.0 / 3.0).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn value_sizes_in_range() {
+        let vs = ValueSize::Range(200, 300);
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            let v = vs.sample(&mut rng);
+            assert!((200..=300).contains(&v));
+        }
+        assert!((vs.mean() - 250.0).abs() < 1e-12);
+        assert_eq!(ValueSize::Fixed(1536).sample(&mut rng), 1536);
+    }
+}

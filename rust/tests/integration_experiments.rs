@@ -1,0 +1,100 @@
+//! Smoke tests over the experiment registry: every figure/table regenerator
+//! must run end-to-end (fast mode) and produce plausibly-shaped reports.
+
+use cxlkvs::coordinator::experiments::{self, ModelBackend};
+
+fn backend() -> ModelBackend {
+    // Use the PJRT artifact when present (CI runs after `make artifacts`).
+    ModelBackend::auto()
+}
+
+#[test]
+fn fig03_shape() {
+    let r = experiments::fig03(&mut backend());
+    assert!(r.rows.len() >= 10);
+    // First row is the DRAM normalization point: everything 1.000.
+    assert!(r.rows[0].iter().skip(1).all(|c| c == "1.000"));
+    // At 5 µs: masking ≈ 0.71, ours ≈ 0.93 (paper's 29% vs 7%).
+    let row5 = r.rows.iter().find(|row| row[0] == "5.0").unwrap();
+    let mask: f64 = row5[4].parse().unwrap();
+    let prob: f64 = row5[5].parse().unwrap();
+    assert!((mask - 0.71).abs() < 0.02, "masking@5us = {mask}");
+    assert!((prob - 0.93).abs() < 0.02, "prob@5us = {prob}");
+}
+
+#[test]
+fn fig10_eviction_ratios() {
+    let rs = experiments::fig10(true);
+    assert_eq!(rs.len(), 2);
+    let eps = |r: &cxlkvs::coordinator::Report| -> f64 {
+        r.notes[0]
+            .split('=')
+            .next_back()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap()
+    };
+    let big = eps(&rs[0]);
+    let small = eps(&rs[1]);
+    assert!(big < 0.0005, "big-cache eps {big} (paper <0.0005)");
+    assert!(small > 0.01, "small-cache eps {small} (paper ~0.05)");
+}
+
+#[test]
+fn fig16_has_all_series() {
+    let r = experiments::fig16(true);
+    assert!(r.rows.len() >= 3);
+    for row in &r.rows {
+        for cell in row.iter().skip(1) {
+            let v: f64 = cell.parse().unwrap();
+            assert!(v > 0.0);
+        }
+    }
+}
+
+#[test]
+fn fig17_latency_grows_with_memory_latency() {
+    let r = experiments::fig17(true);
+    // For each store, mean op latency at the largest L exceeds that at the
+    // smallest L.
+    for store in ["treekv", "lsmkv", "cachekv"] {
+        let rows: Vec<_> = r
+            .rows
+            .iter()
+            .filter(|row| row[1].contains(store))
+            .collect();
+        assert!(rows.len() >= 2, "{store} missing");
+        let first: f64 = rows.first().unwrap()[2].parse().unwrap();
+        let last: f64 = rows.last().unwrap()[2].parse().unwrap();
+        assert!(
+            last > first,
+            "{store}: op latency should grow ({first} -> {last})"
+        );
+    }
+}
+
+#[test]
+fn table6_cpr_above_one() {
+    let r = experiments::table6(true);
+    assert_eq!(r.rows.len(), 4);
+    for row in &r.rows {
+        let cpr: f64 = row[3].parse().unwrap();
+        assert!(
+            cpr > 1.0,
+            "CPR should exceed 1 in the paper's scenarios: {row:?}"
+        );
+        assert!(cpr < 2.0, "CPR implausibly high: {row:?}");
+    }
+}
+
+#[test]
+fn fig18_capacity_rows() {
+    let r = experiments::fig18(true);
+    assert!(r.rows.len() >= 6);
+    // treekv DRAM row must be the OOM case.
+    assert!(r.rows[0][3] == "OOM");
+    // The CXL rows must carry real throughput.
+    let tree_cxl: f64 = r.rows[1][3].parse().unwrap();
+    assert!(tree_cxl > 10_000.0);
+}

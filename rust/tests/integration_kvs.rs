@@ -1,0 +1,132 @@
+//! Integration: the paper's KV-store claims on the simulated testbed —
+//! latency tolerance (Observations O4/O5), multicore behaviour, and the
+//! write-mix/background-worker masking effect.
+
+use cxlkvs::coordinator::runner::{best_threads, run_store, run_tree_with, StoreKind, SweepCfg};
+use cxlkvs::kvs::TreeKvConfig;
+use cxlkvs::sim::Dur;
+use cxlkvs::workload::OpMix;
+
+fn sweep(l_us: f64) -> SweepCfg {
+    SweepCfg {
+        l_mem: Dur::us(l_us),
+        window: Dur::ms(15.0),
+        ..Default::default()
+    }
+}
+
+fn best(kind: StoreKind, l_us: f64) -> f64 {
+    let s = sweep(l_us);
+    best_threads(&s.thread_candidates.clone(), |n| run_store(kind, &s, n))
+        .1
+        .ops_per_sec
+}
+
+#[test]
+fn stores_are_latency_tolerant_to_1us() {
+    // At 1 µs every store must be within a few percent of DRAM placement.
+    for kind in StoreKind::ALL {
+        let dram = best(kind, 0.1);
+        let one = best(kind, 1.0);
+        assert!(
+            one / dram > 0.93,
+            "{}: 1us norm {:.3}",
+            kind.name(),
+            one / dram
+        );
+    }
+}
+
+#[test]
+fn degradation_grows_with_latency_but_stays_bounded() {
+    for kind in StoreKind::ALL {
+        let dram = best(kind, 0.1);
+        let five = best(kind, 5.0) / dram;
+        let ten = best(kind, 10.0) / dram;
+        assert!(ten <= five + 0.02, "{}: {ten:.3} > {five:.3}", kind.name());
+        // Even at 10 µs the prefetch+yield design keeps a real fraction of
+        // DRAM throughput (naive synchronous access would be ~10x worse).
+        assert!(ten > 0.15, "{}: collapsed to {ten:.3} at 10us", kind.name());
+    }
+}
+
+#[test]
+fn multicore_preserves_latency_tolerance() {
+    // Observation O5: 4-core tolerance at 5 µs is at least as good as the
+    // 1-core tolerance (contention masks memory latency).
+    for kind in [StoreKind::Tree, StoreKind::Cache] {
+        let norm_at = |cores: usize| {
+            let mk = |l: f64| SweepCfg {
+                cores,
+                l_mem: Dur::us(l),
+                window: Dur::ms(8.0),
+                thread_candidates: vec![32, 64],
+                ..Default::default()
+            };
+            let s_d = mk(0.1);
+            let dram = best_threads(&s_d.thread_candidates.clone(), |n| run_store(kind, &s_d, n))
+                .1
+                .ops_per_sec;
+            let s_5 = mk(5.0);
+            let five = best_threads(&s_5.thread_candidates.clone(), |n| run_store(kind, &s_5, n))
+                .1
+                .ops_per_sec;
+            five / dram
+        };
+        let one_core = norm_at(1);
+        let four_core = norm_at(4);
+        assert!(
+            four_core > one_core - 0.07,
+            "{}: tolerance degraded with cores: 1c={one_core:.3} 4c={four_core:.3}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn write_mix_masks_memory_latency() {
+    // Write-heavy treekv sees *less* relative degradation at 5 µs than
+    // read-only (bursty SSD writes + defrag mask the memory latency).
+    let norm = |mix: OpMix| {
+        let cfg = TreeKvConfig {
+            n_items: 100_000,
+            mix,
+            ..Default::default()
+        };
+        let s_d = sweep(0.1);
+        let dram = best_threads(&s_d.thread_candidates.clone(), |n| {
+            run_tree_with(cfg.clone(), &s_d, n)
+        })
+        .1
+        .ops_per_sec;
+        let s_5 = sweep(5.0);
+        let five = best_threads(&s_5.thread_candidates.clone(), |n| {
+            run_tree_with(cfg.clone(), &s_5, n)
+        })
+        .1
+        .ops_per_sec;
+        five / dram
+    };
+    let ro = norm(OpMix::READ_ONLY);
+    let wm = norm(OpMix::ratio(1, 1));
+    assert!(
+        wm > ro - 0.05,
+        "write mix should not hurt tolerance: ro={ro:.3} wm={wm:.3}"
+    );
+}
+
+#[test]
+fn thread_count_sensitivity_is_mild_near_peak() {
+    // Fig 16: throughput varies slowly with thread count around the peak.
+    let s = sweep(5.0);
+    let at = |n: usize| run_store(StoreKind::Tree, &s, n).ops_per_sec;
+    let t48 = at(48);
+    let t64 = at(64);
+    let t96 = at(96);
+    let peak = t48.max(t64).max(t96);
+    let trough = t48.min(t64).min(t96);
+    assert!(
+        trough / peak > 0.85,
+        "throughput too thread-sensitive: {t48:.0}/{t64:.0}/{t96:.0}"
+    );
+}

@@ -1,0 +1,154 @@
+//! End-to-end AOT bridge: the JAX+Pallas models compiled to HLO text must
+//! load through PJRT and agree with the native Rust implementation of the
+//! same equations. Requires `make artifacts` to have run.
+
+use cxlkvs::model::{
+    theta_best_recip, theta_extended_recip, theta_mask_recip, theta_mem_recip, theta_prob_recip,
+    theta_rev_recip, theta_single_recip, ExtParams, OpParams, SysParams,
+};
+use cxlkvs::runtime::{BaseIn, ExtIn, ModelEvaluator};
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/model_base_b64.hlo.txt").exists()
+}
+
+fn table1_base(l_mem: f32) -> BaseIn {
+    BaseIn {
+        m: 10.0,
+        t_mem: 0.1,
+        t_pre: 4.0,
+        t_post: 3.0,
+        l_mem,
+        t_sw: 0.05,
+        p: 10.0,
+        n: 1e6,
+    }
+}
+
+#[test]
+fn pjrt_base_matches_native_model() {
+    if !artifacts_present() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    let mut ev = ModelEvaluator::load_default().expect("load artifacts");
+    assert!(!ev.platform().is_empty());
+
+    let latencies = [0.1f32, 0.3, 0.5, 1.0, 2.0, 3.0, 5.0, 8.0, 10.0];
+    let inputs: Vec<BaseIn> = latencies.iter().map(|&l| table1_base(l)).collect();
+    let outs = ev.eval_base(&inputs).expect("eval_base");
+    assert_eq!(outs.len(), latencies.len());
+
+    let op = OpParams::table1_example();
+    let sys = SysParams::table1_example();
+    for (l, o) in latencies.iter().zip(outs.iter()) {
+        let l = *l as f64;
+        let rel = |a: f32, b: f64| ((a as f64 - b) / b).abs();
+        assert!(
+            rel(o.single, theta_single_recip(0.1, l)) < 1e-3,
+            "single L={l}: {} vs {}",
+            o.single,
+            theta_single_recip(0.1, l)
+        );
+        assert!(rel(o.mem, theta_mem_recip(0.1, l, &sys)) < 1e-3);
+        assert!(rel(o.mask, theta_mask_recip(&op, l, &sys)) < 1e-3);
+        assert!(rel(o.best, theta_best_recip(&op, l, &sys)) < 1e-3);
+        let native_prob = theta_prob_recip(&op, l, &sys);
+        assert!(
+            rel(o.prob, native_prob) < 5e-3,
+            "prob L={l}: pjrt={} native={}",
+            o.prob,
+            native_prob
+        );
+    }
+}
+
+#[test]
+fn pjrt_extended_matches_native_model() {
+    if !artifacts_present() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    let mut ev = ModelEvaluator::load_default().expect("load artifacts");
+
+    let cases: Vec<(f32, f32, f32)> = vec![
+        // (l_mem, rho, eps)
+        (0.5, 1.0, 0.0),
+        (2.0, 1.0, 0.0),
+        (5.0, 1.0, 0.0),
+        (5.0, 0.7, 0.0),
+        (5.0, 0.3, 0.0),
+        (10.0, 1.0, 0.05),
+    ];
+    let inputs: Vec<ExtIn> = cases
+        .iter()
+        .map(|&(l, rho, eps)| ExtIn {
+            m: 10.0,
+            t_mem: 0.1,
+            t_pre: 4.0,
+            t_post: 3.0,
+            l_mem: l,
+            t_sw: 0.05,
+            p: 10.0,
+            rho,
+            eps,
+            a_mem: 64.0,
+            b_mem: 1e9,
+            l_dram: 0.09,
+            a_io: 1536.0,
+            b_io: 10_000.0,
+            r_io: 2.2,
+            s: 1.0,
+        })
+        .collect();
+    let outs = ev.eval_extended(&inputs).expect("eval_extended");
+
+    let op = OpParams::table1_example();
+    let sys = SysParams::table1_example();
+    for ((l, rho, eps), o) in cases.iter().zip(outs.iter()) {
+        let ext = ExtParams {
+            rho: *rho as f64,
+            eps: *eps as f64,
+            l_dram: 0.09,
+            a_mem: 64.0,
+            b_mem: 1e9,
+            a_io: 1536.0,
+            b_io: 10_000.0,
+            r_io: 2.2,
+            s: 1.0,
+        };
+        let native_rev = theta_rev_recip(&op, *l as f64, &ext, &sys);
+        let native_ext = theta_extended_recip(&op, *l as f64, &ext, &sys);
+        let rel = |a: f32, b: f64| ((a as f64 - b) / b).abs();
+        assert!(
+            rel(o.rev, native_rev) < 1e-2,
+            "rev L={l} rho={rho} eps={eps}: pjrt={} native={}",
+            o.rev,
+            native_rev
+        );
+        assert!(
+            rel(o.extended, native_ext) < 1e-2,
+            "ext L={l}: pjrt={} native={}",
+            o.extended,
+            native_ext
+        );
+    }
+}
+
+#[test]
+fn pjrt_handles_non_batch_multiples() {
+    if !artifacts_present() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    let mut ev = ModelEvaluator::load_default().expect("load artifacts");
+    // 1, 63, 65, 130 inputs: all must round-trip with correct lengths.
+    for n in [1usize, 63, 65, 130] {
+        let inputs: Vec<BaseIn> = (0..n)
+            .map(|i| table1_base(0.1 + i as f32 * 0.05))
+            .collect();
+        let outs = ev.eval_base(&inputs).expect("eval");
+        assert_eq!(outs.len(), n);
+        // Monotone in latency.
+        for w in outs.windows(2) {
+            assert!(w[1].prob >= w[0].prob - 1e-5);
+        }
+    }
+}

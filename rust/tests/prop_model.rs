@@ -1,0 +1,202 @@
+//! Property tests on the analytic model (Eq 1–16): structural invariants
+//! that must hold over the whole parameter space.
+
+use cxlkvs::model::{
+    cpr, l_star_io, l_star_memonly, theta_best_recip, theta_extended_recip, theta_mask_recip,
+    theta_mem_recip, theta_prob_recip, theta_rev_recip, CprScenario, ExtParams, OpParams,
+    SysParams,
+};
+use cxlkvs::prop::{forall, no_shrink, PropCfg};
+
+#[derive(Debug, Clone)]
+struct P {
+    op: OpParams,
+    sys: SysParams,
+    l: f64,
+}
+
+/// Parameters drawn from Table 1's stated value ranges (T_mem O(0.1) µs,
+/// T_IO O(1) µs, P O(10), L_mem 1–10 µs plus the sub-µs DRAM/CXL points).
+fn gen_params(rng: &mut cxlkvs::sim::Rng) -> P {
+    P {
+        op: OpParams {
+            m: rng.range(1, 15) as f64,
+            t_mem: 0.05 + rng.f64() * 0.2,
+            t_pre: 1.0 + rng.f64() * 3.0,
+            t_post: 0.2 + rng.f64() * 2.8,
+        },
+        sys: SysParams {
+            t_sw: 0.02 + rng.f64() * 0.1,
+            p: rng.range(6, 16) as usize,
+            n: 1_000_000,
+        },
+        l: 0.05 + rng.f64() * 12.0,
+    }
+}
+
+#[test]
+fn prob_between_best_and_mask() {
+    forall(PropCfg { cases: 200, ..Default::default() }, gen_params, no_shrink, |p| {
+        let prob = theta_prob_recip(&p.op, p.l, &p.sys);
+        let mask = theta_mask_recip(&p.op, p.l, &p.sys);
+        let best = theta_best_recip(&p.op, p.l, &p.sys);
+        if best > prob + 1e-9 {
+            return Err(format!("best {best} > prob {prob}"));
+        }
+        // prob ≤ mask is not a strict theorem at extreme corners (tiny P with
+        // large M): the window approximations differ by O(1%). Allow 2%.
+        if prob > mask * 1.02 + 1e-9 {
+            return Err(format!("prob {prob} > mask {mask} beyond tolerance"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn monotone_in_latency() {
+    forall(PropCfg { cases: 150, ..Default::default() }, gen_params, no_shrink, |p| {
+        let a = theta_prob_recip(&p.op, p.l, &p.sys);
+        let b = theta_prob_recip(&p.op, p.l * 1.25 + 0.01, &p.sys);
+        if b + 1e-9 < a {
+            return Err(format!("recip fell with latency: {a} -> {b}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn floor_is_cpu_time() {
+    // Θ_prob⁻¹ ≥ M(T_mem+T_sw) + E always (you cannot beat the CPU time).
+    forall(PropCfg { cases: 200, ..Default::default() }, gen_params, no_shrink, |p| {
+        let prob = theta_prob_recip(&p.op, p.l, &p.sys);
+        let floor = p.op.m * (p.op.t_mem + p.sys.t_sw) + p.op.e(p.sys.t_sw);
+        if prob + 1e-9 < floor {
+            return Err(format!("prob {prob} below CPU floor {floor}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn knee_ordering() {
+    // The memory-and-IO knee (Eq 8) is always at least the memory-only knee
+    // (Eq 4): IO can only extend the flat region.
+    forall(PropCfg { cases: 200, ..Default::default() }, gen_params, no_shrink, |p| {
+        let l_mem = l_star_memonly(p.op.t_mem, &p.sys);
+        let l_io = l_star_io(&p.op, &p.sys);
+        if l_io + 1e-12 < l_mem {
+            return Err(format!("L*_io {l_io} < L*_mem {l_mem}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn no_degradation_below_memonly_knee() {
+    // For L ≤ L*_memonly the prob model must sit on the CPU floor.
+    forall(PropCfg { cases: 150, ..Default::default() }, gen_params, no_shrink, |p| {
+        let knee = l_star_memonly(p.op.t_mem, &p.sys);
+        let l = p.l.min(knee * 0.95);
+        let prob = theta_prob_recip(&p.op, l, &p.sys);
+        let floor = p.op.m * (p.op.t_mem + p.sys.t_sw) + p.op.e(p.sys.t_sw);
+        if (prob - floor).abs() > 1e-6 {
+            return Err(format!("prob {prob} != floor {floor} at L={l} (knee {knee})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn memonly_recip_is_max_of_three() {
+    forall(PropCfg { cases: 200, ..Default::default() }, gen_params, no_shrink, |p| {
+        let r = theta_mem_recip(p.op.t_mem, p.l, &p.sys);
+        let t1 = p.op.t_mem + p.sys.t_sw;
+        let t3 = p.l / p.sys.p as f64;
+        if r + 1e-12 < t1 || r + 1e-12 < t3 {
+            return Err(format!("mem recip {r} below component max"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn extended_reduces_to_prob() {
+    forall(PropCfg { cases: 80, ..Default::default() }, gen_params, no_shrink, |p| {
+        let ext = ExtParams {
+            rho: 1.0,
+            eps: 0.0,
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        };
+        let a = theta_rev_recip(&p.op, p.l, &ext, &p.sys);
+        let b = theta_prob_recip(&p.op, p.l, &p.sys);
+        if (a - b).abs() > 1e-5 * b.max(1.0) {
+            return Err(format!("rev {a} != prob {b}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn extended_floors_dominate() {
+    forall(PropCfg { cases: 100, ..Default::default() }, gen_params, no_shrink, |p| {
+        let ext = ExtParams {
+            a_io: 4096.0,
+            b_io: 50.0,
+            r_io: 0.05,
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        };
+        let r = theta_extended_recip(&p.op, p.l, &ext, &p.sys);
+        if r + 1e-9 < ext.s * ext.a_io / ext.b_io {
+            return Err("below bandwidth floor".into());
+        }
+        if r + 1e-9 < ext.s / ext.r_io {
+            return Err("below IOPS floor".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tiering_monotone_in_rho() {
+    forall(PropCfg { cases: 60, ..Default::default() }, gen_params, no_shrink, |p| {
+        let mut prev = 0.0;
+        for rho in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let ext = ExtParams {
+                rho,
+                b_mem: 1e12,
+                ..ExtParams::table2_example()
+            };
+            let r = theta_rev_recip(&p.op, p.l.max(0.2), &ext, &p.sys);
+            if r + 1e-9 < prev {
+                return Err(format!("rho={rho}: recip fell {prev} -> {r}"));
+            }
+            prev = r;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cpr_monotonicity() {
+    forall(
+        PropCfg { cases: 200, ..Default::default() },
+        |rng| (rng.f64() * 0.9, rng.f64() * 0.9, rng.f64() * 0.9),
+        no_shrink,
+        |&(c, b, d)| {
+            let base = cpr(&CprScenario { c, b, d });
+            // Cheaper memory (smaller b) never hurts.
+            let cheaper = cpr(&CprScenario { c, b: b * 0.5, d });
+            if cheaper + 1e-12 < base {
+                return Err("cheaper memory lowered CPR".into());
+            }
+            // More degradation never helps.
+            let worse = cpr(&CprScenario { c, b, d: d + 0.05 });
+            if worse > base + 1e-12 {
+                return Err("more degradation raised CPR".into());
+            }
+            Ok(())
+        },
+    );
+}

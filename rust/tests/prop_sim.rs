@@ -1,0 +1,143 @@
+//! Property tests on the simulator: conservation, determinism, and
+//! latency-behaviour invariants that must hold for arbitrary configurations.
+
+use cxlkvs::microbench::{Microbench, MicrobenchConfig};
+use cxlkvs::prop::{forall, no_shrink, PropCfg};
+use cxlkvs::sim::{Dur, Machine, MachineConfig, MemConfig, Rng};
+
+#[derive(Debug, Clone)]
+struct SimCase {
+    m: u32,
+    t_mem_ns: f64,
+    l_us: f64,
+    threads: usize,
+    seed: u64,
+}
+
+fn gen_case(rng: &mut Rng) -> SimCase {
+    SimCase {
+        m: rng.range(1, 15) as u32,
+        t_mem_ns: 60.0 + rng.f64() * 150.0,
+        l_us: 0.1 + rng.f64() * 10.0,
+        threads: rng.range(4, 96) as usize,
+        seed: rng.next_u64(),
+    }
+}
+
+fn run(case: &SimCase, io: bool) -> (cxlkvs::sim::RunStats, u64) {
+    let mut rng = Rng::new(case.seed);
+    let mb = Microbench::new(
+        MicrobenchConfig {
+            m: case.m,
+            t_mem: Dur::ns(case.t_mem_ns),
+            io,
+            chain_len: 1 << 14,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let mut machine = Machine::new(
+        MachineConfig {
+            threads_per_core: case.threads,
+            mem: MemConfig::fpga(Dur::us(case.l_us)),
+            seed: case.seed ^ 1,
+            ..Default::default()
+        },
+        mb,
+    );
+    let st = machine.run(Dur::ms(1.0), Dur::ms(8.0));
+    (st, machine.service.checksum)
+}
+
+#[test]
+fn deterministic_given_seed() {
+    forall(PropCfg { cases: 12, ..Default::default() }, gen_case, no_shrink, |c| {
+        let (a, ca) = run(c, true);
+        let (b, cb) = run(c, true);
+        if a.ops != b.ops || ca != cb {
+            return Err(format!("nondeterministic: {} vs {} ops", a.ops, b.ops));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn throughput_bounded_by_cpu_floor() {
+    // Simulated ops/sec can never beat the per-op CPU time floor
+    // M(T_mem+T_sw) + E (E = 1.5+0.2+2*0.05 with default devices).
+    forall(PropCfg { cases: 12, ..Default::default() }, gen_case, no_shrink, |c| {
+        let (st, _) = run(c, true);
+        let floor_us =
+            c.m as f64 * (c.t_mem_ns / 1000.0 + 0.05) + 1.5 + 0.2 + 0.1;
+        let max_ops = 1e6 / floor_us;
+        if st.ops_per_sec > max_ops * 1.02 {
+            return Err(format!(
+                "ops/sec {} beats the CPU floor {max_ops}",
+                st.ops_per_sec
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn per_op_counters_match_config() {
+    forall(PropCfg { cases: 10, ..Default::default() }, gen_case, no_shrink, |c| {
+        let (st, _) = run(c, true);
+        if (st.mean_m - c.m as f64).abs() > 1e-6 {
+            return Err(format!("mean M {} != {}", st.mean_m, c.m));
+        }
+        if (st.mean_s - 1.0).abs() > 1e-6 {
+            return Err(format!("mean S {} != 1", st.mean_s));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn more_latency_never_helps() {
+    forall(PropCfg { cases: 8, ..Default::default() }, gen_case, no_shrink, |c| {
+        let (lo, _) = run(c, true);
+        let slower = SimCase {
+            l_us: c.l_us + 3.0,
+            ..c.clone()
+        };
+        let (hi, _) = run(&slower, true);
+        // Allow 3% noise from window edges.
+        if hi.ops_per_sec > lo.ops_per_sec * 1.03 {
+            return Err(format!(
+                "throughput rose with latency: {} -> {}",
+                lo.ops_per_sec, hi.ops_per_sec
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn io_free_runs_do_no_io() {
+    forall(PropCfg { cases: 8, ..Default::default() }, gen_case, no_shrink, |c| {
+        let (st, _) = run(c, false);
+        if st.io_reads + st.io_writes != 0 {
+            return Err("memory-only run touched the SSD".into());
+        }
+        if st.mean_s != 0.0 {
+            return Err("S != 0 in memory-only run".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn load_waits_bounded_by_latency() {
+    // No load can wait longer than one full memory latency (plus bandwidth
+    // spacing, which is off here).
+    forall(PropCfg { cases: 8, ..Default::default() }, gen_case, no_shrink, |c| {
+        let (st, _) = run(c, true);
+        let max_wait = st.load_wait_p99.as_us();
+        if max_wait > c.l_us * 1.15 + 0.01 {
+            return Err(format!("p99 load wait {max_wait} > L_mem {}", c.l_us));
+        }
+        Ok(())
+    });
+}
