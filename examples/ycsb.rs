@@ -1,0 +1,20 @@
+//! YCSB core workloads A–F across all three KV store designs, swept over
+//! memory latency (DRAM-class, 1, 2, 5, 10 µs).
+//!
+//! Workload E (scan-heavy) and F (read-modify-write) are the sharpest probe
+//! of the paper's IO-amortization claim: scans multiply both M (accesses
+//! per op) and S (IOs per op), RMW roughly doubles them, and the
+//! throughput-vs-latency curves stay bounded the same way the point-op
+//! curves do. cachekv reports workload E as a documented no-op (hash
+//! caches have no ordered iteration).
+//!
+//! Run: `cargo run --release --example ycsb` (CXLKVS_FAST=1 for quick)
+
+use cxlkvs::coordinator::experiments::ycsb_sweep;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let report = ycsb_sweep(fast_mode());
+    report.print();
+    println!("(norm = throughput relative to the same store/workload at DRAM latency)");
+}

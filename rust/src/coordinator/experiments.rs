@@ -9,14 +9,14 @@
 use super::report::{f1, f2, f3, Report};
 use super::runner::{
     best_threads, parallel_map, run_cache_with, run_lsm_with, run_microbench, run_store,
-    run_tree_with, MeasuredParams, StoreKind, SweepCfg,
+    run_store_ycsb, run_tree_with, MeasuredParams, StoreKind, SweepCfg,
 };
 use crate::kvs::{CacheKvConfig, LsmKvConfig, TreeKvConfig};
 use crate::microbench::MicrobenchConfig;
 use crate::model::{self, CprScenario, ExtParams, OpParams, SysParams};
 use crate::runtime::{BaseIn, ExtIn, ModelEvaluator};
 use crate::sim::Dur;
-use crate::workload::{KeyDist, OpMix, ValueSize};
+use crate::workload::{KeyDist, OpMix, ValueSize, YcsbWorkload};
 
 /// Model evaluation backend: PJRT artifact (preferred) or native fallback.
 pub enum ModelBackend {
@@ -1131,6 +1131,71 @@ pub fn fig18(fast: bool) -> Report {
 
     r.note("capacities scaled 1000x down from the paper's GB figures");
     r.write_csv("fig18").ok();
+    r
+}
+
+// ---------------------------------------------------------------------------
+// YCSB sweep — full-operation-surface workloads A–F across all stores.
+// ---------------------------------------------------------------------------
+
+/// Sweep L_mem × YCSB workload × store, reporting throughput-vs-latency
+/// degradation per workload. Workloads E (scan-heavy) and F (RMW) change
+/// both M (accesses per op) and the IO:compute ratio, probing the model's
+/// IO-amortization term across the whole operation surface.
+pub fn ycsb_sweep(fast: bool) -> Report {
+    let grid: Vec<f64> = if fast {
+        vec![0.1, 2.0, 10.0]
+    } else {
+        // DRAM-class baseline, then 1/2/5/10 µs.
+        vec![0.1, 1.0, 2.0, 5.0, 10.0]
+    };
+    let window = if fast { Dur::ms(5.0) } else { Dur::ms(12.0) };
+
+    let mut r = Report::new(
+        "YCSB sweep — normalized throughput vs memory latency per workload/store",
+        &["workload", "store", "L_mem(us)", "ops/sec", "norm", "M", "S"],
+    );
+    for wl in YcsbWorkload::ALL {
+        for kind in StoreKind::ALL {
+            let jobs: Vec<_> = grid
+                .iter()
+                .map(|&l| {
+                    let sweep = SweepCfg {
+                        l_mem: Dur::us(l),
+                        window,
+                        thread_candidates: vec![32, 64],
+                        ..Default::default()
+                    };
+                    move || {
+                        best_threads(&sweep.thread_candidates.clone(), |n| {
+                            run_store_ycsb(kind, wl, &sweep, n)
+                        })
+                        .1
+                    }
+                })
+                .collect();
+            let stats = parallel_map(jobs);
+            let dram = stats[0].ops_per_sec;
+            for (i, &l) in grid.iter().enumerate() {
+                r.row(vec![
+                    wl.name().into(),
+                    kind.name().into(),
+                    f1(l),
+                    format!("{:.0}", stats[i].ops_per_sec),
+                    f3(stats[i].ops_per_sec / dram),
+                    f2(stats[i].mean_m),
+                    f2(stats[i].mean_s),
+                ]);
+            }
+        }
+    }
+    r.note("E multiplies M and S per op (index walk + batched value reads),");
+    r.note("F roughly doubles both (read path + write path per op) — the");
+    r.note("IO-amortization term keeps degradation bounded in both cases");
+    r.note("cachekv under E is degenerate: scans are a documented no-op");
+    r.note("(hash layout has no ordered iteration), so its E row measures");
+    r.note("the API-call floor, not range-scan service");
+    r.write_csv("ycsb_sweep").ok();
     r
 }
 

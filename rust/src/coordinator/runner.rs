@@ -6,6 +6,7 @@
 use crate::kvs::{CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, TreeKv, TreeKvConfig};
 use crate::microbench::{Microbench, MicrobenchConfig};
 use crate::sim::{Dur, Machine, MachineConfig, MemConfig, Rng, RunStats, TailProfile};
+use crate::workload::YcsbWorkload;
 
 /// Which KV store design a sweep drives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -120,6 +121,62 @@ pub fn run_store(kind: StoreKind, sweep: &SweepCfg, threads: usize) -> RunStats 
         }
         StoreKind::Cache => {
             let kv = CacheKv::new(CacheKvConfig::default(), &mut rng);
+            Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
+        }
+    }
+}
+
+/// Store configs for one YCSB preset. The sweep uses them as-is; the golden
+/// determinism tests derive from them (overriding only the store *sizes*
+/// via struct update), so the workload-facing fields — op weights, key
+/// distribution, scan lengths — are measured from one definition.
+pub fn ycsb_tree_cfg(wl: YcsbWorkload) -> TreeKvConfig {
+    TreeKvConfig {
+        ops: Some(wl.weights()),
+        key_dist: wl.key_dist(),
+        scan_len: wl.scan_len(),
+        ..Default::default()
+    }
+}
+
+pub fn ycsb_lsm_cfg(wl: YcsbWorkload) -> LsmKvConfig {
+    LsmKvConfig {
+        ops: Some(wl.weights()),
+        key_dist: wl.key_dist(),
+        scan_len: wl.scan_len(),
+        ..Default::default()
+    }
+}
+
+pub fn ycsb_cache_cfg(wl: YcsbWorkload) -> CacheKvConfig {
+    CacheKvConfig {
+        ops: Some(wl.weights()),
+        key_dist: wl.key_dist(),
+        ..Default::default()
+    }
+}
+
+/// Run one store under one YCSB preset at one sweep point.
+pub fn run_store_ycsb(
+    kind: StoreKind,
+    wl: YcsbWorkload,
+    sweep: &SweepCfg,
+    threads: usize,
+) -> RunStats {
+    let mcfg = sweep.machine(threads);
+    let mut rng = Rng::new(sweep.seed ^ 0xfeed ^ wl.tag().as_bytes()[0] as u64);
+    match kind {
+        StoreKind::Tree => {
+            let kv = TreeKv::new(ycsb_tree_cfg(wl), &mut rng)
+                .with_background(mcfg.cores, threads);
+            Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
+        }
+        StoreKind::Lsm => {
+            let kv = LsmKv::new(ycsb_lsm_cfg(wl), &mut rng).with_background(threads);
+            Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
+        }
+        StoreKind::Cache => {
+            let kv = CacheKv::new(ycsb_cache_cfg(wl), &mut rng);
             Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
         }
     }

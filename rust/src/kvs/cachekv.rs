@@ -12,10 +12,25 @@
 //! LRU promotion uses CacheLib's refresh-ratio trick: a hit only splices the
 //! item to the head with probability `lru_refresh_prob`, cutting lock
 //! traffic.
+//!
+//! The full operation surface (beyond the paper's GET/PUT reproduction):
+//!
+//! - **Delete** is cache invalidation: chain walk, unlink from tier 1 under
+//!   the LRU lock, and tier-2 index invalidation (the SOC entry is marked
+//!   stale in its DRAM index — no flash IO, matching CacheLib's `remove`).
+//!   A subsequent get misses both tiers (counted in `stats.absent`) and
+//!   read-throughs from the backend.
+//! - **ReadModifyWrite** is a read (either tier or backend) followed by an
+//!   update-in-place: on a tier-1 hit the item is spliced to the LRU head
+//!   under the lock (the write), on a miss the fetched value is inserted.
+//! - **Scan is unsupported**: CacheLib's hash layout has no ordered
+//!   iteration. `OpKind::Scan` is a documented no-op costing one API call
+//!   of compute; it is counted in `stats.scans` so workload-E sweeps can
+//!   report the store as degenerate rather than silently misbehaving.
 
 use super::common::{fnv1a, KvStats, NIL};
 use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
-use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, ValueSize};
+use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ValueSize};
 
 #[derive(Debug, Clone)]
 pub struct CacheKvConfig {
@@ -28,7 +43,10 @@ pub struct CacheKvConfig {
     /// Tier-1 hash buckets.
     pub buckets: u32,
     pub key_dist: KeyDist,
+    /// Read:write mix (paper figures). Ignored when `ops` is set.
     pub mix: OpMix,
+    /// Full-surface operation weights (YCSB presets); `None` follows `mix`.
+    pub ops: Option<OpWeights>,
     pub value_size: ValueSize,
     pub t_node: Dur,
     /// Probability a hit refreshes the LRU position.
@@ -51,6 +69,7 @@ impl Default for CacheKvConfig {
             buckets: 16_384,
             key_dist: KeyDist::Gaussian { sigma_frac: 0.22 },
             mix: OpMix::ratio(2, 1),
+            ops: None,
             value_size: ValueSize::Range(200, 300),
             t_node: Dur::ns(60.0),
             lru_refresh_prob: 0.1,
@@ -81,14 +100,21 @@ pub struct CacheKv {
     t1_len: u32,
     /// Tier-2 content: FIFO ring + membership map (the on-SSD truth; the
     /// in-DRAM SOC index is a small structure the paper leaves in DRAM).
-    t2_ring: std::collections::VecDeque<u64>,
+    /// Ring entries carry an admission generation; invalidations remove
+    /// only the index entry (flash blocks are not erased in place), so a
+    /// ring entry whose generation no longer matches the index is stale
+    /// and is skipped at eviction time. The ring is hard-bounded at
+    /// `t2_items` entries.
+    t2_ring: std::collections::VecDeque<(u64, u32)>,
     t2_set: std::collections::HashMap<u64, u32>,
+    t2_gen: u32,
     pub stats: KvStats,
 }
 
 #[derive(Debug)]
 pub enum CacheOp {
-    /// Bucket array probe (DRAM) then chain walk (secondary).
+    /// Bucket array probe (DRAM) then chain walk (secondary). `kind` is
+    /// `Read`, `Write`, or `Rmw`.
     Lookup {
         kind: OpKind,
         key: u64,
@@ -110,6 +136,15 @@ pub enum CacheOp {
     Backend { key: u64 },
     /// Deferred SOC page write for an admitted tier-1 eviction.
     SocWrite,
+    /// Invalidation: chain walk, locked tier-1 unlink, tier-2 index removal.
+    Delete {
+        key: u64,
+        cur: u32,
+        bucket_read: bool,
+        hops: u8,
+    },
+    /// Unsupported ordered scan: one API-call of compute, then done.
+    ScanNoop,
     Finished,
 }
 
@@ -125,6 +160,7 @@ impl CacheKv {
             t1_len: 0,
             t2_ring: std::collections::VecDeque::with_capacity(cfg.t2_items as usize + 1),
             t2_set: std::collections::HashMap::new(),
+            t2_gen: 0,
             stats: KvStats::default(),
             keygen,
             cfg,
@@ -141,6 +177,14 @@ impl CacheKv {
             }
         }
         kv
+    }
+
+    /// Effective operation weights: explicit `ops` or the two-kind `mix`.
+    fn weights(&self) -> OpWeights {
+        match self.cfg.ops {
+            Some(w) => w,
+            None => OpWeights::from(self.cfg.mix),
+        }
     }
 
     #[inline]
@@ -203,6 +247,15 @@ impl CacheKv {
         }
     }
 
+    /// Unlink and free one tier-1 item (delete path / eviction core).
+    fn t1_remove(&mut self, id: u32) {
+        self.lru_unlink(id);
+        self.bucket_remove(id);
+        self.items[id as usize].live = false;
+        self.free.push(id);
+        self.t1_len -= 1;
+    }
+
     /// Insert into tier 1, evicting the LRU tail if full. Returns whether an
     /// eviction was admitted to tier 2 (→ SSD page write).
     fn t1_insert(&mut self, key: u64, rng: &mut Rng) -> bool {
@@ -211,11 +264,7 @@ impl CacheKv {
             let tail = self.lru_tail;
             if tail != NIL {
                 let victim = self.items[tail as usize].key;
-                self.lru_unlink(tail);
-                self.bucket_remove(tail);
-                self.items[tail as usize].live = false;
-                self.free.push(tail);
-                self.t1_len -= 1;
+                self.t1_remove(tail);
                 if rng.chance(self.cfg.t2_admit_prob) {
                     self.t2_insert(victim);
                     evict_write = true;
@@ -253,14 +302,29 @@ impl CacheKv {
         if self.t2_set.contains_key(&key) {
             return;
         }
-        if self.t2_ring.len() >= self.cfg.t2_items as usize {
-            if let Some(old) = self.t2_ring.pop_front() {
-                self.t2_set.remove(&old);
+        // Hard-bound the ring: rotate out the FIFO head until a slot frees.
+        // Stale heads (generation no longer in the index — invalidated, or
+        // re-admitted later under a newer generation) drain without
+        // touching the index, so an old twin can never evict a live entry.
+        while self.t2_ring.len() >= self.cfg.t2_items as usize {
+            match self.t2_ring.pop_front() {
+                Some((old, gen)) => {
+                    if self.t2_set.get(&old) == Some(&gen) {
+                        self.t2_set.remove(&old);
+                    }
+                }
+                None => break,
             }
         }
-        self.t2_ring.push_back(key);
-        let page = (fnv1a(key) >> 16) as u32;
-        self.t2_set.insert(key, page);
+        self.t2_gen = self.t2_gen.wrapping_add(1);
+        self.t2_ring.push_back((key, self.t2_gen));
+        self.t2_set.insert(key, self.t2_gen);
+    }
+
+    /// Remove the tier-2 index entry (invalidation); the ring entry goes
+    /// stale. Returns whether the key was tier-2 resident.
+    fn t2_invalidate(&mut self, key: u64) -> bool {
+        self.t2_set.remove(&key).is_some()
     }
 
     pub fn t1_hit_ratio(&self) -> f64 {
@@ -279,6 +343,61 @@ impl CacheKv {
         } else {
             self.stats.t2_hits as f64 / t1_misses as f64
         }
+    }
+
+    /// Cache-residency oracle (tests; not simulated).
+    pub fn contains_key(&self, key: u64) -> bool {
+        self.t1_lookup(key).is_some() || self.t2_set.contains_key(&key)
+    }
+
+    // ---- directed operation constructors (also used by next_op) ----------
+
+    pub fn op_get(&mut self, key: u64) -> CacheOp {
+        self.stats.gets += 1;
+        CacheOp::Lookup {
+            kind: OpKind::Read,
+            key,
+            cur: NIL,
+            bucket_read: false,
+        }
+    }
+
+    pub fn op_put(&mut self, key: u64) -> CacheOp {
+        self.stats.sets += 1;
+        CacheOp::Lookup {
+            kind: OpKind::Write,
+            key,
+            cur: NIL,
+            bucket_read: false,
+        }
+    }
+
+    /// Note: like the other stores, `gets` counts only pure reads — RMW
+    /// issues are counted in `rmws` alone (their lookups still move the
+    /// hit/miss counters).
+    pub fn op_rmw(&mut self, key: u64) -> CacheOp {
+        self.stats.rmws += 1;
+        CacheOp::Lookup {
+            kind: OpKind::Rmw,
+            key,
+            cur: NIL,
+            bucket_read: false,
+        }
+    }
+
+    pub fn op_delete(&mut self, key: u64) -> CacheOp {
+        self.stats.deletes += 1;
+        CacheOp::Delete {
+            key,
+            cur: NIL,
+            bucket_read: false,
+            hops: 0,
+        }
+    }
+
+    pub fn op_scan(&mut self) -> CacheOp {
+        self.stats.scans += 1;
+        CacheOp::ScanNoop
     }
 }
 
@@ -302,16 +421,12 @@ impl Service for CacheKv {
 
     fn next_op(&mut self, _tid: usize, rng: &mut Rng) -> CacheOp {
         let key = self.keygen.sample(rng);
-        let kind = self.cfg.mix.sample(rng);
-        match kind {
-            OpKind::Read => self.stats.gets += 1,
-            OpKind::Write => self.stats.sets += 1,
-        }
-        CacheOp::Lookup {
-            kind,
-            key,
-            cur: NIL,
-            bucket_read: false,
+        match self.weights().sample(rng) {
+            OpKind::Read => self.op_get(key),
+            OpKind::Write => self.op_put(key),
+            OpKind::Delete => self.op_delete(key),
+            OpKind::Rmw => self.op_rmw(key),
+            OpKind::Scan => self.op_scan(),
         }
     }
 
@@ -335,15 +450,18 @@ impl Service for CacheKv {
                 if id == NIL {
                     // Tier-1 miss.
                     match kd {
-                        OpKind::Read => {
+                        OpKind::Read | OpKind::Rmw => {
                             if self.t2_set.contains_key(&k) {
                                 *op = CacheOp::T2Read { key: k };
                             } else {
+                                // Absent from both tiers (deleted or never
+                                // cached): read-through from the backend.
                                 self.stats.misses += 1;
+                                self.stats.absent += 1;
                                 *op = CacheOp::Backend { key: k };
                             }
                         }
-                        OpKind::Write => {
+                        _ => {
                             // Set of a non-resident key: insert fresh.
                             *op = CacheOp::Insert {
                                 key: k,
@@ -357,10 +475,11 @@ impl Service for CacheKv {
                 }
                 let it = self.items[id as usize];
                 if it.live && it.key == k {
-                    // Tier-1 hit (read) or update-in-place (write).
+                    // Tier-1 hit (read) or update-in-place (write / RMW's
+                    // write half).
                     self.stats.hits += 1;
                     self.stats.t1_hits += 1;
-                    if rng.chance(self.cfg.lru_refresh_prob) || kd == OpKind::Write {
+                    if rng.chance(self.cfg.lru_refresh_prob) || kd != OpKind::Read {
                         *op = CacheOp::Refresh { key: k, hops: 0 };
                         // Neighbor reads happen unlocked; only the final
                         // splice runs under the (sharded) LRU lock —
@@ -482,6 +601,62 @@ impl Service for CacheKv {
                     extra_post: Dur::ns(300.0),
                 }
             }
+            CacheOp::Delete {
+                key,
+                cur,
+                bucket_read,
+                hops,
+            } => {
+                let k = *key;
+                if !*bucket_read {
+                    *bucket_read = true;
+                    *cur = self.buckets[self.bucket_of(k)];
+                    return Step::MemAccess(Tier::Dram);
+                }
+                match *hops {
+                    0 => {
+                        // Chain walk toward the item.
+                        let id = *cur;
+                        if id == NIL {
+                            // Not tier-1 resident: invalidate the tier-2
+                            // index entry (a DRAM structure update).
+                            let was_t2 = self.t2_invalidate(k);
+                            if !was_t2 {
+                                self.stats.absent += 1;
+                            }
+                            *op = CacheOp::Finished;
+                            return Step::Compute(self.cfg.t_node);
+                        }
+                        let it = self.items[id as usize];
+                        if it.live && it.key == k {
+                            // Found: take the LRU lock for the unlink.
+                            *hops = 1;
+                            return Step::Lock(lru_lock(k));
+                        }
+                        *cur = it.hash_next;
+                        Step::MemAccess(Tier::Secondary)
+                    }
+                    1 => {
+                        // Unlink under the lock; also drop any tier-2 copy.
+                        *hops = 2;
+                        if let Some(id) = self.t1_lookup(k) {
+                            self.t1_remove(id);
+                        }
+                        self.t2_invalidate(k);
+                        Step::Compute(self.cfg.t_node)
+                    }
+                    _ => {
+                        *op = CacheOp::Finished;
+                        Step::Unlock(lru_lock(k))
+                    }
+                }
+            }
+            CacheOp::ScanNoop => {
+                // Unsupported on a hash-layout cache: the API call returns
+                // immediately (see module docs).
+                *op = CacheOp::Finished;
+                Step::Compute(self.cfg.t_node)
+            }
             CacheOp::Finished => Step::Done,
         }
     }
@@ -512,6 +687,14 @@ mod tests {
         }
     }
 
+    use super::super::common::drive_op as drive_generic;
+
+    /// Drive an op to completion outside the machine (timing-free).
+    /// Returns (mem accesses, read IOs, write IOs).
+    fn drive(kv: &mut CacheKv, op: CacheOp, rng: &mut Rng) -> (u32, u32, u32) {
+        drive_generic(kv, op, rng)
+    }
+
     #[test]
     fn structure_invariants_after_churn() {
         let mut rng = Rng::new(1);
@@ -536,9 +719,10 @@ mod tests {
         }
         assert_eq!(cnt, kv.t1_len);
         assert_eq!(kv.lru_tail, prev);
-        // Tier-2 bounded.
+        // Tier-2 ring hard-bounded; the index never exceeds the ring (stale
+        // invalidated entries await rotation inside the bound).
         assert!(kv.t2_ring.len() <= kv.cfg.t2_items as usize);
-        assert_eq!(kv.t2_ring.len(), kv.t2_set.len());
+        assert!(kv.t2_set.len() <= kv.t2_ring.len());
     }
 
     #[test]
@@ -618,5 +802,120 @@ mod tests {
         let st = m.run(Dur::ms(5.0), Dur::ms(20.0));
         assert!(m.service.stats.sets > 500);
         assert!(st.io_writes > 10, "SOC page writes expected");
+    }
+
+    #[test]
+    fn delete_invalidates_both_tiers() {
+        let mut rng = Rng::new(6);
+        let mut kv = CacheKv::new(small_cfg(), &mut rng);
+        // Ensure residency, then delete.
+        let key = 9_999u64;
+        if kv.t1_lookup(key).is_none() {
+            kv.t1_insert(key, &mut rng);
+        }
+        kv.t2_insert(key);
+        assert!(kv.contains_key(key));
+
+        let op = kv.op_delete(key);
+        drive(&mut kv, op, &mut rng);
+        assert!(!kv.contains_key(key), "delete must invalidate both tiers");
+
+        // Get after delete: misses both tiers (absent), read-throughs.
+        let absent0 = kv.stats.absent;
+        let op = kv.op_get(key);
+        let (_, reads, _writes) = drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.stats.absent, absent0 + 1, "get-after-delete absent");
+        // Backend fetch is compute-only; only an eviction page write may
+        // accompany the re-insert.
+        assert_eq!(reads, 0, "backend fetch is not a tier-2 page read");
+        // The read-through re-cached it (cache semantics).
+        assert!(kv.t1_lookup(key).is_some());
+    }
+
+    #[test]
+    fn delete_of_t2_only_key_drops_index_entry() {
+        let mut rng = Rng::new(7);
+        let mut kv = CacheKv::new(small_cfg(), &mut rng);
+        // Find a key resident in t2 but not in t1.
+        let key = (0..kv.cfg.n_items)
+            .find(|&k| kv.t1_lookup(k).is_none() && kv.t2_set.contains_key(&k));
+        let Some(key) = key else {
+            // Warmup left no t2-only key (unlikely); force one.
+            let k = 1u64;
+            if let Some(id) = kv.t1_lookup(k) {
+                kv.t1_remove(id);
+            }
+            kv.t2_insert(k);
+            let op = kv.op_delete(k);
+            drive(&mut kv, op, &mut rng);
+            assert!(!kv.t2_set.contains_key(&k));
+            return;
+        };
+        let op = kv.op_delete(key);
+        drive(&mut kv, op, &mut rng);
+        assert!(!kv.t2_set.contains_key(&key));
+    }
+
+    #[test]
+    fn rmw_hits_take_write_path_and_misses_insert() {
+        let mut rng = Rng::new(8);
+        let mut kv = CacheKv::new(small_cfg(), &mut rng);
+        let key = 42u64;
+        if kv.t1_lookup(key).is_none() {
+            kv.t1_insert(key, &mut rng);
+        }
+        // Hit: RMW always refreshes (update-in-place = the write half).
+        let op = kv.op_rmw(key);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.lru_head, kv.t1_lookup(key).unwrap(), "spliced to head");
+
+        // Miss in both tiers: the RMW read-throughs and inserts.
+        let op = kv.op_delete(key);
+        drive(&mut kv, op, &mut rng);
+        let op = kv.op_rmw(key);
+        drive(&mut kv, op, &mut rng);
+        assert!(kv.t1_lookup(key).is_some(), "rmw miss must insert");
+    }
+
+    #[test]
+    fn t2_ring_bounded_and_stale_twin_cannot_evict_live_entry() {
+        let mut rng = Rng::new(10);
+        let mut kv = CacheKv::new(
+            CacheKvConfig {
+                t2_items: 8,
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        // Directed scenario on an empty tier 2.
+        kv.t2_ring.clear();
+        kv.t2_set.clear();
+        kv.t2_insert(1);
+        kv.t2_invalidate(1);
+        kv.t2_insert(1); // re-admission leaves a stale twin at the FIFO head
+        for k in 100..107u64 {
+            kv.t2_insert(k);
+            assert!(kv.t2_ring.len() <= 8, "ring must stay hard-bounded");
+        }
+        // The stale twin has rotated out; the live re-admission survived it.
+        assert!(
+            kv.t2_set.contains_key(&1),
+            "stale twin evicted the live entry"
+        );
+        // One more insert reaches the live entry's own FIFO turn.
+        kv.t2_insert(107);
+        assert!(!kv.t2_set.contains_key(&1), "live entry evicted in FIFO order");
+        assert!(kv.t2_ring.len() <= 8);
+    }
+
+    #[test]
+    fn scan_is_documented_noop() {
+        let mut rng = Rng::new(9);
+        let mut kv = CacheKv::new(small_cfg(), &mut rng);
+        let op = kv.op_scan();
+        let (mems, reads, writes) = drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.stats.scans, 1);
+        assert_eq!(kv.stats.scanned, 0, "no entries are ever returned");
+        assert_eq!((mems, reads, writes), (0, 0, 0), "no accesses, no IO");
     }
 }

@@ -1,5 +1,31 @@
 //! Shared helpers for the KV store implementations.
 
+use crate::sim::{IoKind, Rng, Service, Step};
+
+/// Drive one operation's state machine to completion outside the machine:
+/// timing-free — `Lock`/`Unlock`/`Yield` are acknowledged and IOs complete
+/// instantly. Returns (memory accesses, read IOs, write IOs). Intended for
+/// directed tests and offline diagnostics; simulated runs go through
+/// [`crate::sim::Machine`].
+pub fn drive_op<S: Service>(svc: &mut S, mut op: S::Op, rng: &mut Rng) -> (u32, u32, u32) {
+    let (mut mems, mut reads, mut writes) = (0, 0, 0);
+    let mut guard = 0u32;
+    loop {
+        match svc.step(0, &mut op, rng) {
+            Step::Done => break,
+            Step::MemAccess(_) => mems += 1,
+            Step::Io { kind, .. } => match kind {
+                IoKind::Read => reads += 1,
+                IoKind::Write => writes += 1,
+            },
+            _ => {}
+        }
+        guard += 1;
+        assert!(guard < 200_000, "op did not terminate");
+    }
+    (mems, reads, writes)
+}
+
 /// FNV-1a 64-bit hash (key digests, bucket hashing).
 #[inline]
 pub fn fnv1a(x: u64) -> u64 {
@@ -19,6 +45,17 @@ pub struct KvStats {
     pub hits: u64,
     pub misses: u64,
     pub sets: u64,
+    /// Delete operations issued.
+    pub deletes: u64,
+    /// Scan operations issued.
+    pub scans: u64,
+    /// Read-modify-write operations issued.
+    pub rmws: u64,
+    /// Entries returned across all scans.
+    pub scanned: u64,
+    /// Point lookups / deletes that found no entry (deleted or never
+    /// written keys).
+    pub absent: u64,
     pub verified: u64,
     pub corruptions: u64,
     /// Tier-specific hit counters (cachekv).

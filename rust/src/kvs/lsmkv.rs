@@ -11,13 +11,30 @@
 //! evicting the shard's LRU tail. Writes go to the memtable; a background
 //! thread flushes and compacts (bulk IO).
 //!
+//! The full operation surface (beyond the paper's GET/PUT reproduction):
+//!
+//! - **Delete** writes a tombstone into the memtable (DRAM accesses + WAL
+//!   append, like a write). While the tombstone is memtable-resident a read
+//!   of the key short-circuits at the memtable; once the background thread
+//!   flushes it, reads take the full block-cache path and discover absence
+//!   in the data block (compaction purges the tombstone record itself —
+//!   the key stays absent, modeled by the logical `deleted` set).
+//! - **Scan** is a merged memtable+sstable iterator: one memtable seek
+//!   (DRAM), then sequential blocks through the block cache — chain walk
+//!   per block, an in-block access per restart interval, an SSD fetch per
+//!   cache-missing block. Tombstoned keys are skipped (merge cost only).
+//! - **ReadModifyWrite** chains the full read path into a memtable write
+//!   of the same key.
+//!
 //! With Zipf-skewed keys the cache hit ratio lands near the paper's 67%, so
 //! the average IOs per operation S ≈ 0.33 and the extended model's per-IO
 //! split (§3.2.3) applies.
 
+use std::collections::HashSet;
+
 use super::common::{fnv1a, KvStats, NIL};
 use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
-use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, ValueSize};
+use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ScanLen, ValueSize};
 
 #[derive(Debug, Clone)]
 pub struct LsmKvConfig {
@@ -31,7 +48,12 @@ pub struct LsmKvConfig {
     /// Hash buckets per shard.
     pub buckets_per_shard: u32,
     pub key_dist: KeyDist,
+    /// Read:write mix (paper figures). Ignored when `ops` is set.
     pub mix: OpMix,
+    /// Full-surface operation weights (YCSB presets); `None` follows `mix`.
+    pub ops: Option<OpWeights>,
+    /// Scan length distribution for `OpKind::Scan`.
+    pub scan_len: ScanLen,
     pub value_size: ValueSize,
     /// CPU cost per pointer hop / key comparison.
     pub t_node: Dur,
@@ -59,6 +81,8 @@ impl Default for LsmKvConfig {
                 scrambled: true,
             },
             mix: OpMix::READ_ONLY,
+            ops: None,
+            scan_len: ScanLen::default(),
             value_size: ValueSize::Fixed(400),
             t_node: Dur::ns(100.0),
             memtable_cap: 4096,
@@ -100,6 +124,15 @@ pub struct LsmKv {
     memtable_fill: u32,
     /// Flush backlog (memtable generations awaiting the background thread).
     flush_backlog: u32,
+    /// Logical deleted-key set (the store's truth about tombstoned keys).
+    deleted: HashSet<u64>,
+    /// Tombstones in the *active* memtable: reads short-circuit at the
+    /// memtable. Moved to `sealed_tombstones` when the memtable rotates.
+    fresh_tombstones: HashSet<u64>,
+    /// Tombstones in rotated (immutable, not yet flushed) memtables: still
+    /// DRAM-resident, so reads also short-circuit; cleared when the
+    /// background thread flushes them into the SSTable levels.
+    sealed_tombstones: HashSet<u64>,
     pub stats: KvStats,
     bg_tid_floor: usize,
     bg_threads_per_core: usize,
@@ -107,30 +140,63 @@ pub struct LsmKv {
 
 #[derive(Debug)]
 pub enum LsmOp {
-    /// Probe the memtable (DRAM accesses), then go to the cache.
+    /// Probe the memtable (DRAM accesses), then go to the cache. `kind` is
+    /// `Read` or `Rmw`.
     Memtable { kind: OpKind, key: u64, probes: u8 },
     /// Walk the shard's hash chain looking for the block.
     ChainWalk {
         key: u64,
         entry: u32,
         first: bool,
+        rmw: bool,
     },
     /// Found in cache: splice the entry to the LRU head (3 dependent
     /// accesses: prev, next, head), then search inside the block.
-    LruPromote { key: u64, entry: u32, hops: u8 },
+    LruPromote {
+        key: u64,
+        entry: u32,
+        hops: u8,
+        rmw: bool,
+    },
     /// Cache miss: fetch the block from SSD.
-    Fetch { key: u64 },
+    Fetch { key: u64, rmw: bool },
     /// Insert fetched block: evict tail if needed, link into bucket + LRU.
-    Insert { key: u64, hops: u8 },
+    Insert { key: u64, hops: u8, rmw: bool },
     /// Binary search over the block's restart array + final linear scan.
     InBlock {
         key: u64,
         lo: u32,
         hi: u32,
         compute_done: bool,
+        rmw: bool,
     },
     /// Write path: memtable insert (DRAM) + occasional flush signal.
-    WriteMem { probes: u8 },
+    WriteMem { key: u64, probes: u8 },
+    /// Delete path: memtable tombstone insert (DRAM) + WAL append.
+    DeleteMem { key: u64, probes: u8 },
+    /// Merged memtable+sstable range iterator.
+    Scan {
+        /// Next key the iterator will produce.
+        key: u64,
+        /// Entries still to produce.
+        left: u32,
+        /// Initial memtable-seek probes (DRAM).
+        probes: u8,
+        /// Chain-walk accesses still to charge for the current block.
+        chain_left: u8,
+        /// Chain probe performed for the current block.
+        chain_init: bool,
+        /// Current block misses the cache (needs an SSD fetch).
+        need_io: bool,
+        /// Post-fetch cache insert progress: 0 = none, 1 = take the shard
+        /// lock, 2 = locked mutation, 3 = release (mirrors the point-read
+        /// `Insert` path's locked mutation).
+        insert_step: u8,
+        /// Current block is resident; consuming entries.
+        in_block: bool,
+        /// Entries consumed in the current restart interval.
+        stride: u8,
+    },
     /// Background flush/compaction bulk IO.
     BgFlush { ios_left: u8, write: bool },
     BgPause,
@@ -160,6 +226,9 @@ impl LsmKv {
             n_blocks,
             memtable_fill: 0,
             flush_backlog: 0,
+            deleted: HashSet::new(),
+            fresh_tombstones: HashSet::new(),
+            sealed_tombstones: HashSet::new(),
             stats: KvStats::default(),
             bg_tid_floor: usize::MAX,
             bg_threads_per_core: 1,
@@ -181,8 +250,16 @@ impl LsmKv {
         kv
     }
 
+    /// Effective operation weights: explicit `ops` or the two-kind `mix`.
+    fn weights(&self) -> OpWeights {
+        match self.cfg.ops {
+            Some(w) => w,
+            None => OpWeights::from(self.cfg.mix),
+        }
+    }
+
     pub fn with_background(mut self, threads_per_core: usize) -> LsmKv {
-        if self.cfg.compaction && self.cfg.mix.read_ratio < 1.0 {
+        if self.cfg.compaction && self.weights().has_writes() {
             self.bg_tid_floor = threads_per_core - 1;
             self.bg_threads_per_core = threads_per_core;
         }
@@ -208,6 +285,11 @@ impl LsmKv {
         ((fnv1a(block as u64) >> 8) % self.cfg.buckets_per_shard as u64) as usize
     }
 
+    #[inline]
+    fn block_bytes(&self) -> u32 {
+        self.cfg.keys_per_block * (self.cfg.value_size.mean() as u32 + 20 + 8)
+    }
+
     /// Pure lookup (no timing): entry id if cached.
     fn cache_lookup(&self, block: u32) -> Option<u32> {
         let s = &self.shards[self.shard_of(block)];
@@ -220,6 +302,23 @@ impl LsmKv {
             cur = e.hash_next;
         }
         None
+    }
+
+    /// Structural chain probe: (accesses to reach the entry or chain end —
+    /// bucket head included — , found?). Drives the scan's per-block cost.
+    fn chain_probe(&self, block: u32) -> (u8, bool) {
+        let s = &self.shards[self.shard_of(block)];
+        let mut cur = s.buckets[self.bucket_of(block)];
+        let mut hops = 1u32; // reading the bucket head
+        while cur != NIL {
+            let e = &self.entries[cur as usize];
+            if e.live && e.block == block {
+                return (hops.min(250) as u8, true);
+            }
+            hops += 1;
+            cur = e.hash_next;
+        }
+        (hops.min(250) as u8, false)
     }
 
     /// Unlink from LRU list (structure mutation only).
@@ -318,6 +417,99 @@ impl LsmKv {
     fn lock_of(&self, block: u32) -> u32 {
         (self.shard_of(block) as u32) % 64
     }
+
+    /// Logical membership oracle (tests; not simulated).
+    pub fn contains_key(&self, key: u64) -> bool {
+        key < self.cfg.n_items && !self.deleted.contains(&key)
+    }
+
+    /// Keys a scan of `len` from `start` returns (oracle for the ordering
+    /// and tombstone-skip property tests; not simulated).
+    pub fn scan_keys(&self, start: u64, len: u32) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut k = start;
+        let mut budget = len;
+        while budget > 0 && k < self.cfg.n_items {
+            if !self.deleted.contains(&k) {
+                out.push(k);
+            }
+            budget -= 1;
+            k += 1;
+        }
+        out
+    }
+
+    // ---- directed operation constructors (also used by next_op) ----------
+
+    pub fn op_get(&mut self, key: u64) -> LsmOp {
+        self.stats.gets += 1;
+        LsmOp::Memtable {
+            kind: OpKind::Read,
+            key,
+            probes: 3,
+        }
+    }
+
+    pub fn op_put(&mut self, key: u64) -> LsmOp {
+        self.stats.sets += 1;
+        LsmOp::WriteMem { key, probes: 4 }
+    }
+
+    pub fn op_delete(&mut self, key: u64) -> LsmOp {
+        self.stats.deletes += 1;
+        LsmOp::DeleteMem { key, probes: 4 }
+    }
+
+    pub fn op_rmw(&mut self, key: u64) -> LsmOp {
+        self.stats.rmws += 1;
+        LsmOp::Memtable {
+            kind: OpKind::Rmw,
+            key,
+            probes: 3,
+        }
+    }
+
+    pub fn op_scan(&mut self, start: u64, len: u32) -> LsmOp {
+        self.stats.scans += 1;
+        LsmOp::Scan {
+            key: start,
+            left: len.max(1),
+            probes: 3,
+            chain_left: 0,
+            chain_init: false,
+            need_io: false,
+            insert_step: 0,
+            in_block: false,
+            stride: 0,
+        }
+    }
+
+    /// Count one memtable insert toward the flush threshold (shared by
+    /// value writes and tombstone writes). On rotation the active
+    /// memtable's tombstones become sealed (immutable-memtable resident).
+    fn memtable_fill_tick(&mut self) {
+        self.memtable_fill += 1;
+        if self.memtable_fill >= self.cfg.memtable_cap {
+            self.memtable_fill = 0;
+            self.flush_backlog += 1;
+            let fresh: Vec<u64> = self.fresh_tombstones.drain().collect();
+            self.sealed_tombstones.extend(fresh);
+        }
+    }
+
+    /// Memtable insert shared by writes and RMW write-halves.
+    fn memtable_write(&mut self, key: u64) {
+        self.deleted.remove(&key);
+        self.fresh_tombstones.remove(&key);
+        self.sealed_tombstones.remove(&key);
+        self.memtable_fill_tick();
+    }
+
+    /// A tombstone for `key` is still DRAM-resident (active or immutable
+    /// memtable), so a read resolves to absent without touching the cache.
+    fn tombstone_in_memtable(&self, key: u64) -> bool {
+        self.fresh_tombstones.contains(&key) || self.sealed_tombstones.contains(&key)
+    }
 }
 
 impl Service for LsmKv {
@@ -327,6 +519,12 @@ impl Service for LsmKv {
         if self.is_bg(tid) {
             if self.flush_backlog > 0 {
                 self.flush_backlog -= 1;
+                // The flush moves *sealed* (rotated-memtable) tombstones
+                // into the SSTable levels: those reads stop short-circuiting
+                // at the memtable (compaction later purges the records; the
+                // keys stay logically deleted). The active memtable's
+                // tombstones are untouched.
+                self.sealed_tombstones.clear();
                 return LsmOp::BgFlush {
                     ios_left: 8,
                     write: false,
@@ -335,18 +533,14 @@ impl Service for LsmKv {
             return LsmOp::BgPause;
         }
         let key = self.keygen.sample(rng);
-        match self.cfg.mix.sample(rng) {
-            OpKind::Read => {
-                self.stats.gets += 1;
-                LsmOp::Memtable {
-                    kind: OpKind::Read,
-                    key,
-                    probes: 3,
-                }
-            }
-            OpKind::Write => {
-                self.stats.sets += 1;
-                LsmOp::WriteMem { probes: 4 }
+        match self.weights().sample(rng) {
+            OpKind::Read => self.op_get(key),
+            OpKind::Write => self.op_put(key),
+            OpKind::Delete => self.op_delete(key),
+            OpKind::Rmw => self.op_rmw(key),
+            OpKind::Scan => {
+                let len = self.cfg.scan_len.sample(rng);
+                self.op_scan(key, len)
             }
         }
     }
@@ -359,8 +553,20 @@ impl Service for LsmKv {
                     *probes -= 1;
                     return Step::MemAccess(Tier::Dram);
                 }
-                debug_assert_eq!(*kind, OpKind::Read);
+                debug_assert!(matches!(*kind, OpKind::Read | OpKind::Rmw));
                 let k = *key;
+                let rmw = *kind == OpKind::Rmw;
+                if self.tombstone_in_memtable(k) {
+                    // Memtable-resident tombstone (active or immutable
+                    // generation): the read resolves to absent right here.
+                    self.stats.absent += 1;
+                    if rmw {
+                        *op = LsmOp::WriteMem { key: k, probes: 4 };
+                    } else {
+                        *op = LsmOp::Finished;
+                    }
+                    return Step::Compute(self.cfg.t_node);
+                }
                 let block = self.block_of(k);
                 let sid = self.shard_of(block);
                 let first = self.shards[sid].buckets[self.bucket_of(block)];
@@ -368,25 +574,32 @@ impl Service for LsmKv {
                     key: k,
                     entry: first,
                     first: true,
+                    rmw,
                 };
                 Step::Compute(self.cfg.t_node)
             }
-            LsmOp::ChainWalk { key, entry, first } => {
+            LsmOp::ChainWalk {
+                key,
+                entry,
+                first,
+                rmw,
+            } => {
                 let k = *key;
+                let r = *rmw;
                 let block = self.block_of(k);
                 if *first {
                     // Reading the bucket head itself is one secondary access.
                     *first = false;
                     if *entry == NIL {
                         self.stats.misses += 1;
-                        *op = LsmOp::Fetch { key: k };
+                        *op = LsmOp::Fetch { key: k, rmw: r };
                     }
                     return Step::MemAccess(Tier::Secondary);
                 }
                 let id = *entry;
                 if id == NIL {
                     self.stats.misses += 1;
-                    *op = LsmOp::Fetch { key: k };
+                    *op = LsmOp::Fetch { key: k, rmw: r };
                     return Step::Compute(self.cfg.t_node);
                 }
                 let e = self.entries[id as usize];
@@ -401,19 +614,26 @@ impl Service for LsmKv {
                         key: k,
                         entry: id,
                         hops: 0,
+                        rmw: r,
                     };
                     return Step::MemAccess(Tier::Secondary);
                 }
                 *entry = e.hash_next;
                 if *entry == NIL {
                     self.stats.misses += 1;
-                    *op = LsmOp::Fetch { key: k };
+                    *op = LsmOp::Fetch { key: k, rmw: r };
                     return Step::Compute(self.cfg.t_node);
                 }
                 Step::MemAccess(Tier::Secondary)
             }
-            LsmOp::LruPromote { key, entry, hops } => {
+            LsmOp::LruPromote {
+                key,
+                entry,
+                hops,
+                rmw,
+            } => {
                 let k = *key;
+                let r = *rmw;
                 let block = self.block_of(k);
                 match *hops {
                     0 => {
@@ -438,18 +658,23 @@ impl Service for LsmKv {
                             lo: block * self.cfg.keys_per_block,
                             hi: (block + 1) * self.cfg.keys_per_block,
                             compute_done: false,
+                            rmw: r,
                         };
                         Step::Unlock(self.lock_of(block))
                     }
                 }
             }
-            LsmOp::Fetch { key } => {
+            LsmOp::Fetch { key, rmw } => {
                 let k = *key;
-                *op = LsmOp::Insert { key: k, hops: 0 };
+                let r = *rmw;
+                *op = LsmOp::Insert {
+                    key: k,
+                    hops: 0,
+                    rmw: r,
+                };
                 Step::Io {
                     kind: IoKind::Read,
-                    bytes: self.cfg.keys_per_block
-                        * (self.cfg.value_size.mean() as u32 + 20 + 8),
+                    bytes: self.block_bytes(),
                     // Calibrated to RocksDB's measured per-read CPU cost:
                     // block-handle resolution + file offset (pre), CRC32 of
                     // the 4 kB block, decompression stub, and block-object
@@ -458,8 +683,9 @@ impl Service for LsmKv {
                     extra_post: Dur::us(3.0),
                 }
             }
-            LsmOp::Insert { key, hops } => {
+            LsmOp::Insert { key, hops, rmw } => {
                 let k = *key;
+                let r = *rmw;
                 let block = self.block_of(k);
                 // Eviction-candidate walk (3 accesses) runs unlocked; the
                 // lock covers only the final structural mutation.
@@ -485,6 +711,7 @@ impl Service for LsmKv {
                     lo: block * self.cfg.keys_per_block,
                     hi: (block + 1) * self.cfg.keys_per_block,
                     compute_done: false,
+                    rmw: r,
                 };
                 Step::Unlock(self.lock_of(block))
             }
@@ -493,6 +720,7 @@ impl Service for LsmKv {
                 lo,
                 hi,
                 compute_done,
+                rmw,
             } => {
                 // RocksDB block layout: binary-search the restart array
                 // (blocks this small have ~2 restart points), then scan one
@@ -507,9 +735,21 @@ impl Service for LsmKv {
                     // Within one restart interval: single sequential scan
                     // access resolves the entry (length-prefixed entries in
                     // adjacent lines).
-                    debug_assert!((*lo..*hi).contains(&(*key as u32)));
-                    self.stats.verified += 1;
-                    *op = LsmOp::Finished;
+                    let k = *key;
+                    debug_assert!((*lo..*hi).contains(&(k as u32)));
+                    if self.deleted.contains(&k) {
+                        // Tombstone was flushed: the data block no longer
+                        // holds the key — the read resolves to absent.
+                        self.stats.absent += 1;
+                    } else {
+                        self.stats.verified += 1;
+                    }
+                    if *rmw {
+                        // Write half: memtable insert of the same key.
+                        *op = LsmOp::WriteMem { key: k, probes: 4 };
+                    } else {
+                        *op = LsmOp::Finished;
+                    }
                     return Step::MemAccess(Tier::Secondary);
                 }
                 let mid = (*lo + *hi) / 2;
@@ -520,19 +760,125 @@ impl Service for LsmKv {
                 }
                 Step::MemAccess(Tier::Secondary)
             }
-            LsmOp::WriteMem { probes } => {
+            LsmOp::WriteMem { key, probes } => {
                 // Memtable skiplist insert: DRAM accesses only.
                 if *probes > 0 {
                     *probes -= 1;
                     return Step::MemAccess(Tier::Dram);
                 }
-                self.memtable_fill += 1;
-                if self.memtable_fill >= self.cfg.memtable_cap {
-                    self.memtable_fill = 0;
-                    self.flush_backlog += 1;
-                }
+                let k = *key;
+                self.memtable_write(k);
                 *op = LsmOp::Finished;
                 Step::Compute(Dur::ns(150.0)) // WAL append (buffered)
+            }
+            LsmOp::DeleteMem { key, probes } => {
+                // Tombstone insert: same memtable path as a write.
+                if *probes > 0 {
+                    *probes -= 1;
+                    return Step::MemAccess(Tier::Dram);
+                }
+                let k = *key;
+                self.deleted.insert(k);
+                self.fresh_tombstones.insert(k);
+                self.memtable_fill_tick();
+                *op = LsmOp::Finished;
+                Step::Compute(Dur::ns(150.0)) // WAL tombstone append
+            }
+            LsmOp::Scan {
+                key,
+                left,
+                probes,
+                chain_left,
+                chain_init,
+                need_io,
+                insert_step,
+                in_block,
+                stride,
+            } => {
+                // Iterator seek: memtable probe first (DRAM).
+                if *probes > 0 {
+                    *probes -= 1;
+                    return Step::MemAccess(Tier::Dram);
+                }
+                if *left == 0 || *key >= self.cfg.n_items {
+                    *op = LsmOp::Finished;
+                    return Step::Compute(self.cfg.t_node);
+                }
+                let k = *key;
+                let block = self.block_of(k);
+                if *insert_step > 0 {
+                    // Post-fetch cache insert, under the shard lock exactly
+                    // like the point-read `Insert` path.
+                    match *insert_step {
+                        1 => {
+                            *insert_step = 2;
+                            return Step::Lock(self.lock_of(block));
+                        }
+                        2 => {
+                            *insert_step = 3;
+                            if self.cache_lookup(block).is_none() {
+                                self.cache_insert(block);
+                            }
+                            return Step::Compute(self.cfg.t_node * 2);
+                        }
+                        _ => {
+                            *insert_step = 0;
+                            *in_block = true;
+                            *stride = 0;
+                            return Step::Unlock(self.lock_of(block));
+                        }
+                    }
+                }
+                if !*in_block {
+                    if !*chain_init {
+                        *chain_init = true;
+                        let (hops, hit) = self.chain_probe(block);
+                        *chain_left = hops;
+                        *need_io = !hit;
+                    }
+                    if *chain_left > 0 {
+                        // Bucket-head + chain-walk accesses for this block.
+                        *chain_left -= 1;
+                        return Step::MemAccess(Tier::Secondary);
+                    }
+                    if *need_io {
+                        *need_io = false;
+                        *insert_step = 1;
+                        self.stats.misses += 1;
+                        return Step::Io {
+                            kind: IoKind::Read,
+                            bytes: self.block_bytes(),
+                            extra_pre: Dur::us(1.5),
+                            extra_post: Dur::us(3.0),
+                        };
+                    }
+                    self.stats.hits += 1;
+                    self.stats.t1_hits += 1;
+                    *in_block = true;
+                    *stride = 0;
+                    // First touch of the cached block's bytes.
+                    return Step::MemAccess(Tier::Secondary);
+                }
+                // Consume one key from the resident block; tombstoned keys
+                // are merged out (compute only).
+                if !self.deleted.contains(&k) {
+                    self.stats.scanned += 1;
+                    self.stats.verified += 1;
+                }
+                *left -= 1;
+                *key += 1;
+                *stride = stride.wrapping_add(1);
+                if *left > 0 && *key < self.cfg.n_items && self.block_of(*key) != block {
+                    *in_block = false;
+                    *chain_init = false;
+                }
+                if *stride % 4 == 0 {
+                    // Crossing into the next restart interval: one more
+                    // dependent access over the cached block bytes.
+                    Step::MemAccess(Tier::Secondary)
+                } else {
+                    Step::Compute(self.cfg.t_node)
+                }
             }
             LsmOp::BgFlush { ios_left, write } => {
                 self.stats.bg_ops += 1;
@@ -581,6 +927,14 @@ mod tests {
             buckets_per_shard: 64,
             ..Default::default()
         }
+    }
+
+    use super::super::common::drive_op;
+
+    /// Drive an op to completion; returns (mem accesses, total IOs).
+    fn drive(kv: &mut LsmKv, op: LsmOp, rng: &mut Rng) -> (u32, u32) {
+        let (mems, reads, writes) = drive_op(kv, op, rng);
+        (mems, reads + writes)
     }
 
     #[test]
@@ -703,5 +1057,125 @@ mod tests {
         assert!(m.service.stats.sets > 1000);
         assert!(m.service.stats.bg_ops > 0, "compaction never ran");
         assert!(st.io_writes > 0);
+    }
+
+    #[test]
+    fn delete_then_get_is_absent_fresh_and_flushed() {
+        let mut rng = Rng::new(6);
+        let mut kv = LsmKv::new(small_cfg(), &mut rng);
+        let key = 4242u64;
+        assert!(kv.contains_key(key));
+
+        let op = kv.op_delete(key);
+        drive(&mut kv, op, &mut rng);
+        assert!(!kv.contains_key(key));
+
+        // Memtable-resident tombstone: the read stops at the memtable
+        // (DRAM probes only, no secondary access, no IO).
+        let absent0 = kv.stats.absent;
+        let op = kv.op_get(key);
+        let (mems, ios) = drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.stats.absent, absent0 + 1);
+        assert_eq!(ios, 0, "fresh tombstone must not reach the SSD");
+        assert_eq!(mems, 3, "memtable probes only");
+
+        // Simulate rotation + flush of the tombstone's generation: the read
+        // then takes the full path and discovers absence in the data block.
+        kv.fresh_tombstones.clear();
+        kv.sealed_tombstones.clear();
+        let absent1 = kv.stats.absent;
+        let op = kv.op_get(key);
+        let (mems, _ios) = drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.stats.absent, absent1 + 1);
+        assert!(mems > 3, "flushed tombstone requires the block path");
+
+        // Re-write resurrects the key.
+        let op = kv.op_put(key);
+        drive(&mut kv, op, &mut rng);
+        assert!(kv.contains_key(key));
+        let verified0 = kv.stats.verified;
+        let op = kv.op_get(key);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.stats.verified, verified0 + 1);
+    }
+
+    #[test]
+    fn scan_skips_tombstones_and_reads_blocks() {
+        let mut rng = Rng::new(7);
+        let mut kv = LsmKv::new(small_cfg(), &mut rng);
+        for key in [100u64, 103, 110] {
+            let op = kv.op_delete(key);
+            drive(&mut kv, op, &mut rng);
+        }
+        let keys = kv.scan_keys(100, 16);
+        assert_eq!(keys.len(), 13, "3 of 16 keys tombstoned");
+        for w in keys.windows(2) {
+            assert!(w[0] < w[1], "scan keys out of order");
+        }
+        assert!(!keys.contains(&100) && !keys.contains(&103) && !keys.contains(&110));
+
+        let scanned0 = kv.stats.scanned;
+        let op = kv.op_scan(100, 16);
+        let (mems, _ios) = drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.stats.scanned, scanned0 + 13);
+        // 16 keys over blocks of 8 → at least 2 block transitions' worth of
+        // chain accesses plus per-interval touches.
+        assert!(mems >= 6, "scan must traverse the cache: {mems} accesses");
+    }
+
+    #[test]
+    fn flush_clears_only_sealed_generation_tombstones() {
+        let mut rng = Rng::new(9);
+        let mut kv = LsmKv::new(
+            LsmKvConfig {
+                memtable_cap: 2,
+                mix: OpMix::ratio(1, 1),
+                ..small_cfg()
+            },
+            &mut rng,
+        )
+        .with_background(4);
+        // Two tombstones fill the tiny memtable and rotate it (sealed).
+        let op = kv.op_delete(11);
+        drive(&mut kv, op, &mut rng);
+        let op = kv.op_delete(22);
+        drive(&mut kv, op, &mut rng);
+        assert!(kv.sealed_tombstones.contains(&11) && kv.sealed_tombstones.contains(&22));
+        // A third tombstone lands in the new active memtable.
+        let op = kv.op_delete(33);
+        drive(&mut kv, op, &mut rng);
+        assert!(kv.fresh_tombstones.contains(&33));
+        // Background flush of the sealed generation (tid 3 = bg thread).
+        let bg = kv.next_op(3, &mut rng);
+        drive(&mut kv, bg, &mut rng);
+        assert!(kv.sealed_tombstones.is_empty(), "sealed generation flushed");
+        assert!(
+            kv.fresh_tombstones.contains(&33),
+            "active-memtable tombstone must survive an older generation's flush"
+        );
+        for k in [11u64, 22, 33] {
+            assert!(!kv.contains_key(k), "key {k} must stay logically deleted");
+        }
+    }
+
+    #[test]
+    fn rmw_reads_then_writes() {
+        let mut rng = Rng::new(8);
+        let mut kv = LsmKv::new(small_cfg(), &mut rng);
+        let key = 77u64;
+        let verified0 = kv.stats.verified;
+        let fill0 = kv.memtable_fill;
+        let op = kv.op_rmw(key);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.stats.verified, verified0 + 1, "read half");
+        assert_eq!(kv.memtable_fill, fill0 + 1, "write half");
+
+        // RMW of a tombstoned key upserts it.
+        let op = kv.op_delete(key);
+        drive(&mut kv, op, &mut rng);
+        assert!(!kv.contains_key(key));
+        let op = kv.op_rmw(key);
+        drive(&mut kv, op, &mut rng);
+        assert!(kv.contains_key(key), "rmw must resurrect the key");
     }
 }

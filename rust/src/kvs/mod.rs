@@ -11,6 +11,22 @@
 //!   LRU lists on secondary memory (bucket array in DRAM), tier-2 small-object
 //!   cache on SSD.
 //!
+//! All three serve the **full operation surface** — point get/put plus
+//! `Delete`, ordered `Scan`, and `ReadModifyWrite` — as state-machine ops
+//! whose every pointer hop goes through the simulator's
+//! `MemAccess(Tier)`/`Io` steps, so the measured per-op access count M and
+//! IO count S stay physically meaningful for every operation kind:
+//!
+//! | op     | treekv                       | lsmkv                          | cachekv                   |
+//! |--------|------------------------------|--------------------------------|---------------------------|
+//! | delete | BST unlink under sprig lock  | memtable tombstone + purge     | two-tier invalidation     |
+//! | scan   | sprig in-order walk + IOs    | merged memtable+sstable iter   | unsupported (no-op)       |
+//! | rmw    | read path → write path       | read path → memtable write     | read → update-in-place    |
+//!
+//! Stores pick operations from [`crate::workload::OpWeights`] when
+//! configured (the YCSB A–F presets in [`crate::workload::ycsb`]) and fall
+//! back to the paper's two-kind read:write [`crate::workload::OpMix`].
+//!
 //! Each store holds *real* data structures: every simulated pointer
 //! dereference corresponds to an actual traversal step over actual keys, so
 //! the per-operation access count M varies operation-to-operation exactly the
@@ -23,6 +39,6 @@ pub mod lsmkv;
 pub mod treekv;
 
 pub use cachekv::{CacheKv, CacheKvConfig};
-pub use common::{fnv1a, KvStats};
+pub use common::{drive_op, fnv1a, KvStats};
 pub use lsmkv::{LsmKv, LsmKvConfig};
-pub use treekv::{TieringPolicy, TreeKv, TreeKvConfig};
+pub use treekv::{TieringPolicy, TreeKv, TreeKvConfig, SCAN_IO_BATCH};

@@ -8,13 +8,46 @@
 //! out of old blocks (Aerospike's defrag thread), which is the "background
 //! worker" slowdown the paper's write-mix experiments exhibit.
 //!
+//! The full operation surface (this repo's extension beyond the paper's
+//! GET/PUT reproduction):
+//!
+//! - **Write** upserts: a write of an absent key attaches a fresh index
+//!   entry under the sprig lock (Aerospike set semantics).
+//! - **Delete** removes the index entry (BST unlink under the sprig lock,
+//!   successor splice for two-child nodes — every hop a simulated access)
+//!   and marks the value block dead for the defragmenter.
+//! - **Scan** walks one sprig in digest order from an anchor (in-order
+//!   traversal; each visited entry is a dependent access) and reads the
+//!   values from SSD in batches of [`SCAN_IO_BATCH`] records per IO.
+//! - **ReadModifyWrite** chains the full read path (descent + value IO +
+//!   verify) into the full write path (log append IO + locked index
+//!   update) on the same digest.
+//!
 //! Keys are digests (hashes), so plain BST insertion yields expectedly
 //! balanced trees — the average descent length M ≈ 1.39·log2(items/sprigs),
 //! matching the paper's measured Aerospike M once sprig count is set.
+//!
+//! ## Concurrency model
+//!
+//! Structural mutations (upsert attach, delete unlink) run under the sprig
+//! lock, and the root is read only **after** the lock grant (a queued
+//! waiter must not descend from a pre-mutation root). Point reads and scans
+//! are deliberately lock-free, as in the seed reproduction: under a
+//! churn mix an in-flight reader can therefore observe a torn snapshot —
+//! a spurious miss when a delete restructures the subtree mid-descent, or
+//! a recycled node slot. This can never panic, corrupt, or flag a false
+//! verification failure (the value log is append-only and node slots stay
+//! index-valid); the observable effect is bounded stat skew under heavy
+//! churn. Scans additionally validate their snapshot (anchored, strictly
+//! increasing digests) so the ordered/duplicate-free result contract holds
+//! even when slots are recycled mid-scan.
 
 use super::common::{fnv1a, KvStats, NIL};
 use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
-use crate::workload::{KeyGen, OpKind, OpMix, ValueSize};
+use crate::workload::{KeyGen, OpKind, OpMix, OpWeights, ScanLen, ValueSize};
+
+/// Records fetched per scan value-read IO (Aerospike batches record reads).
+pub const SCAN_IO_BATCH: usize = 8;
 
 /// One 64-byte index entry (Aerospike's as_index).
 #[derive(Debug, Clone, Copy)]
@@ -54,7 +87,12 @@ pub struct TreeKvConfig {
     /// Index placement policy (§5.2.3 extension).
     pub tiering: TieringPolicy,
     pub key_dist: crate::workload::KeyDist,
+    /// Read:write mix (paper figures). Ignored when `ops` is set.
     pub mix: OpMix,
+    /// Full-surface operation weights (YCSB presets); `None` follows `mix`.
+    pub ops: Option<OpWeights>,
+    /// Scan length distribution for `OpKind::Scan`.
+    pub scan_len: ScanLen,
     pub value_size: ValueSize,
     /// CPU cost per index hop (comparisons, address arithmetic).
     pub t_node: Dur,
@@ -74,6 +112,8 @@ impl Default for TreeKvConfig {
             tiering: TieringPolicy::FullOffload,
             key_dist: crate::workload::KeyDist::Uniform,
             mix: OpMix::READ_ONLY,
+            ops: None,
+            scan_len: ScanLen::default(),
             value_size: ValueSize::Fixed(1536),
             t_node: Dur::ns(110.0),
             defrag: true,
@@ -88,11 +128,13 @@ pub struct TreeKv {
     keygen: KeyGen,
     roots: Vec<u32>,
     nodes: Vec<Node>,
+    /// Physical node slots released by deletes, reused by upserts.
+    free_nodes: Vec<u32>,
     /// Disk image: block → digest currently stored (verification oracle).
     disk: Vec<u64>,
     /// Log head for appending writes.
     log_head: u32,
-    /// Blocks freed by updates, pending defrag.
+    /// Blocks freed by updates/deletes, pending defrag.
     dead_blocks: u64,
     pub stats: KvStats,
     /// `tid % bg_threads_per_core == bg_tid_floor` marks a background
@@ -104,18 +146,32 @@ pub struct TreeKv {
 /// Operation state machine.
 #[derive(Debug)]
 pub enum TreeOp {
-    /// Descend toward `digest`; `node` is the next node to visit.
+    /// Descend toward `digest`; `node` is the next node to visit. `kind` is
+    /// `Read` or `Rmw` (writes/deletes use their own states).
     Descend {
         kind: OpKind,
         digest: u64,
         node: u32,
         compute_done: bool,
+        /// New-value size for the RMW write half.
         vsize: u32,
     },
     /// Read the value from SSD and verify.
-    ReadValue { digest: u64, block: u32, vsize: u32 },
+    ReadValue {
+        digest: u64,
+        block: u32,
+        vsize: u32,
+        rmw: bool,
+        new_vsize: u32,
+    },
+    Verify {
+        ok: bool,
+        rmw: bool,
+        digest: u64,
+        vsize: u32,
+    },
     /// Write path: append the new value to the log, then re-descend to
-    /// update the index entry under the sprig lock.
+    /// upsert the index entry under the sprig lock.
     WriteValue {
         digest: u64,
         vsize: u32,
@@ -123,8 +179,47 @@ pub enum TreeOp {
     UpdateIndex {
         digest: u64,
         new_block: u32,
+        vsize: u32,
         node: u32,
+        parent: u32,
+        depth: u32,
         locked: u32,
+        lock_taken: bool,
+        /// Root read after the lock grant (never before: a queued waiter
+        /// must not descend from a root captured pre-mutation).
+        entered: bool,
+        compute_done: bool,
+    },
+    /// Delete path: locked descent tracking the parent, then BST unlink.
+    DeleteDescend {
+        digest: u64,
+        node: u32,
+        parent: u32,
+        locked: u32,
+        lock_taken: bool,
+        /// See [`TreeOp::UpdateIndex::entered`].
+        entered: bool,
+        compute_done: bool,
+    },
+    /// Two-child delete: walk to the successor (min of right subtree).
+    DeleteSucc {
+        target: u32,
+        parent: u32,
+        cur: u32,
+        locked: u32,
+        compute_done: bool,
+    },
+    /// Range scan: replay the index walk (every visited node one dependent
+    /// access), then read values in batched IOs.
+    Scan {
+        /// Nodes in visit order, reversed (pop() = next to charge).
+        walk: Vec<u32>,
+        /// Result entries in digest order, reversed (pop() = next value).
+        todo: Vec<u32>,
+        /// Snapshot validation floor: only entries with digest >= this are
+        /// emitted, so concurrent delete/upsert slot reuse cannot break
+        /// the ordered/duplicate-free/anchored result contract.
+        min_next: u64,
         compute_done: bool,
     },
     Unlock {
@@ -136,7 +231,6 @@ pub enum TreeOp {
     DefragPause,
     DefragYield,
     Finished,
-    Verify { ok: bool },
 }
 
 impl TreeKv {
@@ -145,6 +239,7 @@ impl TreeKv {
         let mut kv = TreeKv {
             roots: vec![NIL; cfg.sprigs as usize],
             nodes: Vec::with_capacity(cfg.n_items as usize),
+            free_nodes: Vec::new(),
             disk: Vec::with_capacity(cfg.n_items as usize * 2),
             log_head: 0,
             dead_blocks: 0,
@@ -166,10 +261,18 @@ impl TreeKv {
         kv
     }
 
+    /// Effective operation weights: explicit `ops` or the two-kind `mix`.
+    fn weights(&self) -> OpWeights {
+        match self.cfg.ops {
+            Some(w) => w,
+            None => OpWeights::from(self.cfg.mix),
+        }
+    }
+
     /// Designate background threads: the machine's thread ids are laid out
     /// core-major; the last thread of each core becomes the defragger.
     pub fn with_background(mut self, cores: usize, threads_per_core: usize) -> TreeKv {
-        if self.cfg.defrag && self.cfg.mix.read_ratio < 1.0 {
+        if self.cfg.defrag && self.weights().has_writes() {
             self.bg_tid_floor = threads_per_core - 1; // tid % tpc == floor
             self.bg_threads_per_core = threads_per_core;
             let _ = cores;
@@ -188,45 +291,88 @@ impl TreeKv {
         (digest % self.cfg.sprigs as u64) as usize
     }
 
-    fn insert_unsimulated(&mut self, digest: u64, block: u32, vsize: u32, rng: &mut Rng) {
-        let sprig = self.sprig_of(digest);
-        let id = self.nodes.len() as u32;
-        self.nodes.push(Node {
+    #[inline]
+    fn tier_of(&self, id: u32) -> Tier {
+        if self.nodes[id as usize].in_dram {
+            Tier::Dram
+        } else {
+            Tier::Secondary
+        }
+    }
+
+    fn place_in_dram(&self, depth: u32, rng: &mut Rng) -> bool {
+        match self.cfg.tiering {
+            TieringPolicy::FullOffload => false,
+            TieringPolicy::Random { dram_frac } => rng.chance(dram_frac),
+            TieringPolicy::TopLevels { levels } => depth < levels,
+        }
+    }
+
+    /// Allocate (or reuse) a node slot and link it under `parent`.
+    fn attach_new(
+        &mut self,
+        digest: u64,
+        block: u32,
+        vsize: u32,
+        parent: u32,
+        depth: u32,
+        rng: &mut Rng,
+    ) -> u32 {
+        let in_dram = self.place_in_dram(depth, rng);
+        let node = Node {
             digest,
             left: NIL,
             right: NIL,
             block,
             vsize,
-            in_dram: false,
-        });
-        let mut cur = self.roots[sprig];
-        let mut depth = 0u32;
-        if cur == NIL {
-            self.roots[sprig] = id;
-        } else {
-            loop {
-                depth += 1;
-                let n = self.nodes[cur as usize];
-                if digest < n.digest {
-                    if n.left == NIL {
-                        self.nodes[cur as usize].left = id;
-                        break;
-                    }
-                    cur = n.left;
-                } else {
-                    if n.right == NIL {
-                        self.nodes[cur as usize].right = id;
-                        break;
-                    }
-                    cur = n.right;
-                }
-            }
-        }
-        self.nodes[id as usize].in_dram = match self.cfg.tiering {
-            TieringPolicy::FullOffload => false,
-            TieringPolicy::Random { dram_frac } => rng.chance(dram_frac),
-            TieringPolicy::TopLevels { levels } => depth < levels,
+            in_dram,
         };
+        let id = match self.free_nodes.pop() {
+            Some(id) => {
+                self.nodes[id as usize] = node;
+                id
+            }
+            None => {
+                self.nodes.push(node);
+                (self.nodes.len() - 1) as u32
+            }
+        };
+        if parent == NIL {
+            let sprig = self.sprig_of(digest);
+            self.roots[sprig] = id;
+        } else if digest < self.nodes[parent as usize].digest {
+            self.nodes[parent as usize].left = id;
+        } else {
+            self.nodes[parent as usize].right = id;
+        }
+        id
+    }
+
+    /// Point `parent`'s link to `child` at `with` (root link when parent is
+    /// NIL).
+    fn replace_child(&mut self, sprig: usize, parent: u32, child: u32, with: u32) {
+        if parent == NIL {
+            self.roots[sprig] = with;
+        } else if self.nodes[parent as usize].left == child {
+            self.nodes[parent as usize].left = with;
+        } else {
+            debug_assert_eq!(self.nodes[parent as usize].right, child);
+            self.nodes[parent as usize].right = with;
+        }
+    }
+
+    fn insert_unsimulated(&mut self, digest: u64, block: u32, vsize: u32, rng: &mut Rng) {
+        let sprig = self.sprig_of(digest);
+        let mut cur = self.roots[sprig];
+        let mut parent = NIL;
+        let mut depth = 0u32;
+        while cur != NIL {
+            depth += 1;
+            parent = cur;
+            let n = self.nodes[cur as usize];
+            cur = if digest < n.digest { n.left } else { n.right };
+        }
+        self.attach_new(digest, block, vsize, parent, depth, rng);
     }
 
     /// Fraction of index entries resident in DRAM (capacity-side ρ probe).
@@ -261,6 +407,128 @@ impl TreeKv {
     fn lock_of(&self, digest: u64) -> u32 {
         (self.sprig_of(digest) as u32) % self.cfg.n_locks
     }
+
+    /// Structural membership probe (oracle for tests; not simulated).
+    pub fn contains_key(&self, key: u64) -> bool {
+        let digest = fnv1a(key);
+        let mut cur = self.roots[self.sprig_of(digest)];
+        while cur != NIL {
+            let n = self.nodes[cur as usize];
+            if digest == n.digest {
+                return true;
+            }
+            cur = if digest < n.digest { n.left } else { n.right };
+        }
+        false
+    }
+
+    /// In-order index walk from `anchor` within one sprig. Returns
+    /// (entries in digest order capped at `len`, all visited node ids in
+    /// visit order) — the scan op replays the visit list as dependent
+    /// accesses, so the measured M reflects the real traversal.
+    fn scan_collect(&self, sprig: usize, anchor: u64, len: u32) -> (Vec<u32>, Vec<u32>) {
+        let mut stack: Vec<u32> = Vec::new();
+        let mut visit: Vec<u32> = Vec::new();
+        let mut out: Vec<u32> = Vec::new();
+        let mut cur = self.roots[sprig];
+        while cur != NIL {
+            visit.push(cur);
+            let n = &self.nodes[cur as usize];
+            if anchor <= n.digest {
+                stack.push(cur);
+                cur = n.left;
+            } else {
+                cur = n.right;
+            }
+        }
+        while let Some(id) = stack.pop() {
+            out.push(id);
+            if out.len() as u32 >= len {
+                break;
+            }
+            let mut c = self.nodes[id as usize].right;
+            while c != NIL {
+                visit.push(c);
+                stack.push(c);
+                c = self.nodes[c as usize].left;
+            }
+        }
+        (out, visit)
+    }
+
+    /// Digest-ordered scan results starting at `key`'s digest (oracle for
+    /// the ordering/duplicate property tests; not simulated).
+    pub fn scan_digests(&self, key: u64, len: u32) -> Vec<u64> {
+        let anchor = fnv1a(key);
+        let (out, _) = self.scan_collect(self.sprig_of(anchor), anchor, len.max(1));
+        out.iter().map(|&id| self.nodes[id as usize].digest).collect()
+    }
+
+    // ---- directed operation constructors (also used by next_op) ----------
+
+    pub fn op_get(&mut self, key: u64) -> TreeOp {
+        self.stats.gets += 1;
+        let digest = fnv1a(key);
+        TreeOp::Descend {
+            kind: OpKind::Read,
+            digest,
+            node: self.roots[self.sprig_of(digest)],
+            compute_done: false,
+            vsize: 0,
+        }
+    }
+
+    pub fn op_write(&mut self, key: u64, vsize: u32) -> TreeOp {
+        self.stats.sets += 1;
+        TreeOp::WriteValue {
+            digest: fnv1a(key),
+            vsize,
+        }
+    }
+
+    pub fn op_delete(&mut self, key: u64) -> TreeOp {
+        self.stats.deletes += 1;
+        let digest = fnv1a(key);
+        TreeOp::DeleteDescend {
+            digest,
+            node: NIL,
+            parent: NIL,
+            locked: self.lock_of(digest),
+            lock_taken: false,
+            entered: false,
+            compute_done: false,
+        }
+    }
+
+    pub fn op_rmw(&mut self, key: u64, vsize: u32) -> TreeOp {
+        self.stats.rmws += 1;
+        let digest = fnv1a(key);
+        TreeOp::Descend {
+            kind: OpKind::Rmw,
+            digest,
+            node: self.roots[self.sprig_of(digest)],
+            compute_done: false,
+            vsize,
+        }
+    }
+
+    pub fn op_scan(&mut self, key: u64, len: u32) -> TreeOp {
+        self.stats.scans += 1;
+        let anchor = fnv1a(key);
+        let sprig = self.sprig_of(anchor);
+        let (mut order, mut visit) = self.scan_collect(sprig, anchor, len.max(1));
+        if order.is_empty() {
+            self.stats.absent += 1;
+        }
+        order.reverse();
+        visit.reverse();
+        TreeOp::Scan {
+            walk: visit,
+            todo: order,
+            min_next: anchor,
+            compute_done: false,
+        }
+    }
 }
 
 // Extra field defined outside the struct literal flow above.
@@ -282,23 +550,16 @@ impl Service for TreeKv {
             return TreeOp::DefragPause;
         }
         let key = self.keygen.sample(rng);
-        let digest = fnv1a(key);
-        let kind = self.mix_sample(rng);
+        let kind = self.weights().sample(rng);
         let vsize = self.cfg.value_size.sample(rng);
         match kind {
-            OpKind::Read => {
-                self.stats.gets += 1;
-                TreeOp::Descend {
-                    kind,
-                    digest,
-                    node: self.roots[self.sprig_of(digest)],
-                    compute_done: false,
-                    vsize,
-                }
-            }
-            OpKind::Write => {
-                self.stats.sets += 1;
-                TreeOp::WriteValue { digest, vsize }
+            OpKind::Read => self.op_get(key),
+            OpKind::Write => self.op_write(key, vsize),
+            OpKind::Delete => self.op_delete(key),
+            OpKind::Rmw => self.op_rmw(key, vsize),
+            OpKind::Scan => {
+                let len = self.cfg.scan_len.sample(rng);
+                self.op_scan(key, len)
             }
         }
     }
@@ -313,8 +574,18 @@ impl Service for TreeKv {
                 vsize,
             } => {
                 if *node == NIL {
-                    // Not found (cannot happen for in-population keys).
+                    // Not found (deleted or never written).
                     self.stats.misses += 1;
+                    self.stats.absent += 1;
+                    if *kind == OpKind::Rmw {
+                        // Read-miss RMW still writes (upsert).
+                        let (d, vs) = (*digest, *vsize);
+                        *op = TreeOp::WriteValue {
+                            digest: d,
+                            vsize: vs,
+                        };
+                        return Step::Compute(self.cfg.t_node);
+                    }
                     *op = TreeOp::Finished;
                     return Step::Done;
                 }
@@ -331,20 +602,14 @@ impl Service for TreeKv {
                 });
                 if *digest == n.digest {
                     self.stats.hits += 1;
-                    match kind {
-                        OpKind::Read => {
-                            *op = TreeOp::ReadValue {
-                                digest: *digest,
-                                block: n.block,
-                                vsize: n.vsize,
-                            };
-                        }
-                        OpKind::Write => {
-                            // (unused path: writes go through WriteValue)
-                            let _ = vsize;
-                            *op = TreeOp::Finished;
-                        }
-                    }
+                    let rmw = *kind == OpKind::Rmw;
+                    *op = TreeOp::ReadValue {
+                        digest: *digest,
+                        block: n.block,
+                        vsize: n.vsize,
+                        rmw,
+                        new_vsize: *vsize,
+                    };
                 } else {
                     *node = if *digest < n.digest { n.left } else { n.right };
                 }
@@ -354,10 +619,17 @@ impl Service for TreeKv {
                 digest,
                 block,
                 vsize,
+                rmw,
+                new_vsize,
             } => {
                 let ok = self.disk[*block as usize] == *digest;
                 let bytes = *vsize;
-                *op = TreeOp::Verify { ok };
+                *op = TreeOp::Verify {
+                    ok,
+                    rmw: *rmw,
+                    digest: *digest,
+                    vsize: *new_vsize,
+                };
                 Step::Io {
                     kind: IoKind::Read,
                     bytes,
@@ -369,11 +641,25 @@ impl Service for TreeKv {
                     extra_post: Dur::us(2.3),
                 }
             }
-            TreeOp::Verify { ok } => {
+            TreeOp::Verify {
+                ok,
+                rmw,
+                digest,
+                vsize,
+            } => {
                 if *ok {
                     self.stats.verified += 1;
                 } else {
                     self.stats.corruptions += 1;
+                }
+                if *rmw {
+                    // Modify step between the read and write halves.
+                    let (d, vs) = (*digest, *vsize);
+                    *op = TreeOp::WriteValue {
+                        digest: d,
+                        vsize: vs,
+                    };
+                    return Step::Compute(self.cfg.t_node);
                 }
                 *op = TreeOp::Finished;
                 Step::Done
@@ -382,12 +668,17 @@ impl Service for TreeKv {
                 // Log-structured append: write the value to the SSD first...
                 let new_block = self.append_to_log(*digest);
                 let d = *digest;
-                let bytes = *vsize;
+                let bytes = (*vsize).max(64);
                 *op = TreeOp::UpdateIndex {
                     digest: d,
                     new_block,
-                    node: NIL, // filled after lock
+                    vsize: *vsize,
+                    node: NIL,
+                    parent: NIL,
+                    depth: 0,
                     locked: self.lock_of(d),
+                    lock_taken: false,
+                    entered: false,
                     compute_done: false,
                 };
                 Step::Io {
@@ -400,14 +691,39 @@ impl Service for TreeKv {
             TreeOp::UpdateIndex {
                 digest,
                 new_block,
+                vsize,
                 node,
+                parent,
+                depth,
                 locked,
+                lock_taken,
+                entered,
                 compute_done,
             } => {
-                if *node == NIL {
-                    // First visit after the IO: take the sprig lock, start at root.
-                    *node = self.roots[self.sprig_of(*digest)];
+                if !*lock_taken {
+                    // First visit after the IO: take the sprig lock.
+                    *lock_taken = true;
                     return Step::Lock(*locked);
+                }
+                if !*entered {
+                    // Lock granted: only now read the root — a contended
+                    // waiter resumes here after the holder's mutations, so a
+                    // root captured before Lock could be stale or freed.
+                    *entered = true;
+                    *node = self.roots[self.sprig_of(*digest)];
+                    *parent = NIL;
+                    *depth = 0;
+                }
+                if *node == NIL {
+                    // Upsert: attach a fresh entry under the tracked parent
+                    // (write of the new 64-byte entry is one access at its
+                    // placement tier).
+                    let (d, nb, vs, par, dep, lock) =
+                        (*digest, *new_block, *vsize, *parent, *depth, *locked);
+                    let id = self.attach_new(d, nb, vs, par, dep, rng);
+                    let tier = self.tier_of(id);
+                    *op = TreeOp::Unlock { lock };
+                    return Step::MemAccess(tier);
                 }
                 if !*compute_done {
                     *compute_done = true;
@@ -419,10 +735,13 @@ impl Service for TreeKv {
                 if *digest == n.digest {
                     // Update in place; the old block becomes garbage.
                     self.nodes[idx].block = *new_block;
+                    self.nodes[idx].vsize = *vsize;
                     self.dead_blocks += 1;
                     let lock = *locked;
                     *op = TreeOp::Unlock { lock };
                 } else {
+                    *parent = *node;
+                    *depth += 1;
                     *node = if *digest < n.digest { n.left } else { n.right };
                 }
                 Step::MemAccess(if n.in_dram {
@@ -430,6 +749,178 @@ impl Service for TreeKv {
                 } else {
                     Tier::Secondary
                 })
+            }
+            TreeOp::DeleteDescend {
+                digest,
+                node,
+                parent,
+                locked,
+                lock_taken,
+                entered,
+                compute_done,
+            } => {
+                if !*lock_taken {
+                    *lock_taken = true;
+                    return Step::Lock(*locked);
+                }
+                if !*entered {
+                    // Root read deferred to after the lock grant (see
+                    // UpdateIndex).
+                    *entered = true;
+                    *node = self.roots[self.sprig_of(*digest)];
+                    *parent = NIL;
+                }
+                if *node == NIL {
+                    // Key absent (already deleted / never written).
+                    self.stats.absent += 1;
+                    let lock = *locked;
+                    *op = TreeOp::Unlock { lock };
+                    return Step::Compute(self.cfg.t_node);
+                }
+                if !*compute_done {
+                    *compute_done = true;
+                    return Step::Compute(self.cfg.t_node);
+                }
+                *compute_done = false;
+                let idx = *node as usize;
+                let n = self.nodes[idx];
+                let step = Step::MemAccess(if n.in_dram {
+                    Tier::Dram
+                } else {
+                    Tier::Secondary
+                });
+                if *digest == n.digest {
+                    if n.left != NIL && n.right != NIL {
+                        // Two children: splice in the successor.
+                        let (t, lock) = (*node, *locked);
+                        *op = TreeOp::DeleteSucc {
+                            target: t,
+                            parent: t,
+                            cur: n.right,
+                            locked: lock,
+                            compute_done: false,
+                        };
+                    } else {
+                        // Leaf / one child: unlink directly.
+                        let (nd, par, lock) = (*node, *parent, *locked);
+                        let child = if n.left != NIL { n.left } else { n.right };
+                        let sprig = self.sprig_of(*digest);
+                        self.replace_child(sprig, par, nd, child);
+                        self.free_nodes.push(nd);
+                        self.dead_blocks += 1;
+                        *op = TreeOp::Unlock { lock };
+                    }
+                } else {
+                    *parent = *node;
+                    *node = if *digest < n.digest { n.left } else { n.right };
+                }
+                step
+            }
+            TreeOp::DeleteSucc {
+                target,
+                parent,
+                cur,
+                locked,
+                compute_done,
+            } => {
+                if !*compute_done {
+                    *compute_done = true;
+                    return Step::Compute(self.cfg.t_node);
+                }
+                *compute_done = false;
+                let n = self.nodes[*cur as usize];
+                let step = Step::MemAccess(if n.in_dram {
+                    Tier::Dram
+                } else {
+                    Tier::Secondary
+                });
+                if n.left != NIL {
+                    *parent = *cur;
+                    *cur = n.left;
+                } else {
+                    // `cur` is the successor: splice it out, move its payload
+                    // into the target slot (the target's old value block
+                    // becomes garbage).
+                    let (t, p, c, lock) = (*target, *parent, *cur, *locked);
+                    let succ = self.nodes[c as usize];
+                    if p == t {
+                        self.nodes[t as usize].right = succ.right;
+                    } else {
+                        self.nodes[p as usize].left = succ.right;
+                    }
+                    let tn = &mut self.nodes[t as usize];
+                    tn.digest = succ.digest;
+                    tn.block = succ.block;
+                    tn.vsize = succ.vsize;
+                    self.free_nodes.push(c);
+                    self.dead_blocks += 1;
+                    *op = TreeOp::Unlock { lock };
+                }
+                step
+            }
+            TreeOp::Scan {
+                walk,
+                todo,
+                min_next,
+                compute_done,
+            } => {
+                if let Some(&id) = walk.last() {
+                    // Replay the index traversal: one dependent access per
+                    // visited node (paired with per-hop compute, like
+                    // Descend).
+                    if !*compute_done {
+                        *compute_done = true;
+                        return Step::Compute(self.cfg.t_node);
+                    }
+                    *compute_done = false;
+                    walk.pop();
+                    return Step::MemAccess(self.tier_of(id));
+                }
+                if todo.is_empty() {
+                    *op = TreeOp::Finished;
+                    return Step::Compute(self.cfg.t_node);
+                }
+                // Batched value reads: up to SCAN_IO_BATCH records per IO.
+                let mut bytes = 0u32;
+                let mut fetched = 0usize;
+                while fetched < SCAN_IO_BATCH {
+                    match todo.pop() {
+                        Some(id) => {
+                            let n = self.nodes[id as usize];
+                            // Snapshot validation: a concurrent delete may
+                            // have freed this slot and an upsert reused it
+                            // for a different digest. Emit only entries that
+                            // keep the result anchored and strictly
+                            // increasing (ordered ⇒ duplicate-free); stale
+                            // slots are dropped from the snapshot.
+                            if n.digest < *min_next {
+                                continue;
+                            }
+                            *min_next = n.digest.saturating_add(1);
+                            bytes += n.vsize.max(64);
+                            if self.disk[n.block as usize] == n.digest {
+                                self.stats.verified += 1;
+                            } else {
+                                self.stats.corruptions += 1;
+                            }
+                            self.stats.scanned += 1;
+                            fetched += 1;
+                        }
+                        None => break,
+                    }
+                }
+                if fetched == 0 {
+                    // Every snapshot entry went stale under churn: nothing
+                    // to read.
+                    *op = TreeOp::Finished;
+                    return Step::Compute(self.cfg.t_node);
+                }
+                Step::Io {
+                    kind: IoKind::Read,
+                    bytes,
+                    extra_pre: Dur::us(1.0),  // batch assembly
+                    extra_post: Dur::us(1.5), // record unpack + copy-out
+                }
             }
             TreeOp::Unlock { lock } => {
                 let l = *lock;
@@ -475,12 +966,6 @@ impl Service for TreeKv {
     }
 }
 
-impl TreeKv {
-    fn mix_sample(&self, rng: &mut Rng) -> OpKind {
-        self.cfg.mix.sample(rng)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -495,25 +980,19 @@ mod tests {
         }
     }
 
+    use super::super::common::drive_op;
+
+    fn drive(kv: &mut TreeKv, op: TreeOp, rng: &mut Rng) {
+        let _ = drive_op(kv, op, rng);
+    }
+
     #[test]
     fn population_is_complete_and_searchable() {
         let mut rng = Rng::new(1);
         let kv = TreeKv::new(small_cfg(), &mut rng);
         assert_eq!(kv.nodes.len(), 20_000);
-        // Every key must be findable by plain descent.
         for key in (0..20_000u64).step_by(97) {
-            let digest = fnv1a(key);
-            let mut cur = kv.roots[kv.sprig_of(digest)];
-            let mut found = false;
-            while cur != NIL {
-                let n = kv.nodes[cur as usize];
-                if n.digest == digest {
-                    found = true;
-                    break;
-                }
-                cur = if digest < n.digest { n.left } else { n.right };
-            }
-            assert!(found, "key {key} missing");
+            assert!(kv.contains_key(key), "key {key} missing");
         }
     }
 
@@ -571,6 +1050,111 @@ mod tests {
         assert!(st.io_writes > 500, "writes={}", st.io_writes);
         assert!(m.service.stats.bg_ops > 0, "defrag never ran");
         assert_eq!(m.service.stats.corruptions, 0);
+    }
+
+    #[test]
+    fn delete_then_get_is_absent_and_write_reinserts() {
+        let mut rng = Rng::new(8);
+        let mut kv = TreeKv::new(small_cfg(), &mut rng);
+        let key = 1234u64;
+        assert!(kv.contains_key(key));
+
+        let op = kv.op_delete(key);
+        drive(&mut kv, op, &mut rng);
+        assert!(!kv.contains_key(key), "delete must remove the index entry");
+
+        let misses_before = kv.stats.misses;
+        let op = kv.op_get(key);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.stats.misses, misses_before + 1, "get after delete");
+
+        // Upsert brings it back, fully readable.
+        let op = kv.op_write(key, 500);
+        drive(&mut kv, op, &mut rng);
+        assert!(kv.contains_key(key), "write after delete must reinsert");
+        let verified_before = kv.stats.verified;
+        let op = kv.op_get(key);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.stats.verified, verified_before + 1);
+        assert_eq!(kv.stats.corruptions, 0);
+    }
+
+    #[test]
+    fn delete_two_child_nodes_keeps_tree_searchable() {
+        let mut rng = Rng::new(9);
+        let mut kv = TreeKv::new(small_cfg(), &mut rng);
+        // Delete a swath of keys (some will be two-child interior nodes),
+        // then verify every remaining key is still findable.
+        for key in (0..2000u64).step_by(3) {
+            let op = kv.op_delete(key);
+            drive(&mut kv, op, &mut rng);
+            assert!(!kv.contains_key(key));
+        }
+        for key in 0..2000u64 {
+            let expect = key % 3 != 0;
+            assert_eq!(kv.contains_key(key), expect, "key {key}");
+        }
+        // Deleted slots are recycled by upserts.
+        assert!(!kv.free_nodes.is_empty());
+        let free_before = kv.free_nodes.len();
+        let op = kv.op_write(0, 100);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.free_nodes.len(), free_before - 1);
+    }
+
+    #[test]
+    fn scan_returns_ordered_unique_digests() {
+        let mut rng = Rng::new(10);
+        let kv = TreeKv::new(small_cfg(), &mut rng);
+        for key in [0u64, 17, 4242, 19_999] {
+            let ds = kv.scan_digests(key, 50);
+            assert!(!ds.is_empty(), "scan from {key} found nothing");
+            let anchor = fnv1a(key);
+            for w in ds.windows(2) {
+                assert!(w[0] < w[1], "scan out of order: {} >= {}", w[0], w[1]);
+            }
+            assert!(ds[0] >= anchor, "scan started before the anchor");
+        }
+    }
+
+    #[test]
+    fn scan_op_issues_accesses_and_batched_ios() {
+        let mut rng = Rng::new(11);
+        let mut kv = TreeKv::new(small_cfg(), &mut rng);
+        let op = kv.op_scan(77, 20);
+        let (mems, ios, _) = drive_op(&mut kv, op, &mut rng);
+        let scanned = kv.stats.scanned;
+        assert!(scanned > 0, "scan returned nothing");
+        assert!(
+            mems as u64 >= scanned,
+            "every scanned entry is at least one access: {mems} < {scanned}"
+        );
+        // Batched: ceil(scanned / SCAN_IO_BATCH) IOs.
+        let b = SCAN_IO_BATCH as u64;
+        assert!(ios >= 1, "no value IOs");
+        assert!(
+            (ios as u64 - 1) * b < scanned && scanned <= ios as u64 * b,
+            "ios={ios} scanned={scanned}"
+        );
+    }
+
+    #[test]
+    fn rmw_reads_then_writes_same_key() {
+        let mut rng = Rng::new(12);
+        let mut kv = TreeKv::new(small_cfg(), &mut rng);
+        let key = 555u64;
+        let verified_before = kv.stats.verified;
+        let sets_dead_before = kv.dead_blocks;
+        let op = kv.op_rmw(key, 800);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.stats.verified, verified_before + 1, "read half verified");
+        assert_eq!(kv.dead_blocks, sets_dead_before + 1, "write half landed");
+        // Read-your-write: the value block now holds the new digest mapping.
+        let verified2 = kv.stats.verified;
+        let op = kv.op_get(key);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.stats.verified, verified2 + 1);
+        assert_eq!(kv.stats.corruptions, 0);
     }
 
     #[test]

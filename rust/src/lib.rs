@@ -15,11 +15,18 @@
 //!   them in batch from Rust. Python never runs at experiment time.
 //! - [`microbench`] — the paper's §4.1 microbenchmark (pointer chasing + IO).
 //! - [`kvs`] — three SSD-based KV store designs mirroring the paper's
-//!   modified Aerospike / RocksDB / CacheLib, built on the simulator.
+//!   modified Aerospike / RocksDB / CacheLib, built on the simulator. All
+//!   three serve the **full operation surface**: point get/put plus
+//!   `Delete` (BST unlink / LSM tombstone / cache invalidation), ordered
+//!   `Scan` (sprig walk / merged iterator; documented no-op on the cache),
+//!   and `ReadModifyWrite` — every traversal hop a simulated
+//!   `MemAccess`/`Io` step.
 //! - [`workload`] — key/value/operation generators (uniform, Zipf, Gaussian,
-//!   hotset; read:write mixes).
+//!   hotset; read:write mixes; full-surface [`workload::OpWeights`]) and the
+//!   six standard YCSB core-workload presets A–F ([`workload::ycsb`]).
 //! - [`coordinator`] — the experiment registry and sweep runner that
-//!   regenerates every figure and table in the paper's evaluation.
+//!   regenerates every figure and table in the paper's evaluation, plus the
+//!   `ycsb` sweep (L_mem × workload A–F × store).
 
 pub mod coordinator;
 pub mod kvs;

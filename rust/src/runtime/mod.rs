@@ -1,12 +1,14 @@
-//! PJRT runtime: load the AOT-compiled JAX+Pallas model artifacts
+//! Model-artifact runtime: load the AOT-compiled JAX+Pallas model artifacts
 //! (`artifacts/*.hlo.txt`) and evaluate them in batch from Rust.
 //!
-//! Python runs only at `make artifacts` time; this module is the whole
-//! request-path story: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
-//! → `client.compile` → `execute`. HLO *text* is the interchange format (the
-//! image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos; the text
-//! parser reassigns ids).
+//! Python runs only at `make artifacts` time. In the full deployment the
+//! artifacts execute through PJRT (`PjRtClient::cpu()` → HLO text →
+//! `compile` → `execute`); the offline build image has no XLA bindings, so
+//! [`evaluator::ModelEvaluator`] validates the artifacts and evaluates the
+//! identical equations through the native mirror in [`crate::model`]. The
+//! artifact directory defaults to `artifacts/` and can be overridden with
+//! the `CXLKVS_ARTIFACTS` environment variable.
 
 pub mod evaluator;
 
-pub use evaluator::{BaseIn, BaseOut, ExtIn, ExtOut, ModelEvaluator};
+pub use evaluator::{BaseIn, BaseOut, ExtIn, ExtOut, ModelEvaluator, RuntimeError};

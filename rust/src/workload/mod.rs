@@ -1,8 +1,11 @@
-//! Workload generation: key distributions, operation mixes, and value sizes
-//! (the paper's Table 5 settings).
+//! Workload generation: key distributions, operation mixes/weights, scan
+//! lengths, and value sizes (the paper's Table 5 settings plus the YCSB
+//! core-workload presets A–F).
 
 pub mod keygen;
 pub mod opgen;
+pub mod ycsb;
 
 pub use keygen::{KeyDist, KeyGen};
-pub use opgen::{OpKind, OpMix, ValueSize};
+pub use opgen::{OpKind, OpMix, OpWeights, ScanLen, ValueSize};
+pub use ycsb::{churn_weights, YcsbWorkload};

@@ -1,14 +1,28 @@
-//! Operation mixes and value sizes (Table 5 rows "Read:write", "Value size").
+//! Operation mixes, scan lengths, and value sizes (Table 5 rows
+//! "Read:write", "Value size", plus the YCSB-style full operation surface).
 
 use crate::sim::Rng;
 
+/// One KV operation kind. The seed reproduction served only point
+/// reads/writes; the full surface adds deletes, ordered range scans, and
+/// read-modify-writes (YCSB's operation vocabulary).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OpKind {
     Read,
+    /// Blind write / update (YCSB "update"; also covers insert-of-absent).
     Write,
+    /// Remove the key (tombstone in LSM designs, index-entry removal in
+    /// tree designs, invalidation in caches).
+    Delete,
+    /// Ordered range scan of `scan_len` entries from a start key.
+    Scan,
+    /// Read-modify-write: a full read path followed by a full write path on
+    /// the same key (YCSB workload F).
+    Rmw,
 }
 
-/// A read:write mix (paper notation "1:0", "2:1", "1:1").
+/// A read:write mix (paper notation "1:0", "2:1", "1:1"). Retained for the
+/// paper-figure experiments; the full-surface workloads use [`OpWeights`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OpMix {
     pub read_ratio: f64,
@@ -34,10 +48,142 @@ impl OpMix {
     }
 }
 
-/// Value-size distributions (fixed or uniform range, as in Table 5).
+/// Weights over the full operation surface. Weights need not sum to 1; they
+/// are normalized at sampling time. `OpWeights::from(mix)` reproduces the
+/// two-kind behaviour of [`OpMix`] exactly, so stores can honor either.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpWeights {
+    pub read: f64,
+    pub update: f64,
+    pub delete: f64,
+    pub scan: f64,
+    pub rmw: f64,
+}
+
+impl OpWeights {
+    pub const READ_ONLY: OpWeights = OpWeights {
+        read: 1.0,
+        update: 0.0,
+        delete: 0.0,
+        scan: 0.0,
+        rmw: 0.0,
+    };
+
+    pub fn new(read: f64, update: f64, delete: f64, scan: f64, rmw: f64) -> OpWeights {
+        let w = OpWeights {
+            read,
+            update,
+            delete,
+            scan,
+            rmw,
+        };
+        assert!(
+            read >= 0.0 && update >= 0.0 && delete >= 0.0 && scan >= 0.0 && rmw >= 0.0,
+            "op weights must be non-negative"
+        );
+        assert!(w.total() > 0.0, "op weights must have positive mass");
+        w
+    }
+
+    #[inline]
+    fn total(&self) -> f64 {
+        self.read + self.update + self.delete + self.scan + self.rmw
+    }
+
+    /// True when any mutating kind has mass (drives background workers:
+    /// defrag in treekv, flush/compaction in lsmkv).
+    #[inline]
+    pub fn has_writes(&self) -> bool {
+        self.update + self.delete + self.rmw > 0.0
+    }
+
+    /// Fraction of an operation kind after normalization.
+    pub fn fraction(&self, kind: OpKind) -> f64 {
+        let w = match kind {
+            OpKind::Read => self.read,
+            OpKind::Write => self.update,
+            OpKind::Delete => self.delete,
+            OpKind::Scan => self.scan,
+            OpKind::Rmw => self.rmw,
+        };
+        w / self.total()
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> OpKind {
+        let x = rng.f64() * self.total();
+        let mut acc = self.read;
+        if x < acc {
+            return OpKind::Read;
+        }
+        acc += self.update;
+        if x < acc {
+            return OpKind::Write;
+        }
+        acc += self.delete;
+        if x < acc {
+            return OpKind::Delete;
+        }
+        acc += self.scan;
+        if x < acc {
+            return OpKind::Scan;
+        }
+        OpKind::Rmw
+    }
+}
+
+impl From<OpMix> for OpWeights {
+    fn from(mix: OpMix) -> OpWeights {
+        OpWeights {
+            read: mix.read_ratio,
+            update: 1.0 - mix.read_ratio,
+            delete: 0.0,
+            scan: 0.0,
+            rmw: 0.0,
+        }
+    }
+}
+
+/// Scan-length distributions (YCSB E draws uniform lengths).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScanLen {
+    Fixed(u32),
+    /// Uniform over the **inclusive** range `[lo, hi]`.
+    Uniform(u32, u32),
+}
+
+impl ScanLen {
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        match *self {
+            ScanLen::Fixed(n) => n.max(1),
+            ScanLen::Uniform(lo, hi) => rng.range(lo.max(1) as u64, hi.max(1) as u64) as u32,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match *self {
+            ScanLen::Fixed(n) => n.max(1) as f64,
+            ScanLen::Uniform(lo, hi) => (lo.max(1) + hi.max(1)) as f64 / 2.0,
+        }
+    }
+}
+
+impl Default for ScanLen {
+    fn default() -> ScanLen {
+        // YCSB E uses uniform 1..100; scaled down to keep simulated scans
+        // from dwarfing the measurement window at our item counts.
+        ScanLen::Uniform(1, 24)
+    }
+}
+
+/// Value-size distributions, as in Table 5: fixed, or uniform over the
+/// **inclusive** range `[lo, hi]` — `sample` draws via `Rng::range(lo, hi)`,
+/// which includes both endpoints, and `mean` is `(lo + hi) / 2` accordingly.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ValueSize {
     Fixed(u32),
+    /// Uniform over `lo..=hi` (both endpoints attainable).
     Range(u32, u32),
 }
 
@@ -82,6 +228,54 @@ mod tests {
     }
 
     #[test]
+    fn weights_sampling_matches_fractions() {
+        let w = OpWeights::new(0.5, 0.2, 0.1, 0.1, 0.1);
+        let mut rng = Rng::new(2);
+        let n = 200_000;
+        let mut counts = [0u64; 5];
+        for _ in 0..n {
+            let i = match w.sample(&mut rng) {
+                OpKind::Read => 0,
+                OpKind::Write => 1,
+                OpKind::Delete => 2,
+                OpKind::Scan => 3,
+                OpKind::Rmw => 4,
+            };
+            counts[i] += 1;
+        }
+        let fr = |i: usize| counts[i] as f64 / n as f64;
+        assert!((fr(0) - 0.5).abs() < 0.01, "read {}", fr(0));
+        assert!((fr(1) - 0.2).abs() < 0.01, "update {}", fr(1));
+        assert!((fr(2) - 0.1).abs() < 0.01, "delete {}", fr(2));
+        assert!((fr(3) - 0.1).abs() < 0.01, "scan {}", fr(3));
+        assert!((fr(4) - 0.1).abs() < 0.01, "rmw {}", fr(4));
+    }
+
+    #[test]
+    fn weights_from_mix_round_trip() {
+        let w = OpWeights::from(OpMix::ratio(2, 1));
+        assert!((w.fraction(OpKind::Read) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((w.fraction(OpKind::Write) - 1.0 / 3.0).abs() < 1e-12);
+        assert!(!OpWeights::READ_ONLY.has_writes());
+        assert!(w.has_writes());
+    }
+
+    #[test]
+    fn scan_len_bounds_inclusive() {
+        let s = ScanLen::Uniform(2, 5);
+        let mut rng = Rng::new(3);
+        let mut seen = [false; 6];
+        for _ in 0..2000 {
+            let v = s.sample(&mut rng);
+            assert!((2..=5).contains(&v));
+            seen[v as usize] = true;
+        }
+        assert!(seen[2] && seen[5], "inclusive endpoints must be attainable");
+        assert!((s.mean() - 3.5).abs() < 1e-12);
+        assert_eq!(ScanLen::Fixed(0).sample(&mut rng), 1, "scan length >= 1");
+    }
+
+    #[test]
     fn value_sizes_in_range() {
         let vs = ValueSize::Range(200, 300);
         let mut rng = Rng::new(2);
@@ -91,5 +285,21 @@ mod tests {
         }
         assert!((vs.mean() - 250.0).abs() < 1e-12);
         assert_eq!(ValueSize::Fixed(1536).sample(&mut rng), 1536);
+    }
+
+    #[test]
+    fn value_size_range_is_inclusive_of_both_endpoints() {
+        // Pins the off-by-one contract: `Range(lo, hi)` samples `lo..=hi`
+        // via `Rng::range`, so both boundary values must actually occur.
+        let vs = ValueSize::Range(10, 12);
+        let mut rng = Rng::new(9);
+        let mut seen = [false; 13];
+        for _ in 0..5000 {
+            seen[vs.sample(&mut rng) as usize] = true;
+        }
+        assert!(seen[10], "lower bound never sampled");
+        assert!(seen[11], "midpoint never sampled");
+        assert!(seen[12], "upper bound never sampled (range must be inclusive)");
+        assert!(!seen[9] && !seen[0]);
     }
 }

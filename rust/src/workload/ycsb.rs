@@ -1,0 +1,176 @@
+//! YCSB-style workload presets (the six standard core workloads A–F),
+//! composed from the existing key-distribution and the full-surface
+//! operation weights.
+//!
+//! | preset | mix                     | key distribution        |
+//! |--------|-------------------------|-------------------------|
+//! | A      | 50% read / 50% update   | Zipf 0.99, scrambled    |
+//! | B      | 95% read / 5% update    | Zipf 0.99, scrambled    |
+//! | C      | 100% read               | Zipf 0.99, scrambled    |
+//! | D      | 95% read / 5% update    | Zipf 0.99, rank-ordered |
+//! | E      | 95% scan / 5% update    | Zipf 0.99, scrambled    |
+//! | F      | 50% read / 50% RMW      | Zipf 0.99, scrambled    |
+//!
+//! Approximations versus stock YCSB, documented here once:
+//!
+//! - The simulated stores run over a fixed pre-populated keyspace, so
+//!   YCSB's "insert" (D and E's 5%) maps to an upsert ([`OpKind::Write`] of
+//!   a possibly-absent key) — the write paths of all three stores handle
+//!   insert-of-absent.
+//! - D's "latest" distribution (reads skewed toward recent inserts) is
+//!   approximated by an **unscrambled** Zipfian: rank order stands in for
+//!   recency order, giving the same popularity profile over a stable head.
+//! - E's scan lengths are uniform on [1, 24] (stock YCSB uses [1, 100]);
+//!   scaled with the item counts so a single scan cannot dominate a
+//!   measurement window. Override via the store configs' `scan_len`.
+//!
+//! Deletes are not part of the six standard mixes; [`churn_weights`]
+//! provides a delete-heavy CRUD mix used by the property suite and
+//! available to custom sweeps.
+
+use super::keygen::KeyDist;
+use super::opgen::{OpWeights, ScanLen};
+
+/// One of the six standard YCSB core workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum YcsbWorkload {
+    A,
+    B,
+    C,
+    D,
+    E,
+    F,
+}
+
+impl YcsbWorkload {
+    pub const ALL: [YcsbWorkload; 6] = [
+        YcsbWorkload::A,
+        YcsbWorkload::B,
+        YcsbWorkload::C,
+        YcsbWorkload::D,
+        YcsbWorkload::E,
+        YcsbWorkload::F,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            YcsbWorkload::A => "A(50r/50u)",
+            YcsbWorkload::B => "B(95r/5u)",
+            YcsbWorkload::C => "C(read-only)",
+            YcsbWorkload::D => "D(latest-read)",
+            YcsbWorkload::E => "E(scan-heavy)",
+            YcsbWorkload::F => "F(rmw)",
+        }
+    }
+
+    /// Short tag for CSV/report keys.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            YcsbWorkload::A => "A",
+            YcsbWorkload::B => "B",
+            YcsbWorkload::C => "C",
+            YcsbWorkload::D => "D",
+            YcsbWorkload::E => "E",
+            YcsbWorkload::F => "F",
+        }
+    }
+
+    /// The preset operation weights.
+    pub fn weights(&self) -> OpWeights {
+        match self {
+            YcsbWorkload::A => OpWeights::new(0.5, 0.5, 0.0, 0.0, 0.0),
+            YcsbWorkload::B => OpWeights::new(0.95, 0.05, 0.0, 0.0, 0.0),
+            YcsbWorkload::C => OpWeights::READ_ONLY,
+            YcsbWorkload::D => OpWeights::new(0.95, 0.05, 0.0, 0.0, 0.0),
+            YcsbWorkload::E => OpWeights::new(0.0, 0.05, 0.0, 0.95, 0.0),
+            YcsbWorkload::F => OpWeights::new(0.5, 0.0, 0.0, 0.0, 0.5),
+        }
+    }
+
+    /// The preset key distribution (see the module docs for the D
+    /// approximation).
+    pub fn key_dist(&self) -> KeyDist {
+        match self {
+            YcsbWorkload::D => KeyDist::Zipf {
+                s: 0.99,
+                scrambled: false,
+            },
+            _ => KeyDist::Zipf {
+                s: 0.99,
+                scrambled: true,
+            },
+        }
+    }
+
+    /// The preset scan-length distribution (only E draws scans).
+    pub fn scan_len(&self) -> ScanLen {
+        ScanLen::default()
+    }
+}
+
+/// A delete-heavy CRUD mix (not a standard YCSB core workload): exercises
+/// the tombstone/invalidation paths under churn.
+pub fn churn_weights() -> OpWeights {
+    OpWeights::new(0.40, 0.25, 0.25, 0.05, 0.05)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+    use crate::workload::OpKind;
+
+    #[test]
+    fn presets_have_expected_masses() {
+        use YcsbWorkload as W;
+        assert!((W::A.weights().fraction(OpKind::Read) - 0.5).abs() < 1e-12);
+        assert!((W::B.weights().fraction(OpKind::Write) - 0.05).abs() < 1e-12);
+        assert!((W::C.weights().fraction(OpKind::Read) - 1.0).abs() < 1e-12);
+        assert!((W::E.weights().fraction(OpKind::Scan) - 0.95).abs() < 1e-12);
+        assert!((W::F.weights().fraction(OpKind::Rmw) - 0.5).abs() < 1e-12);
+        assert!(!W::C.weights().has_writes());
+        assert!(W::A.weights().has_writes());
+    }
+
+    #[test]
+    fn d_uses_rank_ordered_zipf() {
+        assert_eq!(
+            YcsbWorkload::D.key_dist(),
+            KeyDist::Zipf {
+                s: 0.99,
+                scrambled: false
+            }
+        );
+        assert_eq!(
+            YcsbWorkload::A.key_dist(),
+            KeyDist::Zipf {
+                s: 0.99,
+                scrambled: true
+            }
+        );
+    }
+
+    #[test]
+    fn sampling_each_preset_yields_only_its_kinds() {
+        let mut rng = Rng::new(17);
+        for wl in YcsbWorkload::ALL {
+            let w = wl.weights();
+            for _ in 0..2000 {
+                let k = w.sample(&mut rng);
+                assert!(
+                    w.fraction(k) > 0.0,
+                    "{}: sampled {k:?} with zero weight",
+                    wl.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn churn_mix_has_deletes_and_scans() {
+        let w = churn_weights();
+        assert!(w.fraction(OpKind::Delete) > 0.2);
+        assert!(w.fraction(OpKind::Scan) > 0.0);
+        assert!(w.has_writes());
+    }
+}

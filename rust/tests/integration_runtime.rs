@@ -1,6 +1,21 @@
 //! End-to-end AOT bridge: the JAX+Pallas models compiled to HLO text must
-//! load through PJRT and agree with the native Rust implementation of the
-//! same equations. Requires `make artifacts` to have run.
+//! load through the runtime and agree with the native Rust implementation
+//! of the same equations.
+//!
+//! These tests need the compiled artifacts (`make artifacts`). The artifact
+//! directory defaults to `artifacts/` at the crate root and can be pointed
+//! elsewhere with the `CXLKVS_ARTIFACTS` environment variable (the same
+//! variable `ModelEvaluator::load_default` honors). A fresh clone ships no
+//! `artifacts/` directory, so each test **skips with a notice** instead of
+//! failing — `cargo test -q` stays green from a bare checkout.
+//!
+//! Scope caveat: while `ModelEvaluator` runs on the offline native-mirror
+//! backend (no XLA bindings in the image), these tests exercise the
+//! evaluator's API, batching, and numeric agreement with the model crate —
+//! they cannot detect a wrong artifact *body* (only the HLO header is
+//! validated). Cross-validation of the artifact's contents lives in
+//! `python/tests/test_aot.py` at artifact-build time; re-point these tests
+//! at real PJRT execution when the bindings land (see ROADMAP).
 
 use cxlkvs::model::{
     theta_best_recip, theta_extended_recip, theta_mask_recip, theta_mem_recip, theta_prob_recip,
@@ -8,8 +23,22 @@ use cxlkvs::model::{
 };
 use cxlkvs::runtime::{BaseIn, ExtIn, ModelEvaluator};
 
-fn artifacts_present() -> bool {
-    std::path::Path::new("artifacts/model_base_b64.hlo.txt").exists()
+fn artifacts_dir() -> String {
+    std::env::var("CXLKVS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// True when the tests must skip (no artifacts). Prints the notice once per
+/// calling test so `cargo test -q` output explains the skip.
+fn skip_without_artifacts(test: &str) -> bool {
+    let dir = artifacts_dir();
+    let marker = std::path::Path::new(&dir).join("model_base_b64.hlo.txt");
+    if marker.exists() {
+        return false;
+    }
+    eprintln!(
+        "skipping {test}: {marker:?} missing — run `make artifacts` or set CXLKVS_ARTIFACTS"
+    );
+    true
 }
 
 fn table1_base(l_mem: f32) -> BaseIn {
@@ -27,8 +56,8 @@ fn table1_base(l_mem: f32) -> BaseIn {
 
 #[test]
 fn pjrt_base_matches_native_model() {
-    if !artifacts_present() {
-        panic!("artifacts missing — run `make artifacts` first");
+    if skip_without_artifacts("pjrt_base_matches_native_model") {
+        return;
     }
     let mut ev = ModelEvaluator::load_default().expect("load artifacts");
     assert!(!ev.platform().is_empty());
@@ -64,8 +93,8 @@ fn pjrt_base_matches_native_model() {
 
 #[test]
 fn pjrt_extended_matches_native_model() {
-    if !artifacts_present() {
-        panic!("artifacts missing — run `make artifacts` first");
+    if skip_without_artifacts("pjrt_extended_matches_native_model") {
+        return;
     }
     let mut ev = ModelEvaluator::load_default().expect("load artifacts");
 
@@ -135,8 +164,8 @@ fn pjrt_extended_matches_native_model() {
 
 #[test]
 fn pjrt_handles_non_batch_multiples() {
-    if !artifacts_present() {
-        panic!("artifacts missing — run `make artifacts` first");
+    if skip_without_artifacts("pjrt_handles_non_batch_multiples") {
+        return;
     }
     let mut ev = ModelEvaluator::load_default().expect("load artifacts");
     // 1, 63, 65, 130 inputs: all must round-trip with correct lengths.

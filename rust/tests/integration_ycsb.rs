@@ -1,0 +1,259 @@
+//! Deterministic tests for the YCSB workload surface.
+//!
+//! Three layers of protection against silent behavior changes in the
+//! operation state machines:
+//!
+//! 1. **Determinism**: the same seed must reproduce a store×workload point
+//!    bit-for-bit (op counts, IO counts, latency sums).
+//! 2. **Metrics**: every new operation kind's traversal issues real
+//!    `MemAccess`/`Io` steps — workload E (scan-heavy) must raise M and S
+//!    over workload C (read-only), workload F (RMW) must raise S.
+//! 3. **Golden snapshot**: every store×workload point's integer counters
+//!    are pinned in `tests/golden/ycsb_golden.txt`. On the first run (or
+//!    with `CXLKVS_UPDATE_GOLDEN=1`) the file is (re)written and the test
+//!    passes with a notice — commit the generated file so refactors of the
+//!    state machines can't silently change simulated behavior. (The Zipf
+//!    key generator calls `powf`/`ln`, so the snapshot is pinned per libm;
+//!    regenerate if your platform's math library rounds differently than
+//!    the CI image's.)
+
+use cxlkvs::coordinator::runner::{ycsb_cache_cfg, ycsb_lsm_cfg, ycsb_tree_cfg};
+use cxlkvs::kvs::{CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, TreeKv, TreeKvConfig};
+use cxlkvs::sim::{Dur, Machine, MachineConfig, MemConfig, Rng, RunStats};
+use cxlkvs::workload::YcsbWorkload;
+
+const STORE_SEED: u64 = 0x5eed_9c5b;
+const MACHINE_SEED: u64 = 0x90_1d_e2;
+
+fn machine_cfg(l_us: f64) -> MachineConfig {
+    MachineConfig {
+        threads_per_core: 32,
+        n_locks: 64,
+        mem: MemConfig::fpga(Dur::us(l_us)),
+        seed: MACHINE_SEED,
+        ..Default::default()
+    }
+}
+
+/// Scaled-down store configs (fast enough for debug-mode `cargo test`):
+/// derived from the coordinator's sweep configs so the workload-facing
+/// fields (op weights, key distribution, scan lengths) are exactly what
+/// `ycsb_sweep` measures — only the store *sizes* shrink.
+fn tree_cfg(wl: YcsbWorkload) -> TreeKvConfig {
+    TreeKvConfig {
+        n_items: 30_000,
+        sprigs: 32,
+        ..ycsb_tree_cfg(wl)
+    }
+}
+
+fn lsm_cfg(wl: YcsbWorkload) -> LsmKvConfig {
+    LsmKvConfig {
+        n_items: 100_000,
+        cache_blocks: 1024,
+        shards: 16,
+        buckets_per_shard: 64,
+        ..ycsb_lsm_cfg(wl)
+    }
+}
+
+fn cache_cfg(wl: YcsbWorkload) -> CacheKvConfig {
+    CacheKvConfig {
+        n_items: 20_000,
+        t1_items: 2_400,
+        t2_items: 11_000,
+        buckets: 4_096,
+        ..ycsb_cache_cfg(wl)
+    }
+}
+
+/// One point's integer summary (all fields deterministic given the seeds).
+fn summary(store: &str, wl: YcsbWorkload, st: &RunStats, kv: &cxlkvs::kvs::KvStats) -> String {
+    format!(
+        "{store} {wl} ops={ops} m_milli={m} s_milli={s} io_r={ior} io_w={iow} \
+         gets={gets} sets={sets} dels={dels} scans={scans} rmws={rmws} \
+         scanned={scanned} absent={absent} hits={hits} misses={misses} verified={verified}",
+        store = store,
+        wl = wl.tag(),
+        ops = st.ops,
+        m = (st.mean_m * 1000.0).round() as u64,
+        s = (st.mean_s * 1000.0).round() as u64,
+        ior = st.io_reads,
+        iow = st.io_writes,
+        gets = kv.gets,
+        sets = kv.sets,
+        dels = kv.deletes,
+        scans = kv.scans,
+        rmws = kv.rmws,
+        scanned = kv.scanned,
+        absent = kv.absent,
+        hits = kv.hits,
+        misses = kv.misses,
+        verified = kv.verified,
+    )
+}
+
+fn run_point(store: &str, wl: YcsbWorkload) -> (RunStats, cxlkvs::kvs::KvStats, String) {
+    let warmup = Dur::ms(2.0);
+    let window = Dur::ms(6.0);
+    match store {
+        "tree" => {
+            let mut rng = Rng::new(STORE_SEED ^ wl.tag().as_bytes()[0] as u64);
+            let kv = TreeKv::new(tree_cfg(wl), &mut rng).with_background(1, 32);
+            let mut m = Machine::new(machine_cfg(2.0), kv);
+            let st = m.run(warmup, window);
+            let ks = m.service.stats.clone();
+            let line = summary(store, wl, &st, &ks);
+            (st, ks, line)
+        }
+        "lsm" => {
+            let mut rng = Rng::new(STORE_SEED ^ wl.tag().as_bytes()[0] as u64);
+            let kv = LsmKv::new(lsm_cfg(wl), &mut rng).with_background(32);
+            let mut m = Machine::new(machine_cfg(2.0), kv);
+            let st = m.run(warmup, window);
+            let ks = m.service.stats.clone();
+            let line = summary(store, wl, &st, &ks);
+            (st, ks, line)
+        }
+        "cache" => {
+            let mut rng = Rng::new(STORE_SEED ^ wl.tag().as_bytes()[0] as u64);
+            let kv = CacheKv::new(cache_cfg(wl), &mut rng);
+            let mut m = Machine::new(machine_cfg(2.0), kv);
+            let st = m.run(warmup, window);
+            let ks = m.service.stats.clone();
+            let line = summary(store, wl, &st, &ks);
+            (st, ks, line)
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn ycsb_points_are_deterministic() {
+    // Same seeds ⇒ bit-identical counters, per store, including the new op
+    // kinds (E exercises scans, F exercises RMW).
+    for (store, wl) in [
+        ("tree", YcsbWorkload::A),
+        ("tree", YcsbWorkload::E),
+        ("lsm", YcsbWorkload::F),
+        ("cache", YcsbWorkload::A),
+    ] {
+        let (_, _, a) = run_point(store, wl);
+        let (_, _, b) = run_point(store, wl);
+        assert_eq!(a, b, "{store}/{} not deterministic", wl.tag());
+    }
+}
+
+#[test]
+fn ycsb_mixes_reach_the_stores() {
+    // Op-issue counters must match the preset weights (statistically), and
+    // every issued kind must actually execute.
+    let (_, ks, _) = run_point("tree", YcsbWorkload::A);
+    let total = (ks.gets + ks.sets) as f64;
+    let read_frac = ks.gets as f64 / total;
+    assert!((read_frac - 0.5).abs() < 0.07, "A read frac {read_frac}");
+
+    let (_, ks, _) = run_point("lsm", YcsbWorkload::B);
+    let total = (ks.gets + ks.sets) as f64;
+    let read_frac = ks.gets as f64 / total;
+    assert!((read_frac - 0.95).abs() < 0.03, "B read frac {read_frac}");
+
+    let (_, ks, _) = run_point("tree", YcsbWorkload::F);
+    assert!(ks.rmws > 100, "F must issue RMWs: {}", ks.rmws);
+    let total = (ks.gets + ks.rmws) as f64;
+    // op_get is only called for the pure-read half in treekv.
+    let rmw_frac = ks.rmws as f64 / total;
+    assert!((rmw_frac - 0.5).abs() < 0.07, "F rmw frac {rmw_frac}");
+}
+
+#[test]
+fn scan_heavy_workload_raises_m_and_s_with_real_steps() {
+    // Acceptance: every new op's traversal issues real MemAccess/Io steps.
+    // Workload E's merged scans must raise the *measured* (machine-side)
+    // M and S over read-only C — the counters only move when the state
+    // machines return real Step::MemAccess / Step::Io.
+    let (c_st, _, _) = run_point("tree", YcsbWorkload::C);
+    let (e_st, e_ks, _) = run_point("tree", YcsbWorkload::E);
+    assert!(e_ks.scans > 100, "E must issue scans: {}", e_ks.scans);
+    assert!(e_ks.scanned > e_ks.scans, "scans must return entries");
+    assert_eq!(e_ks.corruptions, 0, "scan reads must verify");
+    assert!(
+        e_st.mean_m > c_st.mean_m * 1.3,
+        "E index-walk M {} must exceed C point M {}",
+        e_st.mean_m,
+        c_st.mean_m
+    );
+    assert!(
+        e_st.mean_s > 0.5,
+        "E batched value reads must show up in S: {}",
+        e_st.mean_s
+    );
+
+    let (lc_st, _, _) = run_point("lsm", YcsbWorkload::C);
+    let (le_st, le_ks, _) = run_point("lsm", YcsbWorkload::E);
+    assert!(le_ks.scans > 100 && le_ks.scanned > le_ks.scans);
+    assert!(
+        le_st.mean_m > lc_st.mean_m * 0.8,
+        "lsm E merged iterator must traverse the cache: {} vs {}",
+        le_st.mean_m,
+        lc_st.mean_m
+    );
+    assert!(le_st.mean_s > 0.1, "lsm E block fetches: {}", le_st.mean_s);
+}
+
+#[test]
+fn rmw_workload_roughly_doubles_io_per_op() {
+    let (c_st, _, _) = run_point("tree", YcsbWorkload::C);
+    let (f_st, f_ks, _) = run_point("tree", YcsbWorkload::F);
+    assert!(f_ks.rmws > 100);
+    // C: one value-read IO per op. F: half the ops add a log-append write,
+    // so S ≈ 1.5 and writes appear.
+    assert!(
+        f_st.mean_s > c_st.mean_s * 1.2,
+        "F S {} must exceed C S {}",
+        f_st.mean_s,
+        c_st.mean_s
+    );
+    assert!(f_st.io_writes > 100, "RMW write halves: {}", f_st.io_writes);
+    assert_eq!(f_ks.corruptions, 0, "read-your-write must verify");
+}
+
+#[test]
+fn cachekv_scan_is_counted_but_degenerate() {
+    let (st, ks, _) = run_point("cache", YcsbWorkload::E);
+    assert!(ks.scans > 100, "E scans counted: {}", ks.scans);
+    assert_eq!(ks.scanned, 0, "cachekv scans return no entries (no-op)");
+    assert!(st.ops > 0);
+}
+
+#[test]
+fn ycsb_golden_points_are_pinned() {
+    let mut lines = Vec::new();
+    for wl in YcsbWorkload::ALL {
+        for store in ["tree", "lsm", "cache"] {
+            let (_, _, line) = run_point(store, wl);
+            lines.push(line);
+        }
+    }
+    let text = lines.join("\n") + "\n";
+    let path = std::path::Path::new("tests/golden/ycsb_golden.txt");
+    let update = std::env::var("CXLKVS_UPDATE_GOLDEN")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, &text).unwrap();
+        eprintln!(
+            "ycsb_golden: wrote {path:?} ({} points) — commit it so future \
+             refactors cannot silently change simulated behavior",
+            lines.len()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(path).unwrap();
+    assert_eq!(
+        text, want,
+        "simulated YCSB behavior changed; if intentional, regenerate with \
+         CXLKVS_UPDATE_GOLDEN=1 and commit the diff"
+    );
+}

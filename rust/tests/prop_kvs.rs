@@ -1,11 +1,48 @@
 //! Property tests on the KV stores: oracle equivalence of the tree index,
-//! cache-structure invariants under random churn, and integrity of every
-//! simulated run.
+//! cache-structure invariants under random churn, integrity of every
+//! simulated run, and the full-operation-surface contracts —
+//! delete-then-get returns absent, scans are key-ordered/duplicate-free and
+//! consistent with the deterministic disk image, RMW preserves
+//! read-your-write under a single thread.
 
-use cxlkvs::kvs::{CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, TreeKv, TreeKvConfig};
+use cxlkvs::kvs::{drive_op, fnv1a, CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, TreeKv, TreeKvConfig};
 use cxlkvs::prop::{forall, no_shrink, PropCfg};
-use cxlkvs::sim::{Dur, Machine, MachineConfig, MemConfig, Rng};
+use cxlkvs::sim::{Dur, Machine, MachineConfig, MemConfig, Rng, Service};
 use cxlkvs::workload::{KeyDist, OpMix, ValueSize};
+
+/// Drive one operation's state machine to completion outside the machine
+/// (timing-free; Lock/Io steps are acknowledged, not scheduled).
+fn drive<S: Service>(svc: &mut S, op: S::Op, rng: &mut Rng) {
+    let _ = drive_op(svc, op, rng);
+}
+
+fn small_tree() -> TreeKvConfig {
+    TreeKvConfig {
+        n_items: 15_000,
+        sprigs: 16,
+        ..Default::default()
+    }
+}
+
+fn small_lsm() -> LsmKvConfig {
+    LsmKvConfig {
+        n_items: 15_000,
+        cache_blocks: 512,
+        shards: 8,
+        buckets_per_shard: 32,
+        ..Default::default()
+    }
+}
+
+fn small_cache() -> CacheKvConfig {
+    CacheKvConfig {
+        n_items: 15_000,
+        t1_items: 2_000,
+        t2_items: 6_000,
+        buckets: 2_048,
+        ..Default::default()
+    }
+}
 
 #[test]
 fn treekv_depth_close_to_random_bst_theory() {
@@ -172,6 +209,235 @@ fn cachekv_bounded_capacity_under_all_mixes() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn delete_then_get_absent_across_all_stores() {
+    forall(
+        PropCfg { cases: 6, ..Default::default() },
+        |rng| (rng.next_u64(), rng.below(15_000)),
+        no_shrink,
+        |&(seed, key)| {
+            let mut rng = Rng::new(seed);
+
+            let mut tree = TreeKv::new(small_tree(), &mut rng);
+            let op = tree.op_delete(key);
+            drive(&mut tree, op, &mut rng);
+            if tree.contains_key(key) {
+                return Err(format!("treekv: {key} still present after delete"));
+            }
+            let misses = tree.stats.misses;
+            let op = tree.op_get(key);
+            drive(&mut tree, op, &mut rng);
+            if tree.stats.misses != misses + 1 {
+                return Err("treekv: get-after-delete was not a miss".into());
+            }
+
+            let mut lsm = LsmKv::new(small_lsm(), &mut rng);
+            let op = lsm.op_delete(key);
+            drive(&mut lsm, op, &mut rng);
+            if lsm.contains_key(key) {
+                return Err(format!("lsmkv: {key} still present after delete"));
+            }
+            // Fresh tombstone: absent at the memtable.
+            let absent = lsm.stats.absent;
+            let op = lsm.op_get(key);
+            drive(&mut lsm, op, &mut rng);
+            if lsm.stats.absent != absent + 1 {
+                return Err("lsmkv: get-after-delete (fresh tombstone) not absent".into());
+            }
+
+            let mut cache = CacheKv::new(small_cache(), &mut rng);
+            let op = cache.op_delete(key);
+            drive(&mut cache, op, &mut rng);
+            if cache.contains_key(key) {
+                return Err(format!("cachekv: {key} still cached after delete"));
+            }
+            let absent = cache.stats.absent;
+            let op = cache.op_get(key);
+            drive(&mut cache, op, &mut rng);
+            if cache.stats.absent != absent + 1 {
+                return Err("cachekv: get-after-delete not absent".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn scan_results_ordered_duplicate_free_and_disk_consistent() {
+    forall(
+        PropCfg { cases: 6, ..Default::default() },
+        |rng| (rng.next_u64(), rng.below(15_000), 1 + rng.below(48) as u32),
+        no_shrink,
+        |&(seed, key, len)| {
+            let mut rng = Rng::new(seed);
+
+            // treekv: digest-ordered, duplicate-free, anchored.
+            let mut tree = TreeKv::new(small_tree(), &mut rng);
+            let ds = tree.scan_digests(key, len);
+            if ds.len() as u32 > len {
+                return Err(format!("treekv: scan returned {} > len {len}", ds.len()));
+            }
+            let anchor = fnv1a(key);
+            for w in ds.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("treekv: out of order {} >= {}", w[0], w[1]));
+                }
+            }
+            if let Some(&first) = ds.first() {
+                if first < anchor {
+                    return Err("treekv: scan started before the anchor".into());
+                }
+            }
+            // Simulated scan agrees with the oracle and the disk image.
+            let scanned = tree.stats.scanned;
+            let op = tree.op_scan(key, len);
+            drive(&mut tree, op, &mut rng);
+            if tree.stats.scanned != scanned + ds.len() as u64 {
+                return Err("treekv: simulated scan returned a different count".into());
+            }
+            if tree.stats.corruptions != 0 {
+                return Err("treekv: scan disagreed with the disk image".into());
+            }
+
+            // lsmkv: key-ordered, duplicate-free, tombstones merged out.
+            let mut lsm = LsmKv::new(small_lsm(), &mut rng);
+            let dead = [key, key + 2, key + 5];
+            for &d in &dead {
+                let op = lsm.op_delete(d);
+                drive(&mut lsm, op, &mut rng);
+            }
+            let keys = lsm.scan_keys(key, len);
+            for w in keys.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("lsmkv: out of order {} >= {}", w[0], w[1]));
+                }
+            }
+            for k in &keys {
+                if dead.contains(k) {
+                    return Err(format!("lsmkv: tombstoned key {k} in scan"));
+                }
+            }
+            let scanned = lsm.stats.scanned;
+            let op = lsm.op_scan(key, len);
+            drive(&mut lsm, op, &mut rng);
+            if lsm.stats.scanned != scanned + keys.len() as u64 {
+                return Err(format!(
+                    "lsmkv: simulated scan returned {} entries, oracle {}",
+                    lsm.stats.scanned - scanned,
+                    keys.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn rmw_preserves_read_your_write_single_thread() {
+    forall(
+        PropCfg { cases: 6, ..Default::default() },
+        |rng| (rng.next_u64(), rng.below(15_000)),
+        no_shrink,
+        |&(seed, key)| {
+            let mut rng = Rng::new(seed);
+
+            let mut tree = TreeKv::new(small_tree(), &mut rng);
+            let verified = tree.stats.verified;
+            let op = tree.op_rmw(key, 700);
+            drive(&mut tree, op, &mut rng);
+            let op = tree.op_get(key);
+            drive(&mut tree, op, &mut rng);
+            // Both the RMW's read half and the follow-up get verify against
+            // the (updated) disk image.
+            if tree.stats.verified != verified + 2 || tree.stats.corruptions != 0 {
+                return Err(format!(
+                    "treekv: rmw broke read-your-write (verified {} -> {}, corruptions {})",
+                    verified, tree.stats.verified, tree.stats.corruptions
+                ));
+            }
+
+            let mut lsm = LsmKv::new(small_lsm(), &mut rng);
+            // RMW of a tombstoned key must resurrect it (upsert).
+            let op = lsm.op_delete(key);
+            drive(&mut lsm, op, &mut rng);
+            let op = lsm.op_rmw(key);
+            drive(&mut lsm, op, &mut rng);
+            if !lsm.contains_key(key) {
+                return Err("lsmkv: rmw did not resurrect a deleted key".into());
+            }
+            let verified = lsm.stats.verified;
+            let op = lsm.op_get(key);
+            drive(&mut lsm, op, &mut rng);
+            if lsm.stats.verified != verified + 1 {
+                return Err("lsmkv: get after rmw did not find the key".into());
+            }
+
+            let mut cache = CacheKv::new(small_cache(), &mut rng);
+            let op = cache.op_rmw(key);
+            drive(&mut cache, op, &mut rng);
+            // Whatever tier served the read, the write half leaves the key
+            // tier-1 resident (update-in-place or insert).
+            if !cache.contains_key(key) {
+                return Err("cachekv: key not resident after rmw".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn churn_mix_full_surface_never_corrupts() {
+    // Machine-level: a delete/scan/rmw-heavy mix on every store keeps
+    // integrity and makes progress (the simulated-run analogue of the
+    // directed properties above).
+    use cxlkvs::workload::churn_weights;
+    for seed in [3u64, 9] {
+        let mut rng = Rng::new(seed);
+        let kv = TreeKv::new(
+            TreeKvConfig {
+                ops: Some(churn_weights()),
+                ..small_tree()
+            },
+            &mut rng,
+        )
+        .with_background(1, 32);
+        let mut m = Machine::new(machine_cfg(seed, 2.0), kv);
+        let st = m.run(Dur::ms(2.0), Dur::ms(10.0));
+        assert!(st.ops > 500, "treekv churn wedged: {} ops", st.ops);
+        assert_eq!(m.service.stats.corruptions, 0);
+        assert!(m.service.stats.deletes > 0 && m.service.stats.scans > 0);
+
+        let mut rng = Rng::new(seed);
+        let kv = LsmKv::new(
+            LsmKvConfig {
+                ops: Some(churn_weights()),
+                ..small_lsm()
+            },
+            &mut rng,
+        )
+        .with_background(32);
+        let mut m = Machine::new(machine_cfg(seed, 2.0), kv);
+        let st = m.run(Dur::ms(2.0), Dur::ms(10.0));
+        assert!(st.ops > 500, "lsmkv churn wedged: {} ops", st.ops);
+        assert_eq!(m.service.stats.corruptions, 0);
+        assert!(m.service.stats.deletes > 0 && m.service.stats.rmws > 0);
+
+        let mut rng = Rng::new(seed);
+        let kv = CacheKv::new(
+            CacheKvConfig {
+                ops: Some(churn_weights()),
+                ..small_cache()
+            },
+            &mut rng,
+        );
+        let mut m = Machine::new(machine_cfg(seed, 2.0), kv);
+        let st = m.run(Dur::ms(2.0), Dur::ms(10.0));
+        assert!(st.ops > 500, "cachekv churn wedged: {} ops", st.ops);
+        assert_eq!(m.service.stats.corruptions, 0);
+        assert!(m.service.stats.deletes > 0);
+    }
 }
 
 #[test]
