@@ -1,0 +1,20 @@
+//! `cargo bench --bench bench_sim` — wall-clock of the fixed fast-mode
+//! sweep (plain main; no criterion in the offline image). Writes
+//! `BENCH_sim.json` (points/sec, total wall seconds, simulated ops per wall
+//! second) at the workspace root so successive commits can compare the
+//! simulator's host-side cost. `CXLKVS_FAST=1` shrinks the windows for the
+//! CI smoke run.
+
+use cxlkvs::coordinator::bench::run_fixed_sweep;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let window_ms = if fast_mode() { 5.0 } else { 20.0 };
+    println!("== bench_sim == (window {window_ms} ms/point)");
+    let r = run_fixed_sweep(window_ms);
+    print!("{}", r.to_json());
+    match r.write_json() {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_sim.json: {e}"),
+    }
+}

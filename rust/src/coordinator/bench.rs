@@ -1,0 +1,134 @@
+//! Wall-clock bench harness for the simulator hot path.
+//!
+//! [`run_fixed_sweep`] times a **fixed** sweep — the same points every run:
+//! an 8-point latency grid × {1, 4}-device arrays on the default
+//! microbenchmark — and reports host-side points/sec and simulated ops per
+//! wall second. These are the numbers the hot-path work (cached next-core
+//! scheduling in `run_until`, work-stealing `parallel_map`) must not
+//! regress, and what the multi-SSD routing cost must stay inside.
+//!
+//! [`BenchResult::write_json`] emits `BENCH_sim.json` at the workspace root
+//! (hand-rolled JSON; the offline image has no serde), starting the repo's
+//! perf trajectory: CI runs the `bench_sim` bench in fast mode on every
+//! push, and `tests/bench_smoke.rs` self-bootstraps the file on a plain
+//! `cargo test` so a toolchain run always leaves a measurement behind.
+
+use std::time::Instant;
+
+use super::runner::{parallel_map, SweepCfg};
+use crate::microbench::{Microbench, MicrobenchConfig};
+use crate::sim::{Dur, Machine, Rng};
+
+/// One timed sweep's summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Sweep points simulated.
+    pub points: usize,
+    /// Total wall-clock seconds for the sweep.
+    pub wall_secs: f64,
+    /// Host-side throughput: points per wall second.
+    pub points_per_sec: f64,
+    /// Simulated operations completed across all points.
+    pub sim_ops: u64,
+    /// Simulated ops per wall second (the hot-path figure of merit).
+    pub sim_ops_per_wall_sec: f64,
+}
+
+impl BenchResult {
+    /// Hand-rolled JSON (no serde in the offline image).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"points\": {},\n  \"wall_secs\": {:.3},\n  \"points_per_sec\": {:.2},\n  \"sim_ops\": {},\n  \"sim_ops_per_wall_sec\": {:.0}\n}}\n",
+            self.points,
+            self.wall_secs,
+            self.points_per_sec,
+            self.sim_ops,
+            self.sim_ops_per_wall_sec
+        )
+    }
+
+    /// Where `BENCH_sim.json` lives: the workspace root (the parent of the
+    /// crate, detected by its `Cargo.toml`), falling back to the current
+    /// directory.
+    pub fn default_path() -> std::path::PathBuf {
+        if std::path::Path::new("../Cargo.toml").exists() {
+            std::path::PathBuf::from("../BENCH_sim.json")
+        } else {
+            std::path::PathBuf::from("BENCH_sim.json")
+        }
+    }
+
+    /// Write `BENCH_sim.json` at [`BenchResult::default_path`]. Returns the
+    /// path written.
+    pub fn write_json(&self) -> std::io::Result<std::path::PathBuf> {
+        let path = Self::default_path();
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+/// Simulate the fixed sweep with `window_ms`-long measurement windows and
+/// time it. All points run through [`parallel_map`], so the bench exercises
+/// the work-stealing scheduler alongside the per-machine hot path.
+pub fn run_fixed_sweep(window_ms: f64) -> BenchResult {
+    let grid = [0.1, 0.5, 1.0, 2.0, 3.0, 5.0, 8.0, 10.0];
+    let n_ssds = [1u32, 4];
+    let mut jobs = Vec::new();
+    for &n in &n_ssds {
+        for &l in &grid {
+            let sweep = SweepCfg {
+                l_mem: Dur::us(l),
+                warmup: Dur::ms(window_ms / 4.0),
+                window: Dur::ms(window_ms),
+                n_ssd: n,
+                ..Default::default()
+            };
+            jobs.push(move || {
+                let mut rng = Rng::new(0xbe7c);
+                let svc = Microbench::new(MicrobenchConfig::default(), &mut rng);
+                Machine::new(sweep.machine(64), svc)
+                    .run(sweep.warmup, sweep.window)
+                    .ops
+            });
+        }
+    }
+    let points = jobs.len();
+    let t = Instant::now();
+    let ops = parallel_map(jobs);
+    let wall = t.elapsed().as_secs_f64().max(1e-9);
+    let sim_ops: u64 = ops.iter().sum();
+    BenchResult {
+        points,
+        wall_secs: wall,
+        points_per_sec: points as f64 / wall,
+        sim_ops,
+        sim_ops_per_wall_sec: sim_ops as f64 / wall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_shape_is_stable() {
+        let r = BenchResult {
+            points: 16,
+            wall_secs: 1.25,
+            points_per_sec: 12.8,
+            sim_ops: 4_200,
+            sim_ops_per_wall_sec: 3_360.0,
+        };
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+        for key in [
+            "\"points\"",
+            "\"wall_secs\"",
+            "\"points_per_sec\"",
+            "\"sim_ops\"",
+            "\"sim_ops_per_wall_sec\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+}

@@ -118,10 +118,14 @@ impl ModelBackend {
         }
     }
 
-    /// Extended model reciprocal at latency l.
+    /// Extended model reciprocal at latency l. The 16-column artifact
+    /// interface carries aggregate device rates, so the array term enters
+    /// the PJRT path as `n_ssd`-scaled `b_io`/`r_io` (identical algebra to
+    /// the native Θ_ssd floors — the HLO signature stays stable).
     pub fn extended(&mut self, op: &OpParams, sys: &SysParams, ext: &ExtParams, l: f64) -> f64 {
         match self {
             ModelBackend::Pjrt(ev) => {
+                let n_ssd = ext.n_ssd.max(1.0);
                 let out = ev
                     .eval_extended(&[ExtIn {
                         m: op.m as f32,
@@ -137,8 +141,8 @@ impl ModelBackend {
                         b_mem: ext.b_mem as f32,
                         l_dram: ext.l_dram as f32,
                         a_io: ext.a_io as f32,
-                        b_io: ext.b_io as f32,
-                        r_io: ext.r_io as f32,
+                        b_io: (ext.b_io * n_ssd) as f32,
+                        r_io: (ext.r_io * n_ssd) as f32,
                         s: ext.s as f32,
                     }])
                     .expect("pjrt eval");
@@ -558,6 +562,7 @@ pub fn fig12(backend: &mut ModelBackend, fast: bool) -> Vec<Report> {
         b_io: 10_000.0,
         r_io: 2.2,
         s: 1.0,
+        n_ssd: 1.0,
     };
     let mut out = Vec::new();
 
@@ -1196,6 +1201,155 @@ pub fn ycsb_sweep(fast: bool) -> Report {
     r.note("(hash layout has no ordered iteration), so its E row measures");
     r.note("the API-call floor, not range-scan service");
     r.write_csv("ycsb_sweep").ok();
+    r
+}
+
+// ---------------------------------------------------------------------------
+// Multi-SSD scaling — the sharded-array scale axis (ROADMAP open item).
+// ---------------------------------------------------------------------------
+
+/// Sweep the SSD array size `n_ssd ∈ {1,2,4,8}` at two operating points:
+///
+/// - **ssd-bound**: low `L_mem`, IO-heavy mix on per-device-limited drives —
+///   throughput must track the aggregate ceiling `Θ_ssd = n_ssd·R_IO`
+///   (~linear scaling) until the CPU term takes over;
+/// - **latency-bound**: the classic 5 µs memory-bound point on unsaturated
+///   drives — the array must be invisible (<2% movement).
+///
+/// The overlayed model curve is Eq 14 with the Θ_ssd floors (per core).
+pub fn ssd_scaling(backend: &mut ModelBackend, fast: bool) -> Report {
+    let n_grid: [u32; 4] = [1, 2, 4, 8];
+    let window = if fast { Dur::ms(8.0) } else { Dur::ms(20.0) };
+    let sys = sys_params();
+
+    // Per-device drive small enough that one device saturates under the
+    // IO-heavy mix (40 KIOPS ≪ the CPU ceiling of ~417 kops/s at M=4).
+    let ssd_bound_dev = crate::sim::SsdConfig {
+        iops: 40e3,
+        bandwidth_bps: 1e9,
+        queue_depth: 64,
+        ..crate::sim::SsdConfig::optane_array()
+    };
+
+    struct Regime {
+        name: &'static str,
+        l_us: f64,
+        mb: MicrobenchConfig,
+        dev: crate::sim::SsdConfig,
+        op: OpParams,
+        ext: ExtParams,
+    }
+    let base_ext = ExtParams::table2_example();
+    let regimes = [
+        Regime {
+            name: "ssd-bound",
+            l_us: 0.5,
+            mb: MicrobenchConfig {
+                m: 4,
+                io_bytes: 4096,
+                ..MicrobenchConfig::default()
+            },
+            dev: ssd_bound_dev,
+            op: OpParams {
+                m: 4.0,
+                t_mem: 0.1,
+                t_pre: 1.5,
+                t_post: 0.2,
+            },
+            ext: ExtParams {
+                a_io: 4096.0,
+                b_io: 1_000.0, // 1 GB/s per device
+                r_io: 0.04,    // 40 KIOPS per device
+                b_mem: 1e9,
+                ..base_ext
+            },
+        },
+        Regime {
+            name: "latency-bound",
+            l_us: 5.0,
+            mb: MicrobenchConfig::default(),
+            dev: crate::sim::SsdConfig::optane_array(),
+            op: OpParams {
+                m: 10.0,
+                t_mem: 0.1,
+                t_pre: 1.5,
+                t_post: 0.2,
+            },
+            ext: ExtParams {
+                b_mem: 1e9,
+                ..base_ext
+            },
+        },
+    ];
+
+    let mut r = Report::new(
+        "Multi-SSD scaling — sharded array, per-shard queues (n_ssd axis)",
+        &[
+            "regime",
+            "n_ssd",
+            "L_mem(us)",
+            "ops/sec",
+            "vs n_ssd=1",
+            "model_kops",
+            "dev_imbalance",
+        ],
+    );
+    for regime in &regimes {
+        let jobs: Vec<_> = n_grid
+            .iter()
+            .map(|&n| {
+                let mb = regime.mb.clone();
+                let sweep = SweepCfg {
+                    l_mem: Dur::us(regime.l_us),
+                    window,
+                    ssd: regime.dev.clone(),
+                    n_ssd: n,
+                    ..Default::default()
+                };
+                move || {
+                    let mcfg = sweep.machine(64);
+                    // Same service seed at every n: identical chain and op
+                    // stream, so the array size is the only moving part.
+                    let mut rng = crate::sim::Rng::new(0x55d);
+                    let svc = crate::microbench::Microbench::new(mb, &mut rng);
+                    let mut machine = crate::sim::Machine::new(mcfg, svc);
+                    let st = machine.run(sweep.warmup, sweep.window);
+                    (st.ops_per_sec, machine.ssd.per_device_ios())
+                }
+            })
+            .collect();
+        let measured = parallel_map(jobs);
+        let base_ops = measured[0].0;
+        for (i, &n) in n_grid.iter().enumerate() {
+            let ops = measured[i].0;
+            let per_dev = &measured[i].1;
+            let recip = backend.extended(
+                &regime.op,
+                &sys,
+                &ExtParams {
+                    n_ssd: n as f64,
+                    ..regime.ext
+                },
+                regime.l_us,
+            );
+            let total: u64 = per_dev.iter().sum::<u64>().max(1);
+            let mean = total as f64 / per_dev.len() as f64;
+            let imbalance = per_dev.iter().copied().max().unwrap_or(0) as f64 / mean;
+            r.row(vec![
+                regime.name.into(),
+                n.to_string(),
+                f1(regime.l_us),
+                format!("{ops:.0}"),
+                f2(ops / base_ops),
+                f1(1e6 / recip / 1e3),
+                f2(imbalance),
+            ]);
+        }
+    }
+    r.note("ssd-bound: throughput tracks Theta_ssd = n_ssd*R_IO until the CPU");
+    r.note("term takes over; latency-bound: unsaturated devices, array invisible");
+    r.note(format!("model backend: {}", backend.name()));
+    r.write_csv("ssd_scaling").ok();
     r
 }
 

@@ -3,9 +3,11 @@
 //! analytic models evaluated through the AOT-compiled JAX+Pallas artifact
 //! (falling back to the native Rust model when artifacts are absent).
 
+pub mod bench;
 pub mod experiments;
 pub mod report;
 pub mod runner;
 
+pub use bench::BenchResult;
 pub use report::Report;
 pub use runner::{best_threads, StoreKind, SweepCfg};

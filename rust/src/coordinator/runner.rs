@@ -5,7 +5,7 @@
 
 use crate::kvs::{CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, TreeKv, TreeKvConfig};
 use crate::microbench::{Microbench, MicrobenchConfig};
-use crate::sim::{Dur, Machine, MachineConfig, MemConfig, Rng, RunStats, TailProfile};
+use crate::sim::{Dur, Machine, MachineConfig, MemConfig, Rng, RunStats, SsdConfig, TailProfile};
 use crate::workload::YcsbWorkload;
 
 /// Which KV store design a sweep drives.
@@ -44,6 +44,10 @@ pub struct SweepCfg {
     pub mem_bandwidth: f64,
     /// CPU cache capacity in lines.
     pub cache_lines: u64,
+    /// Per-device SSD configuration (`n_ssd` below overrides its array size).
+    pub ssd: SsdConfig,
+    /// SSD array size — the multi-SSD scale axis (1 = the classic sweeps).
+    pub n_ssd: u32,
     pub seed: u64,
 }
 
@@ -58,6 +62,8 @@ impl Default for SweepCfg {
             tail: false,
             mem_bandwidth: f64::INFINITY,
             cache_lines: 1_000_000,
+            ssd: SsdConfig::optane_array(),
+            n_ssd: 1,
             seed: 0x5eed,
         }
     }
@@ -75,10 +81,22 @@ impl SweepCfg {
             threads_per_core: threads,
             cache_lines: self.cache_lines,
             mem,
+            ssd: SsdConfig {
+                n_ssd: self.n_ssd.max(1),
+                ..self.ssd.clone()
+            },
             n_locks: 64,
             contention_factor: 0.025,
             seed: self.seed,
             ..MachineConfig::default()
+        }
+    }
+
+    /// The same sweep at a different array size.
+    pub fn at_n_ssd(&self, n: u32) -> SweepCfg {
+        SweepCfg {
+            n_ssd: n.max(1),
+            ..self.clone()
         }
     }
 
@@ -230,34 +248,50 @@ where
 
 /// Run `jobs` closures in parallel on host threads (sweep points are
 /// independent simulations), preserving output order.
+///
+/// Work-stealing scheduling: a fixed pool of host threads pulls the next
+/// job index off a shared atomic counter as each finishes. The former
+/// chunk-barrier version stalled a whole chunk on its slowest point (a
+/// 16-core fig14 point can run 10× longer than a 1-core one), leaving most
+/// host threads idle at every chunk boundary.
 pub fn parallel_map<T, F>(jobs: Vec<F>) -> Vec<T>
 where
     T: Send,
     F: FnOnce() -> T + Send,
 {
-    let max_par = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4);
-    let mut results: Vec<Option<T>> = Vec::new();
-    for _ in 0..jobs.len() {
-        results.push(None);
-    }
-    let mut jobs: Vec<Option<F>> = jobs.into_iter().map(Some).collect();
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
     let n = jobs.len();
-    for chunk_start in (0..n).step_by(max_par) {
-        let chunk_end = (chunk_start + max_par).min(n);
-        std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for (i, job) in jobs[chunk_start..chunk_end].iter_mut().enumerate() {
-                let f = job.take().unwrap();
-                handles.push((chunk_start + i, s.spawn(f)));
-            }
-            for (i, h) in handles {
-                results[i] = Some(h.join().expect("sweep worker panicked"));
-            }
-        });
+    if n == 0 {
+        return Vec::new();
     }
-    results.into_iter().map(|r| r.unwrap()).collect()
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n);
+    // Per-slot mutexes (not one big lock): each slot is touched by exactly
+    // one worker, the lock only pacifies the borrow checker across threads.
+    let job_slots: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let out_slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let f = job_slots[i].lock().unwrap().take().unwrap();
+                let r = f();
+                *out_slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out_slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("sweep worker panicked"))
+        .collect()
 }
 
 /// Measured model parameters extracted from a (DRAM-placement) run.
@@ -342,6 +376,36 @@ mod tests {
             .collect();
         let out = parallel_map(jobs);
         assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_handles_empty_and_skewed_durations() {
+        let out: Vec<u32> = parallel_map(Vec::<Box<dyn FnOnce() -> u32 + Send>>::new());
+        assert!(out.is_empty());
+        // One slow job among many fast ones: with work-stealing this
+        // completes in ~slowest + fast work, not chunks × slowest. Assert
+        // correctness here (wall-clock is covered by the bench harness).
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..40usize)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(30));
+                    }
+                    i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        assert_eq!(parallel_map(jobs), (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sweep_n_ssd_axis_reaches_the_machine() {
+        let sweep = SweepCfg::default().at_n_ssd(4);
+        let mcfg = sweep.machine(8);
+        assert_eq!(mcfg.ssd.n_ssd, 4);
+        // Per-device knobs come from the sweep's device config.
+        assert_eq!(mcfg.ssd.queue_depth, sweep.ssd.queue_depth);
+        assert_eq!(SweepCfg::default().machine(8).ssd.n_ssd, 1);
     }
 
     #[test]

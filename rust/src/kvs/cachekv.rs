@@ -134,8 +134,9 @@ pub enum CacheOp {
     },
     /// Both tiers missed: backend fetch (compute), then insert.
     Backend { key: u64 },
-    /// Deferred SOC page write for an admitted tier-1 eviction.
-    SocWrite,
+    /// Deferred SOC page write for an admitted tier-1 eviction; `shard` is
+    /// the slab hash routing the page to its device of the SSD array.
+    SocWrite { shard: u64 },
     /// Invalidation: chain walk, locked tier-1 unlink, tier-2 index removal.
     Delete {
         key: u64,
@@ -539,6 +540,8 @@ impl Service for CacheKv {
                     bytes: self.cfg.page_bytes,
                     extra_pre: Dur::us(1.0),  // page index + offset math
                     extra_post: Dur::us(2.0), // page scan + item copy + admit
+                    // The key's SOC slab hash picks the owning device.
+                    shard: fnv1a(k),
                 }
             }
             CacheOp::Backend { key } => {
@@ -586,19 +589,21 @@ impl Service for CacheKv {
                 // deferred SOC page write if the eviction was admitted.
                 let k = *key;
                 *op = if write_page {
-                    CacheOp::SocWrite
+                    CacheOp::SocWrite { shard: fnv1a(k) }
                 } else {
                     CacheOp::Finished
                 };
                 Step::Unlock(evict_lock(k))
             }
-            CacheOp::SocWrite => {
+            CacheOp::SocWrite { shard } => {
+                let s = *shard;
                 *op = CacheOp::Finished;
                 Step::Io {
                     kind: IoKind::Write,
                     bytes: self.cfg.page_bytes,
                     extra_pre: Dur::ns(500.0),
                     extra_post: Dur::ns(300.0),
+                    shard: s,
                 }
             }
             CacheOp::Delete {

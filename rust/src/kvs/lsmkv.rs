@@ -667,6 +667,8 @@ impl Service for LsmKv {
             LsmOp::Fetch { key, rmw } => {
                 let k = *key;
                 let r = *rmw;
+                // The SSTable block id routes the read to its owning device.
+                let shard = self.block_of(k) as u64;
                 *op = LsmOp::Insert {
                     key: k,
                     hops: 0,
@@ -681,6 +683,7 @@ impl Service for LsmKv {
                     // construction (post).
                     extra_pre: Dur::us(1.5),
                     extra_post: Dur::us(3.0),
+                    shard,
                 }
             }
             LsmOp::Insert { key, hops, rmw } => {
@@ -850,6 +853,7 @@ impl Service for LsmKv {
                             bytes: self.block_bytes(),
                             extra_pre: Dur::us(1.5),
                             extra_post: Dur::us(3.0),
+                            shard: block as u64,
                         };
                     }
                     self.stats.hits += 1;
@@ -886,6 +890,9 @@ impl Service for LsmKv {
                     *op = LsmOp::Finished;
                     return Step::Compute(Dur::us(1.0));
                 }
+                // Compaction stripes its bulk IOs across the array (one
+                // output file per device in a real multi-disk db_path).
+                let shard = *ios_left as u64;
                 *ios_left -= 1;
                 let kind = if *write {
                     IoKind::Write
@@ -898,6 +905,7 @@ impl Service for LsmKv {
                     bytes: 32 * 1024, // bulk compaction IO
                     extra_pre: Dur::ns(500.0),
                     extra_post: Dur::us(2.0), // merge work
+                    shard,
                 }
             }
             LsmOp::BgPause => {

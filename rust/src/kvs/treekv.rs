@@ -624,6 +624,8 @@ impl Service for TreeKv {
             } => {
                 let ok = self.disk[*block as usize] == *digest;
                 let bytes = *vsize;
+                // Route to the array device owning this value-log block.
+                let shard = *block as u64;
                 *op = TreeOp::Verify {
                     ok,
                     rmw: *rmw,
@@ -639,6 +641,7 @@ impl Service for TreeKv {
                     // copy-out dominate the CPU side of each read.
                     extra_pre: Dur::us(2.0),
                     extra_post: Dur::us(2.3),
+                    shard,
                 }
             }
             TreeOp::Verify {
@@ -686,6 +689,8 @@ impl Service for TreeKv {
                     bytes,
                     extra_pre: Dur::ns(400.0), // write-buffer handling
                     extra_post: Dur::ns(200.0),
+                    // The appended block's device owns the write.
+                    shard: new_block as u64,
                 }
             }
             TreeOp::UpdateIndex {
@@ -883,6 +888,7 @@ impl Service for TreeKv {
                 // Batched value reads: up to SCAN_IO_BATCH records per IO.
                 let mut bytes = 0u32;
                 let mut fetched = 0usize;
+                let mut shard = 0u64;
                 while fetched < SCAN_IO_BATCH {
                     match todo.pop() {
                         Some(id) => {
@@ -897,6 +903,11 @@ impl Service for TreeKv {
                                 continue;
                             }
                             *min_next = n.digest.saturating_add(1);
+                            if fetched == 0 {
+                                // The batch IO lands on the device owning
+                                // its first record's value-log block.
+                                shard = n.block as u64;
+                            }
                             bytes += n.vsize.max(64);
                             if self.disk[n.block as usize] == n.digest {
                                 self.stats.verified += 1;
@@ -920,6 +931,7 @@ impl Service for TreeKv {
                     bytes,
                     extra_pre: Dur::us(1.0),  // batch assembly
                     extra_post: Dur::us(1.5), // record unpack + copy-out
+                    shard,
                 }
             }
             TreeOp::Unlock { lock } => {
@@ -928,13 +940,17 @@ impl Service for TreeKv {
                 Step::Unlock(l)
             }
             TreeOp::DefragRead => {
-                // Read a random old block...
+                // Read a random old block; the dead-block cursor stands in
+                // for the wipe position (deterministic: no extra RNG draw,
+                // which would shift every downstream random number).
+                let shard = self.dead_blocks;
                 *op = TreeOp::DefragWrite;
                 Step::Io {
                     kind: IoKind::Read,
                     bytes: 4096,
                     extra_pre: Dur::ns(300.0),
                     extra_post: Dur::us(1.0), // sift live entries
+                    shard,
                 }
             }
             TreeOp::DefragWrite => {
@@ -942,13 +958,14 @@ impl Service for TreeKv {
                 self.dead_blocks = self.dead_blocks.saturating_sub(2);
                 self.stats.bg_ops += 1;
                 let digest = fnv1a(rng.next_u64());
-                let _ = self.append_to_log(digest);
+                let b = self.append_to_log(digest);
                 *op = TreeOp::Finished;
                 Step::Io {
                     kind: IoKind::Write,
                     bytes: 4096,
                     extra_pre: Dur::ns(300.0),
                     extra_post: Dur::ns(200.0),
+                    shard: b as u64,
                 }
             }
             TreeOp::DefragPause => {

@@ -6,14 +6,14 @@
 //!   cxlkvs all [--fast]
 //!
 //! Experiments: fig3 fig10 fig11micro fig11kvs fig12 fig14 fig15 fig16
-//!              fig17 fig18 table6 val1404 ycsb
+//!              fig17 fig18 table6 val1404 ycsb ssdscale
 //! (The offline image has no argument-parsing crate; parsing is by hand.)
 
 use cxlkvs::coordinator::experiments::{self, ModelBackend};
 
 const EXPERIMENTS: &[&str] = &[
     "fig3", "fig10", "fig11micro", "fig11kvs", "fig12", "fig14", "fig15", "fig16", "fig17",
-    "fig18", "table6", "val1404", "ycsb",
+    "fig18", "table6", "val1404", "ycsb", "ssdscale",
 ];
 
 fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
@@ -35,6 +35,7 @@ fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
         "table6" => experiments::table6(fast).print(),
         "val1404" => experiments::val1404(backend, fast).print(),
         "ycsb" => experiments::ycsb_sweep(fast).print(),
+        "ssdscale" => experiments::ssd_scaling(backend, fast).print(),
         _ => return false,
     }
     true

@@ -142,6 +142,9 @@ impl Service for Microbench {
                     bytes: self.cfg.io_bytes,
                     extra_pre: self.cfg.extra_pre,
                     extra_post: self.cfg.extra_post,
+                    // The op's chain position doubles as its block address:
+                    // uniform across the array, no extra RNG draw.
+                    shard: op.cur as u64,
                 }
             }
             Phase::Done => Step::Done,

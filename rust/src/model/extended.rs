@@ -23,12 +23,17 @@ pub struct ExtParams {
     pub b_mem: f64,
     /// Average IO size A_IO (bytes).
     pub a_io: f64,
-    /// Max SSD bandwidth B_IO (bytes per µs).
+    /// Max SSD bandwidth B_IO (bytes per µs), **per device**.
     pub b_io: f64,
-    /// Max SSD random-access rate R_IO (IOs per µs; 2.2 MIOPS = 2.2 IO/µs).
+    /// Max SSD random-access rate R_IO (IOs per µs; 2.2 MIOPS = 2.2 IO/µs),
+    /// **per device**.
     pub r_io: f64,
     /// Average IOs per (whole) KV operation, S (§3.2.3 splits ops per IO).
     pub s: f64,
+    /// Number of devices in the SSD array: the Eq 14 floors compose with the
+    /// aggregate ceilings `Θ_ssd = n_ssd·R_IO` and `n_ssd·B_IO` (balanced
+    /// shard routing assumed; skew lowers the effective n_ssd).
+    pub n_ssd: f64,
 }
 
 impl ExtParams {
@@ -44,6 +49,7 @@ impl ExtParams {
             b_io: 10_000.0,  // 10 GB/s
             r_io: 2.2,       // 2.2 MIOPS
             s: 1.0,
+            n_ssd: 1.0,
         }
     }
 }
@@ -148,12 +154,17 @@ pub fn theta_rev_recip(op: &OpParams, l_mem: f64, ext: &ExtParams, sys: &SysPara
 }
 
 /// Eq 14 — the full extended reciprocal throughput of a *whole* KV operation
-/// with S IOs: S split-operations plus the SSD bandwidth/IOPS floors.
+/// with S IOs: S split-operations plus the SSD bandwidth/IOPS floors. The
+/// floors use the array aggregates `Θ_ssd = n_ssd·R_IO` / `n_ssd·B_IO`:
+/// SSD-bound throughput scales linearly with the array size while the
+/// CPU/memory term (`S · Θ_rev⁻¹`) is unchanged — exactly the measured
+/// behaviour of the sharded `sim::SsdArray`.
 pub fn theta_extended_recip(op: &OpParams, l_mem: f64, ext: &ExtParams, sys: &SysParams) -> f64 {
     let per_io = theta_rev_recip(op, l_mem, ext, sys);
+    let n_ssd = ext.n_ssd.max(1.0);
     let whole = ext.s * per_io;
-    let bw_floor = ext.s * ext.a_io / ext.b_io;
-    let iops_floor = ext.s / ext.r_io;
+    let bw_floor = ext.s * ext.a_io / (ext.b_io * n_ssd);
+    let iops_floor = ext.s / (ext.r_io * n_ssd);
     whole.max(bw_floor).max(iops_floor)
 }
 
@@ -261,6 +272,41 @@ mod tests {
         let a = theta_rev_recip(&op(), 0.5, &slow, &sys);
         let b = theta_rev_recip(&op(), 0.5, &fast, &sys);
         assert!(a > b * 1.2, "bandwidth floor should bite: {a} vs {b}");
+    }
+
+    #[test]
+    fn n_ssd_lifts_only_the_device_floors() {
+        let sys = sys();
+        // IOPS-bound point: 75 KIOPS per device dominates at DRAM latency.
+        let mk = |n_ssd| ExtParams {
+            r_io: 0.075,
+            b_mem: 1e12,
+            n_ssd,
+            ..ExtParams::table2_example()
+        };
+        let r1 = theta_extended_recip(&op(), 0.1, &mk(1.0), &sys);
+        let r4 = theta_extended_recip(&op(), 0.1, &mk(4.0), &sys);
+        assert!((r1 - 1.0 / 0.075).abs() < 1e-9, "1-device IOPS floor");
+        // 4 devices: the floor drops 4× (13.3 → 3.3 µs); the 8.6 µs CPU
+        // term takes over, so throughput improves but by less than 4×.
+        assert!(r4 < r1, "r1={r1} r4={r4}");
+        let cpu = theta_rev_recip(&op(), 0.1, &mk(4.0), &sys);
+        assert!((r4 - cpu.max(1.0 / (4.0 * 0.075))).abs() < 1e-9);
+        // Away from the floors, n_ssd changes nothing (latency-bound point).
+        let base1 = theta_extended_recip(&op(), 10.0, &mk(1.0), &sys);
+        let base4 = theta_extended_recip(&op(), 10.0, &mk(4.0), &sys);
+        let unbound = ExtParams {
+            b_mem: 1e12,
+            n_ssd: 8.0,
+            ..ExtParams::table2_example()
+        };
+        let fast_dev = theta_extended_recip(&op(), 10.0, &unbound, &sys);
+        assert!(base1 >= base4, "floors can only drop");
+        assert_eq!(
+            theta_extended_recip(&op(), 10.0, &ExtParams { n_ssd: 1.0, ..unbound }, &sys),
+            fast_dev,
+            "unsaturated devices: array size is invisible"
+        );
     }
 
     #[test]

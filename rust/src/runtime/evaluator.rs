@@ -157,6 +157,11 @@ impl ExtIn {
             b_io: self.b_io as f64,
             r_io: self.r_io as f64,
             s: self.s as f64,
+            // The 16-column artifact interface carries *aggregate* device
+            // rates; callers with an SSD array pre-scale b_io/r_io by n_ssd
+            // (see `ModelBackend::extended`), keeping the HLO signature
+            // stable across the multi-SSD extension.
+            n_ssd: 1.0,
         }
     }
 }

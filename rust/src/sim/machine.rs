@@ -1,5 +1,7 @@
 //! The simulated testbed machine: cores, user-level threads, prefetch queues,
-//! the CPU cache, locks, one secondary-memory device, and one SSD (array).
+//! the CPU cache, locks, one secondary-memory device, and a sharded SSD
+//! array (`n_ssd` independent devices; each `Step::Io` carries a shard
+//! route — see `sim::ssd`).
 //!
 //! This is the substitute for the paper's Xeon + FPGA-CXL + Optane testbed
 //! (DESIGN.md §2). It implements the *mechanisms* the paper's model
@@ -36,7 +38,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use super::mem::{MemConfig, MemDevice};
 use super::metrics::{CoreBreakdown, Metrics};
 use super::rng::Rng;
-use super::ssd::{IoKind, SsdConfig, SsdDevice};
+use super::ssd::{IoKind, SsdArray, SsdConfig};
 use super::time::{Dur, Time};
 
 /// Which memory a (simulated) pointer dereference goes to.
@@ -58,11 +60,15 @@ pub enum Step {
     /// One asynchronous IO. `extra_pre`/`extra_post` are CPU work attributed
     /// to the IO suboperations beyond the device's configured `t_pre`/`t_post`
     /// (the microbenchmark's +1/+2 µs variations; block parsing in KV stores).
+    /// `shard` is the placement key routing the IO to one device of the SSD
+    /// array (value-log block / SSTable id / slab hash — see `sim::ssd`);
+    /// with a single-device array every value routes to device 0.
     Io {
         kind: IoKind,
         bytes: u32,
         extra_pre: Dur,
         extra_post: Dur,
+        shard: u64,
     },
     /// Acquire a simulated lock (FIFO; blocks if held).
     Lock(u32),
@@ -198,7 +204,7 @@ pub struct Machine<S: Service> {
     pub cfg: MachineConfig,
     pub service: S,
     pub mem: MemDevice,
-    pub ssd: SsdDevice,
+    pub ssd: SsdArray,
     pub metrics: Metrics,
     threads: Vec<ThreadSlot<S::Op>>,
     cores: Vec<Core>,
@@ -251,7 +257,7 @@ impl<S: Service> Machine<S> {
         let locks = (0..cfg.n_locks).map(|_| SimLock::default()).collect();
         Machine {
             mem: MemDevice::new(cfg.mem.clone()),
-            ssd: SsdDevice::new(cfg.ssd.clone()),
+            ssd: SsdArray::new(cfg.ssd.clone()),
             metrics: Metrics::new(cfg.cores),
             threads,
             cores,
@@ -267,6 +273,10 @@ impl<S: Service> Machine<S> {
 
     /// Simulated time = max over cores (for reporting).
     pub fn now(&self) -> Time {
+        // Fast path: the dominant single-core sweeps skip the iterator.
+        if self.cores.len() == 1 {
+            return self.cores[0].time;
+        }
         self.cores.iter().map(|c| c.time).max().unwrap_or(Time::ZERO)
     }
 
@@ -293,10 +303,21 @@ impl<S: Service> Machine<S> {
     }
 
     /// Advance the simulation until every core's local clock reaches `t_end`.
+    ///
+    /// Scheduling rule (unchanged from the seed implementation): run the
+    /// runnable core with the smallest local clock (lowest index wins ties),
+    /// delivering any pending event that is strictly earlier first.
+    ///
+    /// Perf: the seed rescanned all cores before *every* slice. A slice only
+    /// mutates its own core's clock/ready queue — other cores change solely
+    /// through event delivery — so once a core is chosen it remains the
+    /// scheduler's pick until its clock crosses the cached next-best bound
+    /// or an event comes due. The inner loop below keeps running that core
+    /// with O(1) checks (one event peek) per slice and only falls back to
+    /// the O(cores) rescan when the cached choice is invalidated.
     pub fn run_until(&mut self, t_end: Time) {
         loop {
-            // Pick the entity with the smallest time: a runnable core or the
-            // earliest pending event.
+            // Rescan: earliest runnable core (lowest index wins ties).
             let mut best_core: Option<(Time, usize)> = None;
             for (i, c) in self.cores.iter().enumerate() {
                 if !c.ready.is_empty() {
@@ -307,33 +328,65 @@ impl<S: Service> Machine<S> {
                 }
             }
             let ev_time = self.events.peek().map(|Reverse((t, _, _))| *t);
-            match (best_core, ev_time) {
-                (Some((ct, ci)), Some(et)) => {
-                    if et < ct {
-                        if et >= t_end {
-                            break;
-                        }
-                        self.deliver_event();
-                    } else {
-                        if ct >= t_end {
-                            break;
-                        }
-                        self.run_slice(ci);
-                    }
-                }
-                (Some((ct, ci)), None) => {
-                    if ct >= t_end {
-                        break;
-                    }
-                    self.run_slice(ci);
-                }
+            let ci = match (best_core, ev_time) {
+                (None, None) => break, // fully quiescent
                 (None, Some(et)) => {
                     if et >= t_end {
                         break;
                     }
                     self.deliver_event();
+                    continue;
                 }
-                (None, None) => break, // fully quiescent
+                (Some((ct, ci)), et_opt) => {
+                    if let Some(et) = et_opt {
+                        if et < ct {
+                            if et >= t_end {
+                                break;
+                            }
+                            self.deliver_event();
+                            continue;
+                        }
+                    }
+                    if ct >= t_end {
+                        break;
+                    }
+                    ci
+                }
+            };
+            // Bounds under which `ci` stays the pick without rescanning:
+            // strictly below every lower-index runnable core (they win
+            // ties), at-or-below every higher-index one (we win ties).
+            // Slices on `ci` cannot change other cores' clocks or wake
+            // their threads (only events do), so the bounds stay valid for
+            // the whole inner loop.
+            let mut bound_lo = Time(u64::MAX);
+            let mut bound_hi = Time(u64::MAX);
+            for (j, c) in self.cores.iter().enumerate() {
+                if j == ci || c.ready.is_empty() {
+                    continue;
+                }
+                if j < ci {
+                    bound_lo = bound_lo.min(c.time);
+                } else {
+                    bound_hi = bound_hi.min(c.time);
+                }
+            }
+            self.run_slice(ci);
+            loop {
+                let c = &self.cores[ci];
+                if c.ready.is_empty() {
+                    break;
+                }
+                let ct = c.time;
+                if ct >= t_end || ct >= bound_lo || ct > bound_hi {
+                    break;
+                }
+                if let Some(Reverse((et, _, _))) = self.events.peek() {
+                    if *et < ct {
+                        break;
+                    }
+                }
+                self.run_slice(ci);
             }
         }
     }
@@ -483,13 +536,14 @@ impl<S: Service> Machine<S> {
                     bytes,
                     extra_pre,
                     extra_post,
+                    shard,
                 } => {
                     let t_pre = self.scaled(self.cfg.ssd.t_pre + extra_pre);
                     let core = &mut self.cores[core_id];
                     core.time += t_pre;
                     core.breakdown.busy += t_pre;
                     let submit = core.time;
-                    let completion = self.ssd.submit(submit, kind, bytes, &mut self.rng);
+                    let completion = self.ssd.submit(submit, shard, kind, bytes, &mut self.rng);
                     // Yield: T_sw, block until completion.
                     let core = &mut self.cores[core_id];
                     core.time += self.cfg.t_sw;
@@ -597,7 +651,7 @@ pub struct RunStats {
 }
 
 impl RunStats {
-    fn from_metrics(m: &Metrics, window: Dur, _mem: &MemDevice, ssd: &SsdDevice) -> RunStats {
+    fn from_metrics(m: &Metrics, window: Dur, _mem: &MemDevice, ssd: &SsdArray) -> RunStats {
         let ops = m.ops;
         let secs = window.as_secs();
         RunStats {
@@ -628,9 +682,9 @@ impl RunStats {
             },
             load_wait_mean: m.load_wait.mean(),
             load_wait_p99: m.load_wait.quantile(0.99),
-            io_reads: ssd.reads,
-            io_writes: ssd.writes,
-            io_bytes: ssd.bytes,
+            io_reads: ssd.reads(),
+            io_writes: ssd.writes(),
+            io_bytes: ssd.bytes(),
             lock_contention: if m.lock_acquires > 0 {
                 m.lock_contended as f64 / m.lock_acquires as f64
             } else {
@@ -687,6 +741,7 @@ mod tests {
                     bytes: 1536,
                     extra_pre: Dur::ZERO,
                     extra_post: Dur::ZERO,
+                    shard: 0,
                 };
             }
             Step::Done

@@ -18,5 +18,5 @@ pub use machine::{Machine, MachineConfig, RunStats, Service, Step, Tier};
 pub use mem::{MemConfig, MemDevice, TailProfile};
 pub use metrics::{CoreBreakdown, Metrics};
 pub use rng::Rng;
-pub use ssd::{IoKind, SsdConfig, SsdDevice};
+pub use ssd::{IoKind, SsdArray, SsdConfig, SsdDevice};
 pub use time::{Dur, Time};

@@ -8,6 +8,20 @@
 //! (see `machine.rs`); this module models the device side: latency plus
 //! three servers enforcing the Table 2 limits — queue depth, bandwidth
 //! `B_IO` (bytes/sec), and random-access rate `R_IO` (IOPS).
+//!
+//! ## Multi-SSD sharding
+//!
+//! [`SsdArray`] composes `n_ssd` independent [`SsdDevice`]s, each with its
+//! own queue-depth/IOPS/bandwidth servers (per-device submission queue).
+//! Every `Step::Io` carries a **shard route** — a stable placement key the
+//! store derives from what it is reading/writing (treekv: value-log block,
+//! lsmkv: SSTable block id, cachekv: SOC slab hash) — and the array maps it
+//! to a device with `shard % n_ssd`. The aggregate ceilings therefore scale
+//! as `Θ_ssd = n_ssd · R_IO` and `n_ssd · B_IO` (the Eq 14 floors composed
+//! with the array term), while a skewed route distribution exposes
+//! per-device hotspots exactly like a real array. With `n_ssd = 1` every
+//! route maps to device 0 and the array is bit-identical to the former
+//! single-device path (same servers, same jitter RNG draw order).
 
 use super::rng::Rng;
 use super::time::{Dur, Time};
@@ -24,9 +38,9 @@ pub struct SsdConfig {
     pub read_latency: Dur,
     /// Device write latency (writes land in the device buffer; Optane-class).
     pub write_latency: Dur,
-    /// Max sustained bandwidth in bytes/sec (aggregate over the array).
+    /// Max sustained bandwidth in bytes/sec, per device.
     pub bandwidth_bps: f64,
-    /// Max random-access rate in IO/sec (aggregate).
+    /// Max random-access rate in IO/sec, per device.
     pub iops: f64,
     /// Device queue depth (in-flight IOs beyond this wait in the submission queue).
     pub queue_depth: u32,
@@ -39,6 +53,10 @@ pub struct SsdConfig {
     /// a perfectly deterministic device can lock threads into the Fig 7(a)
     /// aligned pattern.
     pub jitter_frac: f64,
+    /// Number of independent devices in the array. The latency / bandwidth /
+    /// IOPS / queue-depth fields above are **per device**; [`SsdArray`]
+    /// instantiates `n_ssd` of them and routes each IO by its shard key.
+    pub n_ssd: u32,
 }
 
 impl SsdConfig {
@@ -54,6 +72,7 @@ impl SsdConfig {
             t_pre: Dur::us(1.5),
             t_post: Dur::us(0.2),
             jitter_frac: 0.15,
+            n_ssd: 1,
         }
     }
 
@@ -77,12 +96,19 @@ impl SsdConfig {
             t_pre: Dur::us(1.5),
             t_post: Dur::us(0.2),
             jitter_frac: 0.3,
+            n_ssd: 1,
         }
     }
 
     pub fn with_latency(mut self, d: Dur) -> SsdConfig {
         self.read_latency = d;
         self.write_latency = d;
+        self
+    }
+
+    /// Set the array size (per-device limits stay as configured).
+    pub fn with_n_ssd(mut self, n: u32) -> SsdConfig {
+        self.n_ssd = n.max(1);
         self
     }
 }
@@ -177,6 +203,74 @@ impl SsdDevice {
         self.reads = 0;
         self.writes = 0;
         self.bytes = 0;
+    }
+}
+
+/// A sharded array of `n_ssd` independent devices (see the module docs).
+///
+/// Each device keeps its own latency/queue-depth/IOPS/bandwidth servers and
+/// its own submission queue; the array only routes. Stats are aggregated on
+/// demand so `RunStats` stays device-count agnostic, while
+/// [`SsdArray::per_device_ios`] exposes the balance for skew analysis.
+#[derive(Debug, Clone)]
+pub struct SsdArray {
+    pub cfg: SsdConfig,
+    devices: Vec<SsdDevice>,
+}
+
+impl SsdArray {
+    pub fn new(cfg: SsdConfig) -> SsdArray {
+        let n = cfg.n_ssd.max(1) as usize;
+        let devices = (0..n).map(|_| SsdDevice::new(cfg.clone())).collect();
+        SsdArray { cfg, devices }
+    }
+
+    #[inline]
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Device owning a shard route (stable: pure function of the route).
+    #[inline]
+    pub fn device_of(&self, shard: u64) -> usize {
+        (shard % self.devices.len() as u64) as usize
+    }
+
+    /// Submit one IO routed by `shard`; returns its completion time.
+    #[inline]
+    pub fn submit(
+        &mut self,
+        submit: Time,
+        shard: u64,
+        kind: IoKind,
+        bytes: u32,
+        rng: &mut Rng,
+    ) -> Time {
+        let d = self.device_of(shard);
+        self.devices[d].submit(submit, kind, bytes, rng)
+    }
+
+    pub fn reads(&self) -> u64 {
+        self.devices.iter().map(|d| d.reads).sum()
+    }
+
+    pub fn writes(&self) -> u64 {
+        self.devices.iter().map(|d| d.writes).sum()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.devices.iter().map(|d| d.bytes).sum()
+    }
+
+    /// Per-device total IO counts (reads + writes), for balance reporting.
+    pub fn per_device_ios(&self) -> Vec<u64> {
+        self.devices.iter().map(|d| d.reads + d.writes).collect()
+    }
+
+    pub fn reset_stats(&mut self) {
+        for d in &mut self.devices {
+            d.reset_stats();
+        }
     }
 }
 
@@ -282,5 +376,94 @@ mod tests {
         d.submit(Time::ZERO, IoKind::Write, 2048, &mut rng);
         assert_eq!(d.writes, 1);
         assert_eq!(d.bytes, 2048);
+    }
+
+    #[test]
+    fn array_n1_is_bit_identical_to_single_device() {
+        // Determinism guard: with n_ssd = 1 the array must reproduce the
+        // bare device's completion times exactly, whatever the shard route.
+        let cfg = SsdConfig::optane_array(); // jittered: exercises the RNG path
+        let mut dev = SsdDevice::new(cfg.clone());
+        let mut arr = SsdArray::new(cfg);
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        for i in 0..5_000u64 {
+            let t = Time::ZERO + Dur::ns(730.0) * i;
+            let kind = if i % 3 == 0 { IoKind::Write } else { IoKind::Read };
+            let a = dev.submit(t, kind, 1536, &mut r1);
+            let b = arr.submit(t, i.wrapping_mul(0x9e37), kind, 1536, &mut r2);
+            assert_eq!(a, b, "io {i}");
+        }
+        assert_eq!(dev.reads, arr.reads());
+        assert_eq!(dev.writes, arr.writes());
+        assert_eq!(dev.bytes, arr.bytes());
+    }
+
+    #[test]
+    fn array_aggregate_iops_scales_with_n_ssd() {
+        // IO-only service at the device level: per-device 1 MIOPS command
+        // rate means n devices drain n× as fast when routes are balanced.
+        let run = |n_ssd: u32| {
+            let cfg = SsdConfig {
+                iops: 1e6,
+                bandwidth_bps: f64::INFINITY,
+                jitter_frac: 0.0,
+                queue_depth: u32::MAX,
+                n_ssd,
+                ..SsdConfig::optane_array()
+            };
+            let mut arr = SsdArray::new(cfg);
+            let mut rng = Rng::new(3);
+            let mut last = Time::ZERO;
+            for i in 0..80_000u64 {
+                last = last.max(arr.submit(Time::ZERO, i, IoKind::Read, 512, &mut rng));
+            }
+            last.as_secs()
+        };
+        let t1 = run(1);
+        let t4 = run(4);
+        let t8 = run(8);
+        assert!(
+            (t1 / t4 - 4.0).abs() < 0.05,
+            "4-device drain speedup {} != ~4",
+            t1 / t4
+        );
+        assert!(
+            (t1 / t8 - 8.0).abs() < 0.1,
+            "8-device drain speedup {} != ~8",
+            t1 / t8
+        );
+    }
+
+    #[test]
+    fn array_routing_is_stable_and_spreads() {
+        let arr = SsdArray::new(SsdConfig::optane_array().with_n_ssd(4));
+        assert_eq!(arr.n_devices(), 4);
+        let mut seen = [false; 4];
+        for shard in 0..64u64 {
+            let d = arr.device_of(shard);
+            assert_eq!(d, arr.device_of(shard), "route must be stable");
+            seen[d] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all devices reachable");
+    }
+
+    #[test]
+    fn array_skewed_routes_pile_onto_one_device() {
+        // All shards equal: one device serves everything — the array models
+        // placement skew rather than silently load-balancing.
+        let cfg = SsdConfig {
+            jitter_frac: 0.0,
+            n_ssd: 4,
+            ..SsdConfig::optane_array()
+        };
+        let mut arr = SsdArray::new(cfg);
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            arr.submit(Time::ZERO, 42, IoKind::Read, 512, &mut rng);
+        }
+        let per = arr.per_device_ios();
+        assert_eq!(per.iter().sum::<u64>(), 100);
+        assert_eq!(per[2], 100, "shard 42 % 4 = 2 owns every IO");
     }
 }

@@ -1,0 +1,30 @@
+//! Smoke coverage for the wall-clock bench harness: a miniature fixed sweep
+//! must produce sane numbers, and — like the YCSB golden — the result
+//! self-bootstraps `BENCH_sim.json` at the workspace root when the file is
+//! absent, so every toolchain run leaves a perf measurement behind even
+//! where `cargo bench` is never invoked. A committed/existing file is left
+//! untouched (regenerate with `cargo bench --bench bench_sim`).
+
+use cxlkvs::coordinator::bench::{run_fixed_sweep, BenchResult};
+
+#[test]
+fn bench_harness_runs_and_bootstraps_json() {
+    // Tiny windows: this runs in debug mode under `cargo test`.
+    let r = run_fixed_sweep(2.0);
+    assert_eq!(r.points, 16, "fixed sweep is 8 latencies x 2 array sizes");
+    assert!(r.sim_ops > 1_000, "sim produced ops: {}", r.sim_ops);
+    assert!(r.wall_secs > 0.0 && r.points_per_sec > 0.0);
+    assert!(r.sim_ops_per_wall_sec > 0.0);
+
+    let json = r.to_json();
+    assert!(json.contains("\"points\": 16"), "json: {json}");
+
+    let path = BenchResult::default_path();
+    if !path.exists() {
+        r.write_json().expect("bootstrap BENCH_sim.json");
+        eprintln!(
+            "bench_smoke: wrote {path:?} (smoke-sized windows) — regenerate \
+             with `cargo bench --bench bench_sim` for comparable numbers"
+        );
+    }
+}

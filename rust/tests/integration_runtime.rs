@@ -143,6 +143,7 @@ fn pjrt_extended_matches_native_model() {
             b_io: 10_000.0,
             r_io: 2.2,
             s: 1.0,
+            n_ssd: 1.0,
         };
         let native_rev = theta_rev_recip(&op, *l as f64, &ext, &sys);
         let native_ext = theta_extended_recip(&op, *l as f64, &ext, &sys);

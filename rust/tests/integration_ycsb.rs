@@ -241,6 +241,17 @@ fn ycsb_golden_points_are_pinned() {
         .map(|v| v == "1")
         .unwrap_or(false);
     if update || !path.exists() {
+        // CXLKVS_REQUIRE_GOLDEN=1 turns the bootstrap into a hard failure:
+        // set it in CI once the artifact is committed so a deleted/ignored
+        // snapshot can't silently revert the suite to bootstrap-only mode.
+        let require = std::env::var("CXLKVS_REQUIRE_GOLDEN")
+            .map(|v| v == "1")
+            .unwrap_or(false);
+        assert!(
+            update || !require,
+            "CXLKVS_REQUIRE_GOLDEN=1 but {path:?} is missing — restore the \
+             committed snapshot or regenerate with CXLKVS_UPDATE_GOLDEN=1"
+        );
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(path, &text).unwrap();
         eprintln!(
