@@ -1,0 +1,30 @@
+//! Θ_scan model validation: sweep L_mem × YCSB workload × store and report
+//! the per-kind analytic model's prediction against the simulator.
+//!
+//! This is the machine-checked version of the repo's central claim — "the
+//! model explains the simulator" — extended to the **full operation
+//! surface**: range scans (workload E) batch `SCAN_IO_BATCH` records per IO
+//! and multiply both M and S per operation, which the single-Θ Eq 14 cannot
+//! express. The per-kind cost vectors (`model::KindCost`) and the mixed
+//! combinator (`model::theta_mix_recip`) close that gap; each store derives
+//! its vectors from its actual geometry via `kvs::ModelCosts`.
+//!
+//! The same sweep gates CI (`cxlkvs run modelcheck --fast` exits non-zero
+//! on drift) and is enforced as a test suite in `rust/tests/model_vs_sim.rs`.
+//!
+//! Run: `cargo run --release --example model_validation` (CXLKVS_FAST=1 for
+//! the pruned grid)
+
+use cxlkvs::coordinator::experiments::modelcheck;
+use cxlkvs::coordinator::runner::fast_mode;
+
+fn main() {
+    let (report, ok) = modelcheck(fast_mode());
+    report.print();
+    println!("(sim_norm / model_norm: throughput relative to the same store/workload");
+    println!(" at DRAM latency, measured vs predicted from the DRAM-point snapshot)");
+    if !ok {
+        eprintln!("model-vs-simulator drift exceeded the documented tolerance");
+        std::process::exit(1);
+    }
+}

@@ -3,8 +3,9 @@
 //! paper's per-point optimization ("for each latency, we optimize the number
 //! of threads"). Points run in parallel across host threads.
 
-use crate::kvs::{CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, TreeKv, TreeKvConfig};
+use crate::kvs::{model_mix, CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, TreeKv, TreeKvConfig};
 use crate::microbench::{Microbench, MicrobenchConfig};
+use crate::model::{ExtParams, KindCost};
 use crate::sim::{Dur, Machine, MachineConfig, MemConfig, Rng, RunStats, SsdConfig, TailProfile};
 use crate::workload::YcsbWorkload;
 
@@ -107,6 +108,30 @@ impl SweepCfg {
         }
     }
 
+    /// The extended-model parameters matching this sweep's machine: device
+    /// rates converted to the model's per-µs units, the array size, and the
+    /// memory-bandwidth cap when one is set. `a_io`/`s` are per-kind in the
+    /// Θ_scan model, so the defaults here are placeholders overridden by
+    /// each `KindCost`.
+    pub fn ext_params(&self) -> ExtParams {
+        ExtParams {
+            rho: 1.0,
+            l_dram: 0.09,
+            eps: 0.0,
+            a_mem: 64.0,
+            b_mem: if self.mem_bandwidth.is_finite() {
+                self.mem_bandwidth / 1e6
+            } else {
+                1e12
+            },
+            a_io: 1536.0,
+            b_io: self.ssd.bandwidth_bps / 1e6,
+            r_io: self.ssd.iops / 1e6,
+            s: 1.0,
+            n_ssd: self.n_ssd.max(1) as f64,
+        }
+    }
+
     /// The paper's latency grid (§4.1.2), DRAM first for normalization.
     pub fn latency_grid() -> Vec<f64> {
         vec![0.1, 0.3, 0.5, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]
@@ -174,28 +199,50 @@ pub fn ycsb_cache_cfg(wl: YcsbWorkload) -> CacheKvConfig {
     }
 }
 
-/// Run one store under one YCSB preset at one sweep point.
+/// Run one store under one YCSB preset at one sweep point. Delegates to
+/// [`run_store_ycsb_snap`] (same seeds, same stores) and drops the model
+/// snapshot — the two must never drift apart.
 pub fn run_store_ycsb(
     kind: StoreKind,
     wl: YcsbWorkload,
     sweep: &SweepCfg,
     threads: usize,
 ) -> RunStats {
+    run_store_ycsb_snap(kind, wl, sweep, threads).0
+}
+
+/// Run one store under one YCSB preset and additionally return the store's
+/// **post-run** per-kind model snapshot: `(workload fraction, KindCost)`
+/// pairs ready for `model::theta_mix_recip`. Snapshotting after the run
+/// lets hit-ratio-dependent kinds use measured counters (the paper's
+/// treatment of measured system parameters like ε).
+pub fn run_store_ycsb_snap(
+    kind: StoreKind,
+    wl: YcsbWorkload,
+    sweep: &SweepCfg,
+    threads: usize,
+) -> (RunStats, Vec<(f64, KindCost)>) {
     let mcfg = sweep.machine(threads);
     let mut rng = Rng::new(sweep.seed ^ 0xfeed ^ wl.tag().as_bytes()[0] as u64);
+    let w = wl.weights();
     match kind {
         StoreKind::Tree => {
-            let kv = TreeKv::new(ycsb_tree_cfg(wl), &mut rng)
-                .with_background(mcfg.cores, threads);
-            Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
+            let kv = TreeKv::new(ycsb_tree_cfg(wl), &mut rng).with_background(mcfg.cores, threads);
+            let mut m = Machine::new(mcfg, kv);
+            let st = m.run(sweep.warmup, sweep.window);
+            (st, model_mix(&m.service, &w))
         }
         StoreKind::Lsm => {
             let kv = LsmKv::new(ycsb_lsm_cfg(wl), &mut rng).with_background(threads);
-            Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
+            let mut m = Machine::new(mcfg, kv);
+            let st = m.run(sweep.warmup, sweep.window);
+            (st, model_mix(&m.service, &w))
         }
         StoreKind::Cache => {
             let kv = CacheKv::new(ycsb_cache_cfg(wl), &mut rng);
-            Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
+            let mut m = Machine::new(mcfg, kv);
+            let st = m.run(sweep.warmup, sweep.window);
+            (st, model_mix(&m.service, &w))
         }
     }
 }
@@ -230,20 +277,32 @@ pub fn run_microbench(cfg: &MicrobenchConfig, sweep: &SweepCfg, threads: usize) 
     Machine::new(mcfg, mb).run(sweep.warmup, sweep.window)
 }
 
-/// Try all thread candidates, return (best_threads, best_stats).
-pub fn best_threads<F>(candidates: &[usize], mut run: F) -> (usize, RunStats)
+/// Try all thread candidates with an arbitrary per-run result, returning
+/// the first maximum of `score` (ties keep the earlier candidate). The one
+/// selection rule every sweep shares — generic so callers that carry extra
+/// payload (e.g. model snapshots) cannot drift from [`best_threads`].
+pub fn best_threads_by<T, F, S>(candidates: &[usize], mut run: F, score: S) -> (usize, T)
 where
-    F: FnMut(usize) -> RunStats,
+    F: FnMut(usize) -> T,
+    S: Fn(&T) -> f64,
 {
-    let mut best: Option<(usize, RunStats)> = None;
+    let mut best: Option<(usize, T)> = None;
     for &n in candidates {
-        let st = run(n);
+        let r = run(n);
         match &best {
-            Some((_, b)) if b.ops_per_sec >= st.ops_per_sec => {}
-            _ => best = Some((n, st)),
+            Some((_, b)) if score(b) >= score(&r) => {}
+            _ => best = Some((n, r)),
         }
     }
     best.expect("no thread candidates")
+}
+
+/// Try all thread candidates, return (best_threads, best_stats).
+pub fn best_threads<F>(candidates: &[usize], run: F) -> (usize, RunStats)
+where
+    F: FnMut(usize) -> RunStats,
+{
+    best_threads_by(candidates, run, |st| st.ops_per_sec)
 }
 
 /// Run `jobs` closures in parallel on host threads (sweep points are

@@ -29,8 +29,19 @@
 //!   report the store as degenerate rather than silently misbehaving.
 
 use super::common::{fnv1a, KvStats, NIL};
+use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
 use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ValueSize};
+
+/// Store-extra CPU attributed to tier-2 page IO pre/post suboperations
+/// (µs). **Single source** for both the `Step::Io` sites below (`T2Read`,
+/// `SocWrite`) and the model snapshots: page index + offset math before a
+/// read, page scan + item copy + admit after it; buffered enqueue around a
+/// write.
+const PAGE_READ_EXTRA_PRE_US: f64 = 1.0;
+const PAGE_READ_EXTRA_POST_US: f64 = 2.0;
+const PAGE_WRITE_EXTRA_PRE_US: f64 = 0.5;
+const PAGE_WRITE_EXTRA_POST_US: f64 = 0.3;
 
 #[derive(Debug, Clone)]
 pub struct CacheKvConfig {
@@ -449,7 +460,9 @@ impl Service for CacheKv {
                 let k = *key;
                 let kd = *kind;
                 if id == NIL {
-                    // Tier-1 miss.
+                    // Tier-1 miss (counted for every kind — see
+                    // KvStats::t1_probes).
+                    self.stats.t1_probes += 1;
                     match kd {
                         OpKind::Read | OpKind::Rmw => {
                             if self.t2_set.contains_key(&k) {
@@ -480,6 +493,7 @@ impl Service for CacheKv {
                     // write half).
                     self.stats.hits += 1;
                     self.stats.t1_hits += 1;
+                    self.stats.t1_probes += 1;
                     if rng.chance(self.cfg.lru_refresh_prob) || kd != OpKind::Read {
                         *op = CacheOp::Refresh { key: k, hops: 0 };
                         // Neighbor reads happen unlocked; only the final
@@ -538,8 +552,9 @@ impl Service for CacheKv {
                 Step::Io {
                     kind: IoKind::Read,
                     bytes: self.cfg.page_bytes,
-                    extra_pre: Dur::us(1.0),  // page index + offset math
-                    extra_post: Dur::us(2.0), // page scan + item copy + admit
+                    // See PAGE_READ_EXTRA_* above.
+                    extra_pre: Dur::us(PAGE_READ_EXTRA_PRE_US),
+                    extra_post: Dur::us(PAGE_READ_EXTRA_POST_US),
                     // The key's SOC slab hash picks the owning device.
                     shard: fnv1a(k),
                 }
@@ -601,8 +616,8 @@ impl Service for CacheKv {
                 Step::Io {
                     kind: IoKind::Write,
                     bytes: self.cfg.page_bytes,
-                    extra_pre: Dur::ns(500.0),
-                    extra_post: Dur::ns(300.0),
+                    extra_pre: Dur::us(PAGE_WRITE_EXTRA_PRE_US),
+                    extra_post: Dur::us(PAGE_WRITE_EXTRA_POST_US),
                     shard: s,
                 }
             }
@@ -674,6 +689,160 @@ impl CacheKv {
     /// (Kept as an explicit helper for the flush-queue extension.)
     pub fn soc_write_bytes(&self) -> u32 {
         self.cfg.page_bytes
+    }
+}
+
+// ---- Θ_scan model-parameter snapshots (kvs::ModelCosts) -------------------
+
+/// Device-base (the `SsdConfig` defaults, 1.5/0.2) plus the *same* SOC
+/// page extras the `Step::Io` sites charge.
+const IO_PAGE_READ_PRE: f64 = 1.5 + PAGE_READ_EXTRA_PRE_US;
+const IO_PAGE_READ_POST: f64 = 0.2 + PAGE_READ_EXTRA_POST_US;
+const IO_PAGE_WRITE_PRE: f64 = 1.5 + PAGE_WRITE_EXTRA_PRE_US;
+const IO_PAGE_WRITE_POST: f64 = 0.2 + PAGE_WRITE_EXTRA_POST_US;
+/// Host-DRAM access latency assumed by the snapshots (the machine default).
+const DRAM_US: f64 = 0.09;
+
+impl CacheKv {
+    /// Replicate the `Lookup` chain-access charging for one key: a hit
+    /// costs its 1-based chain position, a miss the full chain length (the
+    /// bucket-array read itself is DRAM).
+    fn probe_lookup(&self, key: u64) -> (bool, f64) {
+        let mut cur = self.buckets[self.bucket_of(key)];
+        let mut acc = 0.0;
+        while cur != NIL {
+            let it = &self.items[cur as usize];
+            acc += 1.0;
+            if it.live && it.key == key {
+                return (true, acc);
+            }
+            cur = it.hash_next;
+        }
+        (false, acc)
+    }
+
+    /// Deterministic structural probe over a key stride: average chain cost
+    /// of tier-1 hits and misses, plus the structural tier-1 residency.
+    fn probe_chains(&self) -> (f64, f64, f64) {
+        let n = self.cfg.n_items.max(1);
+        let step = (n / 2048).max(1);
+        let (mut hit_acc, mut miss_acc) = (0.0f64, 0.0f64);
+        let (mut hits, mut misses) = (0u64, 0u64);
+        let mut key = 0u64;
+        while key < n {
+            let (found, acc) = self.probe_lookup(key);
+            if found {
+                hits += 1;
+                hit_acc += acc;
+            } else {
+                misses += 1;
+                miss_acc += acc;
+            }
+            key += step;
+        }
+        (
+            hit_acc / hits.max(1) as f64,
+            miss_acc / misses.max(1) as f64,
+            hits as f64 / (hits + misses).max(1) as f64,
+        )
+    }
+
+    /// Snapshot tier hit ratios `(h1, h2 | t1-miss)`: measured counters when
+    /// a run has populated them, else structural residency (an access-share
+    /// underestimate for skewed key distributions on a cold store). `h1`
+    /// uses the `t1_probes` denominator — hit-or-miss of **any** kind — so
+    /// write-path misses (which the hit/miss counters never see) cannot
+    /// bias it high.
+    fn snapshot_hit_ratios(&self, structural_h1: f64) -> (f64, f64) {
+        let h1 = if self.stats.t1_probes > 0 {
+            (self.stats.t1_hits as f64 / self.stats.t1_probes as f64).clamp(0.0, 1.0)
+        } else {
+            structural_h1
+        };
+        // Only the read paths consult tier 2, so its counters are unbiased.
+        let t1_miss = self.stats.t2_hits + self.stats.misses;
+        let h2 = if t1_miss > 0 {
+            (self.stats.t2_hits as f64 / t1_miss as f64).clamp(0.0, 1.0)
+        } else {
+            (self.t2_set.len() as f64 / self.cfg.n_items.max(1) as f64).clamp(0.0, 1.0)
+        };
+        (h1, h2)
+    }
+}
+
+impl super::ModelCosts for CacheKv {
+    /// Per-kind cost vectors from the live two-tier geometry: tier-1 chain
+    /// positions from the actual bucket occupancy, measured tier hit
+    /// ratios, the LRU refresh probability, and the tier-2 admission
+    /// probability that turns evictions into SOC page writes. Scans are the
+    /// documented no-op (hash layout has no ordered iteration): one API
+    /// call of compute, no hops, no IO.
+    fn model_params(&self, kind: OpKind) -> KindCost {
+        let t_mem = self.cfg.t_node.as_us();
+        // The no-op scan needs no structure probe.
+        if kind == OpKind::Scan {
+            return KindCost::memory_only(0.0, t_mem, t_mem);
+        }
+        let (hit_pos, miss_chain, structural_h1) = self.probe_chains();
+        let (h1, h2) = self.snapshot_hit_ratios(structural_h1);
+        // Tier-1 is at capacity after warmup; a partial fill evicts less.
+        let p_evict = (self.t1_len as f64 / self.cfg.t1_items.max(1) as f64).clamp(0.0, 1.0);
+        let admit = self.cfg.t2_admit_prob * p_evict;
+        // Insert path: 4 unlocked eviction-candidate walk accesses.
+        let miss_m = miss_chain + 4.0;
+        match kind {
+            OpKind::Read | OpKind::Rmw => {
+                let p_refresh = if kind == OpKind::Rmw {
+                    1.0 // the write half always splices
+                } else {
+                    self.cfg.lru_refresh_prob
+                };
+                let m = h1 * (hit_pos + p_refresh) + (1.0 - h1) * miss_m;
+                // IOs: tier-2 page read on a t1-miss hit, plus the admitted
+                // eviction's page write behind every tier-1 insert.
+                let rd = (1.0 - h1) * h2;
+                let wr = (1.0 - h1) * admit;
+                let s = rd + wr;
+                let (t_pre, t_post) = if s > 0.0 {
+                    (
+                        (rd * IO_PAGE_READ_PRE + wr * IO_PAGE_WRITE_PRE) / s,
+                        (rd * IO_PAGE_READ_POST + wr * IO_PAGE_WRITE_POST) / s,
+                    )
+                } else {
+                    (IO_PAGE_READ_PRE, IO_PAGE_READ_POST)
+                };
+                KindCost {
+                    m,
+                    s,
+                    a_io: self.cfg.page_bytes as f64,
+                    t_mem,
+                    t_pre,
+                    t_post,
+                    // Bucket-array read + the backend fetch on a double miss.
+                    t_fixed: DRAM_US + (1.0 - h1) * (1.0 - h2) * 2.0,
+                }
+            }
+            OpKind::Write => {
+                // Hit: update-in-place (splice always). Miss: fresh insert.
+                let m = h1 * (hit_pos + 1.0) + (1.0 - h1) * miss_m;
+                KindCost {
+                    m,
+                    s: (1.0 - h1) * admit,
+                    a_io: self.cfg.page_bytes as f64,
+                    t_mem,
+                    t_pre: IO_PAGE_WRITE_PRE,
+                    t_post: IO_PAGE_WRITE_POST,
+                    t_fixed: DRAM_US,
+                }
+            }
+            OpKind::Delete => KindCost::memory_only(
+                h1 * hit_pos + (1.0 - h1) * miss_chain,
+                t_mem,
+                DRAM_US + t_mem,
+            ),
+            // Handled by the early return above.
+            OpKind::Scan => unreachable!(),
+        }
     }
 }
 
@@ -922,5 +1091,27 @@ mod tests {
         assert_eq!(kv.stats.scans, 1);
         assert_eq!(kv.stats.scanned, 0, "no entries are ever returned");
         assert_eq!((mems, reads, writes), (0, 0, 0), "no accesses, no IO");
+    }
+
+    #[test]
+    fn model_params_track_two_tier_geometry() {
+        use super::super::ModelCosts;
+        let mut rng = Rng::new(23);
+        let kv = CacheKv::new(small_cfg(), &mut rng);
+        let read = kv.model_params(OpKind::Read);
+        // Misses cost page reads plus admitted-eviction page writes: S can
+        // exceed the t2 hit share but stays below read+write per miss.
+        assert!(read.s > 0.0 && read.s < 2.0, "S_read = {}", read.s);
+        assert!(read.m > 0.5 && read.m < 12.0, "M_read = {}", read.m);
+        assert!(read.t_fixed > 0.0);
+        // The no-op scan has no hops and no IO but still costs the API call.
+        let scan = kv.model_params(OpKind::Scan);
+        assert_eq!((scan.m, scan.s), (0.0, 0.0));
+        assert!(scan.t_fixed > 0.0);
+        // Deletes are invalidations: chain walk only.
+        assert_eq!(kv.model_params(OpKind::Delete).s, 0.0);
+        // The RMW write-half splices unconditionally: more hops than a read.
+        let rmw = kv.model_params(OpKind::Rmw);
+        assert!(rmw.m > read.m);
     }
 }

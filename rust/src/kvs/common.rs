@@ -61,6 +61,11 @@ pub struct KvStats {
     /// Tier-specific hit counters (cachekv).
     pub t1_hits: u64,
     pub t2_hits: u64,
+    /// Tier-1 lookups resolved (hit or miss, **any** operation kind) —
+    /// the unbiased denominator for the measured tier-1 hit ratio:
+    /// `hits`/`misses` alone skew it because write-path hits count while
+    /// write-path misses do not.
+    pub t1_probes: u64,
     /// Background work performed.
     pub bg_ops: u64,
 }

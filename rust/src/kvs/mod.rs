@@ -42,3 +42,41 @@ pub use cachekv::{CacheKv, CacheKvConfig};
 pub use common::{drive_op, fnv1a, KvStats};
 pub use lsmkv::{LsmKv, LsmKvConfig};
 pub use treekv::{TieringPolicy, TreeKv, TreeKvConfig, SCAN_IO_BATCH};
+
+use crate::model::KindCost;
+use crate::workload::{OpKind, OpWeights};
+
+/// Per-operation-kind model-parameter snapshots (the Θ_scan extension's
+/// store-side half): each store derives a [`KindCost`] vector for every
+/// operation kind from its **actual geometry** — sprig depth, chain
+/// lengths, block fanout, measured hit ratios — so the coordinator can run
+/// predicted-vs-simulated columns without hand-tuned per-store constants.
+///
+/// Snapshots are read-only and deterministic given the store's current
+/// structural state. Hit-ratio-dependent kinds (lsmkv/cachekv reads) prefer
+/// the store's measured counters when a run has populated them — the
+/// paper's methodology for measured system parameters like ε — and fall
+/// back to documented structural estimates on a cold store.
+pub trait ModelCosts {
+    fn model_params(&self, kind: OpKind) -> KindCost;
+}
+
+/// The `(fraction, KindCost)` mix for an [`OpWeights`] workload over a
+/// store's snapshots — the input to `model::theta_mix_recip`. Kinds with
+/// zero mass are omitted (an all-zero mix yields an empty vector, which the
+/// combinator defines as zero work).
+///
+/// Each `model_params` call re-probes the store's structure (a few
+/// thousand pointer hops, microseconds) — deliberately not cached across
+/// kinds: every caller snapshots right after a multi-millisecond simulator
+/// run, where a probe-once bulk API would complicate the trait for no
+/// measurable win.
+pub fn model_mix<S: ModelCosts + ?Sized>(store: &S, w: &OpWeights) -> Vec<(f64, KindCost)> {
+    OpKind::ALL
+        .iter()
+        .filter_map(|&k| {
+            let f = w.fraction(k);
+            (f > 0.0).then(|| (f, store.model_params(k)))
+        })
+        .collect()
+}

@@ -43,11 +43,25 @@
 //! even when slots are recycled mid-scan.
 
 use super::common::{fnv1a, KvStats, NIL};
+use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
 use crate::workload::{KeyGen, OpKind, OpMix, OpWeights, ScanLen, ValueSize};
 
 /// Records fetched per scan value-read IO (Aerospike batches record reads).
 pub const SCAN_IO_BATCH: usize = 8;
+
+/// Store-extra CPU attributed to each IO kind's pre/post suboperations
+/// (µs). **Single source** for both the `Step::Io` sites below and the
+/// model snapshots (`ModelCosts`), so the model cannot drift from the
+/// simulated costs. Calibrated to the paper's measured Aerospike times:
+/// record-lookup bookkeeping, rbuffer management, and copy-out dominate
+/// the CPU side of each read; batch assembly and record unpack the scans.
+const READ_EXTRA_PRE_US: f64 = 2.0;
+const READ_EXTRA_POST_US: f64 = 2.3;
+const WRITE_EXTRA_PRE_US: f64 = 0.4; // write-buffer handling
+const WRITE_EXTRA_POST_US: f64 = 0.2;
+const SCAN_EXTRA_PRE_US: f64 = 1.0; // batch assembly
+const SCAN_EXTRA_POST_US: f64 = 1.5; // record unpack + copy-out
 
 /// One 64-byte index entry (Aerospike's as_index).
 #[derive(Debug, Clone, Copy)]
@@ -538,6 +552,128 @@ impl TreeKv {
     }
 }
 
+// ---- Θ_scan model-parameter snapshots (kvs::ModelCosts) -------------------
+
+/// Device-base per-IO CPU suboperation times assumed by the snapshots (the
+/// `SsdConfig` defaults).
+const SSD_BASE_PRE_US: f64 = 1.5;
+const SSD_BASE_POST_US: f64 = 0.2;
+/// T_pre/T_post per IO kind: device base plus the *same* store-extra
+/// constants the `Step::Io` sites charge.
+const IO_READ_PRE: f64 = SSD_BASE_PRE_US + READ_EXTRA_PRE_US;
+const IO_READ_POST: f64 = SSD_BASE_POST_US + READ_EXTRA_POST_US;
+const IO_WRITE_PRE: f64 = SSD_BASE_PRE_US + WRITE_EXTRA_PRE_US;
+const IO_WRITE_POST: f64 = SSD_BASE_POST_US + WRITE_EXTRA_POST_US;
+const IO_SCAN_PRE: f64 = SSD_BASE_PRE_US + SCAN_EXTRA_PRE_US;
+const IO_SCAN_POST: f64 = SSD_BASE_POST_US + SCAN_EXTRA_POST_US;
+
+impl TreeKv {
+    /// Deterministic structural probe of the descent cost: walk the index
+    /// for a fixed stride of the keyspace (no RNG — snapshots must be
+    /// reproducible) and average the hops a point lookup performs. Returns
+    /// `(hops, secondary_hops)`: they differ only under a tiering policy
+    /// that pins some levels/entries to DRAM.
+    fn probe_descent(&self) -> (f64, f64) {
+        let n = self.cfg.n_items.max(1);
+        let step = (n / 2048).max(1);
+        let (mut hops, mut sec, mut probes) = (0u64, 0u64, 0u64);
+        let mut key = 0u64;
+        while key < n {
+            let digest = fnv1a(key);
+            let mut cur = self.roots[self.sprig_of(digest)];
+            while cur != NIL {
+                let node = &self.nodes[cur as usize];
+                hops += 1;
+                if !node.in_dram {
+                    sec += 1;
+                }
+                if digest == node.digest {
+                    break;
+                }
+                cur = if digest < node.digest {
+                    node.left
+                } else {
+                    node.right
+                };
+            }
+            probes += 1;
+            key += step;
+        }
+        let p = probes.max(1) as f64;
+        (hops as f64 / p, sec as f64 / p)
+    }
+
+    /// Θ_scan cost vector for an explicit scan length (the
+    /// `model_params(Scan)` snapshot uses the configured mean length; tests
+    /// probe specific lengths including zero). The in-order walk visits
+    /// ≈ descent + `len` nodes, and values are read `SCAN_IO_BATCH` records
+    /// per IO.
+    pub fn scan_model_params(&self, len: f64) -> KindCost {
+        let (hops, sec_hops) = self.probe_descent();
+        self.scan_cost(len, hops, sec_hops)
+    }
+
+    /// [`TreeKv::scan_model_params`] with the descent probe precomputed
+    /// (callers that snapshot several kinds probe once).
+    fn scan_cost(&self, len: f64, hops: f64, sec_hops: f64) -> KindCost {
+        let sec_ratio = if hops > 0.0 { sec_hops / hops } else { 1.0 };
+        let vbytes = self.cfg.value_size.mean().max(64.0);
+        let mut c = KindCost::scan(
+            hops,
+            len,
+            SCAN_IO_BATCH as f64,
+            vbytes,
+            self.cfg.t_node.as_us(),
+            IO_SCAN_PRE,
+            IO_SCAN_POST,
+        );
+        // Tiering moves a share of the walk's hops to DRAM.
+        c.m *= sec_ratio;
+        c
+    }
+}
+
+impl super::ModelCosts for TreeKv {
+    /// Per-kind cost vectors from the live tree geometry: the descent depth
+    /// is probed from the actual sprig forest (≈ 1.39·log2(items/sprigs)),
+    /// IO CPU times are the configured device+store constants, and scans
+    /// follow the [`TreeKv::scan_model_params`] Θ_scan shape at the
+    /// configured mean length. The background defragmenter is not part of
+    /// the per-op model (its IOs ride on separate threads).
+    fn model_params(&self, kind: OpKind) -> KindCost {
+        let (hops, sec_hops) = self.probe_descent();
+        let t_mem = self.cfg.t_node.as_us();
+        let vbytes = self.cfg.value_size.mean().max(64.0);
+        match kind {
+            OpKind::Read => {
+                KindCost::point(sec_hops, 1.0, vbytes, t_mem, IO_READ_PRE, IO_READ_POST)
+            }
+            // Log append IO + locked re-descent + entry write.
+            OpKind::Write => KindCost::point(
+                sec_hops + 1.0,
+                1.0,
+                vbytes,
+                t_mem,
+                IO_WRITE_PRE,
+                IO_WRITE_POST,
+            ),
+            // Locked descent + unlink (occasional successor walk folded into
+            // the +1); no synchronous IO — the block is reclaimed by defrag.
+            OpKind::Delete => KindCost::memory_only(sec_hops + 1.0, t_mem, t_mem),
+            OpKind::Scan => self.scan_cost(self.cfg.scan_len.mean(), hops, sec_hops),
+            // Full read path chained into the full write path.
+            OpKind::Rmw => KindCost::point(
+                2.0 * sec_hops + 1.0,
+                2.0,
+                vbytes,
+                t_mem,
+                (IO_READ_PRE + IO_WRITE_PRE) / 2.0,
+                (IO_READ_POST + IO_WRITE_POST) / 2.0,
+            ),
+        }
+    }
+}
+
 impl Service for TreeKv {
     type Op = TreeOp;
 
@@ -635,12 +771,10 @@ impl Service for TreeKv {
                 Step::Io {
                     kind: IoKind::Read,
                     bytes,
-                    // Calibrated to the paper's measured Aerospike IO
-                    // suboperation times (T_pre ≈ 3.5 µs, T_post ≈ 2.5 µs):
-                    // record lookup bookkeeping, rbuffer management, and
-                    // copy-out dominate the CPU side of each read.
-                    extra_pre: Dur::us(2.0),
-                    extra_post: Dur::us(2.3),
+                    // See READ_EXTRA_* (T_pre ≈ 3.5 µs, T_post ≈ 2.5 µs with
+                    // the device base).
+                    extra_pre: Dur::us(READ_EXTRA_PRE_US),
+                    extra_post: Dur::us(READ_EXTRA_POST_US),
                     shard,
                 }
             }
@@ -687,8 +821,8 @@ impl Service for TreeKv {
                 Step::Io {
                     kind: IoKind::Write,
                     bytes,
-                    extra_pre: Dur::ns(400.0), // write-buffer handling
-                    extra_post: Dur::ns(200.0),
+                    extra_pre: Dur::us(WRITE_EXTRA_PRE_US),
+                    extra_post: Dur::us(WRITE_EXTRA_POST_US),
                     // The appended block's device owns the write.
                     shard: new_block as u64,
                 }
@@ -929,8 +1063,8 @@ impl Service for TreeKv {
                 Step::Io {
                     kind: IoKind::Read,
                     bytes,
-                    extra_pre: Dur::us(1.0),  // batch assembly
-                    extra_post: Dur::us(1.5), // record unpack + copy-out
+                    extra_pre: Dur::us(SCAN_EXTRA_PRE_US),
+                    extra_post: Dur::us(SCAN_EXTRA_POST_US),
                     shard,
                 }
             }
@@ -1224,6 +1358,48 @@ mod tests {
         );
         let f = kv.dram_entry_fraction();
         assert!((f - 0.3).abs() < 0.02, "dram fraction {f}");
+    }
+
+    #[test]
+    fn model_params_track_geometry() {
+        use super::super::ModelCosts;
+        let mut rng = Rng::new(20);
+        let kv = TreeKv::new(small_cfg(), &mut rng);
+        // Probed descent depth agrees with the sampled oracle.
+        let read = kv.model_params(OpKind::Read);
+        let d = kv.mean_depth(2000, &mut rng);
+        assert!(
+            (read.m - d).abs() < 2.0,
+            "probed depth {} vs sampled {d}",
+            read.m
+        );
+        assert_eq!(read.s, 1.0, "one value IO per read");
+        assert!((read.t_mem - kv.cfg.t_node.as_us()).abs() < 1e-12);
+        // Scan: batched IO count and hop growth.
+        let scan = kv.scan_model_params(20.0);
+        assert_eq!(scan.s, 3.0, "ceil(20/8) batch IOs");
+        assert!(scan.m > read.m + 15.0, "scan hops grow with len");
+        let zero = kv.scan_model_params(0.0);
+        assert_eq!(zero.s, 0.0, "len=0 scan issues no IO");
+        assert!(zero.a_io == 0.0 && zero.m > 0.0);
+        // Delete never touches the SSD synchronously; RMW doubles it.
+        assert_eq!(kv.model_params(OpKind::Delete).s, 0.0);
+        assert_eq!(kv.model_params(OpKind::Rmw).s, 2.0);
+        // Tiering shrinks the secondary hop count.
+        let tiered = TreeKv::new(
+            TreeKvConfig {
+                tiering: TieringPolicy::TopLevels { levels: 4 },
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        let tread = tiered.model_params(OpKind::Read);
+        assert!(
+            tread.m < read.m - 2.0,
+            "top-level tiering must cut secondary hops: {} vs {}",
+            tread.m,
+            read.m
+        );
     }
 
     #[test]

@@ -6,14 +6,19 @@
 //!   cxlkvs all [--fast]
 //!
 //! Experiments: fig3 fig10 fig11micro fig11kvs fig12 fig14 fig15 fig16
-//!              fig17 fig18 table6 val1404 ycsb ssdscale
+//!              fig17 fig18 table6 val1404 ycsb ssdscale modelcheck
 //! (The offline image has no argument-parsing crate; parsing is by hand.)
+//!
+//! `modelcheck` validates the Θ_scan-extended analytic model against the
+//! simulator for every store × YCSB workload × memory latency and **exits
+//! non-zero** when any point drifts outside the documented tolerance — CI
+//! gates on it.
 
 use cxlkvs::coordinator::experiments::{self, ModelBackend};
 
 const EXPERIMENTS: &[&str] = &[
     "fig3", "fig10", "fig11micro", "fig11kvs", "fig12", "fig14", "fig15", "fig16", "fig17",
-    "fig18", "table6", "val1404", "ycsb", "ssdscale",
+    "fig18", "table6", "val1404", "ycsb", "ssdscale", "modelcheck",
 ];
 
 fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
@@ -36,6 +41,17 @@ fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
         "val1404" => experiments::val1404(backend, fast).print(),
         "ycsb" => experiments::ycsb_sweep(fast).print(),
         "ssdscale" => experiments::ssd_scaling(backend, fast).print(),
+        "modelcheck" => {
+            let (r, ok) = experiments::modelcheck(fast);
+            r.print();
+            if !ok {
+                eprintln!(
+                    "modelcheck: model-vs-simulator drift exceeded the documented \
+                     tolerance (see err% vs tol% columns)"
+                );
+                std::process::exit(1);
+            }
+        }
         _ => return false,
     }
     true

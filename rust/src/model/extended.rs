@@ -1,12 +1,60 @@
 //! Equations 14–15: the extended model with SSD bandwidth/IOPS caps, memory
-//! bandwidth, DRAM/secondary tiering (ρ), and premature cache eviction (ε).
+//! bandwidth, DRAM/secondary tiering (ρ), and premature cache eviction (ε) —
+//! plus this repo's **Θ_scan** generalization to per-operation-kind cost
+//! vectors and mixed workloads.
 //!
 //! §3.2.3's extension replaces the latency in Eq 9 by
 //! `L ← max(ρ·L_mem + (1-ρ)·L_DRAM, (P-j)·A_mem/B_mem)` and splits the memory
 //! suboperation into pre-/post-eviction cases; a post-eviction load behaves
 //! like a post-IO suboperation whose time is the (tiered) memory latency.
+//!
+//! # Θ_scan: the per-op-kind generalization
+//!
+//! Eq 14 models a whole KV operation as `S` identical split units of `M/S`
+//! dependent memory accesses followed by one IO. That explains point ops
+//! (S ≤ 1, one value/block IO amortized over the index walk) but not range
+//! scans: a scan of `len` records walks `m_scan(len) = m_descend + len`
+//! index hops (anchor descent plus one hop per emitted entry) and issues
+//! `S_scan = ⌈len / SCAN_IO_BATCH⌉` **batched** value IOs, each transferring
+//! `len·A_rec / S_scan` bytes. Both M and S therefore grow with `len`, and
+//! the batch transfer competes with the array's aggregate bandwidth ceiling
+//! `n_ssd·B_IO` rather than the IOPS ceiling.
+//!
+//! The derivation keeps Eq 13/14's structure and only re-parameterizes the
+//! split unit per operation kind `k`:
+//!
+//! ```text
+//! Θ_k⁻¹(L) = max( S_k · Θ_rev⁻¹(M_k/S_k, T_mem,k, T_pre,k, T_post,k; L),
+//!                 S_k · A_IO,k / (n_ssd · B_IO),
+//!                 S_k / (n_ssd · R_IO) )  +  T_fixed,k          (S_k > 0)
+//!
+//! Θ_k⁻¹(L) = M_k · Θ_mem⁻¹(T_mem,k; ρL + (1-ρ)L_DRAM) + T_fixed,k  (S_k = 0)
+//! ```
+//!
+//! The `S_k = 0` branch is the memory-only Eq 3 (an op that never touches
+//! the SSD — an LSM memtable write, a zero-length scan, a cache no-op —
+//! costs its hops at the prefetch-limited memory rate, not zero as a naive
+//! `S·Θ_rev⁻¹` would claim). `T_fixed,k` carries per-op CPU/DRAM work that
+//! scales with neither hops nor IOs (API floor, memtable probes).
+//!
+//! A mixed workload with kind fractions `f_k` (YCSB A–F) composes as
+//!
+//! ```text
+//! Θ_mix⁻¹(L) = Σ_k f_k · Θ_k⁻¹(L)
+//! ```
+//!
+//! i.e. mixed *throughput* is the weighted harmonic mean of the per-kind
+//! throughputs (time per average op is the weighted arithmetic mean of the
+//! per-kind times). An empty mix performs no work and is defined as
+//! `Θ_mix⁻¹ = 0` rather than dividing by its zero total mass.
+//!
+//! Each KV store exposes `model_params(OpKind) -> KindCost` snapshots
+//! derived from its actual geometry (sprig depth, chain lengths, block
+//! fanout, measured hit ratios); `cxlkvs run modelcheck` and
+//! `tests/model_vs_sim.rs` validate the composed prediction against the
+//! simulator per store × workload × latency.
 
-use super::analytic::{OpParams, SysParams};
+use super::analytic::{theta_mem_recip, OpParams, SysParams};
 
 /// Extended system parameters (Table 2). Times µs, sizes bytes, rates per µs.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -153,13 +201,38 @@ pub fn theta_rev_recip(op: &OpParams, l_mem: f64, ext: &ExtParams, sys: &SysPara
         + ext.eps * op.m * l_tier
 }
 
+/// Threshold below which an op's IO count counts as zero (guards the
+/// `M/S` per-IO split against division by ~0 for IO-free operations).
+const S_EPS: f64 = 1e-9;
+
+/// Memory-only reciprocal cost of `m` dependent accesses under tiering and
+/// eviction: Eq 3 at the tiered latency plus the ε refetch penalty. This is
+/// the `S = 0` branch of the per-kind model (and of Eq 14 below). The
+/// effective latency takes the same Eq 15 memory-bandwidth floor the IO
+/// path applies through `l_eff` (with `j = 0`: a full window of P memory
+/// accesses), so finite-`B_mem` sweeps stay consistent across branches;
+/// the ε refetch is a single synchronous load and pays the tiered latency.
+fn memonly_recip(m: f64, t_mem: f64, l_mem: f64, ext: &ExtParams, sys: &SysParams) -> f64 {
+    let l_tier = tiered_latency(l_mem, ext);
+    let l_floored = l_tier.max(sys.p as f64 * ext.a_mem / ext.b_mem);
+    m * theta_mem_recip(t_mem, l_floored, sys) + ext.eps * m * l_tier
+}
+
 /// Eq 14 — the full extended reciprocal throughput of a *whole* KV operation
 /// with S IOs: S split-operations plus the SSD bandwidth/IOPS floors. The
 /// floors use the array aggregates `Θ_ssd = n_ssd·R_IO` / `n_ssd·B_IO`:
 /// SSD-bound throughput scales linearly with the array size while the
 /// CPU/memory term (`S · Θ_rev⁻¹`) is unchanged — exactly the measured
 /// behaviour of the sharded `sim::SsdArray`.
+///
+/// `S = 0` (an operation that never touches the SSD) degenerates to the
+/// memory-only cost of its M accesses — previously this returned a spurious
+/// zero reciprocal (infinite throughput); see the module docs' Θ_scan
+/// derivation for the branch.
 pub fn theta_extended_recip(op: &OpParams, l_mem: f64, ext: &ExtParams, sys: &SysParams) -> f64 {
+    if ext.s <= S_EPS {
+        return memonly_recip(op.m, op.t_mem, l_mem, ext, sys);
+    }
     let per_io = theta_rev_recip(op, l_mem, ext, sys);
     let n_ssd = ext.n_ssd.max(1.0);
     let whole = ext.s * per_io;
@@ -168,9 +241,158 @@ pub fn theta_extended_recip(op: &OpParams, l_mem: f64, ext: &ExtParams, sys: &Sy
     whole.max(bw_floor).max(iops_floor)
 }
 
+/// Per-operation-kind cost vector — the Θ_scan generalization of
+/// [`OpParams`] (see the module docs for the derivation). Where `OpParams`
+/// describes one §3.2.3 split unit (`m` accesses then one IO), `KindCost`
+/// describes a **whole** operation of one kind: `m` secondary accesses, `s`
+/// IOs of `a_io` bytes each, plus a fixed per-op term. `s` may be
+/// fractional (cache-miss ratios), greater than one (scan batches, RMW), or
+/// zero (memtable writes, zero-length scans, API no-ops).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KindCost {
+    /// Secondary-memory accesses per whole operation (M_k).
+    pub m: f64,
+    /// IOs per whole operation (S_k).
+    pub s: f64,
+    /// Average bytes per IO of this kind (A_IO,k).
+    pub a_io: f64,
+    /// Per-access compute (T_mem,k), µs.
+    pub t_mem: f64,
+    /// Per-IO CPU suboperation times (T_IO^pre/T_IO^post), µs.
+    pub t_pre: f64,
+    pub t_post: f64,
+    /// Fixed per-op CPU/DRAM time tied to neither hops nor IOs, µs.
+    pub t_fixed: f64,
+}
+
+impl KindCost {
+    /// A point operation: `m` hops amortizing `s` IOs (the classic Eq 14
+    /// shape; `s = 1` for a value read, a miss ratio for a cached read).
+    pub fn point(m: f64, s: f64, a_io: f64, t_mem: f64, t_pre: f64, t_post: f64) -> KindCost {
+        KindCost {
+            m: m.max(0.0),
+            s: s.max(0.0),
+            a_io: a_io.max(0.0),
+            t_mem,
+            t_pre,
+            t_post,
+            t_fixed: 0.0,
+        }
+    }
+
+    /// An IO-free operation: `m` hops plus fixed work (memtable write,
+    /// delete of an in-memory entry, API no-op).
+    pub fn memory_only(m: f64, t_mem: f64, t_fixed: f64) -> KindCost {
+        KindCost {
+            m: m.max(0.0),
+            s: 0.0,
+            a_io: 0.0,
+            t_mem,
+            t_pre: 0.0,
+            t_post: 0.0,
+            t_fixed,
+        }
+    }
+
+    /// Θ_scan's cost vector: a scan of `len` records anchored by a
+    /// `descend_m`-hop index walk, batched `batch` records per IO of
+    /// `record_bytes` each.
+    ///
+    /// - hops: `m_scan(len) = descend_m + len` (one dependent access per
+    ///   emitted entry on top of the anchor descent);
+    /// - IOs: `⌈len / batch⌉` — zero for `len = 0` (the op degenerates to
+    ///   the pure index walk; no division by zero anywhere downstream);
+    /// - bytes per IO: `len·record_bytes / ⌈len/batch⌉`, so the aggregate
+    ///   transfer `S·A_IO = len·record_bytes` is exact against the
+    ///   `n_ssd·B_IO` ceiling regardless of the partial last batch.
+    ///
+    /// For a scan-length *distribution*, pass its mean: `⌈mean/batch⌉`
+    /// tracks `E[⌈len/batch⌉]` to well within the model's tolerance for the
+    /// uniform lengths the YCSB presets draw.
+    pub fn scan(
+        descend_m: f64,
+        len: f64,
+        batch: f64,
+        record_bytes: f64,
+        t_mem: f64,
+        t_pre: f64,
+        t_post: f64,
+    ) -> KindCost {
+        let len = len.max(0.0);
+        let batch = batch.max(1.0);
+        let ios = (len / batch).ceil();
+        let a_io = if ios > 0.0 {
+            len * record_bytes / ios
+        } else {
+            0.0
+        };
+        KindCost {
+            m: descend_m.max(0.0) + len,
+            s: ios,
+            a_io,
+            t_mem,
+            t_pre,
+            t_post,
+            t_fixed: 0.0,
+        }
+    }
+}
+
+/// Reciprocal throughput of one operation kind: Eq 14 applied to the kind's
+/// cost vector (module docs, "Θ_scan"). IO-free kinds (`s = 0`) cost their
+/// hops at the memory-only rate instead of the per-IO split — no `0/0` from
+/// `M/S`, no spurious zero-cost operation.
+pub fn theta_kind_recip(cost: &KindCost, l_mem: f64, ext: &ExtParams, sys: &SysParams) -> f64 {
+    if cost.s <= S_EPS {
+        return memonly_recip(cost.m, cost.t_mem, l_mem, ext, sys) + cost.t_fixed;
+    }
+    let op = OpParams {
+        m: cost.m / cost.s,
+        t_mem: cost.t_mem,
+        t_pre: cost.t_pre,
+        t_post: cost.t_post,
+    };
+    let kext = ExtParams {
+        s: cost.s,
+        a_io: cost.a_io,
+        ..*ext
+    };
+    theta_extended_recip(&op, l_mem, &kext, sys) + cost.t_fixed
+}
+
+/// Θ_scan — the named entry point: a scan cost vector (built with
+/// [`KindCost::scan`]) evaluated through the extended model. Handles
+/// `len = 0` scans (pure index walk, no IO floors) without special-casing
+/// at the call site.
+pub fn theta_scan_recip(scan: &KindCost, l_mem: f64, ext: &ExtParams, sys: &SysParams) -> f64 {
+    theta_kind_recip(scan, l_mem, ext, sys)
+}
+
+/// Mixed-workload Θ: `Θ_mix⁻¹ = Σ_k f_k·Θ_k⁻¹ / Σ_k f_k` over `(weight,
+/// cost)` pairs — mixed throughput is the weighted harmonic mean of the
+/// per-kind throughputs. Weights need not be normalized (OpWeights
+/// semantics). An empty mix — no entries, or zero total mass — performs no
+/// work and returns `0.0` instead of dividing by zero.
+pub fn theta_mix_recip(
+    mix: &[(f64, KindCost)],
+    l_mem: f64,
+    ext: &ExtParams,
+    sys: &SysParams,
+) -> f64 {
+    let total: f64 = mix.iter().map(|(w, _)| w.max(0.0)).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    mix.iter()
+        .filter(|(w, _)| *w > 0.0)
+        .map(|(w, c)| w * theta_kind_recip(c, l_mem, ext, sys))
+        .sum::<f64>()
+        / total
+}
+
 #[cfg(test)]
 mod tests {
-    use super::super::analytic::{theta_prob_recip, OpParams, SysParams};
+    use super::super::analytic::{theta_mem_recip, theta_prob_recip, OpParams, SysParams};
     use super::*;
 
     fn op() -> OpParams {
@@ -320,5 +542,186 @@ mod tests {
         let one = theta_extended_recip(&op(), 1.0, &mk(1.0), &sys);
         let two = theta_extended_recip(&op(), 1.0, &mk(2.0), &sys);
         assert!((two - 2.0 * one).abs() < 1e-9);
+    }
+
+    // ---- Θ_scan / per-kind cost vector ------------------------------------
+
+    fn ext_unbound() -> ExtParams {
+        ExtParams {
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        }
+    }
+
+    #[test]
+    fn extended_s_zero_is_memory_only_not_free() {
+        // Latent edge case pinned: S = 0 used to yield a zero reciprocal
+        // (infinite throughput). It must cost the op's M accesses at the
+        // memory-only rate.
+        let sys = sys();
+        let ext = ExtParams {
+            s: 0.0,
+            ..ext_unbound()
+        };
+        let r = theta_extended_recip(&op(), 5.0, &ext, &sys);
+        assert!(r.is_finite() && r > 0.0, "S=0 op must cost something: {r}");
+        let expect = op().m * theta_mem_recip(op().t_mem, 5.0, &sys);
+        assert!((r - expect).abs() < 1e-9, "r={r} expect={expect}");
+    }
+
+    #[test]
+    fn memory_only_branch_respects_mem_bandwidth_floor() {
+        // The S=0 branch must apply the same Eq 15 B_mem floor as the IO
+        // path: throttled memory bandwidth bites even without IOs.
+        let sys = sys();
+        let slow = ExtParams {
+            b_mem: 50.0, // 50 MB/s: floor = P·A_mem/B_mem = 12.8 µs
+            s: 0.0,
+            ..ExtParams::table2_example()
+        };
+        let fast = ExtParams {
+            b_mem: 1e12,
+            s: 0.0,
+            ..ExtParams::table2_example()
+        };
+        let a = theta_extended_recip(&op(), 0.5, &slow, &sys);
+        let b = theta_extended_recip(&op(), 0.5, &fast, &sys);
+        assert!(a > b * 1.2, "bandwidth floor should bite at S=0: {a} vs {b}");
+    }
+
+    #[test]
+    fn scan_len_zero_is_pure_index_walk() {
+        // Θ_scan at len = 0: no IOs, no division by zero, cost equals the
+        // anchor descent at the memory-only rate.
+        let sys = sys();
+        let ext = ext_unbound();
+        let c = KindCost::scan(10.0, 0.0, 8.0, 1536.0, 0.1, 2.5, 1.7);
+        assert_eq!(c.s, 0.0);
+        assert_eq!(c.a_io, 0.0);
+        assert_eq!(c.m, 10.0);
+        for l in [0.1, 1.0, 5.0, 10.0] {
+            let r = theta_scan_recip(&c, l, &ext, &sys);
+            assert!(r.is_finite() && !r.is_nan() && r > 0.0, "L={l}: {r}");
+            let expect = 10.0 * theta_mem_recip(0.1, l, &sys);
+            assert!((r - expect).abs() < 1e-9, "L={l}: r={r} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn scan_batching_io_count_and_bytes() {
+        // S_scan = ceil(len/batch); aggregate bytes S·A_IO = len·record.
+        let c = KindCost::scan(12.0, 20.0, 8.0, 1536.0, 0.1, 2.5, 1.7);
+        assert_eq!(c.s, 3.0, "ceil(20/8)");
+        assert!((c.s * c.a_io - 20.0 * 1536.0).abs() < 1e-6);
+        assert_eq!(c.m, 32.0, "descend + len hops");
+        let full = KindCost::scan(12.0, 16.0, 8.0, 1536.0, 0.1, 2.5, 1.7);
+        assert_eq!(full.s, 2.0);
+        assert!((full.a_io - 8.0 * 1536.0).abs() < 1e-6, "full batches");
+    }
+
+    #[test]
+    fn scan_recip_grows_with_len_and_latency() {
+        let sys = sys();
+        let ext = ext_unbound();
+        let at = |len: f64, l: f64| {
+            theta_scan_recip(
+                &KindCost::scan(12.0, len, 8.0, 1536.0, 0.1, 2.5, 1.7),
+                l,
+                &ext,
+                &sys,
+            )
+        };
+        let mut prev = 0.0;
+        for len in [0.0, 1.0, 7.0, 8.0, 9.0, 24.0, 100.0] {
+            let r = at(len, 2.0);
+            assert!(r > prev, "len={len}: {r} <= {prev}");
+            prev = r;
+        }
+        // Monotone in latency too (Θ non-increasing in L_mem).
+        let mut prev = 0.0;
+        for i in 0..40 {
+            let r = at(12.0, 0.1 + i as f64 * 0.25);
+            assert!(r >= prev - 1e-12, "not monotone at step {i}");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn scan_bandwidth_floor_uses_aggregate_ceiling() {
+        // Batch transfers hit n_ssd·B_IO: with a slow device the scan is
+        // bandwidth-bound and the floor drops linearly with the array size.
+        let sys = sys();
+        let ext1 = ExtParams {
+            b_io: 400.0, // 400 MB/s per device
+            ..ext_unbound()
+        };
+        let c = KindCost::scan(12.0, 16.0, 8.0, 1536.0, 0.1, 2.5, 1.7);
+        let r1 = theta_kind_recip(&c, 0.1, &ext1, &sys);
+        let floor1 = 16.0 * 1536.0 / 400.0; // len·record / B_IO = 61.4 µs
+        assert!((r1 - floor1).abs() < 1e-9, "r1={r1} floor={floor1}");
+        let r4 = theta_kind_recip(
+            &c,
+            0.1,
+            &ExtParams {
+                n_ssd: 4.0,
+                ..ext1
+            },
+            &sys,
+        );
+        assert!(r4 < r1 / 2.0, "4 devices must lift the bandwidth floor");
+        // Θ non-decreasing in n_ssd across the whole axis.
+        let mut prev = f64::INFINITY;
+        for n in [1.0, 2.0, 4.0, 8.0] {
+            let r = theta_kind_recip(&c, 0.1, &ExtParams { n_ssd: n, ..ext1 }, &sys);
+            assert!(r <= prev + 1e-12, "n_ssd={n}: recip rose {prev} -> {r}");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn empty_mix_is_zero_not_nan() {
+        let sys = sys();
+        let ext = ext_unbound();
+        assert_eq!(theta_mix_recip(&[], 5.0, &ext, &sys), 0.0);
+        let zero = [
+            (0.0, KindCost::point(10.0, 1.0, 1536.0, 0.1, 3.5, 2.5)),
+            (0.0, KindCost::memory_only(0.0, 0.1, 0.5)),
+        ];
+        let r = theta_mix_recip(&zero, 5.0, &ext, &sys);
+        assert_eq!(r, 0.0, "all-zero weights: {r}");
+        assert!(!r.is_nan());
+    }
+
+    #[test]
+    fn mix_is_weighted_mean_of_reciprocals() {
+        let sys = sys();
+        let ext = ext_unbound();
+        let a = KindCost::point(10.0, 1.0, 1536.0, 0.1, 3.5, 2.5);
+        let b = KindCost::memory_only(0.0, 0.1, 0.5);
+        let ra = theta_kind_recip(&a, 5.0, &ext, &sys);
+        let rb = theta_kind_recip(&b, 5.0, &ext, &sys);
+        // Single-kind mix == the kind itself (weights normalize).
+        let solo = theta_mix_recip(&[(0.7, a)], 5.0, &ext, &sys);
+        assert!((solo - ra).abs() < 1e-12);
+        // 50/50 mix == arithmetic mean of reciprocals (harmonic mean of
+        // throughputs), sitting strictly between the two kinds.
+        let mixed = theta_mix_recip(&[(1.0, a), (1.0, b)], 5.0, &ext, &sys);
+        assert!((mixed - (ra + rb) / 2.0).abs() < 1e-12);
+        assert!(rb < mixed && mixed < ra);
+    }
+
+    #[test]
+    fn kind_point_matches_classic_eq14() {
+        // KindCost::point with the Table 1/2 parameters reproduces the
+        // original theta_extended_recip exactly (t_fixed = 0).
+        let sys = sys();
+        let ext = ext_unbound();
+        let o = op();
+        let c = KindCost::point(o.m, ext.s, ext.a_io, o.t_mem, o.t_pre, o.t_post);
+        for l in [0.1, 1.0, 5.0, 10.0] {
+            let classic = theta_extended_recip(&o, l, &ext, &sys);
+            let kind = theta_kind_recip(&c, l, &ext, &sys);
+            assert!((classic - kind).abs() < 1e-9, "L={l}: {classic} vs {kind}");
+        }
     }
 }

@@ -17,4 +17,7 @@ pub use analytic::{
     theta_multi_recip, theta_prob_recip, theta_single_recip, wait_subop, OpParams, SysParams,
 };
 pub use cpr::{cpr, CprScenario};
-pub use extended::{theta_extended_recip, theta_rev_recip, ExtParams};
+pub use extended::{
+    theta_extended_recip, theta_kind_recip, theta_mix_recip, theta_rev_recip, theta_scan_recip,
+    ExtParams, KindCost,
+};

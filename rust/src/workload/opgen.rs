@@ -21,6 +21,17 @@ pub enum OpKind {
     Rmw,
 }
 
+impl OpKind {
+    /// Every operation kind, in [`OpWeights`] field order.
+    pub const ALL: [OpKind; 5] = [
+        OpKind::Read,
+        OpKind::Write,
+        OpKind::Delete,
+        OpKind::Scan,
+        OpKind::Rmw,
+    ];
+}
+
 /// A read:write mix (paper notation "1:0", "2:1", "1:1"). Retained for the
 /// paper-figure experiments; the full-surface workloads use [`OpWeights`].
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -3,7 +3,10 @@
 //! self-bootstraps `BENCH_sim.json` at the workspace root when the file is
 //! absent, so every toolchain run leaves a perf measurement behind even
 //! where `cargo bench` is never invoked. A committed/existing file is left
-//! untouched (regenerate with `cargo bench --bench bench_sim`).
+//! untouched (regenerate with `cargo bench --bench bench_sim`), and
+//! `CXLKVS_REQUIRE_GOLDEN=1` turns the bootstrap into a hard failure —
+//! same contract as the YCSB golden snapshot, so a deleted/ignored
+//! baseline cannot silently revert CI to bootstrap-only mode.
 
 use cxlkvs::coordinator::bench::{run_fixed_sweep, BenchResult};
 
@@ -21,6 +24,14 @@ fn bench_harness_runs_and_bootstraps_json() {
 
     let path = BenchResult::default_path();
     if !path.exists() {
+        let require = std::env::var("CXLKVS_REQUIRE_GOLDEN")
+            .map(|v| v == "1")
+            .unwrap_or(false);
+        assert!(
+            !require,
+            "CXLKVS_REQUIRE_GOLDEN=1 but {path:?} is missing — restore the \
+             committed baseline or regenerate with `cargo bench --bench bench_sim`"
+        );
         r.write_json().expect("bootstrap BENCH_sim.json");
         eprintln!(
             "bench_smoke: wrote {path:?} (smoke-sized windows) — regenerate \

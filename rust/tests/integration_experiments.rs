@@ -91,7 +91,7 @@ fn table6_cpr_above_one() {
 #[test]
 fn ssd_scaling_matches_acceptance_criteria() {
     let r = experiments::ssd_scaling(&mut backend(), true);
-    assert_eq!(r.rows.len(), 8, "2 regimes x 4 array sizes");
+    assert_eq!(r.rows.len(), 12, "3 regimes x 4 array sizes");
     // Columns: regime, n_ssd, L, ops/sec, vs n_ssd=1, model_kops, imbalance.
     let speedup = |row: &[String]| -> f64 { row[4].parse().unwrap() };
     for row in &r.rows {
@@ -110,9 +110,36 @@ fn ssd_scaling_matches_acceptance_criteria() {
                 (speedup(row) - 1.0).abs() < 0.025,
                 "latency-bound points must not move: {row:?}"
             ),
+            // Θ_scan's bandwidth-bound regime: batch transfers saturate the
+            // per-device B_IO, so the array must lift throughput until the
+            // scan CPU term takes over (conservative floors — the short
+            // fast-mode window keeps samples small).
+            ("scan-bound(treekv-E)", "2") => assert!(
+                speedup(row) >= 1.5,
+                "scan-bound n=2 must scale: {row:?}"
+            ),
+            ("scan-bound(treekv-E)", "4") => assert!(
+                speedup(row) >= 2.0,
+                "scan-bound n=4 must scale: {row:?}"
+            ),
             _ => {}
         }
     }
+    // The scan regime's model column must predict scaling in the same
+    // direction (Θ_scan non-decreasing in n_ssd).
+    let scan_rows: Vec<_> = r
+        .rows
+        .iter()
+        .filter(|row| row[0].starts_with("scan-bound"))
+        .collect();
+    assert_eq!(scan_rows.len(), 4);
+    let model_kops = |row: &[String]| -> f64 { row[5].parse().unwrap() };
+    assert!(
+        model_kops(scan_rows[2]) > model_kops(scan_rows[0]) * 1.5,
+        "model must predict scan-bandwidth scaling: {:?} vs {:?}",
+        scan_rows[0],
+        scan_rows[2]
+    );
 }
 
 #[test]

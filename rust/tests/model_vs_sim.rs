@@ -1,0 +1,244 @@
+//! Model-vs-simulator validation for the Θ_scan-extended per-kind model:
+//! for every store × YCSB workload A–F × L_mem ∈ {0.1, 1, 5} µs, the
+//! normalized throughput predicted by `model::theta_mix_recip` over each
+//! store's `model_params(op_kind)` snapshot must agree with the simulator
+//! within the tolerance documented in
+//! `coordinator::experiments::modelcheck_tolerance` — tight for the point
+//! workloads (B/C/D), looser (and documented as such) for the scan-heavy E,
+//! whose cost vector approximates walk length, block span, and batch count
+//! of a scan-length *distribution* by their means.
+//!
+//! Monotonicity is asserted on the model itself (the simulator's word on it
+//! is noisy): Θ is non-increasing in L_mem and non-decreasing in n_ssd.
+//!
+//! The stores are scaled down exactly like `tests/integration_ycsb.rs`
+//! (sizes only — op weights, key distributions, and scan lengths come from
+//! the coordinator's sweep configs) so the suite runs in debug-mode CI.
+
+use cxlkvs::coordinator::experiments::{model_norm_err, modelcheck_tolerance, sys_params};
+use cxlkvs::coordinator::runner::{
+    parallel_map, ycsb_cache_cfg, ycsb_lsm_cfg, ycsb_tree_cfg, SweepCfg,
+};
+use cxlkvs::kvs::{model_mix, CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, TreeKv, TreeKvConfig};
+use cxlkvs::model::{theta_mix_recip, ExtParams, KindCost};
+use cxlkvs::sim::{Dur, Machine, MachineConfig, MemConfig, Rng, RunStats};
+use cxlkvs::workload::YcsbWorkload;
+
+const STORE_SEED: u64 = 0x5eed_90de;
+const GRID: [f64; 3] = [0.1, 1.0, 5.0];
+const STORES: [&str; 3] = ["tree", "lsm", "cache"];
+
+fn machine_cfg(l_us: f64) -> MachineConfig {
+    MachineConfig {
+        threads_per_core: 32,
+        n_locks: 64,
+        mem: MemConfig::fpga(Dur::us(l_us)),
+        seed: 0x90de1,
+        ..Default::default()
+    }
+}
+
+/// One scaled store × workload point: run the simulator, then snapshot the
+/// store's per-kind model mix (post-run, so measured hit ratios apply).
+fn run_point(store: &str, wl: YcsbWorkload, l_us: f64) -> (RunStats, Vec<(f64, KindCost)>) {
+    let warmup = Dur::ms(2.0);
+    let window = Dur::ms(6.0);
+    let mut rng = Rng::new(STORE_SEED ^ wl.tag().as_bytes()[0] as u64);
+    let w = wl.weights();
+    match store {
+        "tree" => {
+            let kv = TreeKv::new(
+                TreeKvConfig {
+                    n_items: 30_000,
+                    sprigs: 32,
+                    ..ycsb_tree_cfg(wl)
+                },
+                &mut rng,
+            )
+            .with_background(1, 32);
+            let mut m = Machine::new(machine_cfg(l_us), kv);
+            let st = m.run(warmup, window);
+            (st, model_mix(&m.service, &w))
+        }
+        "lsm" => {
+            let kv = LsmKv::new(
+                LsmKvConfig {
+                    n_items: 100_000,
+                    cache_blocks: 1024,
+                    shards: 16,
+                    buckets_per_shard: 64,
+                    ..ycsb_lsm_cfg(wl)
+                },
+                &mut rng,
+            )
+            .with_background(32);
+            let mut m = Machine::new(machine_cfg(l_us), kv);
+            let st = m.run(warmup, window);
+            (st, model_mix(&m.service, &w))
+        }
+        "cache" => {
+            let kv = CacheKv::new(
+                CacheKvConfig {
+                    n_items: 20_000,
+                    t1_items: 2_400,
+                    t2_items: 11_000,
+                    buckets: 4_096,
+                    ..ycsb_cache_cfg(wl)
+                },
+                &mut rng,
+            );
+            let mut m = Machine::new(machine_cfg(l_us), kv);
+            let st = m.run(warmup, window);
+            (st, model_mix(&m.service, &w))
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn model_predicts_simulated_throughput_within_tolerance() {
+    // Flat job list over store × workload × latency for the host pool.
+    let mut jobs: Vec<Box<dyn FnOnce() -> (RunStats, Vec<(f64, KindCost)>) + Send>> = Vec::new();
+    for wl in YcsbWorkload::ALL {
+        for store in STORES {
+            for &l in &GRID {
+                jobs.push(Box::new(move || run_point(store, wl, l)));
+            }
+        }
+    }
+    let results = parallel_map(jobs);
+
+    let sys = sys_params();
+    let ext = SweepCfg::default().ext_params();
+    let mut idx = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+    for wl in YcsbWorkload::ALL {
+        let tol = modelcheck_tolerance(wl);
+        for store in STORES {
+            let group = &results[idx..idx + GRID.len()];
+            idx += GRID.len();
+            let (dram_stats, mix) = &group[0];
+            assert!(
+                dram_stats.ops > 100,
+                "{store}/{}: too few ops to validate against",
+                wl.tag()
+            );
+            assert!(!mix.is_empty(), "{store}/{}: empty model mix", wl.tag());
+            let recip0 = theta_mix_recip(mix, GRID[0], &ext, &sys);
+            assert!(
+                recip0.is_finite() && recip0 > 0.0,
+                "{store}/{}: degenerate model reciprocal {recip0}",
+                wl.tag()
+            );
+            for (i, &l) in GRID.iter().enumerate() {
+                let sim_norm = group[i].0.ops_per_sec / dram_stats.ops_per_sec;
+                // The same helper the modelcheck CLI gate and the ycsb
+                // report use — the suite and the gate cannot disagree.
+                let (model_norm, err) = model_norm_err(mix, GRID[0], l, sim_norm, &ext, &sys);
+                if err.abs() > tol {
+                    failures.push(format!(
+                        "{store}/{} @ {l}us: model_norm={model_norm:.3} \
+                         sim_norm={sim_norm:.3} err={:+.1}% tol={:.0}%",
+                        wl.tag(),
+                        100.0 * err,
+                        100.0 * tol
+                    ));
+                }
+                // The simulator itself must not speed up under slower
+                // memory (loose: measurement noise only).
+                assert!(
+                    sim_norm <= 1.08,
+                    "{store}/{} @ {l}us: slower memory sped the sim up: {sim_norm}",
+                    wl.tag()
+                );
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "model-vs-sim drift beyond tolerance at {} point(s):\n{}",
+        failures.len(),
+        failures.join("\n")
+    );
+}
+
+#[test]
+fn model_is_monotone_in_latency_for_every_store_mix() {
+    // Deterministic model-side property: Θ non-increasing in L_mem
+    // (reciprocal non-decreasing) for every store × workload snapshot.
+    let sys = sys_params();
+    let ext = SweepCfg::default().ext_params();
+    // C (pure point reads) and E (scan-dominated) bracket the mix space.
+    for wl in [YcsbWorkload::C, YcsbWorkload::E] {
+        for store in STORES {
+            let (_, mix) = run_point(store, wl, 0.1);
+            let mut prev = 0.0;
+            for i in 0..50 {
+                let l = 0.1 + i as f64 * 0.2;
+                let r = theta_mix_recip(&mix, l, &ext, &sys);
+                assert!(
+                    r >= prev - 1e-9,
+                    "{store}/{}: recip fell at L={l}: {prev} -> {r}",
+                    wl.tag()
+                );
+                prev = r;
+            }
+        }
+    }
+}
+
+#[test]
+fn model_is_monotone_in_n_ssd() {
+    // Θ non-decreasing in the array size: with tight per-device floors the
+    // reciprocal must never rise as devices are added, and must strictly
+    // drop somewhere along the axis for IO-carrying mixes.
+    let sys = sys_params();
+    let tight = ExtParams {
+        b_io: 400.0,  // 400 MB/s per device
+        r_io: 0.05,   // 50 KIOPS per device
+        ..SweepCfg::default().ext_params()
+    };
+    let cases = [
+        ("tree", YcsbWorkload::E),
+        ("tree", YcsbWorkload::C),
+        ("lsm", YcsbWorkload::C),
+    ];
+    for (store, wl) in cases {
+        let (_, mix) = run_point(store, wl, 0.1);
+        let mut prev = f64::INFINITY;
+        let mut dropped = false;
+        for n in [1.0, 2.0, 4.0, 8.0] {
+            let r = theta_mix_recip(&mix, 0.1, &ExtParams { n_ssd: n, ..tight }, &sys);
+            assert!(
+                r <= prev + 1e-9,
+                "{store}/{}: recip rose at n_ssd={n}: {prev} -> {r}",
+                wl.tag()
+            );
+            if r < prev - 1e-9 {
+                dropped = true;
+            }
+            prev = r;
+        }
+        assert!(
+            dropped,
+            "{store}/{}: floors never bound — pick tighter device rates",
+            wl.tag()
+        );
+    }
+}
+
+#[test]
+fn mix_fractions_follow_the_preset_weights() {
+    // The `(fraction, KindCost)` mix carries exactly the preset's kinds.
+    let (_, mix) = run_point("tree", YcsbWorkload::E, 0.1);
+    let total: f64 = mix.iter().map(|(f, _)| f).sum();
+    assert!((total - 1.0).abs() < 1e-9, "fractions must normalize: {total}");
+    // E = 95% scan / 5% update: the scan entry dominates and carries
+    // batched IOs (s = ceil(len/batch) > 1 at the preset's mean length).
+    let scan = mix
+        .iter()
+        .find(|(f, _)| (*f - 0.95).abs() < 1e-9)
+        .expect("scan fraction present");
+    assert!(scan.1.s >= 1.0, "scan kind must batch IOs: s={}", scan.1.s);
+    assert!(scan.1.m > 10.0, "scan kind walks the index: m={}", scan.1.m);
+}

@@ -5,7 +5,10 @@
 //! consistent with the deterministic disk image, RMW preserves
 //! read-your-write under a single thread.
 
-use cxlkvs::kvs::{drive_op, fnv1a, CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, TreeKv, TreeKvConfig};
+use cxlkvs::kvs::{
+    drive_op, fnv1a, CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, TreeKv, TreeKvConfig,
+    SCAN_IO_BATCH,
+};
 use cxlkvs::prop::{forall, no_shrink, PropCfg};
 use cxlkvs::sim::{Dur, Machine, MachineConfig, MemConfig, Rng, Service};
 use cxlkvs::workload::{KeyDist, OpMix, ValueSize};
@@ -328,6 +331,151 @@ fn scan_results_ordered_duplicate_free_and_disk_consistent() {
                     lsm.stats.scanned - scanned,
                     keys.len()
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn treekv_scan_value_ios_are_batched_exactly() {
+    // Scan-batching invariant: the number of value-read IOs is exactly
+    // ceil(scanned / SCAN_IO_BATCH) for random scan lengths — including
+    // len 0 (treated as len 1, documented in op_scan) and anchors whose
+    // sprig holds nothing at or above the anchor digest (0 IOs).
+    forall(
+        PropCfg { cases: 8, ..Default::default() },
+        |rng| {
+            let len = if rng.chance(0.2) {
+                0u32
+            } else {
+                1 + rng.below(48) as u32
+            };
+            (rng.next_u64(), rng.below(15_000), len)
+        },
+        no_shrink,
+        |&(seed, key, len)| {
+            let mut rng = Rng::new(seed);
+            let mut kv = TreeKv::new(small_tree(), &mut rng);
+            let s0 = kv.stats.scanned;
+            let op = kv.op_scan(key, len);
+            let (_mems, reads, writes) = drive_op(&mut kv, op, &mut rng);
+            let scanned = kv.stats.scanned - s0;
+            let b = SCAN_IO_BATCH as u64;
+            let expect = (scanned + b - 1) / b;
+            if reads as u64 != expect {
+                return Err(format!(
+                    "len={len}: {reads} IOs for {scanned} scanned (expect {expect})"
+                ));
+            }
+            if writes != 0 {
+                return Err(format!("scan issued {writes} write IOs"));
+            }
+            if len == 0 && scanned > 1 {
+                return Err(format!("len=0 scan returned {scanned} entries"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn treekv_scan_truncates_at_sprig_boundary_with_batched_ios() {
+    // A scan longer than its sprig's population truncates; the ceil
+    // batching invariant must hold across the partial last batch.
+    let mut rng = Rng::new(77);
+    let mut kv = TreeKv::new(
+        TreeKvConfig {
+            n_items: 300,
+            sprigs: 16, // ~19 entries per sprig: len 64 always straddles
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let b = SCAN_IO_BATCH as u64;
+    let mut any_truncated = false;
+    for key in 0..20u64 {
+        let s0 = kv.stats.scanned;
+        let op = kv.op_scan(key, 64);
+        let (_mems, reads, _writes) = drive_op(&mut kv, op, &mut rng);
+        let scanned = kv.stats.scanned - s0;
+        assert!(scanned < 64, "sprig cannot hold a full len-64 scan");
+        let expect = (scanned + b - 1) / b;
+        assert_eq!(
+            reads as u64, expect,
+            "key {key}: {reads} IOs for {scanned} scanned"
+        );
+        if scanned > 0 {
+            any_truncated = true;
+        }
+    }
+    assert!(any_truncated, "no anchor produced entries");
+    assert_eq!(kv.stats.corruptions, 0);
+}
+
+#[test]
+fn lsmkv_scan_io_count_consistent_with_tombstone_skips() {
+    // Tombstoned keys are merged out at compute cost only: an identically
+    // seeded twin store without the deletes performs exactly the same
+    // block fetches and memory accesses — only the emitted-entry count
+    // drops, by the number of tombstones inside the scanned range. Fetches
+    // are also bounded by the number of blocks the range spans.
+    forall(
+        PropCfg { cases: 6, ..Default::default() },
+        |rng| {
+            (
+                rng.next_u64(),
+                rng.below(14_000),
+                1 + rng.below(48) as u32,
+                rng.below(7),
+            )
+        },
+        no_shrink,
+        |&(seed, start, len, ndel)| {
+            let mut rng_a = Rng::new(seed);
+            let mut clean = LsmKv::new(small_lsm(), &mut rng_a);
+            let mut rng_b = Rng::new(seed);
+            let mut churn = LsmKv::new(small_lsm(), &mut rng_b);
+            for j in 0..ndel {
+                let op = churn.op_delete(start + j * 3);
+                drive(&mut churn, op, &mut rng_b);
+            }
+
+            let s0 = clean.stats.scanned;
+            let op = clean.op_scan(start, len);
+            let (mems_c, reads_c, _w) = drive_op(&mut clean, op, &mut rng_a);
+            let scanned_c = clean.stats.scanned - s0;
+
+            let s0 = churn.stats.scanned;
+            let op = churn.op_scan(start, len);
+            let (mems_d, reads_d, _w) = drive_op(&mut churn, op, &mut rng_b);
+            let scanned_d = churn.stats.scanned - s0;
+
+            if reads_d != reads_c {
+                return Err(format!(
+                    "tombstones changed the IO count: {reads_c} -> {reads_d}"
+                ));
+            }
+            if mems_d != mems_c {
+                return Err(format!(
+                    "tombstones changed the access count: {mems_c} -> {mems_d}"
+                ));
+            }
+            let end = (start + len as u64).min(15_000);
+            let skipped = (0..ndel)
+                .map(|j| start + j * 3)
+                .filter(|k| *k < end)
+                .count() as u64;
+            if scanned_d + skipped != scanned_c {
+                return Err(format!(
+                    "scanned {scanned_d} + {skipped} tombstoned != clean {scanned_c}"
+                ));
+            }
+            // Each spanned block is fetched at most once.
+            let kpb = clean.cfg.keys_per_block as u64;
+            let span = (end - 1) / kpb - start / kpb + 1;
+            if reads_c as u64 > span {
+                return Err(format!("{reads_c} fetches over {span} spanned blocks"));
             }
             Ok(())
         },
