@@ -1,0 +1,83 @@
+//! First-class tier placement: sweep the DRAM budget for the
+//! Aerospike-like store past the full-offload knee (default L_mem = 8 µs,
+//! where the per-core prefetch wall `P/L` starts binding the descent rate)
+//! and reproduce the paper's headline — a small DRAM residue (the top
+//! index levels) recovers most of the all-DRAM throughput at a tiny
+//! fraction of the all-DRAM capacity cost. At 5 µs and below, full offload
+//! is already near-DRAM (the paper's core result), so the budget axis only
+//! separates at longer latencies.
+//!
+//! Policies come from `kvs::placement`: `AllSecondary` (full offload,
+//! ρ = 1), `Budget { dram_bytes }` (hottest structure classes first — for
+//! the tree, the top sprig levels), and `AllDram` (the DRAM baseline).
+//!
+//! Run: `cargo run --release --example placement [l_mem_us]`
+
+use cxlkvs::coordinator::runner::{best_threads, run_tree_with, SweepCfg};
+use cxlkvs::kvs::{PlacementPolicy, TreeKv, TreeKvConfig};
+use cxlkvs::sim::{Dur, Rng};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let l_us: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(8.0);
+
+    let total = TreeKvConfig::default().n_items * 64; // 64-byte index entries
+    let cases: Vec<(&str, PlacementPolicy)> = vec![
+        ("all-secondary (rho=1)", PlacementPolicy::AllSecondary),
+        (
+            "budget 2%",
+            PlacementPolicy::Budget {
+                dram_bytes: total / 50,
+            },
+        ),
+        (
+            "budget 10%",
+            PlacementPolicy::Budget {
+                dram_bytes: total / 10,
+            },
+        ),
+        ("all-DRAM baseline", PlacementPolicy::AllDram),
+    ];
+
+    println!("treekv tier placement at L_mem = {l_us} us (index = {} MB)", total / 1_000_000);
+    println!(
+        "{:>22} {:>10} {:>8} {:>8} {:>12} {:>8}",
+        "policy", "dram_MB", "M_sec", "M_dram", "ops/sec", "norm"
+    );
+    let mut dram_baseline = 0.0f64;
+    let mut rows = Vec::new();
+    for (name, policy) in &cases {
+        let cfg = TreeKvConfig {
+            placement: *policy,
+            ..Default::default()
+        };
+        // Capacity accounting from a probe construction (cheap, unsimulated).
+        let mut rng = Rng::new(0x9d);
+        let probe = TreeKv::new(cfg.clone(), &mut rng);
+        let dram_mb = probe.dram_bytes() as f64 / 1e6;
+        drop(probe);
+
+        let sweep = SweepCfg {
+            l_mem: Dur::us(l_us),
+            window: Dur::ms(15.0),
+            thread_candidates: vec![32, 64],
+            ..Default::default()
+        };
+        let (_, st) = best_threads(&sweep.thread_candidates.clone(), |n| {
+            run_tree_with(cfg.clone(), &sweep, n)
+        });
+        if *name == "all-DRAM baseline" {
+            dram_baseline = st.ops_per_sec;
+        }
+        rows.push((name.to_string(), dram_mb, st.mean_m, st.mean_m_dram, st.ops_per_sec));
+    }
+    for (name, dram_mb, m_sec, m_dram, ops) in rows {
+        println!(
+            "{name:>22} {dram_mb:>10.2} {m_sec:>8.1} {m_dram:>8.1} {ops:>12.0} {:>8.3}",
+            ops / dram_baseline.max(1.0)
+        );
+    }
+    println!();
+    println!("a small DRAM residue absorbs the top-of-descent accesses that every");
+    println!("lookup shares; the remaining deep hops hide behind the prefetch queue");
+}

@@ -11,7 +11,7 @@
 
 use cxlkvs::coordinator::report::{f2, f3, Report};
 use cxlkvs::coordinator::runner::{best_threads, run_tree_with, SweepCfg};
-use cxlkvs::kvs::{TieringPolicy, TreeKv, TreeKvConfig};
+use cxlkvs::kvs::{PlacementPolicy, TreeKv, TreeKvConfig};
 use cxlkvs::sim::{Dur, Machine, Rng};
 
 fn dram_baseline(window: Dur) -> f64 {
@@ -28,9 +28,9 @@ fn dram_baseline(window: Dur) -> f64 {
     .ops_per_sec
 }
 
-fn run_tiering(policy: TieringPolicy, window: Dur) -> (f64, f64, f64) {
+fn run_tiering(policy: PlacementPolicy, window: Dur) -> (f64, f64, f64) {
     let cfg = TreeKvConfig {
-        tiering: policy,
+        placement: policy,
         ..Default::default()
     };
     // Capacity-side DRAM fraction (what the operator pays for).
@@ -65,11 +65,11 @@ fn main() {
         &["policy", "DRAM capacity share", "measured M", "norm throughput"],
     );
     for (name, policy) in [
-        ("full offload (rho=1)", TieringPolicy::FullOffload),
-        ("random 2% in DRAM", TieringPolicy::Random { dram_frac: 0.02 }),
-        ("random 30% in DRAM", TieringPolicy::Random { dram_frac: 0.30 }),
-        ("top 4 levels in DRAM", TieringPolicy::TopLevels { levels: 4 }),
-        ("top 7 levels in DRAM", TieringPolicy::TopLevels { levels: 7 }),
+        ("full offload (rho=1)", PlacementPolicy::AllSecondary),
+        ("random 2% in DRAM", PlacementPolicy::Random { dram_frac: 0.02 }),
+        ("random 30% in DRAM", PlacementPolicy::Random { dram_frac: 0.30 }),
+        ("top 4 levels in DRAM", PlacementPolicy::TopLevels { k: 4 }),
+        ("top 7 levels in DRAM", PlacementPolicy::TopLevels { k: 7 }),
     ] {
         let (ops, cap, m) = run_tiering(policy, window);
         r.row(vec![

@@ -3,7 +3,9 @@
 //! paper's per-point optimization ("for each latency, we optimize the number
 //! of threads"). Points run in parallel across host threads.
 
-use crate::kvs::{model_mix, CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, TreeKv, TreeKvConfig};
+use crate::kvs::{
+    model_mix, CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, PlacementPolicy, TreeKv, TreeKvConfig,
+};
 use crate::microbench::{Microbench, MicrobenchConfig};
 use crate::model::{ExtParams, KindCost};
 use crate::sim::{Dur, Machine, MachineConfig, MemConfig, Rng, RunStats, SsdConfig, TailProfile};
@@ -49,6 +51,9 @@ pub struct SweepCfg {
     pub ssd: SsdConfig,
     /// SSD array size — the multi-SSD scale axis (1 = the classic sweeps).
     pub n_ssd: u32,
+    /// Index/cache tier placement — the DRAM-budget axis (`kvs::placement`;
+    /// `AllSecondary` = the classic full-offload sweeps).
+    pub placement: PlacementPolicy,
     pub seed: u64,
 }
 
@@ -65,6 +70,7 @@ impl Default for SweepCfg {
             cache_lines: 1_000_000,
             ssd: SsdConfig::optane_array(),
             n_ssd: 1,
+            placement: PlacementPolicy::AllSecondary,
             seed: 0x5eed,
         }
     }
@@ -104,6 +110,14 @@ impl SweepCfg {
     pub fn at_latency(&self, l: Dur) -> SweepCfg {
         SweepCfg {
             l_mem: l,
+            ..self.clone()
+        }
+    }
+
+    /// The same sweep under a different tier-placement policy.
+    pub fn at_placement(&self, p: PlacementPolicy) -> SweepCfg {
+        SweepCfg {
+            placement: p,
             ..self.clone()
         }
     }
@@ -148,22 +162,34 @@ pub fn fast_mode() -> bool {
     std::env::var("CXLKVS_FAST").map(|v| v == "1").unwrap_or(false)
 }
 
-/// Run one store at one point.
+/// Run one store at one point (default store configs; the sweep's
+/// placement axis is threaded into them).
 pub fn run_store(kind: StoreKind, sweep: &SweepCfg, threads: usize) -> RunStats {
     let mcfg = sweep.machine(threads);
     let mut rng = Rng::new(sweep.seed ^ 0xfeed);
     match kind {
         StoreKind::Tree => {
-            let kv = TreeKv::new(TreeKvConfig::default(), &mut rng)
-                .with_background(mcfg.cores, threads);
+            let cfg = TreeKvConfig {
+                placement: sweep.placement,
+                ..Default::default()
+            };
+            let kv = TreeKv::new(cfg, &mut rng).with_background(mcfg.cores, threads);
             Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
         }
         StoreKind::Lsm => {
-            let kv = LsmKv::new(LsmKvConfig::default(), &mut rng).with_background(threads);
+            let cfg = LsmKvConfig {
+                placement: sweep.placement,
+                ..Default::default()
+            };
+            let kv = LsmKv::new(cfg, &mut rng).with_background(threads);
             Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
         }
         StoreKind::Cache => {
-            let kv = CacheKv::new(CacheKvConfig::default(), &mut rng);
+            let cfg = CacheKvConfig {
+                placement: sweep.placement,
+                ..Default::default()
+            };
+            let kv = CacheKv::new(cfg, &mut rng);
             Machine::new(mcfg, kv).run(sweep.warmup, sweep.window)
         }
     }
@@ -215,35 +241,77 @@ pub fn run_store_ycsb(
 /// **post-run** per-kind model snapshot: `(workload fraction, KindCost)`
 /// pairs ready for `model::theta_mix_recip`. Snapshotting after the run
 /// lets hit-ratio-dependent kinds use measured counters (the paper's
-/// treatment of measured system parameters like ε).
+/// treatment of measured system parameters like ε). Delegates to
+/// [`run_store_ycsb_placed`] and drops the DRAM-byte accounting.
 pub fn run_store_ycsb_snap(
     kind: StoreKind,
     wl: YcsbWorkload,
     sweep: &SweepCfg,
     threads: usize,
 ) -> (RunStats, Vec<(f64, KindCost)>) {
+    let (st, mix, _) = run_store_ycsb_placed(kind, wl, sweep, threads);
+    (st, mix)
+}
+
+/// [`run_store_ycsb_snap`] plus the store's post-run simulated DRAM byte
+/// accounting under the sweep's placement policy (the `placement`
+/// experiment's third column). One store-construction path for all three
+/// callers — the gate, the reports, and the placement sweep cannot drift.
+pub fn run_store_ycsb_placed(
+    kind: StoreKind,
+    wl: YcsbWorkload,
+    sweep: &SweepCfg,
+    threads: usize,
+) -> (RunStats, Vec<(f64, KindCost)>, u64) {
     let mcfg = sweep.machine(threads);
     let mut rng = Rng::new(sweep.seed ^ 0xfeed ^ wl.tag().as_bytes()[0] as u64);
     let w = wl.weights();
     match kind {
         StoreKind::Tree => {
-            let kv = TreeKv::new(ycsb_tree_cfg(wl), &mut rng).with_background(mcfg.cores, threads);
+            let cfg = TreeKvConfig {
+                placement: sweep.placement,
+                ..ycsb_tree_cfg(wl)
+            };
+            let kv = TreeKv::new(cfg, &mut rng).with_background(mcfg.cores, threads);
             let mut m = Machine::new(mcfg, kv);
             let st = m.run(sweep.warmup, sweep.window);
-            (st, model_mix(&m.service, &w))
+            let bytes = m.service.dram_bytes();
+            (st, model_mix(&m.service, &w), bytes)
         }
         StoreKind::Lsm => {
-            let kv = LsmKv::new(ycsb_lsm_cfg(wl), &mut rng).with_background(threads);
+            let cfg = LsmKvConfig {
+                placement: sweep.placement,
+                ..ycsb_lsm_cfg(wl)
+            };
+            let kv = LsmKv::new(cfg, &mut rng).with_background(threads);
             let mut m = Machine::new(mcfg, kv);
             let st = m.run(sweep.warmup, sweep.window);
-            (st, model_mix(&m.service, &w))
+            let bytes = m.service.dram_bytes();
+            (st, model_mix(&m.service, &w), bytes)
         }
         StoreKind::Cache => {
-            let kv = CacheKv::new(ycsb_cache_cfg(wl), &mut rng);
+            let cfg = CacheKvConfig {
+                placement: sweep.placement,
+                ..ycsb_cache_cfg(wl)
+            };
+            let kv = CacheKv::new(cfg, &mut rng);
             let mut m = Machine::new(mcfg, kv);
             let st = m.run(sweep.warmup, sweep.window);
-            (st, model_mix(&m.service, &w))
+            let bytes = m.service.dram_bytes();
+            (st, model_mix(&m.service, &w), bytes)
         }
+    }
+}
+
+/// Total offloadable bytes of one store kind under a YCSB preset's default
+/// sizes (the `AllDram` footprint): the denominator turning the placement
+/// experiment's budget fractions into `PlacementPolicy::Budget` bytes.
+pub fn store_offload_bytes(kind: StoreKind, wl: YcsbWorkload, seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    match kind {
+        StoreKind::Tree => TreeKv::new(ycsb_tree_cfg(wl), &mut rng).offload_bytes_total(),
+        StoreKind::Lsm => LsmKv::new(ycsb_lsm_cfg(wl), &mut rng).offload_bytes_total(),
+        StoreKind::Cache => CacheKv::new(ycsb_cache_cfg(wl), &mut rng).offload_bytes_total(),
     }
 }
 
@@ -416,6 +484,7 @@ mod tests {
             op_latency_p50: Dur::ZERO,
             op_latency_p99: Dur::ZERO,
             mean_m: 10.0,
+            mean_m_dram: 0.0,
             mean_s: 1.0,
             mean_compute: Dur::us(2.0),
             eviction_ratio: 0.0,
@@ -455,6 +524,35 @@ mod tests {
             })
             .collect();
         assert_eq!(parallel_map(jobs), (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sweep_placement_axis_reaches_the_stores() {
+        use crate::workload::YcsbWorkload;
+        // AllDram placement through the sweep: no secondary accesses and a
+        // full DRAM footprint; AllSecondary reports zero bytes.
+        let sweep = SweepCfg {
+            window: Dur::ms(4.0),
+            warmup: Dur::ms(1.0),
+            l_mem: Dur::us(2.0),
+            ..Default::default()
+        }
+        .at_placement(PlacementPolicy::AllDram);
+        let (st, _, bytes) = run_store_ycsb_placed(StoreKind::Tree, YcsbWorkload::C, &sweep, 16);
+        assert_eq!(st.mean_m, 0.0, "AllDram leaves no secondary hops");
+        assert!(st.mean_m_dram > 1.0, "descent hops moved inline");
+        assert!(bytes > 0, "AllDram must account its footprint");
+        let base = SweepCfg {
+            window: Dur::ms(4.0),
+            warmup: Dur::ms(1.0),
+            l_mem: Dur::us(2.0),
+            ..Default::default()
+        };
+        let (_, _, b0) = run_store_ycsb_placed(StoreKind::Tree, YcsbWorkload::C, &base, 16);
+        assert_eq!(b0, 0, "AllSecondary consumes no DRAM");
+        // Budget fractions resolve against the store's total footprint.
+        let total = store_offload_bytes(StoreKind::Tree, YcsbWorkload::C, base.seed);
+        assert!(total > 0);
     }
 
     #[test]

@@ -29,9 +29,19 @@
 //!   report the store as degenerate rather than silently misbehaving.
 
 use super::common::{fnv1a, KvStats, NIL};
+use super::placement::{Plan, PlacementPolicy, StructClass};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
 use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ValueSize};
+
+/// Placement structure classes (`kvs::placement`), hottest-first: the
+/// tier-1 hash chains (CacheLib's AccessContainer — walked on every
+/// lookup, write, and invalidation) and the tier-1 LRU lists (MMContainer
+/// — touched on refreshes and eviction-candidate walks). The bucket
+/// directory and the tier-2 SOC index are the paper's residual DRAM
+/// footprint and stay outside the policy.
+const CC_CHAINS: usize = 0;
+const CC_LRU: usize = 1;
 
 /// Store-extra CPU attributed to tier-2 page IO pre/post suboperations
 /// (µs). **Single source** for both the `Step::Io` sites below (`T2Read`,
@@ -66,6 +76,10 @@ pub struct CacheKvConfig {
     pub t2_admit_prob: f64,
     /// SSD page size for tier-2 reads/writes.
     pub page_bytes: u32,
+    /// Tier placement of the tier-1 item structures (`kvs::placement`):
+    /// hash chains ≻ LRU lists. The write-path invalidations route through
+    /// the same policy (they previously assumed secondary-tier hops).
+    pub placement: PlacementPolicy,
 }
 
 impl Default for CacheKvConfig {
@@ -86,6 +100,7 @@ impl Default for CacheKvConfig {
             lru_refresh_prob: 0.1,
             t2_admit_prob: 0.9,
             page_bytes: 4096,
+            placement: PlacementPolicy::AllSecondary,
         }
     }
 }
@@ -119,6 +134,8 @@ pub struct CacheKv {
     t2_ring: std::collections::VecDeque<(u64, u32)>,
     t2_set: std::collections::HashMap<u64, u32>,
     t2_gen: u32,
+    /// Resolved tier placement over the tier-1 structure classes.
+    plan: Plan,
     pub stats: KvStats,
 }
 
@@ -161,7 +178,27 @@ pub enum CacheOp {
 }
 
 impl CacheKv {
+    /// The placement structure classes (see the `CC_*` consts): each
+    /// intrusive 64-byte item splits evenly between its chain half
+    /// (key + hash link) and its LRU half (prev/next links).
+    fn placement_classes(cfg: &CacheKvConfig) -> Vec<StructClass> {
+        let items = cfg.t1_items as u64;
+        vec![
+            StructClass {
+                name: "t1-hash-chains",
+                bytes: items * 32,
+                hotness: 2.0,
+            },
+            StructClass {
+                name: "t1-lru-lists",
+                bytes: items * 32,
+                hotness: 1.0,
+            },
+        ]
+    }
+
     pub fn new(cfg: CacheKvConfig, rng: &mut Rng) -> CacheKv {
+        let plan = Plan::resolve(cfg.placement, Self::placement_classes(&cfg));
         let keygen = KeyGen::new(cfg.n_items, cfg.key_dist);
         let mut kv = CacheKv {
             buckets: vec![NIL; cfg.buckets as usize],
@@ -173,6 +210,7 @@ impl CacheKv {
             t2_ring: std::collections::VecDeque::with_capacity(cfg.t2_items as usize + 1),
             t2_set: std::collections::HashMap::new(),
             t2_gen: 0,
+            plan,
             stats: KvStats::default(),
             keygen,
             cfg,
@@ -362,6 +400,16 @@ impl CacheKv {
         self.t1_lookup(key).is_some() || self.t2_set.contains_key(&key)
     }
 
+    /// Simulated DRAM bytes the placement consumes.
+    pub fn dram_bytes(&self) -> u64 {
+        self.plan.dram_bytes()
+    }
+
+    /// Total offloadable bytes (the `AllDram` footprint).
+    pub fn offload_bytes_total(&self) -> u64 {
+        self.plan.total_bytes()
+    }
+
     // ---- directed operation constructors (also used by next_op) ----------
 
     pub fn op_get(&mut self, key: u64) -> CacheOp {
@@ -500,22 +548,23 @@ impl Service for CacheKv {
                         // splice runs under the (sharded) LRU lock —
                         // holding a lock across prefetch+yield accesses
                         // would make hold time grow with memory latency.
-                        return Step::MemAccess(Tier::Secondary);
+                        return Step::MemAccess(self.plan.tier(CC_CHAINS));
                     }
                     *op = CacheOp::Finished;
                     self.stats.verified += 1;
-                    return Step::MemAccess(Tier::Secondary);
+                    return Step::MemAccess(self.plan.tier(CC_CHAINS));
                 }
                 *cur = it.hash_next;
-                // Chain hop: dependent secondary access.
-                Step::MemAccess(Tier::Secondary)
+                // Chain hop: dependent access at the chain class's tier.
+                Step::MemAccess(self.plan.tier(CC_CHAINS))
             }
             CacheOp::Refresh { key, hops } => {
                 let k = *key;
                 match *hops {
                     0 => {
                         *hops = 1;
-                        Step::MemAccess(Tier::Secondary) // read prev neighbor
+                        // Read the prev neighbor (LRU links).
+                        Step::MemAccess(self.plan.tier(CC_LRU))
                     }
                     1 => {
                         *hops = 2;
@@ -578,11 +627,11 @@ impl Service for CacheKv {
                 locked,
             } => {
                 // Walk/eviction-candidate reads happen unlocked (4 dependent
-                // accesses); only the final structural mutation runs under
-                // the sharded eviction lock (1 access).
+                // accesses over the LRU lists); only the final structural
+                // mutation runs under the sharded eviction lock.
                 if *hops < 4 {
                     *hops += 1;
-                    return Step::MemAccess(Tier::Secondary);
+                    return Step::MemAccess(self.plan.tier(CC_LRU));
                 }
                 if !*locked {
                     *locked = true;
@@ -654,7 +703,11 @@ impl Service for CacheKv {
                             return Step::Lock(lru_lock(k));
                         }
                         *cur = it.hash_next;
-                        Step::MemAccess(Tier::Secondary)
+                        // Invalidation chain hops route through the same
+                        // placement policy as the read path (previously
+                        // hardcoded secondary even when the chains would be
+                        // DRAM-resident under any sane budget).
+                        Step::MemAccess(self.plan.tier(CC_CHAINS))
                     }
                     1 => {
                         // Unlink under the lock; also drop any tier-2 copy.
@@ -747,6 +800,12 @@ impl CacheKv {
         )
     }
 
+    /// Split per-class expected access counts by the live placement plan
+    /// (chains vs LRU lists; see [`Plan::split_hops`]).
+    fn split_classes(&self, chains: f64, lru: f64) -> (f64, f64) {
+        self.plan.split_hops(&[(CC_CHAINS, chains), (CC_LRU, lru)])
+    }
+
     /// Snapshot tier hit ratios `(h1, h2 | t1-miss)`: measured counters when
     /// a run has populated them, else structural residency (an access-share
     /// underestimate for skewed key distributions on a cold store). `h1`
@@ -788,8 +847,10 @@ impl super::ModelCosts for CacheKv {
         // Tier-1 is at capacity after warmup; a partial fill evicts less.
         let p_evict = (self.t1_len as f64 / self.cfg.t1_items.max(1) as f64).clamp(0.0, 1.0);
         let admit = self.cfg.t2_admit_prob * p_evict;
-        // Insert path: 4 unlocked eviction-candidate walk accesses.
-        let miss_m = miss_chain + 4.0;
+        // Chain-class accesses are common to every kind; the LRU class adds
+        // the refresh neighbor read on hits and the 4 eviction-candidate
+        // walk accesses behind every insert.
+        let chains = h1 * hit_pos + (1.0 - h1) * miss_chain;
         match kind {
             OpKind::Read | OpKind::Rmw => {
                 let p_refresh = if kind == OpKind::Rmw {
@@ -797,7 +858,7 @@ impl super::ModelCosts for CacheKv {
                 } else {
                     self.cfg.lru_refresh_prob
                 };
-                let m = h1 * (hit_pos + p_refresh) + (1.0 - h1) * miss_m;
+                let (m, m_dram) = self.split_classes(chains, h1 * p_refresh + (1.0 - h1) * 4.0);
                 // IOs: tier-2 page read on a t1-miss hit, plus the admitted
                 // eviction's page write behind every tier-1 insert.
                 let rd = (1.0 - h1) * h2;
@@ -813,6 +874,7 @@ impl super::ModelCosts for CacheKv {
                 };
                 KindCost {
                     m,
+                    m_dram,
                     s,
                     a_io: self.cfg.page_bytes as f64,
                     t_mem,
@@ -824,9 +886,10 @@ impl super::ModelCosts for CacheKv {
             }
             OpKind::Write => {
                 // Hit: update-in-place (splice always). Miss: fresh insert.
-                let m = h1 * (hit_pos + 1.0) + (1.0 - h1) * miss_m;
+                let (m, m_dram) = self.split_classes(chains, h1 + (1.0 - h1) * 4.0);
                 KindCost {
                     m,
+                    m_dram,
                     s: (1.0 - h1) * admit,
                     a_io: self.cfg.page_bytes as f64,
                     t_mem,
@@ -835,11 +898,12 @@ impl super::ModelCosts for CacheKv {
                     t_fixed: DRAM_US,
                 }
             }
-            OpKind::Delete => KindCost::memory_only(
-                h1 * hit_pos + (1.0 - h1) * miss_chain,
-                t_mem,
-                DRAM_US + t_mem,
-            ),
+            OpKind::Delete => {
+                // Invalidation: the chain walk routes through the policy
+                // just like the read path.
+                let (m, m_dram) = self.split_classes(chains, 0.0);
+                KindCost::memory_only(m, t_mem, DRAM_US + t_mem).with_m_dram(m_dram)
+            }
             // Handled by the early return above.
             OpKind::Scan => unreachable!(),
         }
@@ -1091,6 +1155,99 @@ mod tests {
         assert_eq!(kv.stats.scans, 1);
         assert_eq!(kv.stats.scanned, 0, "no entries are ever returned");
         assert_eq!((mems, reads, writes), (0, 0, 0), "no accesses, no IO");
+    }
+
+    #[test]
+    fn delete_invalidation_routes_through_the_placement_policy() {
+        use super::super::common::drive_op_tiers;
+        // The write-path invalidation fix: delete's chain-walk hops must
+        // follow the policy instead of assuming secondary-tier hops. Use a
+        // budget covering exactly the chain class: deletes then run fully
+        // inline while the LRU walk (reads/inserts) stays secondary.
+        let chains = CacheKv::placement_classes(&small_cfg())[0].bytes;
+        let mut rng = Rng::new(30);
+        let mut kv = CacheKv::new(
+            CacheKvConfig {
+                placement: PlacementPolicy::Budget { dram_bytes: chains },
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        assert!(kv.plan.in_dram(CC_CHAINS) && !kv.plan.in_dram(CC_LRU));
+        assert_eq!(kv.dram_bytes(), chains);
+        let key = 4321u64;
+        if kv.t1_lookup(key).is_none() {
+            kv.t1_insert(key, &mut rng);
+        }
+        let op = kv.op_delete(key);
+        let c = drive_op_tiers(&mut kv, op, &mut rng);
+        assert_eq!(
+            c.secondary, 0,
+            "DRAM-resident chains: delete must not pay secondary hops: {c:?}"
+        );
+        assert!(c.dram >= 1, "bucket read + chain hops: {c:?}");
+        // Control: under AllSecondary the same delete pays secondary hops
+        // for every chain position past the bucket head.
+        let mut rng = Rng::new(30);
+        let mut kv = CacheKv::new(small_cfg(), &mut rng);
+        if kv.t1_lookup(key).is_none() {
+            kv.t1_insert(key, &mut rng);
+        }
+        // Push the item behind at least one chain neighbor so the walk has
+        // a secondary hop to charge.
+        let bucket = kv.bucket_of(key);
+        let mut twin = key + kv.cfg.buckets as u64;
+        while kv.bucket_of(twin) != bucket {
+            twin += 1;
+        }
+        if kv.t1_lookup(twin).is_none() {
+            kv.t1_insert(twin, &mut rng);
+        }
+        let op = kv.op_delete(key);
+        let c = drive_op_tiers(&mut kv, op, &mut rng);
+        assert!(c.secondary >= 1, "AllSecondary delete walk: {c:?}");
+        // The model snapshot mirrors the fix: deletes move to m_dram.
+        use super::super::ModelCosts;
+        let mut rng = Rng::new(31);
+        let placed = CacheKv::new(
+            CacheKvConfig {
+                placement: PlacementPolicy::Budget { dram_bytes: chains },
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        let del = placed.model_params(OpKind::Delete);
+        assert_eq!(del.m, 0.0, "chain-resident deletes are inline");
+        assert!(del.m_dram > 0.0);
+    }
+
+    #[test]
+    fn placement_budget_accounts_bytes_monotonically() {
+        let total = {
+            let mut rng = Rng::new(32);
+            CacheKv::new(
+                CacheKvConfig {
+                    placement: PlacementPolicy::AllDram,
+                    ..small_cfg()
+                },
+                &mut rng,
+            )
+            .offload_bytes_total()
+        };
+        let mut prev = 0u64;
+        for budget in [0, total / 4, total / 2, 3 * total / 4, total] {
+            let mut rng = Rng::new(32);
+            let kv = CacheKv::new(
+                CacheKvConfig {
+                    placement: PlacementPolicy::Budget { dram_bytes: budget },
+                    ..small_cfg()
+                },
+                &mut rng,
+            );
+            let b = kv.dram_bytes();
+            assert!(b <= budget && b >= prev, "budget {budget}: {prev} -> {b}");
+            prev = b;
+        }
     }
 
     #[test]

@@ -1,29 +1,50 @@
 //! Shared helpers for the KV store implementations.
 
-use crate::sim::{IoKind, Rng, Service, Step};
+use crate::sim::{IoKind, Rng, Service, Step, Tier};
+
+/// Per-tier access and IO counts of one driven operation (see
+/// [`drive_op_tiers`]): the tier-placement test surface.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DriveCounts {
+    /// Inline DRAM accesses (no prefetch, no `T_sw`).
+    pub dram: u32,
+    /// Secondary-memory accesses (prefetch + yield path).
+    pub secondary: u32,
+    pub reads: u32,
+    pub writes: u32,
+}
 
 /// Drive one operation's state machine to completion outside the machine:
 /// timing-free — `Lock`/`Unlock`/`Yield` are acknowledged and IOs complete
-/// instantly. Returns (memory accesses, read IOs, write IOs). Intended for
-/// directed tests and offline diagnostics; simulated runs go through
-/// [`crate::sim::Machine`].
-pub fn drive_op<S: Service>(svc: &mut S, mut op: S::Op, rng: &mut Rng) -> (u32, u32, u32) {
-    let (mut mems, mut reads, mut writes) = (0, 0, 0);
+/// instantly. Returns (memory accesses of either tier, read IOs, write
+/// IOs). Intended for directed tests and offline diagnostics; simulated
+/// runs go through [`crate::sim::Machine`].
+pub fn drive_op<S: Service>(svc: &mut S, op: S::Op, rng: &mut Rng) -> (u32, u32, u32) {
+    let c = drive_op_tiers(svc, op, rng);
+    (c.dram + c.secondary, c.reads, c.writes)
+}
+
+/// [`drive_op`] with the memory accesses split by [`Tier`] — the placement
+/// invariant tests assert which side of the DRAM/secondary split each
+/// traversal's hops land on under a given `kvs::placement` policy.
+pub fn drive_op_tiers<S: Service>(svc: &mut S, mut op: S::Op, rng: &mut Rng) -> DriveCounts {
+    let mut c = DriveCounts::default();
     let mut guard = 0u32;
     loop {
         match svc.step(0, &mut op, rng) {
             Step::Done => break,
-            Step::MemAccess(_) => mems += 1,
+            Step::MemAccess(Tier::Dram) => c.dram += 1,
+            Step::MemAccess(Tier::Secondary) => c.secondary += 1,
             Step::Io { kind, .. } => match kind {
-                IoKind::Read => reads += 1,
-                IoKind::Write => writes += 1,
+                IoKind::Read => c.reads += 1,
+                IoKind::Write => c.writes += 1,
             },
             _ => {}
         }
         guard += 1;
         assert!(guard < 200_000, "op did not terminate");
     }
-    (mems, reads, writes)
+    c
 }
 
 /// FNV-1a 64-bit hash (key digests, bucket hashing).

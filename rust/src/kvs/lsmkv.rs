@@ -33,9 +33,20 @@
 use std::collections::HashSet;
 
 use super::common::{fnv1a, KvStats, NIL};
+use super::placement::{Plan, PlacementPolicy, StructClass};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
 use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ScanLen, ValueSize};
+
+/// Placement structure classes (`kvs::placement`), hottest-first: the
+/// sharded hash + LRU cache handles are touched several times per lookup
+/// per ~64 B each, the per-block restart arrays once per in-block search,
+/// and the cached data-block bytes once or twice per op over the largest
+/// footprint. The memtable is host-DRAM by design (the paper's residual
+/// footprint) and outside the policy.
+const PC_HANDLES: usize = 0;
+const PC_RESTARTS: usize = 1;
+const PC_DATA: usize = 2;
 
 /// Store-extra CPU attributed to each block fetch's pre/post suboperations
 /// (µs). **Single source** for both the `Step::Io` sites below (point-read
@@ -71,6 +82,9 @@ pub struct LsmKvConfig {
     pub memtable_cap: u32,
     /// Run the background flush/compaction thread.
     pub compaction: bool,
+    /// Tier placement of the block cache's structures (`kvs::placement`):
+    /// handles (chains+LRU) ≻ restart arrays ≻ data-block bytes.
+    pub placement: PlacementPolicy,
 }
 
 impl Default for LsmKvConfig {
@@ -97,6 +111,7 @@ impl Default for LsmKvConfig {
             t_node: Dur::ns(100.0),
             memtable_cap: 4096,
             compaction: true,
+            placement: PlacementPolicy::AllSecondary,
         }
     }
 }
@@ -144,6 +159,8 @@ pub struct LsmKv {
     /// background thread flushes them into the SSTable levels.
     sealed_tombstones: HashSet<u64>,
     pub stats: KvStats,
+    /// Resolved tier placement over the block-cache structure classes.
+    plan: Plan,
     bg_tid_floor: usize,
     bg_threads_per_core: usize,
 }
@@ -215,7 +232,34 @@ pub enum LsmOp {
 }
 
 impl LsmKv {
+    /// The placement structure classes (see the `PC_*` consts): byte
+    /// footprints from the configured cache geometry, access shares from
+    /// the default chain/in-block costs (reporting only — resolution is
+    /// rank-based).
+    fn placement_classes(cfg: &LsmKvConfig) -> Vec<StructClass> {
+        let blocks = cfg.cache_blocks as u64;
+        let block_bytes = cfg.keys_per_block as u64 * (cfg.value_size.mean() as u64 + 20 + 8);
+        vec![
+            StructClass {
+                name: "cache-handles(chains+lru)",
+                bytes: blocks * 64 + cfg.shards as u64 * cfg.buckets_per_shard as u64 * 8,
+                hotness: 4.0,
+            },
+            StructClass {
+                name: "block-restarts",
+                bytes: blocks * ((cfg.keys_per_block as u64 / 4).max(1) * 4 + 4),
+                hotness: 1.0,
+            },
+            StructClass {
+                name: "block-data",
+                bytes: blocks * block_bytes,
+                hotness: 1.5,
+            },
+        ]
+    }
+
     pub fn new(cfg: LsmKvConfig, rng: &mut Rng) -> LsmKv {
+        let plan = Plan::resolve(cfg.placement, Self::placement_classes(&cfg));
         let n_blocks = ((cfg.n_items + cfg.keys_per_block as u64 - 1)
             / cfg.keys_per_block as u64) as u32;
         let shards = (0..cfg.shards)
@@ -240,6 +284,7 @@ impl LsmKv {
             fresh_tombstones: HashSet::new(),
             sealed_tombstones: HashSet::new(),
             stats: KvStats::default(),
+            plan,
             bg_tid_floor: usize::MAX,
             bg_threads_per_core: 1,
             keygen,
@@ -424,6 +469,16 @@ impl LsmKv {
         self.stats.hit_ratio()
     }
 
+    /// Simulated DRAM bytes the placement consumes.
+    pub fn dram_bytes(&self) -> u64 {
+        self.plan.dram_bytes()
+    }
+
+    /// Total offloadable bytes (the `AllDram` footprint).
+    pub fn offload_bytes_total(&self) -> u64 {
+        self.plan.total_bytes()
+    }
+
     fn lock_of(&self, block: u32) -> u32 {
         (self.shard_of(block) as u32) % 64
     }
@@ -598,10 +653,19 @@ impl LsmKv {
         }
     }
 
+    /// Split per-class expected access counts by the live placement plan
+    /// (returns `(m_sec, m_dram)` — see [`Plan::split_hops`]).
+    fn split_classes(&self, handles: f64, restarts: f64, data: f64) -> (f64, f64) {
+        let classes = [(PC_HANDLES, handles), (PC_RESTARTS, restarts), (PC_DATA, data)];
+        self.plan.split_hops(&classes)
+    }
+
     /// Θ_scan cost vector for an explicit scan length: the merged iterator
     /// touches ≈ `len/keys_per_block + 1` blocks (chain walk each, SSD
     /// fetch for the cache-missing share), plus one dependent access per
-    /// restart interval (`len/4`).
+    /// restart interval (`len/4`). Every term is **linear** in `len`, so
+    /// the mean length is unbiased here (unlike treekv's batched-IO
+    /// ceiling, which needs the second moment).
     pub fn scan_model_params(&self, len: f64) -> KindCost {
         let probe = self.probe_cache();
         let h = self.snapshot_hit_ratio(&probe);
@@ -617,12 +681,15 @@ impl LsmKv {
             return KindCost::memory_only(0.0, t_mem, 3.0 * DRAM_US + t_mem);
         }
         let blocks = len / self.cfg.keys_per_block as f64 + 1.0;
-        // Per block: chain walk (simulator's chain_probe hops), +1 first
-        // touch on a cached block; per entry: one access per 4-entry
-        // restart interval, compute otherwise.
-        let m = blocks * (h * (probe.hit_scan + 1.0) + (1.0 - h) * probe.miss_scan) + len / 4.0;
+        // Per block: chain walk (simulator's chain_probe hops) over the
+        // handles, +1 first data touch on a cached block; per entry: one
+        // data access per 4-entry restart interval, compute otherwise.
+        let handles = blocks * (h * probe.hit_scan + (1.0 - h) * probe.miss_scan);
+        let data = blocks * h + len / 4.0;
+        let (m_sec, m_dram) = self.split_classes(handles, 0.0, data);
         KindCost {
-            m,
+            m: m_sec,
+            m_dram,
             s: blocks * (1.0 - h),
             a_io: self.block_bytes() as f64,
             t_mem,
@@ -660,14 +727,17 @@ impl super::ModelCosts for LsmKv {
         let h = self.snapshot_hit_ratio(&probe);
         match kind {
             OpKind::Read | OpKind::Rmw => {
-                // Hit: chain walk + 2 in-block accesses. Miss: chain to the
-                // end + 3 insert-walk accesses + 2 in-block after the fetch.
-                let m = h * (probe.hit_acc + 2.0) + (1.0 - h) * (probe.miss_acc + 5.0);
+                // Hit: chain walk + 2 in-block accesses (1 restart probe +
+                // 1 data read). Miss: chain to the end + 3 insert-walk
+                // handle accesses + the same 2 in-block after the fetch.
+                let handles = h * probe.hit_acc + (1.0 - h) * (probe.miss_acc + 3.0);
+                let (m_sec, m_dram) = self.split_classes(handles, 1.0, 1.0);
                 let t_fixed = 3.0 * DRAM_US
                     + t_mem
                     + if kind == OpKind::Rmw { write_fixed } else { 0.0 };
                 KindCost {
-                    m,
+                    m: m_sec,
+                    m_dram,
                     s: 1.0 - h,
                     a_io: self.block_bytes() as f64,
                     t_mem,
@@ -759,13 +829,14 @@ impl Service for LsmKv {
                 let r = *rmw;
                 let block = self.block_of(k);
                 if *first {
-                    // Reading the bucket head itself is one secondary access.
+                    // Reading the bucket head itself is one cache-handle
+                    // access (placement class PC_HANDLES).
                     *first = false;
                     if *entry == NIL {
                         self.stats.misses += 1;
                         *op = LsmOp::Fetch { key: k, rmw: r };
                     }
-                    return Step::MemAccess(Tier::Secondary);
+                    return Step::MemAccess(self.plan.tier(PC_HANDLES));
                 }
                 let id = *entry;
                 if id == NIL {
@@ -787,7 +858,7 @@ impl Service for LsmKv {
                         hops: 0,
                         rmw: r,
                     };
-                    return Step::MemAccess(Tier::Secondary);
+                    return Step::MemAccess(self.plan.tier(PC_HANDLES));
                 }
                 *entry = e.hash_next;
                 if *entry == NIL {
@@ -795,7 +866,7 @@ impl Service for LsmKv {
                     *op = LsmOp::Fetch { key: k, rmw: r };
                     return Step::Compute(self.cfg.t_node);
                 }
-                Step::MemAccess(Tier::Secondary)
+                Step::MemAccess(self.plan.tier(PC_HANDLES))
             }
             LsmOp::LruPromote {
                 key,
@@ -858,11 +929,11 @@ impl Service for LsmKv {
                 let k = *key;
                 let r = *rmw;
                 let block = self.block_of(k);
-                // Eviction-candidate walk (3 accesses) runs unlocked; the
-                // lock covers only the final structural mutation.
+                // Eviction-candidate walk (3 accesses over the LRU handles)
+                // runs unlocked; the lock covers only the final mutation.
                 if *hops < 3 {
                     *hops += 1;
-                    return Step::MemAccess(Tier::Secondary);
+                    return Step::MemAccess(self.plan.tier(PC_HANDLES));
                 }
                 if *hops == 3 {
                     *hops = 4;
@@ -921,7 +992,8 @@ impl Service for LsmKv {
                     } else {
                         *op = LsmOp::Finished;
                     }
-                    return Step::MemAccess(Tier::Secondary);
+                    // The final interval scan reads the block's data bytes.
+                    return Step::MemAccess(self.plan.tier(PC_DATA));
                 }
                 let mid = (*lo + *hi) / 2;
                 if (*key as u32) < mid {
@@ -929,7 +1001,8 @@ impl Service for LsmKv {
                 } else {
                     *lo = mid;
                 }
-                Step::MemAccess(Tier::Secondary)
+                // Restart-array probe (placement class PC_RESTARTS).
+                Step::MemAccess(self.plan.tier(PC_RESTARTS))
             }
             LsmOp::WriteMem { key, probes } => {
                 // Memtable skiplist insert: DRAM accesses only.
@@ -1010,7 +1083,7 @@ impl Service for LsmKv {
                     if *chain_left > 0 {
                         // Bucket-head + chain-walk accesses for this block.
                         *chain_left -= 1;
-                        return Step::MemAccess(Tier::Secondary);
+                        return Step::MemAccess(self.plan.tier(PC_HANDLES));
                     }
                     if *need_io {
                         *need_io = false;
@@ -1029,7 +1102,7 @@ impl Service for LsmKv {
                     *in_block = true;
                     *stride = 0;
                     // First touch of the cached block's bytes.
-                    return Step::MemAccess(Tier::Secondary);
+                    return Step::MemAccess(self.plan.tier(PC_DATA));
                 }
                 // Consume one key from the resident block; tombstoned keys
                 // are merged out (compute only).
@@ -1047,7 +1120,7 @@ impl Service for LsmKv {
                 if *stride % 4 == 0 {
                     // Crossing into the next restart interval: one more
                     // dependent access over the cached block bytes.
-                    Step::MemAccess(Tier::Secondary)
+                    Step::MemAccess(self.plan.tier(PC_DATA))
                 } else {
                     Step::Compute(self.cfg.t_node)
                 }
@@ -1375,6 +1448,68 @@ mod tests {
             read.s,
             warm.s
         );
+    }
+
+    #[test]
+    fn placement_routes_cache_accesses_and_accounts_bytes() {
+        use super::super::common::drive_op_tiers;
+        use super::super::placement::PlacementPolicy;
+        // AllDram: no secondary hop anywhere on the read path.
+        let mut rng = Rng::new(20);
+        let mut kv = LsmKv::new(
+            LsmKvConfig {
+                placement: PlacementPolicy::AllDram,
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        assert_eq!(kv.dram_bytes(), kv.offload_bytes_total());
+        let op = kv.op_get(777);
+        let c = drive_op_tiers(&mut kv, op, &mut rng);
+        assert_eq!(c.secondary, 0, "AllDram get must stay inline: {c:?}");
+        assert!(c.dram >= 4, "memtable probes + chain walk: {c:?}");
+        // Budget covering only the handles: chain hops go DRAM, the
+        // in-block data read stays secondary.
+        let mut rng = Rng::new(20);
+        let handles = LsmKv::placement_classes(&small_cfg())[0].bytes;
+        let mut kv = LsmKv::new(
+            LsmKvConfig {
+                placement: PlacementPolicy::Budget { dram_bytes: handles },
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        assert!(kv.plan.in_dram(PC_HANDLES) && !kv.plan.in_dram(PC_DATA));
+        assert_eq!(kv.dram_bytes(), handles);
+        let op = kv.op_get(777);
+        let c = drive_op_tiers(&mut kv, op, &mut rng);
+        assert!(
+            c.secondary >= 1 && c.secondary <= 2,
+            "only the in-block restart/data accesses stay secondary: {c:?}"
+        );
+        // DRAM bytes monotone in the budget knob.
+        let total = kv.offload_bytes_total();
+        let mut prev = 0u64;
+        for budget in [0, handles / 2, handles, total / 2, total] {
+            let mut rng = Rng::new(20);
+            let kv = LsmKv::new(
+                LsmKvConfig {
+                    placement: PlacementPolicy::Budget { dram_bytes: budget },
+                    ..small_cfg()
+                },
+                &mut rng,
+            );
+            let b = kv.dram_bytes();
+            assert!(b <= budget && b >= prev, "budget {budget}: {prev} -> {b}");
+            prev = b;
+        }
+        // The model snapshot splits accordingly: handles-only placement
+        // moves the chain hops to m_dram but keeps the two in-block
+        // accesses (restart probe + data read) on the secondary side.
+        use super::super::ModelCosts;
+        let read = kv.model_params(OpKind::Read);
+        assert_eq!(read.m, 2.0, "in-block accesses stay secondary");
+        assert!(read.m_dram > 0.5, "chain hops moved to DRAM: {}", read.m_dram);
     }
 
     #[test]

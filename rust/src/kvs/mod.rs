@@ -27,6 +27,12 @@
 //! configured (the YCSB A–F presets in [`crate::workload::ycsb`]) and fall
 //! back to the paper's two-kind read:write [`crate::workload::OpMix`].
 //!
+//! Tier selection is first-class: every `MemAccess` site consults a shared
+//! [`placement::PlacementPolicy`] (all-secondary, all-DRAM, top levels, or
+//! a DRAM byte budget over hotness-ranked structure classes), with
+//! per-store accounting of the simulated DRAM bytes consumed — see
+//! [`placement`] for the split-hop Θ derivation and per-store class lists.
+//!
 //! Each store holds *real* data structures: every simulated pointer
 //! dereference corresponds to an actual traversal step over actual keys, so
 //! the per-operation access count M varies operation-to-operation exactly the
@@ -36,12 +42,14 @@
 pub mod cachekv;
 pub mod common;
 pub mod lsmkv;
+pub mod placement;
 pub mod treekv;
 
 pub use cachekv::{CacheKv, CacheKvConfig};
-pub use common::{drive_op, fnv1a, KvStats};
+pub use common::{drive_op, drive_op_tiers, fnv1a, DriveCounts, KvStats};
 pub use lsmkv::{LsmKv, LsmKvConfig};
-pub use treekv::{TieringPolicy, TreeKv, TreeKvConfig, SCAN_IO_BATCH};
+pub use placement::{Plan, PlacementPolicy, StructClass};
+pub use treekv::{TreeKv, TreeKvConfig, SCAN_IO_BATCH};
 
 use crate::model::KindCost;
 use crate::workload::{OpKind, OpWeights};

@@ -43,6 +43,7 @@
 //! even when slots are recycled mid-scan.
 
 use super::common::{fnv1a, KvStats, NIL};
+use super::placement::{Plan, PlacementPolicy, StructClass};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
 use crate::workload::{KeyGen, OpKind, OpMix, OpWeights, ScanLen, ValueSize};
@@ -73,24 +74,9 @@ struct Node {
     block: u32,
     /// Value size in bytes.
     vsize: u32,
-    /// §5.2.3 tiering extension: this entry lives in host DRAM.
+    /// Tier placement: this entry lives in host DRAM (§5.2.3 extension,
+    /// resolved per-entry from the [`PlacementPolicy`]).
     in_dram: bool,
-}
-
-/// §5.2.3 extension: how index entries are split between host DRAM and
-/// secondary memory when only part of the index is offloaded.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum TieringPolicy {
-    /// Everything on secondary memory (the paper's base case, ρ = 1).
-    FullOffload,
-    /// A uniformly random fraction `dram_frac` of entries stays in DRAM
-    /// (what Eq 15's access-frequency interpolation assumes).
-    Random { dram_frac: f64 },
-    /// Access-aware: the top `levels` of every sprig stay in DRAM. Since
-    /// every descent passes through the top levels, a small DRAM budget
-    /// absorbs a disproportionate share of the accesses — the "designing
-    /// tiering for microsecond-latency memory" direction of §5.2.3.
-    TopLevels { levels: u32 },
 }
 
 #[derive(Debug, Clone)]
@@ -98,8 +84,13 @@ pub struct TreeKvConfig {
     pub n_items: u64,
     /// Number of sprigs (sub-trees); items/sprigs sets the tree depth M.
     pub sprigs: u32,
-    /// Index placement policy (§5.2.3 extension).
-    pub tiering: TieringPolicy,
+    /// Index tier placement (`kvs::placement`): the structure classes are
+    /// the sprig-forest levels, hottest-first — every descent passes the
+    /// top levels, so a small DRAM budget absorbs a disproportionate
+    /// access share. `Random` is honored per entry (Eq 15's
+    /// ρ-interpolation); `Budget` resolves to the deepest level prefix
+    /// whose 64-byte entries fit.
+    pub placement: PlacementPolicy,
     pub key_dist: crate::workload::KeyDist,
     /// Read:write mix (paper figures). Ignored when `ops` is set.
     pub mix: OpMix,
@@ -123,7 +114,7 @@ impl Default for TreeKvConfig {
             // measured Aerospike runs (depth tracks items/sprigs only).
             n_items: 500_000,
             sprigs: 512,
-            tiering: TieringPolicy::FullOffload,
+            placement: PlacementPolicy::AllSecondary,
             key_dist: crate::workload::KeyDist::Uniform,
             mix: OpMix::READ_ONLY,
             ops: None,
@@ -150,6 +141,9 @@ pub struct TreeKv {
     log_head: u32,
     /// Blocks freed by updates/deletes, pending defrag.
     dead_blocks: u64,
+    /// `Budget` placement resolved to a level prefix: entries at depth
+    /// `< dram_levels` are DRAM-resident (see [`TreeKv::level_classes`]).
+    dram_levels: u32,
     pub stats: KvStats,
     /// `tid % bg_threads_per_core == bg_tid_floor` marks a background
     /// defragger thread (one per core); `usize::MAX` disables them.
@@ -250,6 +244,7 @@ pub enum TreeOp {
 impl TreeKv {
     pub fn new(cfg: TreeKvConfig, rng: &mut Rng) -> TreeKv {
         let keygen = KeyGen::new(cfg.n_items, cfg.key_dist);
+        let plan = Plan::resolve(cfg.placement, Self::level_classes(cfg.n_items, cfg.sprigs));
         let mut kv = TreeKv {
             roots: vec![NIL; cfg.sprigs as usize],
             nodes: Vec::with_capacity(cfg.n_items as usize),
@@ -257,6 +252,7 @@ impl TreeKv {
             disk: Vec::with_capacity(cfg.n_items as usize * 2),
             log_head: 0,
             dead_blocks: 0,
+            dram_levels: plan.dram_classes() as u32,
             stats: KvStats::default(),
             bg_tid_floor: usize::MAX,
             bg_threads_per_core: 1,
@@ -314,11 +310,34 @@ impl TreeKv {
         }
     }
 
+    /// The placement structure classes: one per sprig-forest level,
+    /// hottest-first. Level `d` holds `min(sprigs·2^d, remaining)` 64-byte
+    /// entries; its access share is ≈ the probability a descent reaches it
+    /// (1 for full levels, the fill fraction for the last partial one).
+    fn level_classes(n_items: u64, sprigs: u32) -> Vec<StructClass> {
+        let mut classes = Vec::new();
+        let mut remaining = n_items;
+        let mut width = sprigs.max(1) as u64;
+        while remaining > 0 && classes.len() < 64 {
+            let count = width.min(remaining);
+            classes.push(StructClass {
+                name: "index-level",
+                bytes: count * 64,
+                hotness: count as f64 / width as f64,
+            });
+            remaining -= count;
+            width = width.saturating_mul(2);
+        }
+        classes
+    }
+
     fn place_in_dram(&self, depth: u32, rng: &mut Rng) -> bool {
-        match self.cfg.tiering {
-            TieringPolicy::FullOffload => false,
-            TieringPolicy::Random { dram_frac } => rng.chance(dram_frac),
-            TieringPolicy::TopLevels { levels } => depth < levels,
+        match self.cfg.placement {
+            PlacementPolicy::AllSecondary => false,
+            PlacementPolicy::AllDram => true,
+            PlacementPolicy::Random { dram_frac } => rng.chance(dram_frac),
+            PlacementPolicy::TopLevels { k } => depth < k,
+            PlacementPolicy::Budget { .. } => depth < self.dram_levels,
         }
     }
 
@@ -395,6 +414,18 @@ impl TreeKv {
             return 0.0;
         }
         self.nodes.iter().filter(|n| n.in_dram).count() as f64 / self.nodes.len() as f64
+    }
+
+    /// Simulated DRAM bytes the placement consumes: 64 bytes per
+    /// DRAM-resident entry (exact, entry-granular — freed slots are
+    /// cleared when recycled into the free list).
+    pub fn dram_bytes(&self) -> u64 {
+        self.nodes.iter().filter(|n| n.in_dram).count() as u64 * 64
+    }
+
+    /// Total offloadable index bytes (the `AllDram` footprint).
+    pub fn offload_bytes_total(&self) -> u64 {
+        (self.nodes.len() - self.free_nodes.len()) as u64 * 64
     }
 
     /// Average descent depth (tests / parameter probes).
@@ -604,21 +635,14 @@ impl TreeKv {
     }
 
     /// Θ_scan cost vector for an explicit scan length (the
-    /// `model_params(Scan)` snapshot uses the configured mean length; tests
-    /// probe specific lengths including zero). The in-order walk visits
-    /// ≈ descent + `len` nodes, and values are read `SCAN_IO_BATCH` records
-    /// per IO.
+    /// `model_params(Scan)` snapshot instead uses the configured length
+    /// *distribution* via [`TreeKv::scan_cost_dist`]; tests probe specific
+    /// lengths including zero here). The in-order walk visits ≈ descent +
+    /// `len` nodes, and values are read `SCAN_IO_BATCH` records per IO.
     pub fn scan_model_params(&self, len: f64) -> KindCost {
         let (hops, sec_hops) = self.probe_descent();
-        self.scan_cost(len, hops, sec_hops)
-    }
-
-    /// [`TreeKv::scan_model_params`] with the descent probe precomputed
-    /// (callers that snapshot several kinds probe once).
-    fn scan_cost(&self, len: f64, hops: f64, sec_hops: f64) -> KindCost {
-        let sec_ratio = if hops > 0.0 { sec_hops / hops } else { 1.0 };
         let vbytes = self.cfg.value_size.mean().max(64.0);
-        let mut c = KindCost::scan(
+        let c = KindCost::scan(
             hops,
             len,
             SCAN_IO_BATCH as f64,
@@ -627,49 +651,97 @@ impl TreeKv {
             IO_SCAN_PRE,
             IO_SCAN_POST,
         );
-        // Tiering moves a share of the walk's hops to DRAM.
-        c.m *= sec_ratio;
-        c
+        self.split_scan_hops(c, hops, sec_hops)
+    }
+
+    /// The `model_params(Scan)` snapshot: the configured scan-length
+    /// distribution's first two moments feed `KindCost::scan_dist`, so
+    /// uniform scan mixes stop biasing the batched IO count (the PR 3
+    /// follow-up on scan-length distributions beyond the mean).
+    fn scan_cost_dist(&self, hops: f64, sec_hops: f64) -> KindCost {
+        let vbytes = self.cfg.value_size.mean().max(64.0);
+        let c = KindCost::scan_dist(
+            hops,
+            self.cfg.scan_len.mean(),
+            self.cfg.scan_len.second_moment(),
+            SCAN_IO_BATCH as f64,
+            vbytes,
+            self.cfg.t_node.as_us(),
+            IO_SCAN_PRE,
+            IO_SCAN_POST,
+        );
+        self.split_scan_hops(c, hops, sec_hops)
+    }
+
+    /// Tier placement splits the scan's hops in two parts: the anchor
+    /// *descent* passes the (possibly DRAM-resident) top levels at the
+    /// probed descent ratio, while the in-order *walk* visits nodes in
+    /// node-count proportion — dominated by the deep levels, so its DRAM
+    /// share is the entry-granular capacity fraction, not the descent
+    /// ratio (which would overstate the walk's DRAM side under top-levels
+    /// placement).
+    fn split_scan_hops(&self, mut c: KindCost, hops: f64, sec_hops: f64) -> KindCost {
+        let descent_sec = if hops > 0.0 { sec_hops / hops } else { 1.0 };
+        let total = c.m;
+        let walk = (total - hops).max(0.0);
+        let walk_sec = 1.0 - self.dram_entry_fraction();
+        let m_sec = (total - walk) * descent_sec + walk * walk_sec;
+        c.m = m_sec;
+        c.with_m_dram(total - m_sec)
     }
 }
 
 impl super::ModelCosts for TreeKv {
     /// Per-kind cost vectors from the live tree geometry: the descent depth
-    /// is probed from the actual sprig forest (≈ 1.39·log2(items/sprigs)),
-    /// IO CPU times are the configured device+store constants, and scans
-    /// follow the [`TreeKv::scan_model_params`] Θ_scan shape at the
-    /// configured mean length. The background defragmenter is not part of
-    /// the per-op model (its IOs ride on separate threads).
+    /// is probed from the actual sprig forest (≈ 1.39·log2(items/sprigs))
+    /// and split into secondary/DRAM hops by the live placement, IO CPU
+    /// times are the configured device+store constants, and scans follow
+    /// the Θ_scan shape with the configured length distribution's first
+    /// two moments ([`TreeKv::scan_cost_dist`]). The background
+    /// defragmenter is not part of the per-op model (its IOs ride on
+    /// separate threads).
     fn model_params(&self, kind: OpKind) -> KindCost {
         let (hops, sec_hops) = self.probe_descent();
+        let dram_hops = (hops - sec_hops).max(0.0);
         let t_mem = self.cfg.t_node.as_us();
         let vbytes = self.cfg.value_size.mean().max(64.0);
+        // The leaf attach/unlink access happens at the deepest level: it is
+        // DRAM-resident only when the whole descent is.
+        let (leaf_sec, leaf_dram) = if sec_hops > 0.0 {
+            (1.0, 0.0)
+        } else {
+            (0.0, 1.0)
+        };
         match kind {
             OpKind::Read => {
                 KindCost::point(sec_hops, 1.0, vbytes, t_mem, IO_READ_PRE, IO_READ_POST)
+                    .with_m_dram(dram_hops)
             }
             // Log append IO + locked re-descent + entry write.
             OpKind::Write => KindCost::point(
-                sec_hops + 1.0,
+                sec_hops + leaf_sec,
                 1.0,
                 vbytes,
                 t_mem,
                 IO_WRITE_PRE,
                 IO_WRITE_POST,
-            ),
+            )
+            .with_m_dram(dram_hops + leaf_dram),
             // Locked descent + unlink (occasional successor walk folded into
             // the +1); no synchronous IO — the block is reclaimed by defrag.
-            OpKind::Delete => KindCost::memory_only(sec_hops + 1.0, t_mem, t_mem),
-            OpKind::Scan => self.scan_cost(self.cfg.scan_len.mean(), hops, sec_hops),
+            OpKind::Delete => KindCost::memory_only(sec_hops + leaf_sec, t_mem, t_mem)
+                .with_m_dram(dram_hops + leaf_dram),
+            OpKind::Scan => self.scan_cost_dist(hops, sec_hops),
             // Full read path chained into the full write path.
             OpKind::Rmw => KindCost::point(
-                2.0 * sec_hops + 1.0,
+                2.0 * sec_hops + leaf_sec,
                 2.0,
                 vbytes,
                 t_mem,
                 (IO_READ_PRE + IO_WRITE_PRE) / 2.0,
                 (IO_READ_POST + IO_WRITE_POST) / 2.0,
-            ),
+            )
+            .with_m_dram(2.0 * dram_hops + leaf_dram),
         }
     }
 }
@@ -945,6 +1017,9 @@ impl Service for TreeKv {
                         let child = if n.left != NIL { n.left } else { n.right };
                         let sprig = self.sprig_of(*digest);
                         self.replace_child(sprig, par, nd, child);
+                        // Freed slots leave the DRAM accounting (the slot
+                        // stays index-valid for in-flight lock-free scans).
+                        self.nodes[nd as usize].in_dram = false;
                         self.free_nodes.push(nd);
                         self.dead_blocks += 1;
                         *op = TreeOp::Unlock { lock };
@@ -991,6 +1066,7 @@ impl Service for TreeKv {
                     tn.digest = succ.digest;
                     tn.block = succ.block;
                     tn.vsize = succ.vsize;
+                    self.nodes[c as usize].in_dram = false;
                     self.free_nodes.push(c);
                     self.dead_blocks += 1;
                     *op = TreeOp::Unlock { lock };
@@ -1318,7 +1394,7 @@ mod tests {
         let full = TreeKv::new(small_cfg(), &mut rng);
         let tiered = TreeKv::new(
             TreeKvConfig {
-                tiering: TieringPolicy::TopLevels { levels: 4 },
+                placement: PlacementPolicy::TopLevels { k: 4 },
                 ..small_cfg()
             },
             &mut rng,
@@ -1351,13 +1427,78 @@ mod tests {
         let mut rng = Rng::new(7);
         let kv = TreeKv::new(
             TreeKvConfig {
-                tiering: TieringPolicy::Random { dram_frac: 0.3 },
+                placement: PlacementPolicy::Random { dram_frac: 0.3 },
                 ..small_cfg()
             },
             &mut rng,
         );
         let f = kv.dram_entry_fraction();
         assert!((f - 0.3).abs() < 0.02, "dram fraction {f}");
+    }
+
+    #[test]
+    fn budget_placement_pins_top_levels_and_accounts_bytes() {
+        let mut rng = Rng::new(13);
+        // 20k items / 16 sprigs; level d holds 16·2^d entries of 64 B.
+        // A 16-entry budget fits exactly level 0.
+        let kv = TreeKv::new(
+            TreeKvConfig {
+                placement: PlacementPolicy::Budget { dram_bytes: 16 * 64 },
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        assert_eq!(kv.dram_levels, 1);
+        assert_eq!(kv.dram_bytes(), 16 * 64);
+        // DRAM bytes are monotone in the budget knob and never overshoot.
+        let mut prev = 0u64;
+        for budget in [0u64, 100, 16 * 64, 5_000, 100_000, 2_000_000] {
+            let kv = TreeKv::new(
+                TreeKvConfig {
+                    placement: PlacementPolicy::Budget { dram_bytes: budget },
+                    ..small_cfg()
+                },
+                &mut rng,
+            );
+            let b = kv.dram_bytes();
+            assert!(b <= budget, "budget {budget}: used {b}");
+            assert!(b >= prev, "budget {budget}: dram bytes fell {prev} -> {b}");
+            prev = b;
+        }
+        // The endpoints.
+        let none = TreeKv::new(small_cfg(), &mut rng);
+        assert_eq!(none.dram_bytes(), 0);
+        let all = TreeKv::new(
+            TreeKvConfig {
+                placement: PlacementPolicy::AllDram,
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        assert_eq!(all.dram_bytes(), all.offload_bytes_total());
+        assert_eq!(all.dram_entry_fraction(), 1.0);
+    }
+
+    #[test]
+    fn all_dram_placement_has_no_secondary_hops() {
+        use super::super::common::drive_op_tiers;
+        let mut rng = Rng::new(14);
+        let mut kv = TreeKv::new(
+            TreeKvConfig {
+                placement: PlacementPolicy::AllDram,
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        let op = kv.op_get(123);
+        let c = drive_op_tiers(&mut kv, op, &mut rng);
+        assert_eq!(c.secondary, 0, "AllDram read must not touch secondary");
+        assert!(c.dram > 0, "the descent still happens");
+        // The model snapshot agrees: every hop on the DRAM side.
+        use super::super::ModelCosts;
+        let read = kv.model_params(OpKind::Read);
+        assert_eq!(read.m, 0.0);
+        assert!(read.m_dram > 5.0, "m_dram = {}", read.m_dram);
     }
 
     #[test]
@@ -1385,10 +1526,11 @@ mod tests {
         // Delete never touches the SSD synchronously; RMW doubles it.
         assert_eq!(kv.model_params(OpKind::Delete).s, 0.0);
         assert_eq!(kv.model_params(OpKind::Rmw).s, 2.0);
-        // Tiering shrinks the secondary hop count.
+        // Tiering shrinks the secondary hop count — and the placed hops
+        // reappear on the DRAM side of the split (total is conserved).
         let tiered = TreeKv::new(
             TreeKvConfig {
-                tiering: TieringPolicy::TopLevels { levels: 4 },
+                placement: PlacementPolicy::TopLevels { k: 4 },
                 ..small_cfg()
             },
             &mut rng,
@@ -1399,6 +1541,14 @@ mod tests {
             "top-level tiering must cut secondary hops: {} vs {}",
             tread.m,
             read.m
+        );
+        assert!(
+            (tread.m + tread.m_dram - read.m - read.m_dram).abs() < 0.5,
+            "hops must move tiers, not vanish: {}+{} vs {}+{}",
+            tread.m,
+            tread.m_dram,
+            read.m,
+            read.m_dram
         );
     }
 

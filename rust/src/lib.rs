@@ -20,7 +20,9 @@
 //!   `Delete` (BST unlink / LSM tombstone / cache invalidation), ordered
 //!   `Scan` (sprig walk / merged iterator; documented no-op on the cache),
 //!   and `ReadModifyWrite` — every traversal hop a simulated
-//!   `MemAccess`/`Io` step.
+//!   `MemAccess`/`Io` step routed through the first-class tier-placement
+//!   layer ([`kvs::placement`]: hybrid DRAM/µs-memory placement over
+//!   hotness-ranked structure classes, with DRAM-byte accounting).
 //! - [`workload`] — key/value/operation generators (uniform, Zipf, Gaussian,
 //!   hotset; read:write mixes; full-surface [`workload::OpWeights`]) and the
 //!   six standard YCSB core-workload presets A–F ([`workload::ycsb`]).

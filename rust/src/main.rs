@@ -7,18 +7,22 @@
 //!
 //! Experiments: fig3 fig10 fig11micro fig11kvs fig12 fig14 fig15 fig16
 //!              fig17 fig18 table6 val1404 ycsb ssdscale modelcheck
+//!              placement
 //! (The offline image has no argument-parsing crate; parsing is by hand.)
 //!
 //! `modelcheck` validates the Θ_scan-extended analytic model against the
-//! simulator for every store × YCSB workload × memory latency and **exits
-//! non-zero** when any point drifts outside the documented tolerance — CI
-//! gates on it.
+//! simulator for every store × YCSB workload × memory latency (and the
+//! SSD-array axis in slow mode) and **exits non-zero** when any point
+//! drifts outside the documented tolerance — CI gates on it. `placement`
+//! sweeps the DRAM-budget axis (`kvs::placement`) and exits non-zero when
+//! throughput or DRAM-byte accounting is non-monotone in the budget or the
+//! split-hop model drifts outside the same bands.
 
 use cxlkvs::coordinator::experiments::{self, ModelBackend};
 
 const EXPERIMENTS: &[&str] = &[
     "fig3", "fig10", "fig11micro", "fig11kvs", "fig12", "fig14", "fig15", "fig16", "fig17",
-    "fig18", "table6", "val1404", "ycsb", "ssdscale", "modelcheck",
+    "fig18", "table6", "val1404", "ycsb", "ssdscale", "modelcheck", "placement",
 ];
 
 fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
@@ -48,6 +52,17 @@ fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
                 eprintln!(
                     "modelcheck: model-vs-simulator drift exceeded the documented \
                      tolerance (see err% vs tol% columns)"
+                );
+                std::process::exit(1);
+            }
+        }
+        "placement" => {
+            let (r, ok) = experiments::placement(fast);
+            r.print();
+            if !ok {
+                eprintln!(
+                    "placement: a DRAM-budget gate failed (non-monotone throughput \
+                     or bytes, or model drift — see the GATE FAILED notes)"
                 );
                 std::process::exit(1);
             }

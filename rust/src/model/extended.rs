@@ -248,10 +248,20 @@ pub fn theta_extended_recip(op: &OpParams, l_mem: f64, ext: &ExtParams, sys: &Sy
 /// IOs of `a_io` bytes each, plus a fixed per-op term. `s` may be
 /// fractional (cache-miss ratios), greater than one (scan batches, RMW), or
 /// zero (memtable writes, zero-length scans, API no-ops).
+///
+/// The tier-placement split (see `kvs::placement`): `m` counts the hops a
+/// placement policy leaves on secondary memory (they pay the prefetch +
+/// `T_sw` + window path), `m_dram` counts DRAM-placed hops — inline loads
+/// costing `T_mem + L_DRAM` each, additive like `t_fixed` and never hidden
+/// behind the prefetch queue. Stores derive both counts from their live
+/// policy in `ModelCosts::model_params`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct KindCost {
-    /// Secondary-memory accesses per whole operation (M_k).
+    /// Secondary-memory accesses per whole operation (M_sec,k).
     pub m: f64,
+    /// DRAM-placed accesses per whole operation (M_dram,k): inline, no
+    /// prefetch/switch path — costed at `t_mem + L_DRAM` each.
+    pub m_dram: f64,
     /// IOs per whole operation (S_k).
     pub s: f64,
     /// Average bytes per IO of this kind (A_IO,k).
@@ -271,6 +281,7 @@ impl KindCost {
     pub fn point(m: f64, s: f64, a_io: f64, t_mem: f64, t_pre: f64, t_post: f64) -> KindCost {
         KindCost {
             m: m.max(0.0),
+            m_dram: 0.0,
             s: s.max(0.0),
             a_io: a_io.max(0.0),
             t_mem,
@@ -285,6 +296,7 @@ impl KindCost {
     pub fn memory_only(m: f64, t_mem: f64, t_fixed: f64) -> KindCost {
         KindCost {
             m: m.max(0.0),
+            m_dram: 0.0,
             s: 0.0,
             a_io: 0.0,
             t_mem,
@@ -292,6 +304,13 @@ impl KindCost {
             t_post: 0.0,
             t_fixed,
         }
+    }
+
+    /// Attach the DRAM-placed hop count (the tier-placement split; see the
+    /// struct docs). Constructors default it to zero.
+    pub fn with_m_dram(mut self, m_dram: f64) -> KindCost {
+        self.m_dram = m_dram.max(0.0);
+        self
     }
 
     /// Θ_scan's cost vector: a scan of `len` records anchored by a
@@ -306,9 +325,11 @@ impl KindCost {
     ///   transfer `S·A_IO = len·record_bytes` is exact against the
     ///   `n_ssd·B_IO` ceiling regardless of the partial last batch.
     ///
-    /// For a scan-length *distribution*, pass its mean: `⌈mean/batch⌉`
-    /// tracks `E[⌈len/batch⌉]` to well within the model's tolerance for the
-    /// uniform lengths the YCSB presets draw.
+    /// For a fixed scan length this is exact; for a scan-length
+    /// *distribution* prefer [`KindCost::scan_dist`], which corrects the
+    /// IO count with the distribution's second moment — `⌈mean/batch⌉`
+    /// understates `E[⌈len/batch⌉]` for wide uniform mixes (Jensen on the
+    /// ceiling), which biased Θ_E before the second-moment fix.
     pub fn scan(
         descend_m: f64,
         len: f64,
@@ -321,6 +342,58 @@ impl KindCost {
         let len = len.max(0.0);
         let batch = batch.max(1.0);
         let ios = (len / batch).ceil();
+        Self::scan_with_ios(descend_m, len, ios, record_bytes, t_mem, t_pre, t_post)
+    }
+
+    /// Θ_scan from the scan-length distribution's first **two** moments
+    /// (`len_mean = E[len]`, `len_m2 = E[len²]`, the values
+    /// `workload::ScanLen::{mean, second_moment}` report). The hop and byte
+    /// terms are linear in `len` and need only the mean; the batched IO
+    /// count `E[⌈len/batch⌉]` is convex in `len`, so the mean alone
+    /// understates it for spread-out mixes. The two moments pin a discrete
+    /// uniform support `[lo, hi]` exactly (`n = √(12·Var+1)` values
+    /// centered on the mean — Fixed degenerates to `n = 1`), over which the
+    /// expected ceiling has a closed form.
+    // One argument over clippy's limit: the two moments travel together and
+    // grouping them into a struct would ripple through every store snapshot
+    // for no clarity gain.
+    #[allow(clippy::too_many_arguments)]
+    pub fn scan_dist(
+        descend_m: f64,
+        len_mean: f64,
+        len_m2: f64,
+        batch: f64,
+        record_bytes: f64,
+        t_mem: f64,
+        t_pre: f64,
+        t_post: f64,
+    ) -> KindCost {
+        let len = len_mean.max(0.0);
+        let batch = batch.max(1.0);
+        if len <= 0.0 {
+            return Self::scan_with_ios(descend_m, 0.0, 0.0, record_bytes, t_mem, t_pre, t_post);
+        }
+        let var = (len_m2 - len * len).max(0.0);
+        // Discrete uniform on [lo, hi] with this mean/variance:
+        // Var = (n² - 1)/12 where n = hi - lo + 1.
+        let n_vals = (12.0 * var + 1.0).sqrt().round().max(1.0);
+        let lo = ((len - (n_vals - 1.0) / 2.0).round() as i64).max(1) as u64;
+        let hi = lo + n_vals as u64 - 1;
+        let b = (batch.round() as u64).max(1);
+        let ios = mean_ceil_div(lo, hi, b);
+        Self::scan_with_ios(descend_m, len, ios, record_bytes, t_mem, t_pre, t_post)
+    }
+
+    /// Shared Θ_scan assembly with an explicit expected IO count.
+    fn scan_with_ios(
+        descend_m: f64,
+        len: f64,
+        ios: f64,
+        record_bytes: f64,
+        t_mem: f64,
+        t_pre: f64,
+        t_post: f64,
+    ) -> KindCost {
         let a_io = if ios > 0.0 {
             len * record_bytes / ios
         } else {
@@ -328,6 +401,7 @@ impl KindCost {
         };
         KindCost {
             m: descend_m.max(0.0) + len,
+            m_dram: 0.0,
             s: ios,
             a_io,
             t_mem,
@@ -338,16 +412,41 @@ impl KindCost {
     }
 }
 
+/// `E[⌈len/b⌉]` for `len` uniform on the integers `lo..=hi`, in closed
+/// form: with `F(n) = Σ_{l=1}^{n} ⌈l/b⌉ = b·k(k-1)/2 + (n-(k-1)b)·k` for
+/// `k = ⌈n/b⌉`, the mean is `(F(hi) - F(lo-1)) / (hi - lo + 1)`.
+fn mean_ceil_div(lo: u64, hi: u64, b: u64) -> f64 {
+    debug_assert!(lo >= 1 && hi >= lo && b >= 1);
+    let f = |n: u64| -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let k = n.div_ceil(b);
+        (b * k * (k - 1) / 2 + (n - (k - 1) * b) * k) as f64
+    };
+    (f(hi) - f(lo - 1)) / (hi - lo + 1) as f64
+}
+
 /// Reciprocal throughput of one operation kind: Eq 14 applied to the kind's
 /// cost vector (module docs, "Θ_scan"). IO-free kinds (`s = 0`) cost their
 /// hops at the memory-only rate instead of the per-IO split — no `0/0` from
 /// `M/S`, no spurious zero-cost operation.
+///
+/// The tier-placement split (`kvs::placement` module docs): only `m`
+/// (secondary hops) enters the per-IO split and its prefetch window;
+/// `m_dram` hops are inline DRAM loads costing `t_mem + L_DRAM` each,
+/// additive like `t_fixed` — they never pay `T_sw`, never occupy a prefetch
+/// slot, and are independent of `l_mem`.
 pub fn theta_kind_recip(cost: &KindCost, l_mem: f64, ext: &ExtParams, sys: &SysParams) -> f64 {
+    let dram_hops = cost.m_dram * (cost.t_mem + ext.l_dram);
     if cost.s <= S_EPS {
-        return memonly_recip(cost.m, cost.t_mem, l_mem, ext, sys) + cost.t_fixed;
+        return memonly_recip(cost.m, cost.t_mem, l_mem, ext, sys) + dram_hops + cost.t_fixed;
     }
     let op = OpParams {
-        m: cost.m / cost.s,
+        // A fully-DRAM-placed op can have zero secondary hops with IOs
+        // remaining; clamp away from the `ln(q_mem = 0)` singularity in
+        // Θ_rev (the split unit degenerates to its IO suboperations).
+        m: (cost.m / cost.s).max(1e-6),
         t_mem: cost.t_mem,
         t_pre: cost.t_pre,
         t_post: cost.t_post,
@@ -357,7 +456,7 @@ pub fn theta_kind_recip(cost: &KindCost, l_mem: f64, ext: &ExtParams, sys: &SysP
         a_io: cost.a_io,
         ..*ext
     };
-    theta_extended_recip(&op, l_mem, &kext, sys) + cost.t_fixed
+    theta_extended_recip(&op, l_mem, &kext, sys) + dram_hops + cost.t_fixed
 }
 
 /// Θ_scan — the named entry point: a scan cost vector (built with
@@ -708,6 +807,88 @@ mod tests {
         let mixed = theta_mix_recip(&[(1.0, a), (1.0, b)], 5.0, &ext, &sys);
         assert!((mixed - (ra + rb) / 2.0).abs() < 1e-12);
         assert!(rb < mixed && mixed < ra);
+    }
+
+    #[test]
+    fn m_dram_is_inline_and_latency_independent() {
+        // Split-hop Θ: DRAM-placed hops add t_mem + L_DRAM each, additive,
+        // and contribute nothing that scales with L_mem.
+        let sys = sys();
+        let ext = ext_unbound();
+        let base = KindCost::point(10.0, 1.0, 1536.0, 0.1, 3.5, 2.5);
+        let placed = base.with_m_dram(4.0);
+        for l in [0.1, 1.0, 5.0, 10.0] {
+            let r0 = theta_kind_recip(&base, l, &ext, &sys);
+            let r1 = theta_kind_recip(&placed, l, &ext, &sys);
+            let want = 4.0 * (0.1 + ext.l_dram);
+            assert!((r1 - r0 - want).abs() < 1e-9, "L={l}: {r1} - {r0}");
+        }
+        // Moving hops from secondary to DRAM wins at long latency...
+        let moved = KindCost::point(6.0, 1.0, 1536.0, 0.1, 3.5, 2.5).with_m_dram(4.0);
+        let full = theta_kind_recip(&base, 10.0, &ext, &sys);
+        let tiered = theta_kind_recip(&moved, 10.0, &ext, &sys);
+        assert!(tiered < full, "placement must cut the 10us cost: {full} -> {tiered}");
+        // ...and the S=0 branch takes the same inline term.
+        let memonly = KindCost::memory_only(5.0, 0.1, 0.5).with_m_dram(3.0);
+        let r = theta_kind_recip(&memonly, 5.0, &ext, &sys);
+        let plain = theta_kind_recip(&KindCost::memory_only(5.0, 0.1, 0.5), 5.0, &ext, &sys);
+        assert!((r - plain - 3.0 * (0.1 + ext.l_dram)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_dram_kind_is_finite() {
+        // m = 0 with s > 0 (a fully-DRAM-placed point read) must not hit
+        // the ln(0) singularity in the Θ_rev multinomial.
+        let sys = sys();
+        let ext = ext_unbound();
+        let c = KindCost::point(0.0, 1.0, 1536.0, 0.1, 3.5, 2.5).with_m_dram(10.0);
+        for l in [0.1, 5.0, 10.0] {
+            let r = theta_kind_recip(&c, l, &ext, &sys);
+            assert!(r.is_finite() && !r.is_nan() && r > 0.0, "L={l}: {r}");
+        }
+        // Latency-insensitive: all hops are inline.
+        let a = theta_kind_recip(&c, 0.1, &ext, &sys);
+        let b = theta_kind_recip(&c, 10.0, &ext, &sys);
+        assert!((a - b).abs() / a < 0.05, "all-DRAM op moved with L_mem: {a} vs {b}");
+    }
+
+    #[test]
+    fn scan_dist_matches_brute_force_expected_batches() {
+        // E[⌈len/b⌉] from the first two moments must equal the brute-force
+        // expectation for discrete uniform supports, and Fixed degenerates
+        // to the plain ceiling.
+        let cases = [(1u64, 24u64, 8u64), (1, 100, 8), (5, 7, 8), (8, 16, 8), (3, 3, 2)];
+        for (lo, hi, b) in cases {
+            let n = (hi - lo + 1) as f64;
+            let mean = (lo + hi) as f64 / 2.0;
+            let m2 = (lo..=hi).map(|l| (l * l) as f64).sum::<f64>() / n;
+            let brute = (lo..=hi).map(|l| (l as f64 / b as f64).ceil()).sum::<f64>() / n;
+            let c = KindCost::scan_dist(12.0, mean, m2, b as f64, 1536.0, 0.1, 2.5, 1.7);
+            assert!((c.s - brute).abs() < 1e-9, "[{lo},{hi}]/{b}: s={} brute={brute}", c.s);
+            // Aggregate bytes stay exact: S·A_IO = E[len]·record.
+            assert!((c.s * c.a_io - mean * 1536.0).abs() < 1e-6);
+            assert!((c.m - 12.0 - mean).abs() < 1e-9);
+        }
+        // Fixed length (variance 0) == the mean-only constructor.
+        let fixed = KindCost::scan_dist(12.0, 20.0, 400.0, 8.0, 1536.0, 0.1, 2.5, 1.7);
+        let plain = KindCost::scan(12.0, 20.0, 8.0, 1536.0, 0.1, 2.5, 1.7);
+        assert_eq!(fixed, plain);
+        // Zero-length mix: no IO, no NaN.
+        let zero = KindCost::scan_dist(10.0, 0.0, 0.0, 8.0, 1536.0, 0.1, 2.5, 1.7);
+        assert_eq!((zero.s, zero.a_io), (0.0, 0.0));
+    }
+
+    #[test]
+    fn scan_dist_corrects_the_wide_uniform_bias() {
+        // Uniform(1,100) at batch 8: E[⌈len/8⌉] = 6.76 < ceil(50.5/8) = 7.
+        // The mean-only constructor overshoots here; the two-moment one is
+        // exact — this is the Θ_E bias the second moment removes.
+        let mean = 50.5;
+        let m2 = (1..=100u64).map(|l| (l * l) as f64).sum::<f64>() / 100.0;
+        let dist = KindCost::scan_dist(12.0, mean, m2, 8.0, 1536.0, 0.1, 2.5, 1.7);
+        let plain = KindCost::scan(12.0, mean, 8.0, 1536.0, 0.1, 2.5, 1.7);
+        assert!((dist.s - 6.76).abs() < 1e-9, "s={}", dist.s);
+        assert_eq!(plain.s, 7.0);
     }
 
     #[test]

@@ -631,8 +631,12 @@ pub struct RunStats {
     pub op_latency_mean: Dur,
     pub op_latency_p50: Dur,
     pub op_latency_p99: Dur,
-    /// Mean secondary-memory accesses per op (the measured M).
+    /// Mean secondary-memory accesses per op (the measured M_sec).
     pub mean_m: f64,
+    /// Mean inline DRAM accesses per op (the measured M_dram of the
+    /// tier-placement split; window-wide `dram_accesses / ops`, so
+    /// background threads' accesses are included).
+    pub mean_m_dram: f64,
     /// Mean IOs per op (the measured S).
     pub mean_s: f64,
     /// Mean compute time per op (→ T_mem estimation).
@@ -662,6 +666,11 @@ impl RunStats {
             op_latency_p99: m.op_latency.quantile(0.99),
             mean_m: if ops > 0 {
                 m.sum_mem_accesses as f64 / ops as f64
+            } else {
+                0.0
+            },
+            mean_m_dram: if ops > 0 {
+                m.dram_accesses as f64 / ops as f64
             } else {
                 0.0
             },

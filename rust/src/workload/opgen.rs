@@ -178,6 +178,30 @@ impl ScanLen {
             ScanLen::Uniform(lo, hi) => (lo.max(1) + hi.max(1)) as f64 / 2.0,
         }
     }
+
+    /// Second raw moment `E[len²]` (same `max(1)` clamps as `sample`).
+    ///
+    /// The scan model's batched IO count `E[⌈len/batch⌉]` is convex in
+    /// `len`, so the mean alone understates it for spread-out mixes; the
+    /// first two moments pin the uniform support exactly and
+    /// `model::KindCost::scan_dist` reconstructs it — see the Θ_scan notes
+    /// in `model/extended.rs`.
+    pub fn second_moment(&self) -> f64 {
+        match *self {
+            ScanLen::Fixed(n) => {
+                let n = n.max(1) as f64;
+                n * n
+            }
+            ScanLen::Uniform(lo, hi) => {
+                // E[l²] over the integers lo..=hi via Σ l² = n(n+1)(2n+1)/6,
+                // in f64 — the u64 product overflows for multi-million
+                // endpoints even though the u32 fields admit them.
+                let (a, b) = (lo.max(1) as f64, hi.max(1) as f64);
+                let sq = |n: f64| n * (n + 1.0) * (2.0 * n + 1.0) / 6.0;
+                (sq(b) - sq(a - 1.0)) / (b - a + 1.0)
+            }
+        }
+    }
 }
 
 impl Default for ScanLen {
@@ -284,6 +308,26 @@ mod tests {
         assert!(seen[2] && seen[5], "inclusive endpoints must be attainable");
         assert!((s.mean() - 3.5).abs() < 1e-12);
         assert_eq!(ScanLen::Fixed(0).sample(&mut rng), 1, "scan length >= 1");
+    }
+
+    #[test]
+    fn scan_len_second_moment_matches_brute_force() {
+        for (lo, hi) in [(1u32, 24u32), (2, 5), (7, 7), (1, 100)] {
+            let s = ScanLen::Uniform(lo, hi);
+            let n = (hi - lo + 1) as f64;
+            let brute = (lo..=hi).map(|l| (l as f64) * (l as f64)).sum::<f64>() / n;
+            assert!(
+                (s.second_moment() - brute).abs() < 1e-9,
+                "[{lo},{hi}]: {} vs {brute}",
+                s.second_moment()
+            );
+            // Var ≥ 0 and consistent with the mean.
+            assert!(s.second_moment() >= s.mean() * s.mean() - 1e-9);
+        }
+        let f = ScanLen::Fixed(20);
+        assert_eq!(f.second_moment(), 400.0);
+        // The max(1) clamp mirrors sample()/mean().
+        assert_eq!(ScanLen::Fixed(0).second_moment(), 1.0);
     }
 
     #[test]
