@@ -1,0 +1,76 @@
+//! Measured access-frequency placement planner: the two-phase
+//! profile → replan → measure path (`kvs::placement`, "Measured
+//! re-ranking") on the two workloads where the static hotness prior is
+//! provably wrong:
+//!
+//! - **lsmkv under YCSB E** (scan-heavy): the merged iterator walks cache
+//!   handles and block bytes but never binary-searches the per-block
+//!   restart arrays, so the static handles ≻ restarts ≻ data order wastes
+//!   budget on a structure the workload never touches;
+//! - **cachekv under YCSB A** (write-heavy): every insert walks four
+//!   eviction candidates over the LRU lists and every update splices, so
+//!   the LRU lists out-access the hash chains per byte — at a one-class
+//!   budget the measured plan places the *other* structure than the
+//!   static plan, at identical cost.
+//!
+//! Both arms spend the same DRAM budget; the printed bytes are the honest
+//! accounting (policy-placed + pinned residual: lsmkv's memtable,
+//! cachekv's bucket directory and SOC index).
+//!
+//! Run: `cargo run --release --example planner [l_mem_us]`
+
+use cxlkvs::coordinator::runner::{
+    run_store_ycsb_profiled, store_offload_bytes, StoreKind, SweepCfg,
+};
+use cxlkvs::kvs::PlacementPolicy;
+use cxlkvs::sim::Dur;
+use cxlkvs::workload::YcsbWorkload;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let l_us: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(8.0);
+
+    let cases = [
+        (StoreKind::Lsm, YcsbWorkload::E, "scans never touch restarts"),
+        (StoreKind::Cache, YcsbWorkload::A, "LRU walks overtake chains"),
+        (StoreKind::Tree, YcsbWorkload::C, "static prior already right"),
+    ];
+
+    println!("measured-vs-static placement at L_mem = {l_us} us, budget = 50% of offloadable");
+    println!(
+        "{:>22} {:>4} {:>12} {:>12} {:>11} {:>10} {:>10} {:>9}",
+        "store", "wl", "static_ops", "measured_ops", "meas/static", "static_MB", "meas_MB", "rank"
+    );
+    for (kind, wl, why) in cases {
+        let total = store_offload_bytes(kind, wl, SweepCfg::default().seed);
+        let sweep = SweepCfg {
+            l_mem: Dur::us(l_us),
+            warmup: Dur::ms(2.0),
+            window: Dur::ms(10.0),
+            thread_candidates: vec![32],
+            placement: PlacementPolicy::Budget {
+                dram_bytes: total / 2,
+            },
+            ..Default::default()
+        };
+        let run = run_store_ycsb_profiled(kind, wl, &sweep, 32);
+        let s = &run.static_arm;
+        let m = &run.measured_arm;
+        println!(
+            "{:>22} {:>4} {:>12.0} {:>12.0} {:>11.3} {:>10.2} {:>10.2} {:>9}   ({why})",
+            kind.name(),
+            wl.tag(),
+            s.stats.ops_per_sec,
+            m.stats.ops_per_sec,
+            m.stats.ops_per_sec / s.stats.ops_per_sec.max(1e-9),
+            s.dram_bytes as f64 / 1e6,
+            m.dram_bytes as f64 / 1e6,
+            if run.rank_differs { "measured" } else { "=static" },
+        );
+    }
+    println!();
+    println!("rank = whether the measured accesses-per-byte ranking differs from the");
+    println!("static prior; where it coincides the arms are bit-identical (ratio 1.000).");
+    println!("Byte columns include the pinned residual DRAM footprint (lsmkv memtable,");
+    println!("cachekv bucket directory + SOC index) — the honest accounting this PR adds.");
+}

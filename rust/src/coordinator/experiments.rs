@@ -9,8 +9,8 @@
 use super::report::{f1, f2, f3, Report};
 use super::runner::{
     best_threads, best_threads_by, parallel_map, run_cache_with, run_lsm_with, run_microbench,
-    run_store, run_store_ycsb_placed, run_store_ycsb_snap, run_tree_with, store_offload_bytes,
-    MeasuredParams, StoreKind, SweepCfg,
+    run_store, run_store_ycsb_placed, run_store_ycsb_profiled, run_store_ycsb_snap, run_tree_with,
+    store_offload_bytes, MeasuredParams, StoreKind, SweepCfg,
 };
 use crate::kvs::{model_mix, CacheKvConfig, LsmKvConfig, PlacementPolicy, TreeKv, TreeKvConfig};
 use crate::microbench::MicrobenchConfig;
@@ -1527,6 +1527,237 @@ pub fn placement(fast: bool) -> (Report, bool) {
         }
     }
     r.write_csv("placement").ok();
+    (r, all_ok)
+}
+
+// ---------------------------------------------------------------------------
+// planner — measured access-frequency placement vs the static prior.
+// ---------------------------------------------------------------------------
+
+/// Documented slack for the planner's equal-budget gate: the measured plan
+/// must achieve at least `1 - PLANNER_SLACK` of the static plan's
+/// throughput at every point. The slack absorbs short-window noise between
+/// two runs whose placements genuinely differ (where the plans coincide the
+/// arms are bit-identical and the ratio is exactly 1); a mis-ranked
+/// placement that demotes a genuinely hot class blows far past it.
+pub const PLANNER_SLACK: f64 = 0.08;
+
+/// Sweep store × workload × DRAM budget × L_mem through the two-phase
+/// **profile → replan → measure** path (`run_store_ycsb_profiled`) and
+/// compare measured-ranking placement against the static hotness prior at
+/// equal DRAM budget. Three gates, **exit non-zero** on violation:
+///
+/// 1. at every point the measured plan's throughput is ≥ the static
+///    plan's minus [`PLANNER_SLACK`];
+/// 2. the measured ranking actually *differs* from the static prior on at
+///    least one of the designed discriminator points — lsmkv-E (scans
+///    never touch the restart arrays, so the static handles ≻ restarts ≻
+///    data order is provably wrong) or cachekv-A (the write-heavy mix's
+///    LRU traffic out-accesses the hash chains per byte) — otherwise the
+///    experiment validated nothing;
+/// 3. the **measured** arm's split-hop model prediction stays inside the
+///    same `modelcheck` tolerance bands as the static sweeps (the
+///    `KindCost` `m`/`m_dram` snapshots are derived from the *replanned*
+///    plan, so this extends model validation to replanned placements).
+///    The band gate applies on the latency range the bands are calibrated
+///    for (the `modelcheck` grid, ≤ 5 µs): the 8 µs point — needed past
+///    the full-offload knee, where the placement signal actually
+///    separates — reports its error but does not gate, since the A/F
+///    bands (unmodeled lock-hold time across locked descents) were never
+///    documented there.
+///
+/// The byte columns are the honest accounting: policy-placed bytes plus
+/// the pinned residual (lsmkv memtable, cachekv directory + SOC index).
+pub fn planner(fast: bool) -> (Report, bool) {
+    let grid: Vec<f64> = if fast {
+        vec![0.1, 5.0, 8.0]
+    } else {
+        vec![0.1, 2.0, 5.0, 8.0]
+    };
+    // The model-band gate's calibrated latency ceiling (the modelcheck
+    // grid's maximum).
+    const MODEL_GATE_L_MAX: f64 = 5.0;
+    // Budget fractions of each store's offloadable footprint. 0.5 is the
+    // discriminator point: for cachekv it fits exactly one of the two
+    // equal-byte tier-1 classes, so the static and measured plans place
+    // *different* structures at identical cost.
+    let fracs: Vec<f64> = if fast { vec![0.5] } else { vec![0.1, 0.5] };
+    let wls: Vec<YcsbWorkload> = if fast {
+        vec![YcsbWorkload::A, YcsbWorkload::C, YcsbWorkload::E]
+    } else {
+        YcsbWorkload::ALL.to_vec()
+    };
+    let window = if fast { Dur::ms(5.0) } else { Dur::ms(12.0) };
+    let sys = sys_params();
+    let ext = SweepCfg::default().ext_params();
+    let base_seed = SweepCfg::default().seed;
+
+    let mut totals = Vec::new();
+    for &wl in &wls {
+        for kind in StoreKind::ALL {
+            totals.push(store_offload_bytes(kind, wl, base_seed));
+        }
+    }
+
+    // Flat job list: workload × store × budget × latency; each job runs
+    // both arms (the static arm doubles as the profiling run).
+    let mut jobs = Vec::new();
+    let mut ti = 0usize;
+    for &wl in &wls {
+        for kind in StoreKind::ALL {
+            let total = totals[ti];
+            ti += 1;
+            for &frac in &fracs {
+                let budget = (frac * total as f64) as u64;
+                for &l in &grid {
+                    jobs.push(move || {
+                        let sweep = SweepCfg {
+                            l_mem: Dur::us(l),
+                            window,
+                            thread_candidates: vec![32],
+                            placement: PlacementPolicy::Budget { dram_bytes: budget },
+                            ..Default::default()
+                        };
+                        run_store_ycsb_profiled(kind, wl, &sweep, 32)
+                    });
+                }
+            }
+        }
+    }
+    let results = parallel_map(jobs);
+
+    let mut r = Report::new(
+        "planner — measured access-frequency placement vs the static prior",
+        &[
+            "workload",
+            "store",
+            "dram_frac",
+            "L_mem(us)",
+            "static_ops",
+            "measured_ops",
+            "meas/static",
+            "static_MB",
+            "measured_MB",
+            "rank",
+            "model_norm",
+            "err%",
+            "tol%",
+        ],
+    );
+    let mut all_ok = true;
+    let mut failures: Vec<String> = Vec::new();
+    let mut discriminator_differed = false;
+    let mut idx = 0usize;
+    for &wl in &wls {
+        let tol = modelcheck_tolerance(wl);
+        for kind in StoreKind::ALL {
+            for &frac in &fracs {
+                let group = &results[idx..idx + grid.len()];
+                idx += grid.len();
+                // Model validation of the measured arm: normalized against
+                // its own DRAM point, mix from that point's replanned plan.
+                // Each latency point replans from its own profile; the
+                // normalized curve is one placement only when every point
+                // resolved the same ranking. A near-tie density that flips
+                // across latencies would make sim_norm a cross-placement
+                // ratio, so the band gate is skipped (reported, not
+                // failed) for such a group.
+                let dram_meas = &group[0].measured_arm;
+                let rankings_agree = group
+                    .iter()
+                    .all(|g| g.measured_ranking == group[0].measured_ranking);
+                for (i, &l) in grid.iter().enumerate() {
+                    let run = &group[i];
+                    let s_ops = run.static_arm.stats.ops_per_sec;
+                    let m_ops = run.measured_arm.stats.ops_per_sec;
+                    let ratio = m_ops / s_ops.max(1e-9);
+                    if ratio < 1.0 - PLANNER_SLACK {
+                        all_ok = false;
+                        failures.push(format!(
+                            "{}/{} frac={frac} L={l}: measured placement lost \
+                             {:.1}% > {:.0}% slack ({s_ops:.0} -> {m_ops:.0})",
+                            wl.tag(),
+                            kind.name(),
+                            100.0 * (1.0 - ratio),
+                            100.0 * PLANNER_SLACK
+                        ));
+                    }
+                    let is_discriminator = (kind == StoreKind::Lsm && wl == YcsbWorkload::E)
+                        || (kind == StoreKind::Cache && wl == YcsbWorkload::A);
+                    if is_discriminator && run.rank_differs {
+                        discriminator_differed = true;
+                    }
+                    let sim_norm =
+                        m_ops / dram_meas.stats.ops_per_sec.max(1e-9);
+                    let (model_norm, err) =
+                        model_norm_err(&dram_meas.mix, grid[0], l, sim_norm, &ext, &sys);
+                    if rankings_agree && l <= MODEL_GATE_L_MAX && err.abs() > tol {
+                        all_ok = false;
+                        failures.push(format!(
+                            "{}/{} frac={frac} L={l}: replanned model err \
+                             {:+.1}% > tol {:.0}%",
+                            wl.tag(),
+                            kind.name(),
+                            100.0 * err,
+                            100.0 * tol
+                        ));
+                    }
+                    r.row(vec![
+                        wl.tag().into(),
+                        kind.name().into(),
+                        f2(frac),
+                        f1(l),
+                        format!("{s_ops:.0}"),
+                        format!("{m_ops:.0}"),
+                        f3(ratio),
+                        f2(run.static_arm.dram_bytes as f64 / 1e6),
+                        f2(run.measured_arm.dram_bytes as f64 / 1e6),
+                        if run.rank_differs {
+                            "measured".into()
+                        } else {
+                            "=static".into()
+                        },
+                        f3(model_norm),
+                        format!("{:+.1}", 100.0 * err),
+                        f1(100.0 * tol),
+                    ]);
+                }
+            }
+        }
+    }
+    if !discriminator_differed {
+        all_ok = false;
+        failures.push(
+            "no discriminator point (lsmkv-E / cachekv-A) produced a measured \
+             ranking different from the static prior"
+                .to_string(),
+        );
+    }
+    r.note("two-phase path: run static (collect per-class AccessProfile) ->");
+    r.note("replan by measured accesses-per-byte -> rerun at the same budget;");
+    r.note("where the rankings coincide the arms are bit-identical (ratio 1)");
+    r.note("byte columns are honest: policy-placed + pinned residual (lsmkv");
+    r.note("memtable, cachekv bucket directory + SOC index)");
+    r.note("headline: lsmkv-E demotes the scan-untouched restart arrays;");
+    r.note("cachekv-A promotes the LRU lists over the hash chains at equal");
+    r.note("bytes once the write mix's eviction walks dominate the profile");
+    r.note("model band gated at L <= 5us (the modelcheck-calibrated grid);");
+    r.note("the 8us knee point reports err% ungated; a group whose");
+    r.note("per-latency replans resolved different rankings also reports");
+    r.note("ungated (its normalized curve would span two placements)");
+    if failures.is_empty() {
+        r.note(format!(
+            "all planner gates passed (measured >= static - {:.0}% at equal \
+             budget; ranking differs on a discriminator; replanned model \
+             within bands)",
+            100.0 * PLANNER_SLACK
+        ));
+    } else {
+        for f in &failures {
+            r.note(format!("GATE FAILED: {f}"));
+        }
+    }
+    r.write_csv("planner").ok();
     (r, all_ok)
 }
 

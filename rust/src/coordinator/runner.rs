@@ -303,6 +303,120 @@ pub fn run_store_ycsb_placed(
     }
 }
 
+/// One arm of a profiled (two-phase) run: the stats, the post-run model
+/// snapshot, and the honest simulated DRAM bytes (policy-placed plus the
+/// pinned residual).
+pub struct PlannedArm {
+    pub stats: RunStats,
+    pub mix: Vec<(f64, KindCost)>,
+    pub dram_bytes: u64,
+}
+
+/// Result of [`run_store_ycsb_profiled`]: the static arm (which doubles as
+/// the profiling run), the measured arm (same store, same seeds, placement
+/// re-resolved over the static arm's `AccessProfile`), and whether the
+/// measured accesses-per-byte ranking differs from the static prior.
+pub struct ProfiledRun {
+    pub static_arm: PlannedArm,
+    pub measured_arm: PlannedArm,
+    pub rank_differs: bool,
+    /// The measured arm's resolved ranking (offloadable class ids,
+    /// hottest-first). Callers comparing several profiled runs (e.g. a
+    /// normalized latency curve) can check the rankings agree before
+    /// treating the points as one placement.
+    pub measured_ranking: Vec<usize>,
+}
+
+/// The two-phase **profile → replan → measure** path of the measured
+/// placement planner (`kvs::placement` module docs, "Measured re-ranking"):
+///
+/// 1. run the store under the sweep's policy with the *static* hotness
+///    ranking, collecting the per-class [`crate::kvs::AccessProfile`]
+///    (access counts are placement-independent, so the static arm is a
+///    valid profiling run *and* the comparison baseline);
+/// 2. rebuild the identical store (same seeds, same structure), `replan`
+///    its placement over the measured profile, and run the same window.
+///
+/// Both arms spend the same DRAM budget, so the comparison isolates the
+/// ranking: measured-vs-static at equal bytes. The measured arm's model
+/// snapshot derives `m`/`m_dram` from the **replanned** plan, which is what
+/// `cxlkvs run planner` validates against the modelcheck bands.
+pub fn run_store_ycsb_profiled(
+    kind: StoreKind,
+    wl: YcsbWorkload,
+    sweep: &SweepCfg,
+    threads: usize,
+) -> ProfiledRun {
+    let mcfg = sweep.machine(threads);
+    let seed = sweep.seed ^ 0xfeed ^ wl.tag().as_bytes()[0] as u64;
+    let w = wl.weights();
+    macro_rules! two_phase {
+        ($new:expr, $bg:expr) => {{
+            // Phase 1: static placement — the profiling run and baseline.
+            let mut rng = Rng::new(seed);
+            let kv = $bg($new(&mut rng));
+            let mut m = Machine::new(mcfg.clone(), kv);
+            let st = m.run(sweep.warmup, sweep.window);
+            let static_arm = PlannedArm {
+                mix: model_mix(&m.service, &w),
+                dram_bytes: m.service.dram_bytes(),
+                stats: st,
+            };
+            let profile = m.service.profile.clone();
+            let static_rank = m.service.plan().ranking().to_vec();
+            // Phase 2: identical store, measured re-ranking.
+            let mut rng = Rng::new(seed);
+            let mut kv = $bg($new(&mut rng));
+            kv.replan(&profile);
+            let rank_differs = kv.plan().ranking() != static_rank.as_slice();
+            let measured_ranking = kv.plan().ranking().to_vec();
+            let mut m = Machine::new(mcfg, kv);
+            let st = m.run(sweep.warmup, sweep.window);
+            let measured_arm = PlannedArm {
+                mix: model_mix(&m.service, &w),
+                dram_bytes: m.service.dram_bytes(),
+                stats: st,
+            };
+            ProfiledRun {
+                static_arm,
+                measured_arm,
+                rank_differs,
+                measured_ranking,
+            }
+        }};
+    }
+    match kind {
+        StoreKind::Tree => {
+            let cfg = TreeKvConfig {
+                placement: sweep.placement,
+                ..ycsb_tree_cfg(wl)
+            };
+            let cores = mcfg.cores;
+            two_phase!(
+                |rng: &mut Rng| TreeKv::new(cfg.clone(), rng),
+                |kv: TreeKv| kv.with_background(cores, threads)
+            )
+        }
+        StoreKind::Lsm => {
+            let cfg = LsmKvConfig {
+                placement: sweep.placement,
+                ..ycsb_lsm_cfg(wl)
+            };
+            two_phase!(
+                |rng: &mut Rng| LsmKv::new(cfg.clone(), rng),
+                |kv: LsmKv| kv.with_background(threads)
+            )
+        }
+        StoreKind::Cache => {
+            let cfg = CacheKvConfig {
+                placement: sweep.placement,
+                ..ycsb_cache_cfg(wl)
+            };
+            two_phase!(|rng: &mut Rng| CacheKv::new(cfg.clone(), rng), |kv: CacheKv| kv)
+        }
+    }
+}
+
 /// Total offloadable bytes of one store kind under a YCSB preset's default
 /// sizes (the `AllDram` footprint): the denominator turning the placement
 /// experiment's budget fractions into `PlacementPolicy::Budget` bytes.

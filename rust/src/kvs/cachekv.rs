@@ -29,9 +29,9 @@
 //!   report the store as degenerate rather than silently misbehaving.
 
 use super::common::{fnv1a, KvStats, NIL};
-use super::placement::{Plan, PlacementPolicy, StructClass};
+use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
 use crate::model::KindCost;
-use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
+use crate::sim::{Dur, IoKind, Rng, Service, Step};
 use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ValueSize};
 
 /// Placement structure classes (`kvs::placement`), hottest-first: the
@@ -39,9 +39,12 @@ use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ValueSize};
 /// lookup, write, and invalidation) and the tier-1 LRU lists (MMContainer
 /// — touched on refreshes and eviction-candidate walks). The bucket
 /// directory and the tier-2 SOC index are the paper's residual DRAM
-/// footprint and stay outside the policy.
+/// footprint — **pinned** classes: outside the policy's placement
+/// decision, inside the DRAM-byte accounting and the [`AccessProfile`].
 const CC_CHAINS: usize = 0;
 const CC_LRU: usize = 1;
+const CC_DIRECTORY: usize = 2;
+const CC_SOC_INDEX: usize = 3;
 
 /// Store-extra CPU attributed to tier-2 page IO pre/post suboperations
 /// (µs). **Single source** for both the `Step::Io` sites below (`T2Read`,
@@ -134,8 +137,12 @@ pub struct CacheKv {
     t2_ring: std::collections::VecDeque<(u64, u32)>,
     t2_set: std::collections::HashMap<u64, u32>,
     t2_gen: u32,
-    /// Resolved tier placement over the tier-1 structure classes.
+    /// Resolved tier placement over the tier-1 structure classes
+    /// (re-resolved over measured access densities by [`CacheKv::replan`]).
     plan: Plan,
+    /// Measured per-class access counts — every `MemAccess` site ticks its
+    /// class, the pinned bucket directory included.
+    pub profile: AccessProfile,
     pub stats: KvStats,
 }
 
@@ -184,21 +191,24 @@ impl CacheKv {
     fn placement_classes(cfg: &CacheKvConfig) -> Vec<StructClass> {
         let items = cfg.t1_items as u64;
         vec![
-            StructClass {
-                name: "t1-hash-chains",
-                bytes: items * 32,
-                hotness: 2.0,
-            },
-            StructClass {
-                name: "t1-lru-lists",
-                bytes: items * 32,
-                hotness: 1.0,
-            },
+            StructClass::new("t1-hash-chains", items * 32, 2.0),
+            StructClass::new("t1-lru-lists", items * 32, 1.0),
+            // The residual DRAM footprint: the bucket directory (one
+            // pointer per bucket) and the tier-2 SOC index (key → page
+            // entry per admitted item). Pinned — DRAM under every policy,
+            // reported by `dram_bytes()`, never consuming the budget.
+            StructClass::pinned("t1-bucket-directory", cfg.buckets as u64 * 8),
+            StructClass::pinned("t2-soc-index", cfg.t2_items as u64 * 16),
         ]
     }
 
     pub fn new(cfg: CacheKvConfig, rng: &mut Rng) -> CacheKv {
         let plan = Plan::resolve(cfg.placement, Self::placement_classes(&cfg));
+        debug_assert!(
+            plan.classes()[CC_DIRECTORY].pinned && plan.classes()[CC_SOC_INDEX].pinned,
+            "the residual classes must be pinned (class-id order contract)"
+        );
+        let profile = AccessProfile::new(plan.classes().len());
         let keygen = KeyGen::new(cfg.n_items, cfg.key_dist);
         let mut kv = CacheKv {
             buckets: vec![NIL; cfg.buckets as usize],
@@ -211,6 +221,7 @@ impl CacheKv {
             t2_set: std::collections::HashMap::new(),
             t2_gen: 0,
             plan,
+            profile,
             stats: KvStats::default(),
             keygen,
             cfg,
@@ -400,14 +411,47 @@ impl CacheKv {
         self.t1_lookup(key).is_some() || self.t2_set.contains_key(&key)
     }
 
-    /// Simulated DRAM bytes the placement consumes.
+    /// Simulated DRAM bytes this configuration consumes — honest: the
+    /// policy-placed tier-1 structures *plus* the pinned residual (bucket
+    /// directory + SOC index; nonzero even under `AllSecondary`).
     pub fn dram_bytes(&self) -> u64 {
         self.plan.dram_bytes()
     }
 
-    /// Total offloadable bytes (the `AllDram` footprint).
+    /// The pinned residual footprint (bucket directory + tier-2 SOC index).
+    pub fn residual_dram_bytes(&self) -> u64 {
+        self.plan.pinned_bytes()
+    }
+
+    /// Total offloadable bytes (what `Budget` fractions resolve against;
+    /// excludes the pinned residual).
     pub fn offload_bytes_total(&self) -> u64 {
-        self.plan.total_bytes()
+        self.plan.offloadable_bytes()
+    }
+
+    /// The resolved placement plan (static, or measured after
+    /// [`CacheKv::replan`]).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Re-resolve the tier-1 placement over the **measured** per-class
+    /// access profile (`kvs::placement` module docs, "Measured
+    /// re-ranking"): under write-heavy mixes the LRU lists — four
+    /// eviction-candidate hops behind every insert, a splice behind every
+    /// update — out-access the hash chains per byte, flipping the static
+    /// order. Class-granular, so it is a plan swap; the `ModelCosts`
+    /// snapshots split `m`/`m_dram` from the replanned plan.
+    pub fn replan(&mut self, profile: &AccessProfile) {
+        self.plan = Plan::replan(self.cfg.placement, Self::placement_classes(&self.cfg), profile);
+    }
+
+    /// One simulated access to a placement class: tag the [`AccessProfile`]
+    /// and charge the access at the class's planned tier.
+    #[inline]
+    fn class_access(&mut self, class: usize) -> Step {
+        self.profile.tick(class);
+        Step::MemAccess(self.plan.tier(class))
     }
 
     // ---- directed operation constructors (also used by next_op) ----------
@@ -502,7 +546,7 @@ impl Service for CacheKv {
                     *bucket_read = true;
                     *cur = self.buckets[self.bucket_of(*key)];
                     // Bucket array lives in host DRAM.
-                    return Step::MemAccess(Tier::Dram);
+                    return self.class_access(CC_DIRECTORY);
                 }
                 let id = *cur;
                 let k = *key;
@@ -548,15 +592,15 @@ impl Service for CacheKv {
                         // splice runs under the (sharded) LRU lock —
                         // holding a lock across prefetch+yield accesses
                         // would make hold time grow with memory latency.
-                        return Step::MemAccess(self.plan.tier(CC_CHAINS));
+                        return self.class_access(CC_CHAINS);
                     }
                     *op = CacheOp::Finished;
                     self.stats.verified += 1;
-                    return Step::MemAccess(self.plan.tier(CC_CHAINS));
+                    return self.class_access(CC_CHAINS);
                 }
                 *cur = it.hash_next;
                 // Chain hop: dependent access at the chain class's tier.
-                Step::MemAccess(self.plan.tier(CC_CHAINS))
+                self.class_access(CC_CHAINS)
             }
             CacheOp::Refresh { key, hops } => {
                 let k = *key;
@@ -564,7 +608,7 @@ impl Service for CacheKv {
                     0 => {
                         *hops = 1;
                         // Read the prev neighbor (LRU links).
-                        Step::MemAccess(self.plan.tier(CC_LRU))
+                        self.class_access(CC_LRU)
                     }
                     1 => {
                         *hops = 2;
@@ -631,7 +675,7 @@ impl Service for CacheKv {
                 // mutation runs under the sharded eviction lock.
                 if *hops < 4 {
                     *hops += 1;
-                    return Step::MemAccess(self.plan.tier(CC_LRU));
+                    return self.class_access(CC_LRU);
                 }
                 if !*locked {
                     *locked = true;
@@ -680,7 +724,7 @@ impl Service for CacheKv {
                 if !*bucket_read {
                     *bucket_read = true;
                     *cur = self.buckets[self.bucket_of(k)];
-                    return Step::MemAccess(Tier::Dram);
+                    return self.class_access(CC_DIRECTORY);
                 }
                 match *hops {
                     0 => {
@@ -707,7 +751,7 @@ impl Service for CacheKv {
                         // placement policy as the read path (previously
                         // hardcoded secondary even when the chains would be
                         // DRAM-resident under any sane budget).
-                        Step::MemAccess(self.plan.tier(CC_CHAINS))
+                        self.class_access(CC_CHAINS)
                     }
                     1 => {
                         // Unlink under the lock; also drop any tier-2 copy.
@@ -1174,7 +1218,7 @@ mod tests {
             &mut rng,
         );
         assert!(kv.plan.in_dram(CC_CHAINS) && !kv.plan.in_dram(CC_LRU));
-        assert_eq!(kv.dram_bytes(), chains);
+        assert_eq!(kv.dram_bytes(), chains + kv.residual_dram_bytes());
         let key = 4321u64;
         if kv.t1_lookup(key).is_none() {
             kv.t1_insert(key, &mut rng);
@@ -1244,10 +1288,75 @@ mod tests {
                 },
                 &mut rng,
             );
-            let b = kv.dram_bytes();
+            // Policy bytes stay capped by the budget; the honest total adds
+            // the constant pinned residual (directory + SOC index).
+            let b = kv.plan().policy_dram_bytes();
             assert!(b <= budget && b >= prev, "budget {budget}: {prev} -> {b}");
+            assert_eq!(kv.dram_bytes(), b + kv.residual_dram_bytes());
             prev = b;
         }
+    }
+
+    #[test]
+    fn residual_directory_and_soc_index_reported_even_all_secondary() {
+        // Satellite bugfix: the bucket directory and the tier-2 SOC index
+        // are DRAM by design; before the pinned-class accounting they were
+        // invisible to `dram_bytes()`.
+        let mut rng = Rng::new(33);
+        let kv = CacheKv::new(small_cfg(), &mut rng); // AllSecondary default
+        let cfg = small_cfg();
+        assert_eq!(
+            kv.residual_dram_bytes(),
+            cfg.buckets as u64 * 8 + cfg.t2_items as u64 * 16
+        );
+        assert_eq!(kv.dram_bytes(), kv.residual_dram_bytes());
+        assert_eq!(kv.plan().policy_dram_bytes(), 0);
+        assert!(kv.plan().in_dram(CC_DIRECTORY) && kv.plan().in_dram(CC_SOC_INDEX));
+    }
+
+    #[test]
+    fn replan_under_write_heavy_mix_promotes_the_lru_lists() {
+        // The measured planner's cachekv-A case: misses walk four
+        // eviction-candidate LRU hops behind every insert and updates
+        // splice unconditionally, so a write/miss-heavy profile ranks the
+        // LRU lists above the hash chains per byte (the classes have equal
+        // byte footprints), flipping the static chains-first order.
+        let mut rng = Rng::new(34);
+        let mut kv = CacheKv::new(small_cfg(), &mut rng);
+        // Directed churn on cold keys: every op misses tier 1 (4 LRU hops
+        // per insert, short chain walks).
+        for key in 0..400u64 {
+            let op = kv.op_put(key * 7 + 1);
+            let _ = drive(&mut kv, op, &mut rng);
+        }
+        assert!(
+            kv.profile.accesses(CC_LRU) > kv.profile.accesses(CC_CHAINS),
+            "write churn must out-access the LRU lists: lru={} chains={}",
+            kv.profile.accesses(CC_LRU),
+            kv.profile.accesses(CC_CHAINS)
+        );
+        let profile = kv.profile.clone();
+        kv.replan(&profile);
+        assert_eq!(
+            kv.plan().ranking(),
+            &[CC_LRU, CC_CHAINS],
+            "measured ranking must flip the static chains-first order"
+        );
+        // At a one-class budget the measured plan places the LRU lists
+        // where the static plan placed the chains.
+        let one_class = CacheKv::placement_classes(&small_cfg())[CC_CHAINS].bytes;
+        let mut rng = Rng::new(34);
+        let mut placed = CacheKv::new(
+            CacheKvConfig {
+                placement: PlacementPolicy::Budget { dram_bytes: one_class },
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        assert!(placed.plan().in_dram(CC_CHAINS) && !placed.plan().in_dram(CC_LRU));
+        placed.replan(&profile);
+        assert!(!placed.plan().in_dram(CC_CHAINS) && placed.plan().in_dram(CC_LRU));
+        assert_eq!(placed.plan().policy_dram_bytes(), one_class);
     }
 
     #[test]

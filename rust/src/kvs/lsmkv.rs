@@ -33,20 +33,23 @@
 use std::collections::HashSet;
 
 use super::common::{fnv1a, KvStats, NIL};
-use super::placement::{Plan, PlacementPolicy, StructClass};
+use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
 use crate::model::KindCost;
-use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
+use crate::sim::{Dur, IoKind, Rng, Service, Step};
 use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ScanLen, ValueSize};
 
 /// Placement structure classes (`kvs::placement`), hottest-first: the
 /// sharded hash + LRU cache handles are touched several times per lookup
 /// per ~64 B each, the per-block restart arrays once per in-block search,
 /// and the cached data-block bytes once or twice per op over the largest
-/// footprint. The memtable is host-DRAM by design (the paper's residual
-/// footprint) and outside the policy.
+/// footprint. The memtable is host-DRAM by design — a **pinned** class:
+/// outside the policy's placement decision, but inside the DRAM-byte
+/// accounting (the paper's residual footprint) and tagged in the
+/// [`AccessProfile`] like every other access site.
 const PC_HANDLES: usize = 0;
 const PC_RESTARTS: usize = 1;
 const PC_DATA: usize = 2;
+const PC_MEMTABLE: usize = 3;
 
 /// Store-extra CPU attributed to each block fetch's pre/post suboperations
 /// (µs). **Single source** for both the `Step::Io` sites below (point-read
@@ -159,8 +162,12 @@ pub struct LsmKv {
     /// background thread flushes them into the SSTable levels.
     sealed_tombstones: HashSet<u64>,
     pub stats: KvStats,
-    /// Resolved tier placement over the block-cache structure classes.
+    /// Resolved tier placement over the block-cache structure classes
+    /// (re-resolved over measured access densities by [`LsmKv::replan`]).
     plan: Plan,
+    /// Measured per-class access counts — every `MemAccess` site ticks its
+    /// class, the memtable's pinned class included.
+    pub profile: AccessProfile,
     bg_tid_floor: usize,
     bg_threads_per_core: usize,
 }
@@ -240,26 +247,32 @@ impl LsmKv {
         let blocks = cfg.cache_blocks as u64;
         let block_bytes = cfg.keys_per_block as u64 * (cfg.value_size.mean() as u64 + 20 + 8);
         vec![
-            StructClass {
-                name: "cache-handles(chains+lru)",
-                bytes: blocks * 64 + cfg.shards as u64 * cfg.buckets_per_shard as u64 * 8,
-                hotness: 4.0,
-            },
-            StructClass {
-                name: "block-restarts",
-                bytes: blocks * ((cfg.keys_per_block as u64 / 4).max(1) * 4 + 4),
-                hotness: 1.0,
-            },
-            StructClass {
-                name: "block-data",
-                bytes: blocks * block_bytes,
-                hotness: 1.5,
-            },
+            StructClass::new(
+                "cache-handles(chains+lru)",
+                blocks * 64 + cfg.shards as u64 * cfg.buckets_per_shard as u64 * 8,
+                4.0,
+            ),
+            StructClass::new(
+                "block-restarts",
+                blocks * ((cfg.keys_per_block as u64 / 4).max(1) * 4 + 4),
+                1.0,
+            ),
+            StructClass::new("block-data", blocks * block_bytes, 1.5),
+            // The residual DRAM footprint: skiplist memtable entries (key +
+            // value + tower links, ~60 B overhead each) for the active plus
+            // one sealed (rotated, not yet flushed) generation. Pinned —
+            // DRAM under every policy, reported by `dram_bytes()`, never
+            // consuming the `Budget` knob.
+            StructClass::pinned(
+                "memtable(active+sealed)",
+                2 * cfg.memtable_cap as u64 * (cfg.value_size.mean() as u64 + 60),
+            ),
         ]
     }
 
     pub fn new(cfg: LsmKvConfig, rng: &mut Rng) -> LsmKv {
         let plan = Plan::resolve(cfg.placement, Self::placement_classes(&cfg));
+        let profile = AccessProfile::new(plan.classes().len());
         let n_blocks = ((cfg.n_items + cfg.keys_per_block as u64 - 1)
             / cfg.keys_per_block as u64) as u32;
         let shards = (0..cfg.shards)
@@ -285,6 +298,7 @@ impl LsmKv {
             sealed_tombstones: HashSet::new(),
             stats: KvStats::default(),
             plan,
+            profile,
             bg_tid_floor: usize::MAX,
             bg_threads_per_core: 1,
             keygen,
@@ -469,14 +483,45 @@ impl LsmKv {
         self.stats.hit_ratio()
     }
 
-    /// Simulated DRAM bytes the placement consumes.
+    /// Simulated DRAM bytes this configuration consumes — honest: the
+    /// policy-placed cache structures *plus* the pinned memtable residual
+    /// (nonzero even under `AllSecondary`).
     pub fn dram_bytes(&self) -> u64 {
         self.plan.dram_bytes()
     }
 
-    /// Total offloadable bytes (the `AllDram` footprint).
+    /// The pinned residual footprint (the DRAM-by-design memtable).
+    pub fn residual_dram_bytes(&self) -> u64 {
+        self.plan.pinned_bytes()
+    }
+
+    /// Total offloadable bytes (what `Budget` fractions resolve against;
+    /// excludes the pinned residual).
     pub fn offload_bytes_total(&self) -> u64 {
-        self.plan.total_bytes()
+        self.plan.offloadable_bytes()
+    }
+
+    /// The resolved placement plan (static, or measured after
+    /// [`LsmKv::replan`]).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Re-resolve the block-cache placement over the **measured** per-class
+    /// access profile (`kvs::placement` module docs, "Measured
+    /// re-ranking"). Class-granular, so it is a plan swap: every later
+    /// access consults the replanned tiers, and the `ModelCosts` snapshots
+    /// split `m`/`m_dram` from the replanned plan.
+    pub fn replan(&mut self, profile: &AccessProfile) {
+        self.plan = Plan::replan(self.cfg.placement, Self::placement_classes(&self.cfg), profile);
+    }
+
+    /// One simulated access to a placement class: tag the [`AccessProfile`]
+    /// and charge the access at the class's planned tier.
+    #[inline]
+    fn class_access(&mut self, class: usize) -> Step {
+        self.profile.tick(class);
+        Step::MemAccess(self.plan.tier(class))
     }
 
     fn lock_of(&self, block: u32) -> u32 {
@@ -792,7 +837,7 @@ impl Service for LsmKv {
                 // Skiplist probe in host DRAM: inline accesses, no yield.
                 if *probes > 0 {
                     *probes -= 1;
-                    return Step::MemAccess(Tier::Dram);
+                    return self.class_access(PC_MEMTABLE);
                 }
                 debug_assert!(matches!(*kind, OpKind::Read | OpKind::Rmw));
                 let k = *key;
@@ -836,7 +881,7 @@ impl Service for LsmKv {
                         self.stats.misses += 1;
                         *op = LsmOp::Fetch { key: k, rmw: r };
                     }
-                    return Step::MemAccess(self.plan.tier(PC_HANDLES));
+                    return self.class_access(PC_HANDLES);
                 }
                 let id = *entry;
                 if id == NIL {
@@ -858,7 +903,7 @@ impl Service for LsmKv {
                         hops: 0,
                         rmw: r,
                     };
-                    return Step::MemAccess(self.plan.tier(PC_HANDLES));
+                    return self.class_access(PC_HANDLES);
                 }
                 *entry = e.hash_next;
                 if *entry == NIL {
@@ -866,7 +911,7 @@ impl Service for LsmKv {
                     *op = LsmOp::Fetch { key: k, rmw: r };
                     return Step::Compute(self.cfg.t_node);
                 }
-                Step::MemAccess(self.plan.tier(PC_HANDLES))
+                self.class_access(PC_HANDLES)
             }
             LsmOp::LruPromote {
                 key,
@@ -933,7 +978,7 @@ impl Service for LsmKv {
                 // runs unlocked; the lock covers only the final mutation.
                 if *hops < 3 {
                     *hops += 1;
-                    return Step::MemAccess(self.plan.tier(PC_HANDLES));
+                    return self.class_access(PC_HANDLES);
                 }
                 if *hops == 3 {
                     *hops = 4;
@@ -993,7 +1038,7 @@ impl Service for LsmKv {
                         *op = LsmOp::Finished;
                     }
                     // The final interval scan reads the block's data bytes.
-                    return Step::MemAccess(self.plan.tier(PC_DATA));
+                    return self.class_access(PC_DATA);
                 }
                 let mid = (*lo + *hi) / 2;
                 if (*key as u32) < mid {
@@ -1002,13 +1047,13 @@ impl Service for LsmKv {
                     *lo = mid;
                 }
                 // Restart-array probe (placement class PC_RESTARTS).
-                Step::MemAccess(self.plan.tier(PC_RESTARTS))
+                self.class_access(PC_RESTARTS)
             }
             LsmOp::WriteMem { key, probes } => {
                 // Memtable skiplist insert: DRAM accesses only.
                 if *probes > 0 {
                     *probes -= 1;
-                    return Step::MemAccess(Tier::Dram);
+                    return self.class_access(PC_MEMTABLE);
                 }
                 let k = *key;
                 self.memtable_write(k);
@@ -1019,7 +1064,7 @@ impl Service for LsmKv {
                 // Tombstone insert: same memtable path as a write.
                 if *probes > 0 {
                     *probes -= 1;
-                    return Step::MemAccess(Tier::Dram);
+                    return self.class_access(PC_MEMTABLE);
                 }
                 let k = *key;
                 self.deleted.insert(k);
@@ -1042,7 +1087,7 @@ impl Service for LsmKv {
                 // Iterator seek: memtable probe first (DRAM).
                 if *probes > 0 {
                     *probes -= 1;
-                    return Step::MemAccess(Tier::Dram);
+                    return self.class_access(PC_MEMTABLE);
                 }
                 if *left == 0 || *key >= self.cfg.n_items {
                     *op = LsmOp::Finished;
@@ -1083,7 +1128,7 @@ impl Service for LsmKv {
                     if *chain_left > 0 {
                         // Bucket-head + chain-walk accesses for this block.
                         *chain_left -= 1;
-                        return Step::MemAccess(self.plan.tier(PC_HANDLES));
+                        return self.class_access(PC_HANDLES);
                     }
                     if *need_io {
                         *need_io = false;
@@ -1102,7 +1147,7 @@ impl Service for LsmKv {
                     *in_block = true;
                     *stride = 0;
                     // First touch of the cached block's bytes.
-                    return Step::MemAccess(self.plan.tier(PC_DATA));
+                    return self.class_access(PC_DATA);
                 }
                 // Consume one key from the resident block; tombstoned keys
                 // are merged out (compute only).
@@ -1120,7 +1165,7 @@ impl Service for LsmKv {
                 if *stride % 4 == 0 {
                     // Crossing into the next restart interval: one more
                     // dependent access over the cached block bytes.
-                    Step::MemAccess(self.plan.tier(PC_DATA))
+                    self.class_access(PC_DATA)
                 } else {
                     Step::Compute(self.cfg.t_node)
                 }
@@ -1454,7 +1499,8 @@ mod tests {
     fn placement_routes_cache_accesses_and_accounts_bytes() {
         use super::super::common::drive_op_tiers;
         use super::super::placement::PlacementPolicy;
-        // AllDram: no secondary hop anywhere on the read path.
+        // AllDram: no secondary hop anywhere on the read path. The honest
+        // footprint is the offloadable classes plus the pinned memtable.
         let mut rng = Rng::new(20);
         let mut kv = LsmKv::new(
             LsmKvConfig {
@@ -1463,7 +1509,10 @@ mod tests {
             },
             &mut rng,
         );
-        assert_eq!(kv.dram_bytes(), kv.offload_bytes_total());
+        assert_eq!(
+            kv.dram_bytes(),
+            kv.offload_bytes_total() + kv.residual_dram_bytes()
+        );
         let op = kv.op_get(777);
         let c = drive_op_tiers(&mut kv, op, &mut rng);
         assert_eq!(c.secondary, 0, "AllDram get must stay inline: {c:?}");
@@ -1480,14 +1529,15 @@ mod tests {
             &mut rng,
         );
         assert!(kv.plan.in_dram(PC_HANDLES) && !kv.plan.in_dram(PC_DATA));
-        assert_eq!(kv.dram_bytes(), handles);
+        assert_eq!(kv.dram_bytes(), handles + kv.residual_dram_bytes());
         let op = kv.op_get(777);
         let c = drive_op_tiers(&mut kv, op, &mut rng);
         assert!(
             c.secondary >= 1 && c.secondary <= 2,
             "only the in-block restart/data accesses stay secondary: {c:?}"
         );
-        // DRAM bytes monotone in the budget knob.
+        // Policy-consumed DRAM bytes stay capped by and monotone in the
+        // budget knob (the honest total adds the constant pinned residual).
         let total = kv.offload_bytes_total();
         let mut prev = 0u64;
         for budget in [0, handles / 2, handles, total / 2, total] {
@@ -1499,8 +1549,9 @@ mod tests {
                 },
                 &mut rng,
             );
-            let b = kv.dram_bytes();
+            let b = kv.plan().policy_dram_bytes();
             assert!(b <= budget && b >= prev, "budget {budget}: {prev} -> {b}");
+            assert_eq!(kv.dram_bytes(), b + kv.residual_dram_bytes());
             prev = b;
         }
         // The model snapshot splits accordingly: handles-only placement
@@ -1510,6 +1561,60 @@ mod tests {
         let read = kv.model_params(OpKind::Read);
         assert_eq!(read.m, 2.0, "in-block accesses stay secondary");
         assert!(read.m_dram > 0.5, "chain hops moved to DRAM: {}", read.m_dram);
+    }
+
+    #[test]
+    fn residual_memtable_footprint_is_reported_even_all_secondary() {
+        // Satellite bugfix: the memtable is DRAM by design; before the
+        // pinned-class accounting it was invisible to `dram_bytes()`, so
+        // `AllSecondary`/`AllDram` sweeps understated the bytes a
+        // configuration really consumes.
+        let mut rng = Rng::new(24);
+        let kv = LsmKv::new(small_cfg(), &mut rng); // AllSecondary default
+        assert!(kv.residual_dram_bytes() > 0);
+        assert_eq!(kv.dram_bytes(), kv.residual_dram_bytes());
+        assert_eq!(kv.plan().policy_dram_bytes(), 0);
+        // The pinned class never consumes the budget: a budget of exactly
+        // the handles class still places the whole handles class.
+        let handles = LsmKv::placement_classes(&small_cfg())[PC_HANDLES].bytes;
+        let mut rng = Rng::new(24);
+        let kv = LsmKv::new(
+            LsmKvConfig {
+                placement: PlacementPolicy::Budget { dram_bytes: handles },
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        assert!(kv.plan().in_dram(PC_HANDLES));
+        assert_eq!(kv.plan().policy_dram_bytes(), handles);
+    }
+
+    #[test]
+    fn replan_under_scan_mix_demotes_the_untouched_restarts() {
+        // The measured planner's lsmkv-E case: scans walk chains and block
+        // bytes but never binary-search the restart arrays, so a scan-only
+        // profile ranks restarts last (zero accesses per byte) while the
+        // static prior ranks them second.
+        let mut rng = Rng::new(25);
+        let mut kv = LsmKv::new(small_cfg(), &mut rng);
+        for start in (0..5_000u64).step_by(97) {
+            let op = kv.op_scan(start, 16);
+            drive(&mut kv, op, &mut rng);
+        }
+        assert!(kv.profile.accesses(PC_HANDLES) > 0);
+        assert!(kv.profile.accesses(PC_DATA) > 0);
+        assert_eq!(kv.profile.accesses(PC_RESTARTS), 0, "scans skip restarts");
+        let profile = kv.profile.clone();
+        kv.replan(&profile);
+        assert_eq!(
+            kv.plan().ranking(),
+            &[PC_HANDLES, PC_DATA, PC_RESTARTS],
+            "measured ranking demotes the untouched restart arrays"
+        );
+        // Replanning is deterministic given the same profile.
+        let rank0 = kv.plan().ranking().to_vec();
+        kv.replan(&profile);
+        assert_eq!(kv.plan().ranking(), rank0.as_slice());
     }
 
     #[test]

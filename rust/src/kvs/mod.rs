@@ -30,8 +30,14 @@
 //! Tier selection is first-class: every `MemAccess` site consults a shared
 //! [`placement::PlacementPolicy`] (all-secondary, all-DRAM, top levels, or
 //! a DRAM byte budget over hotness-ranked structure classes), with
-//! per-store accounting of the simulated DRAM bytes consumed — see
-//! [`placement`] for the split-hop Θ derivation and per-store class lists.
+//! per-store accounting of the simulated DRAM bytes consumed — including
+//! the **pinned** residual footprint (lsmkv's memtable, cachekv's bucket
+//! directory and SOC index), which is DRAM by design under every policy.
+//! Each access site also tags its structure class in a per-store
+//! [`placement::AccessProfile`], so the planner can re-rank classes by
+//! *measured* accesses per byte (`replan`) instead of the static hotness
+//! prior — see [`placement`] for the split-hop Θ derivation, the measured
+//! re-ranking rule, and per-store class lists.
 //!
 //! Each store holds *real* data structures: every simulated pointer
 //! dereference corresponds to an actual traversal step over actual keys, so
@@ -48,7 +54,7 @@ pub mod treekv;
 pub use cachekv::{CacheKv, CacheKvConfig};
 pub use common::{drive_op, drive_op_tiers, fnv1a, DriveCounts, KvStats};
 pub use lsmkv::{LsmKv, LsmKvConfig};
-pub use placement::{Plan, PlacementPolicy, StructClass};
+pub use placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
 pub use treekv::{TreeKv, TreeKvConfig, SCAN_IO_BATCH};
 
 use crate::model::KindCost;

@@ -21,19 +21,61 @@
 //!   byte; the value-log block pointers ride inside the 64-byte entries).
 //! - **lsmkv**: block-cache handles (hash chains + LRU links + bucket
 //!   heads) ≫ block restart arrays ≫ cached data-block bytes. The memtable
-//!   is host-DRAM by design (the paper's residual footprint) and outside
-//!   the policy.
-//! - **cachekv**: tier-1 hash chains (AccessContainer) ≻ tier-1 LRU links
-//!   (MMContainer). The bucket directory and the tier-2 SOC index are the
-//!   paper's residual DRAM footprint and stay outside the policy.
+//!   is host-DRAM by design — a **pinned** class (below).
+//! - **cachekv**: tier-1 hash chains (AccessContainer) ≻ tier-1 LRU lists
+//!   (MMContainer). The bucket directory and the tier-2 SOC index are
+//!   pinned classes.
 //!
-//! A [`Plan`] resolves a [`PlacementPolicy`] over those classes by taking
-//! the longest hottest-first **prefix** that the policy admits: placement
-//! is all-or-nothing per class, and a colder class is never DRAM-resident
-//! while a hotter one is offloaded (for a tree this is exactly the
-//! "every descent passes the top levels" argument; a DRAM level below a
-//! secondary level buys nothing). Prefix resolution makes the reported
-//! DRAM bytes trivially monotone in the budget knob.
+//! **Pinned classes** are the paper's residual DRAM footprint: structures
+//! that stay in host DRAM *by design* under every policy (lsmkv's
+//! memtable, cachekv's bucket directory and SOC index). They are outside
+//! the policy's placement decision — never offloaded, never consuming the
+//! `Budget` knob — but [`Plan::dram_bytes`] and [`Plan::total_bytes`]
+//! include them, so the DRAM-byte columns the experiments report are the
+//! bytes a configuration *really* consumes. (Before this accounting fix,
+//! `AllDram` and `Budget` sweeps silently understated their footprint by
+//! the residual; [`Plan::policy_dram_bytes`] still reports the
+//! policy-consumed bytes alone for budget-cap checks.)
+//!
+//! A [`Plan`] resolves a [`PlacementPolicy`] over the offloadable classes
+//! by taking the longest hottest-first **prefix** that the policy admits:
+//! placement is all-or-nothing per class, and a colder class is never
+//! DRAM-resident while a hotter one is offloaded (for a tree this is
+//! exactly the "every descent passes the top levels" argument; a DRAM
+//! level below a secondary level buys nothing). Prefix resolution makes
+//! the reported DRAM bytes trivially monotone in the budget knob.
+//!
+//! ## Measured re-ranking: the access-frequency planner
+//!
+//! The static hotness ranking is a *prior*, and the prior is wrong exactly
+//! where the workload mix matters most: under a scan-heavy mix the lsmkv
+//! restart arrays are never touched (scans walk chains and block bytes;
+//! only point reads binary-search the restarts), and under a write-heavy
+//! mix the cachekv LRU lists — four eviction-candidate hops behind every
+//! insert, a splice behind every update — out-access the hash chains.
+//!
+//! Every store therefore tags each `MemAccess` site with its class id (it
+//! already knows the class to consult the plan) and accumulates an
+//! [`AccessProfile`]: measured accesses per class. [`Plan::replan`]
+//! re-ranks the offloadable classes by **measured accesses per byte**
+//!
+//! ```text
+//! rank(c) = profile.accesses(c) / bytes(c)    (descending,
+//!                                              ties → static order)
+//! ```
+//!
+//! and resolves `Budget`/`TopLevels` over that order instead of the static
+//! one. The ranking is the classic density heuristic for the placement
+//! knapsack: with all-or-nothing classes and additive DRAM benefit per
+//! absorbed access, packing by accesses-per-byte maximizes the absorbed
+//! access share within the byte budget (exactly optimal when the chosen
+//! prefix fills the budget; the class-granular remainder is the usual
+//! knapsack rounding). An empty profile falls back to the static ranking,
+//! so replanning is always defined; given the same profile the re-rank is
+//! deterministic (stable sort, static-order tie-break). The coordinator's
+//! `run_store_ycsb_profiled` drives the two-phase profile → replan →
+//! measure path, and `cxlkvs run planner` gates measured-vs-static
+//! placement at equal DRAM budget.
 //!
 //! ## The split-hop Θ (Eq 14 with DRAM-resident hops)
 //!
@@ -56,13 +98,14 @@
 //! hidden behind the prefetch queue, and it never pays `T_sw` or the
 //! queue-depth wall). `model::KindCost` carries both counts (`m` = M_sec,
 //! `m_dram`), each store's `ModelCosts::model_params` derives them from the
-//! live policy, and `theta_kind_recip`/CPR compose unchanged. The `S = 0`
-//! branch degenerates the same way: `M_sec` at the memory-only Eq 3 rate
-//! plus the inline `M_dram` term.
+//! live (possibly replanned) policy, and `theta_kind_recip`/CPR compose
+//! unchanged. The `S = 0` branch degenerates the same way: `M_sec` at the
+//! memory-only Eq 3 rate plus the inline `M_dram` term.
 //!
 //! `cxlkvs run placement` sweeps the DRAM budget × L_mem × store and
 //! validates this split against the simulator within the documented
-//! `modelcheck` tolerance bands.
+//! `modelcheck` tolerance bands; `cxlkvs run planner` does the same for
+//! replanned placements.
 
 use crate::sim::Tier;
 
@@ -84,57 +127,195 @@ pub enum PlacementPolicy {
     /// sprig) stay in DRAM — the access-aware placement of §5.2.3.
     TopLevels { k: u32 },
     /// Hotness-ranked placement within a simulated DRAM byte budget: the
-    /// longest hottest-first class prefix whose bytes fit.
+    /// longest hottest-first class prefix whose bytes fit. Pinned classes
+    /// are outside the budget (they are DRAM regardless).
     Budget { dram_bytes: u64 },
     /// A uniformly random fraction of entries stays in DRAM (what Eq 15's
     /// ρ-interpolation assumes). Entry-granular where the store supports
     /// it (treekv); class-granular stores approximate it as
-    /// `Budget { dram_frac · total_bytes }`.
+    /// `Budget { dram_frac · offloadable_bytes }`.
     Random { dram_frac: f64 },
 }
 
-/// One offloadable structure class: a contiguous placement unit with a
-/// simulated byte footprint and an (approximate) access share used for
-/// reporting. Classes are supplied hottest-first; [`Plan::resolve`] places
-/// prefixes only.
+/// One structure class: a contiguous placement unit with a simulated byte
+/// footprint. Offloadable classes are supplied hottest-first ([`Plan`]
+/// places prefixes only); pinned classes are DRAM-resident under every
+/// policy (the residual footprint).
 #[derive(Debug, Clone)]
 pub struct StructClass {
     pub name: &'static str,
     /// Simulated bytes this class occupies if DRAM-resident.
     pub bytes: u64,
     /// Expected secondary accesses per operation this class absorbs when
-    /// DRAM-placed (documentation/reporting; resolution is rank-based).
+    /// DRAM-placed (documentation/reporting; static resolution is
+    /// rank-based, measured resolution uses the [`AccessProfile`]).
     pub hotness: f64,
+    /// DRAM-resident by design, outside the placement policy (lsmkv's
+    /// memtable, cachekv's bucket directory / SOC index). Pinned bytes
+    /// count toward [`Plan::dram_bytes`] but never consume the budget.
+    pub pinned: bool,
 }
 
-/// A resolved placement: which classes are DRAM-resident under a policy.
+impl StructClass {
+    /// An offloadable class (the policy decides its tier).
+    pub fn new(name: &'static str, bytes: u64, hotness: f64) -> StructClass {
+        StructClass {
+            name,
+            bytes,
+            hotness,
+            pinned: false,
+        }
+    }
+
+    /// A pinned class: host-DRAM by design, reported but never offloaded.
+    pub fn pinned(name: &'static str, bytes: u64) -> StructClass {
+        StructClass {
+            name,
+            bytes,
+            hotness: 0.0,
+            pinned: true,
+        }
+    }
+}
+
+/// Measured per-class access counts, accumulated by a store at its
+/// `MemAccess` sites (one tick per simulated access, pinned classes
+/// included). The store-side half of the measured planner: feed it to
+/// [`Plan::replan`] to re-rank the offloadable classes by observed
+/// accesses per byte. Counting is pure bookkeeping — it never touches the
+/// simulation's RNG or timing, so profiled runs stay bit-identical to
+/// unprofiled ones.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AccessProfile {
+    counts: Vec<u64>,
+}
+
+impl AccessProfile {
+    pub fn new(n_classes: usize) -> AccessProfile {
+        AccessProfile {
+            counts: vec![0; n_classes],
+        }
+    }
+
+    /// Record one access to `class` (auto-grows for stores whose class
+    /// count is data-dependent, e.g. tree levels).
+    #[inline]
+    pub fn tick(&mut self, class: usize) {
+        if class >= self.counts.len() {
+            self.counts.resize(class + 1, 0);
+        }
+        self.counts[class] += 1;
+    }
+
+    /// Measured accesses of one class (0 for classes never seen).
+    pub fn accesses(&self, class: usize) -> u64 {
+        self.counts.get(class).copied().unwrap_or(0)
+    }
+
+    /// Total accesses across all classes.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// No accesses recorded — [`Plan::replan`] falls back to the static
+    /// ranking.
+    pub fn is_empty(&self) -> bool {
+        self.counts.iter().all(|&c| c == 0)
+    }
+
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+    }
+}
+
+/// A resolved placement: which classes are DRAM-resident under a policy,
+/// over either the static hottest-first ranking ([`Plan::resolve`]) or a
+/// measured accesses-per-byte re-ranking ([`Plan::replan`]).
 #[derive(Debug, Clone)]
 pub struct Plan {
     pub policy: PlacementPolicy,
     classes: Vec<StructClass>,
-    /// Number of leading (hottest) classes resident in DRAM.
+    /// Offloadable class ids, hottest-first (static order, or the measured
+    /// re-rank). Pinned classes never appear here.
+    order: Vec<usize>,
+    /// Number of leading `order` entries resident in DRAM.
     dram_prefix: usize,
+    /// Per-class DRAM residency (pinned, or inside the placed prefix).
+    dram: Vec<bool>,
 }
 
 impl Plan {
-    /// Resolve `policy` over `classes` (hottest-first). See the module docs
-    /// for the prefix rule.
+    /// Resolve `policy` over `classes` in their static hottest-first order.
+    /// See the module docs for the prefix rule; pinned classes are DRAM
+    /// under every policy and never consume the budget.
     pub fn resolve(policy: PlacementPolicy, classes: Vec<StructClass>) -> Plan {
-        let total: u64 = classes.iter().map(|c| c.bytes).sum();
-        let dram_prefix = match policy {
-            PlacementPolicy::AllSecondary => 0,
-            PlacementPolicy::AllDram => classes.len(),
-            PlacementPolicy::TopLevels { k } => (k as usize).min(classes.len()),
-            PlacementPolicy::Budget { dram_bytes } => prefix_within(&classes, dram_bytes),
-            PlacementPolicy::Random { dram_frac } => {
-                let budget = (dram_frac.clamp(0.0, 1.0) * total as f64).round() as u64;
-                prefix_within(&classes, budget)
+        let order: Vec<usize> = (0..classes.len()).filter(|&i| !classes[i].pinned).collect();
+        Plan::resolve_order(policy, classes, order)
+    }
+
+    /// Resolve `policy` over `classes` re-ranked by **measured** accesses
+    /// per byte (module docs, "Measured re-ranking"). An empty profile
+    /// falls back to [`Plan::resolve`]; ties keep the static order, so the
+    /// result is deterministic given the same profile.
+    pub fn replan(
+        policy: PlacementPolicy,
+        classes: Vec<StructClass>,
+        profile: &AccessProfile,
+    ) -> Plan {
+        if profile.is_empty() {
+            return Plan::resolve(policy, classes);
+        }
+        let mut order: Vec<usize> = (0..classes.len()).filter(|&i| !classes[i].pinned).collect();
+        let density = |i: usize| -> f64 {
+            let b = classes[i].bytes;
+            if b == 0 {
+                // A zero-byte class is free to place: rank an *accessed*
+                // one first (infinite density), an untouched one last.
+                if profile.accesses(i) > 0 {
+                    f64::INFINITY
+                } else {
+                    0.0
+                }
+            } else {
+                profile.accesses(i) as f64 / b as f64
             }
         };
+        order.sort_by(|&a, &b| {
+            density(b)
+                .partial_cmp(&density(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        Plan::resolve_order(policy, classes, order)
+    }
+
+    /// Shared resolution over an explicit offloadable ranking.
+    fn resolve_order(
+        policy: PlacementPolicy,
+        classes: Vec<StructClass>,
+        order: Vec<usize>,
+    ) -> Plan {
+        let offloadable: u64 = order.iter().map(|&i| classes[i].bytes).sum();
+        let dram_prefix = match policy {
+            PlacementPolicy::AllSecondary => 0,
+            PlacementPolicy::AllDram => order.len(),
+            PlacementPolicy::TopLevels { k } => (k as usize).min(order.len()),
+            PlacementPolicy::Budget { dram_bytes } => prefix_within(&classes, &order, dram_bytes),
+            PlacementPolicy::Random { dram_frac } => {
+                let budget = (dram_frac.clamp(0.0, 1.0) * offloadable as f64).round() as u64;
+                prefix_within(&classes, &order, budget)
+            }
+        };
+        let mut dram: Vec<bool> = classes.iter().map(|c| c.pinned).collect();
+        for &i in &order[..dram_prefix] {
+            dram[i] = true;
+        }
         Plan {
             policy,
             classes,
+            order,
             dram_prefix,
+            dram,
         }
     }
 
@@ -142,22 +323,30 @@ impl Plan {
     /// deeper than the class list) are always secondary.
     #[inline]
     pub fn tier(&self, class: usize) -> Tier {
-        if class < self.dram_prefix {
+        if self.in_dram(class) {
             Tier::Dram
         } else {
             Tier::Secondary
         }
     }
 
-    /// Whether one class is DRAM-resident.
+    /// Whether one class is DRAM-resident (pinned or placed).
     #[inline]
     pub fn in_dram(&self, class: usize) -> bool {
-        class < self.dram_prefix
+        self.dram.get(class).copied().unwrap_or(false)
     }
 
-    /// Number of leading classes resident in DRAM.
+    /// Number of leading (hottest-ranked) offloadable classes resident in
+    /// DRAM.
     pub fn dram_classes(&self) -> usize {
         self.dram_prefix
+    }
+
+    /// The offloadable ranking this plan resolved over: class ids
+    /// hottest-first — the static order from [`Plan::resolve`], the
+    /// measured accesses-per-byte order from [`Plan::replan`].
+    pub fn ranking(&self) -> &[usize] {
+        &self.order
     }
 
     /// Split per-class expected access counts into `(m_sec, m_dram)`:
@@ -176,17 +365,48 @@ impl Plan {
         (sec, dram)
     }
 
-    /// Simulated DRAM bytes the resolved placement consumes.
+    /// Simulated DRAM bytes this placement consumes — the **honest** total:
+    /// policy-placed offloadable classes *plus* the pinned residual
+    /// footprint (`AllSecondary` on a store with pinned classes is nonzero
+    /// by design).
     pub fn dram_bytes(&self) -> u64 {
-        self.classes[..self.dram_prefix].iter().map(|c| c.bytes).sum()
+        self.classes
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| self.dram[i])
+            .map(|(_, c)| c.bytes)
+            .sum()
     }
 
-    /// Total offloadable bytes (the `AllDram` footprint).
+    /// DRAM bytes consumed by the *policy* alone (placed offloadable
+    /// classes, excluding the pinned residual) — the quantity capped by
+    /// `Budget { dram_bytes }`.
+    pub fn policy_dram_bytes(&self) -> u64 {
+        self.order[..self.dram_prefix]
+            .iter()
+            .map(|&i| self.classes[i].bytes)
+            .sum()
+    }
+
+    /// The pinned residual footprint (DRAM under every policy).
+    pub fn pinned_bytes(&self) -> u64 {
+        self.classes.iter().filter(|c| c.pinned).map(|c| c.bytes).sum()
+    }
+
+    /// Total bytes of every class, pinned included (the honest `AllDram`
+    /// footprint).
     pub fn total_bytes(&self) -> u64 {
         self.classes.iter().map(|c| c.bytes).sum()
     }
 
-    /// DRAM share of the offloadable footprint, by bytes.
+    /// Offloadable bytes alone — the denominator for budget fractions
+    /// (`Budget { frac · offloadable_bytes }` spans all-secondary to
+    /// all-DRAM for the policy-managed classes).
+    pub fn offloadable_bytes(&self) -> u64 {
+        self.order.iter().map(|&i| self.classes[i].bytes).sum()
+    }
+
+    /// DRAM share of the total footprint, by bytes.
     pub fn dram_fraction(&self) -> f64 {
         let total = self.total_bytes();
         if total == 0 {
@@ -200,16 +420,16 @@ impl Plan {
     }
 }
 
-/// Longest class prefix whose cumulative bytes fit `budget`.
-fn prefix_within(classes: &[StructClass], budget: u64) -> usize {
+/// Longest prefix of `order` whose cumulative bytes fit `budget`.
+fn prefix_within(classes: &[StructClass], order: &[usize], budget: u64) -> usize {
     let mut used = 0u64;
-    for (i, c) in classes.iter().enumerate() {
-        used = used.saturating_add(c.bytes);
+    for (pos, &i) in order.iter().enumerate() {
+        used = used.saturating_add(classes[i].bytes);
         if used > budget {
-            return i;
+            return pos;
         }
     }
-    classes.len()
+    order.len()
 }
 
 #[cfg(test)]
@@ -218,21 +438,9 @@ mod tests {
 
     fn classes() -> Vec<StructClass> {
         vec![
-            StructClass {
-                name: "hot",
-                bytes: 100,
-                hotness: 4.0,
-            },
-            StructClass {
-                name: "warm",
-                bytes: 1_000,
-                hotness: 1.0,
-            },
-            StructClass {
-                name: "cold",
-                bytes: 10_000,
-                hotness: 0.5,
-            },
+            StructClass::new("hot", 100, 4.0),
+            StructClass::new("warm", 1_000, 1.0),
+            StructClass::new("cold", 10_000, 0.5),
         ]
     }
 
@@ -308,5 +516,130 @@ mod tests {
         assert_eq!(p.dram_bytes(), 0);
         assert_eq!(p.dram_fraction(), 0.0);
         assert_eq!(p.tier(0), Tier::Secondary);
+    }
+
+    // ---- pinned classes (honest residual accounting) ----------------------
+
+    fn with_pinned() -> Vec<StructClass> {
+        let mut cs = classes();
+        cs.push(StructClass::pinned("residual", 500));
+        cs
+    }
+
+    #[test]
+    fn pinned_classes_are_dram_under_every_policy_but_never_budgeted() {
+        let none = Plan::resolve(PlacementPolicy::AllSecondary, with_pinned());
+        assert_eq!(none.tier(3), Tier::Dram, "pinned is DRAM even at rho=1");
+        assert_eq!(none.dram_bytes(), 500, "honest: residual reported");
+        assert_eq!(none.policy_dram_bytes(), 0, "policy consumed nothing");
+        assert_eq!(none.pinned_bytes(), 500);
+        assert_eq!(none.offloadable_bytes(), 11_100);
+        assert_eq!(none.total_bytes(), 11_600);
+        // A budget of exactly the hot class places it — pinned bytes do not
+        // consume the budget.
+        let b = Plan::resolve(PlacementPolicy::Budget { dram_bytes: 100 }, with_pinned());
+        assert!(b.in_dram(0) && b.in_dram(3) && !b.in_dram(1));
+        assert_eq!(b.policy_dram_bytes(), 100);
+        assert_eq!(b.dram_bytes(), 600);
+        // AllDram covers everything; Random{1.0} covers all offloadable.
+        let all = Plan::resolve(PlacementPolicy::AllDram, with_pinned());
+        assert_eq!(all.dram_bytes(), 11_600);
+        let r = Plan::resolve(PlacementPolicy::Random { dram_frac: 1.0 }, with_pinned());
+        assert_eq!(r.dram_classes(), 3);
+        // The pinned class never appears in the offloadable ranking.
+        assert!(!none.ranking().contains(&3));
+    }
+
+    // ---- measured re-ranking (Plan::replan) -------------------------------
+
+    #[test]
+    fn replan_reorders_by_measured_accesses_per_byte() {
+        // Static order: hot(100B) ≻ warm(1kB) ≻ cold(10kB). Measured
+        // densities: hot 10/100B = 0.1, cold 200/10kB = 0.02,
+        // warm 1/1kB = 0.001 — the workload hammers "cold" past "warm".
+        let mut prof = AccessProfile::new(3);
+        for _ in 0..10 {
+            prof.tick(0);
+        }
+        prof.tick(1);
+        for _ in 0..200 {
+            prof.tick(2);
+        }
+        let p = Plan::replan(PlacementPolicy::AllSecondary, classes(), &prof);
+        assert_eq!(p.ranking(), &[0, 2, 1], "measured density order");
+        // Budget resolution follows the measured order: 10,100 B fits
+        // hot + cold (10,100) exactly, leaving warm offloaded — the static
+        // order would have placed hot + warm instead.
+        let p = Plan::replan(
+            PlacementPolicy::Budget { dram_bytes: 10_100 },
+            classes(),
+            &prof,
+        );
+        assert!(p.in_dram(0) && p.in_dram(2) && !p.in_dram(1));
+        assert_eq!(p.policy_dram_bytes(), 10_100);
+        let s = Plan::resolve(PlacementPolicy::Budget { dram_bytes: 10_100 }, classes());
+        assert!(s.in_dram(0) && s.in_dram(1) && !s.in_dram(2));
+    }
+
+    #[test]
+    fn replan_is_deterministic_and_falls_back_to_static() {
+        let mut prof = AccessProfile::new(3);
+        prof.tick(2);
+        prof.tick(2);
+        prof.tick(0);
+        let a = Plan::replan(PlacementPolicy::TopLevels { k: 1 }, classes(), &prof);
+        let b = Plan::replan(PlacementPolicy::TopLevels { k: 1 }, classes(), &prof);
+        assert_eq!(a.ranking(), b.ranking(), "same profile, same plan");
+        assert_eq!(a.dram_bytes(), b.dram_bytes());
+        // Empty profile → the static ranking, bit-for-bit.
+        let empty = AccessProfile::new(3);
+        let f = Plan::replan(PlacementPolicy::TopLevels { k: 1 }, classes(), &empty);
+        let s = Plan::resolve(PlacementPolicy::TopLevels { k: 1 }, classes());
+        assert_eq!(f.ranking(), s.ranking());
+        assert_eq!(f.dram_bytes(), s.dram_bytes());
+        // Ties (identical density) keep the static order: a uniform profile
+        // over equal-density classes reproduces the static ranking.
+        let eq = vec![
+            StructClass::new("a", 100, 1.0),
+            StructClass::new("b", 100, 1.0),
+        ];
+        let mut uni = AccessProfile::new(2);
+        uni.tick(0);
+        uni.tick(1);
+        let t = Plan::replan(PlacementPolicy::AllSecondary, eq, &uni);
+        assert_eq!(t.ranking(), &[0, 1]);
+    }
+
+    #[test]
+    fn zero_byte_accessed_class_ranks_first() {
+        // A degenerate zero-byte class is free to keep in DRAM: if the
+        // workload touches it, the measured ranking must place it first
+        // (infinite density), never last as a naive 0.0 density would.
+        let cs = vec![
+            StructClass::new("a", 100, 1.0),
+            StructClass::new("free", 0, 1.0),
+        ];
+        let mut prof = AccessProfile::new(2);
+        prof.tick(0);
+        prof.tick(1);
+        let p = Plan::replan(PlacementPolicy::Budget { dram_bytes: 0 }, cs, &prof);
+        assert_eq!(p.ranking(), &[1, 0]);
+        assert!(p.in_dram(1), "a free accessed class always fits the budget");
+        assert!(!p.in_dram(0));
+    }
+
+    #[test]
+    fn profile_bookkeeping() {
+        let mut p = AccessProfile::new(2);
+        assert!(p.is_empty());
+        p.tick(0);
+        p.tick(5); // auto-grow
+        assert_eq!(p.accesses(0), 1);
+        assert_eq!(p.accesses(5), 1);
+        assert_eq!(p.accesses(3), 0);
+        assert_eq!(p.total(), 2);
+        assert!(!p.is_empty());
+        p.clear();
+        assert!(p.is_empty());
     }
 }

@@ -43,7 +43,7 @@
 //! even when slots are recycled mid-scan.
 
 use super::common::{fnv1a, KvStats, NIL};
-use super::placement::{Plan, PlacementPolicy, StructClass};
+use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
 use crate::workload::{KeyGen, OpKind, OpMix, OpWeights, ScanLen, ValueSize};
@@ -77,6 +77,12 @@ struct Node {
     /// Tier placement: this entry lives in host DRAM (§5.2.3 extension,
     /// resolved per-entry from the [`PlacementPolicy`]).
     in_dram: bool,
+    /// Sprig-forest depth at attach time — the entry's placement structure
+    /// class (`kvs::placement`), used to tag every access of this entry in
+    /// the per-class [`AccessProfile`]. Not updated when an unlink shifts a
+    /// subtree up a level (placement decisions were made at attach depth
+    /// too, so class and tier stay consistent under churn).
+    depth: u16,
 }
 
 #[derive(Debug, Clone)]
@@ -141,9 +147,14 @@ pub struct TreeKv {
     log_head: u32,
     /// Blocks freed by updates/deletes, pending defrag.
     dead_blocks: u64,
-    /// `Budget` placement resolved to a level prefix: entries at depth
-    /// `< dram_levels` are DRAM-resident (see [`TreeKv::level_classes`]).
-    dram_levels: u32,
+    /// Resolved tier placement over the sprig-forest level classes
+    /// ([`TreeKv::level_classes`]): `Budget`/`TopLevels` entries at a
+    /// DRAM-placed level class are DRAM-resident. Re-resolved over the
+    /// measured per-level access profile by [`TreeKv::replan`].
+    plan: Plan,
+    /// Measured per-level access counts (every index-entry `MemAccess`
+    /// ticks its level class) — the input to [`TreeKv::replan`].
+    pub profile: AccessProfile,
     pub stats: KvStats,
     /// `tid % bg_threads_per_core == bg_tid_floor` marks a background
     /// defragger thread (one per core); `usize::MAX` disables them.
@@ -245,6 +256,7 @@ impl TreeKv {
     pub fn new(cfg: TreeKvConfig, rng: &mut Rng) -> TreeKv {
         let keygen = KeyGen::new(cfg.n_items, cfg.key_dist);
         let plan = Plan::resolve(cfg.placement, Self::level_classes(cfg.n_items, cfg.sprigs));
+        let n_classes = plan.classes().len();
         let mut kv = TreeKv {
             roots: vec![NIL; cfg.sprigs as usize],
             nodes: Vec::with_capacity(cfg.n_items as usize),
@@ -252,7 +264,8 @@ impl TreeKv {
             disk: Vec::with_capacity(cfg.n_items as usize * 2),
             log_head: 0,
             dead_blocks: 0,
-            dram_levels: plan.dram_classes() as u32,
+            plan,
+            profile: AccessProfile::new(n_classes),
             stats: KvStats::default(),
             bg_tid_floor: usize::MAX,
             bg_threads_per_core: 1,
@@ -301,12 +314,60 @@ impl TreeKv {
         (digest % self.cfg.sprigs as u64) as usize
     }
 
+    /// Placement structure class of an entry at `depth` (one class per
+    /// sprig-forest level, clamped to the 64-class cap of
+    /// [`TreeKv::level_classes`]).
     #[inline]
-    fn tier_of(&self, id: u32) -> Tier {
-        if self.nodes[id as usize].in_dram {
+    fn level_class(depth: u32) -> usize {
+        (depth as usize).min(63)
+    }
+
+    /// One simulated access to entry `id`: tag its level class in the
+    /// [`AccessProfile`] and return the access step at the entry's tier.
+    #[inline]
+    fn entry_access(&mut self, id: u32) -> Step {
+        let n = &self.nodes[id as usize];
+        self.profile.tick(Self::level_class(n.depth as u32));
+        Step::MemAccess(if n.in_dram {
             Tier::Dram
         } else {
             Tier::Secondary
+        })
+    }
+
+    /// The resolved placement plan (static, or measured after
+    /// [`TreeKv::replan`]).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Re-resolve the placement over the **measured** per-level access
+    /// profile (`kvs::placement` module docs, "Measured re-ranking") and
+    /// re-tier every live entry accordingly. `Random` keeps its per-entry
+    /// draws (re-drawing would disturb the RNG stream); `AllSecondary`/
+    /// `AllDram` are ranking-independent, so only `TopLevels`/`Budget`
+    /// actually move entries. An empty profile keeps the static plan.
+    pub fn replan(&mut self, profile: &AccessProfile) {
+        self.plan = Plan::replan(
+            self.cfg.placement,
+            Self::level_classes(self.cfg.n_items, self.cfg.sprigs),
+            profile,
+        );
+        if !matches!(
+            self.cfg.placement,
+            PlacementPolicy::TopLevels { .. } | PlacementPolicy::Budget { .. }
+        ) {
+            return;
+        }
+        let mut free = vec![false; self.nodes.len()];
+        for &id in &self.free_nodes {
+            free[id as usize] = true;
+        }
+        for (id, node) in self.nodes.iter_mut().enumerate() {
+            if free[id] {
+                continue; // freed slots stay out of the DRAM accounting
+            }
+            node.in_dram = self.plan.in_dram(Self::level_class(node.depth as u32));
         }
     }
 
@@ -320,11 +381,11 @@ impl TreeKv {
         let mut width = sprigs.max(1) as u64;
         while remaining > 0 && classes.len() < 64 {
             let count = width.min(remaining);
-            classes.push(StructClass {
-                name: "index-level",
-                bytes: count * 64,
-                hotness: count as f64 / width as f64,
-            });
+            classes.push(StructClass::new(
+                "index-level",
+                count * 64,
+                count as f64 / width as f64,
+            ));
             remaining -= count;
             width = width.saturating_mul(2);
         }
@@ -336,8 +397,12 @@ impl TreeKv {
             PlacementPolicy::AllSecondary => false,
             PlacementPolicy::AllDram => true,
             PlacementPolicy::Random { dram_frac } => rng.chance(dram_frac),
-            PlacementPolicy::TopLevels { k } => depth < k,
-            PlacementPolicy::Budget { .. } => depth < self.dram_levels,
+            // Prefix policies follow the plan's (possibly measured) level
+            // ranking — for the static resolution this is exactly the old
+            // `depth < k` / `depth < dram_levels` rule.
+            PlacementPolicy::TopLevels { .. } | PlacementPolicy::Budget { .. } => {
+                self.plan.in_dram(Self::level_class(depth))
+            }
         }
     }
 
@@ -359,6 +424,7 @@ impl TreeKv {
             block,
             vsize,
             in_dram,
+            depth: depth.min(u16::MAX as u32) as u16,
         };
         let id = match self.free_nodes.pop() {
             Some(id) => {
@@ -705,13 +771,23 @@ impl super::ModelCosts for TreeKv {
         let dram_hops = (hops - sec_hops).max(0.0);
         let t_mem = self.cfg.t_node.as_us();
         let vbytes = self.cfg.value_size.mean().max(64.0);
-        // The leaf attach/unlink access happens at the deepest level: it is
-        // DRAM-resident only when the whole descent is.
-        let (leaf_sec, leaf_dram) = if sec_hops > 0.0 {
-            (1.0, 0.0)
-        } else {
-            (0.0, 1.0)
+        // The leaf attach/unlink access happens at the deepest level of its
+        // sprig: under the prefix policies it is DRAM-resident only when
+        // the whole descent is. Under per-entry `Random` the leaf is DRAM
+        // with the entry-granular capacity fraction — the former binary
+        // split (always secondary once any hop was) drifted the
+        // write/delete snapshots by up to a full hop at high `dram_frac`.
+        let leaf_dram = match self.cfg.placement {
+            PlacementPolicy::Random { .. } => self.dram_entry_fraction(),
+            _ => {
+                if sec_hops > 0.0 {
+                    0.0
+                } else {
+                    1.0
+                }
+            }
         };
+        let leaf_sec = 1.0 - leaf_dram;
         match kind {
             OpKind::Read => {
                 KindCost::point(sec_hops, 1.0, vbytes, t_mem, IO_READ_PRE, IO_READ_POST)
@@ -803,11 +879,7 @@ impl Service for TreeKv {
                 }
                 *compute_done = false;
                 let n = self.nodes[*node as usize];
-                let step = Step::MemAccess(if n.in_dram {
-                    Tier::Dram
-                } else {
-                    Tier::Secondary
-                });
+                let step = self.entry_access(*node);
                 if *digest == n.digest {
                     self.stats.hits += 1;
                     let rmw = *kind == OpKind::Rmw;
@@ -932,9 +1004,8 @@ impl Service for TreeKv {
                     let (d, nb, vs, par, dep, lock) =
                         (*digest, *new_block, *vsize, *parent, *depth, *locked);
                     let id = self.attach_new(d, nb, vs, par, dep, rng);
-                    let tier = self.tier_of(id);
                     *op = TreeOp::Unlock { lock };
-                    return Step::MemAccess(tier);
+                    return self.entry_access(id);
                 }
                 if !*compute_done {
                     *compute_done = true;
@@ -955,11 +1026,7 @@ impl Service for TreeKv {
                     *depth += 1;
                     *node = if *digest < n.digest { n.left } else { n.right };
                 }
-                Step::MemAccess(if n.in_dram {
-                    Tier::Dram
-                } else {
-                    Tier::Secondary
-                })
+                self.entry_access(idx as u32)
             }
             TreeOp::DeleteDescend {
                 digest,
@@ -995,11 +1062,7 @@ impl Service for TreeKv {
                 *compute_done = false;
                 let idx = *node as usize;
                 let n = self.nodes[idx];
-                let step = Step::MemAccess(if n.in_dram {
-                    Tier::Dram
-                } else {
-                    Tier::Secondary
-                });
+                let step = self.entry_access(idx as u32);
                 if *digest == n.digest {
                     if n.left != NIL && n.right != NIL {
                         // Two children: splice in the successor.
@@ -1042,12 +1105,9 @@ impl Service for TreeKv {
                     return Step::Compute(self.cfg.t_node);
                 }
                 *compute_done = false;
-                let n = self.nodes[*cur as usize];
-                let step = Step::MemAccess(if n.in_dram {
-                    Tier::Dram
-                } else {
-                    Tier::Secondary
-                });
+                let id = *cur;
+                let n = self.nodes[id as usize];
+                let step = self.entry_access(id);
                 if n.left != NIL {
                     *parent = *cur;
                     *cur = n.left;
@@ -1089,7 +1149,7 @@ impl Service for TreeKv {
                     }
                     *compute_done = false;
                     walk.pop();
-                    return Step::MemAccess(self.tier_of(id));
+                    return self.entry_access(id);
                 }
                 if todo.is_empty() {
                     *op = TreeOp::Finished;
@@ -1448,7 +1508,7 @@ mod tests {
             },
             &mut rng,
         );
-        assert_eq!(kv.dram_levels, 1);
+        assert_eq!(kv.plan().dram_classes(), 1);
         assert_eq!(kv.dram_bytes(), 16 * 64);
         // DRAM bytes are monotone in the budget knob and never overshoot.
         let mut prev = 0u64;
@@ -1550,6 +1610,85 @@ mod tests {
             read.m,
             read.m_dram
         );
+    }
+
+    #[test]
+    fn random_snapshot_splits_leaf_by_entry_fraction() {
+        // Satellite bugfix: under per-entry `Random` placement the
+        // write/delete snapshots pinned the leaf attach/unlink access to
+        // the secondary side whenever any descent hop was secondary; it
+        // must split by the entry-granular DRAM fraction instead.
+        use super::super::ModelCosts;
+        for frac in [0.3, 0.7] {
+            let mut rng = Rng::new(40);
+            let kv = TreeKv::new(
+                TreeKvConfig {
+                    placement: PlacementPolicy::Random { dram_frac: frac },
+                    ..small_cfg()
+                },
+                &mut rng,
+            );
+            let f = kv.dram_entry_fraction();
+            let r = kv.model_params(OpKind::Read);
+            let w = kv.model_params(OpKind::Write);
+            // The write's extra (leaf) access beyond the read's descent:
+            // secondary with probability 1 - f (was always 1.0).
+            let leaf_sec = w.m - r.m;
+            let leaf_dram = w.m_dram - r.m_dram;
+            assert!(
+                (leaf_sec - (1.0 - f)).abs() < 0.02,
+                "frac {frac}: leaf_sec {leaf_sec} vs {}",
+                1.0 - f
+            );
+            assert!((leaf_dram - f).abs() < 0.02, "frac {frac}: {leaf_dram}");
+            // The hop moved tiers, it did not vanish.
+            assert!(((w.m + w.m_dram) - (r.m + r.m_dram) - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn replan_keeps_the_hot_level_prefix_static() {
+        // Tree levels are the canonical case where the static prior is
+        // right where it matters: every descent passes the top levels, so
+        // the measured accesses-per-byte ranking keeps the *full* levels
+        // in depth order and a small budget places the same top prefix.
+        // (Only the last, partially-filled level may legitimately move —
+        // it is a small class still sitting on most descent paths, so its
+        // density can exceed its full predecessor's.)
+        let mut rng = Rng::new(41);
+        let mut kv = TreeKv::new(
+            TreeKvConfig {
+                placement: PlacementPolicy::Budget { dram_bytes: 16 * 64 },
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        let bytes0 = kv.dram_bytes();
+        for key in 0..500u64 {
+            let op = kv.op_get(key);
+            drive(&mut kv, op, &mut rng);
+        }
+        let profile = kv.profile.clone();
+        assert!(!profile.is_empty(), "reads must have populated the profile");
+        kv.replan(&profile);
+        // The hottest classes stay the top levels in depth order (full
+        // levels have strictly decreasing accesses-per-byte: reach
+        // decreases while bytes double).
+        assert_eq!(
+            &kv.plan().ranking()[..4],
+            &[0, 1, 2, 3],
+            "the hot prefix must stay in static depth order: {:?}",
+            kv.plan().ranking()
+        );
+        assert_eq!(
+            kv.dram_bytes(),
+            bytes0,
+            "the small budget places the same top level after replanning"
+        );
+        // Deterministic: replaying the same profile reproduces the plan.
+        let rank0 = kv.plan().ranking().to_vec();
+        kv.replan(&profile);
+        assert_eq!(kv.plan().ranking(), rank0.as_slice());
     }
 
     #[test]

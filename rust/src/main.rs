@@ -7,7 +7,7 @@
 //!
 //! Experiments: fig3 fig10 fig11micro fig11kvs fig12 fig14 fig15 fig16
 //!              fig17 fig18 table6 val1404 ycsb ssdscale modelcheck
-//!              placement
+//!              placement planner
 //! (The offline image has no argument-parsing crate; parsing is by hand.)
 //!
 //! `modelcheck` validates the Θ_scan-extended analytic model against the
@@ -16,13 +16,18 @@
 //! drifts outside the documented tolerance — CI gates on it. `placement`
 //! sweeps the DRAM-budget axis (`kvs::placement`) and exits non-zero when
 //! throughput or DRAM-byte accounting is non-monotone in the budget or the
-//! split-hop model drifts outside the same bands.
+//! split-hop model drifts outside the same bands. `planner` runs the
+//! two-phase profile → replan → measure path and exits non-zero when the
+//! measured-ranking placement loses more than the documented slack against
+//! the static prior at equal DRAM budget, when no discriminator workload
+//! (lsmkv-E / cachekv-A) actually re-ranks, or when the replanned model
+//! drifts outside the modelcheck bands.
 
 use cxlkvs::coordinator::experiments::{self, ModelBackend};
 
 const EXPERIMENTS: &[&str] = &[
     "fig3", "fig10", "fig11micro", "fig11kvs", "fig12", "fig14", "fig15", "fig16", "fig17",
-    "fig18", "table6", "val1404", "ycsb", "ssdscale", "modelcheck", "placement",
+    "fig18", "table6", "val1404", "ycsb", "ssdscale", "modelcheck", "placement", "planner",
 ];
 
 fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
@@ -63,6 +68,18 @@ fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
                 eprintln!(
                     "placement: a DRAM-budget gate failed (non-monotone throughput \
                      or bytes, or model drift — see the GATE FAILED notes)"
+                );
+                std::process::exit(1);
+            }
+        }
+        "planner" => {
+            let (r, ok) = experiments::planner(fast);
+            r.print();
+            if !ok {
+                eprintln!(
+                    "planner: a measured-placement gate failed (measured worse than \
+                     static beyond the slack, no discriminator re-rank, or replanned \
+                     model drift — see the GATE FAILED notes)"
                 );
                 std::process::exit(1);
             }

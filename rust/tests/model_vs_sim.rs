@@ -19,7 +19,9 @@ use cxlkvs::coordinator::experiments::{model_norm_err, modelcheck_tolerance, sys
 use cxlkvs::coordinator::runner::{
     parallel_map, ycsb_cache_cfg, ycsb_lsm_cfg, ycsb_tree_cfg, SweepCfg,
 };
-use cxlkvs::kvs::{model_mix, CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, TreeKv, TreeKvConfig};
+use cxlkvs::kvs::{
+    model_mix, CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, PlacementPolicy, TreeKv, TreeKvConfig,
+};
 use cxlkvs::model::{theta_mix_recip, ExtParams, KindCost};
 use cxlkvs::sim::{Dur, Machine, MachineConfig, MemConfig, Rng, RunStats};
 use cxlkvs::workload::YcsbWorkload;
@@ -241,4 +243,64 @@ fn mix_fractions_follow_the_preset_weights() {
         .expect("scan fraction present");
     assert!(scan.1.s >= 1.0, "scan kind must batch IOs: s={}", scan.1.s);
     assert!(scan.1.m > 10.0, "scan kind walks the index: m={}", scan.1.m);
+}
+
+#[test]
+fn treekv_random_placement_stays_within_the_point_band() {
+    // Satellite bugfix pin: per-entry `Random { dram_frac }` placement must
+    // be modeled inside the same C band as every other placement. The
+    // snapshot splits `m`/`m_dram` by the measured per-entry fraction —
+    // including the write/delete leaf access, which the former binary rule
+    // pinned to the secondary side whenever any descent hop was secondary.
+    let sys = sys_params();
+    let ext = SweepCfg::default().ext_params();
+    let tol = modelcheck_tolerance(YcsbWorkload::C);
+    for frac in [0.3, 0.7] {
+        let run = |l_us: f64| {
+            let mut rng = Rng::new(STORE_SEED ^ 0xa3);
+            let kv = TreeKv::new(
+                TreeKvConfig {
+                    n_items: 30_000,
+                    sprigs: 32,
+                    placement: PlacementPolicy::Random { dram_frac: frac },
+                    ..ycsb_tree_cfg(YcsbWorkload::C)
+                },
+                &mut rng,
+            )
+            .with_background(1, 32);
+            let mut m = Machine::new(machine_cfg(l_us), kv);
+            let st = m.run(Dur::ms(2.0), Dur::ms(6.0));
+            let frac_measured = m.service.dram_entry_fraction();
+            (st, model_mix(&m.service, &YcsbWorkload::C.weights()), frac_measured)
+        };
+        let (dram_st, mix, f_measured) = run(GRID[0]);
+        assert!(
+            (f_measured - frac).abs() < 0.02,
+            "entry fraction {f_measured} far from requested {frac}"
+        );
+        // The snapshot's hop split tracks the per-entry fraction: the
+        // dominant (read) kind splits its descent ~ (1-f) secondary.
+        let read = mix
+            .iter()
+            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .expect("C mix has a read kind");
+        let sec_share = read.1.m / (read.1.m + read.1.m_dram);
+        assert!(
+            (sec_share - (1.0 - f_measured)).abs() < 0.05,
+            "frac {frac}: secondary hop share {sec_share} vs {}",
+            1.0 - f_measured
+        );
+        for &l in &GRID[1..] {
+            let (st, _, _) = run(l);
+            let sim_norm = st.ops_per_sec / dram_st.ops_per_sec;
+            let (model_norm, err) = model_norm_err(&mix, GRID[0], l, sim_norm, &ext, &sys);
+            assert!(
+                err.abs() <= tol,
+                "Random{{{frac}}} L={l}: model {model_norm:.3} vs sim {sim_norm:.3} \
+                 (err {:+.1}% beyond the {:.0}% C band)",
+                100.0 * err,
+                100.0 * tol
+            );
+        }
+    }
 }

@@ -199,7 +199,12 @@ fn all_secondary_is_bit_identical_to_the_default_config() {
         );
         let mut m = Machine::new(machine(2.0), kv);
         let st = m.run(Dur::ms(2.0), Dur::ms(6.0));
-        assert_eq!(m.service.dram_bytes(), 0);
+        // AllSecondary places nothing — the only reported DRAM is the
+        // pinned memtable residual (nonzero by design since the honest
+        // accounting fix; the policy side is zero).
+        assert_eq!(m.service.plan().policy_dram_bytes(), 0);
+        assert_eq!(m.service.dram_bytes(), m.service.residual_dram_bytes());
+        assert!(m.service.residual_dram_bytes() > 0);
         summarize(&st, &m.service.stats)
     };
     assert_eq!(
@@ -224,7 +229,11 @@ fn all_secondary_is_bit_identical_to_the_default_config() {
         );
         let mut m = Machine::new(machine(2.0), kv);
         let st = m.run(Dur::ms(2.0), Dur::ms(6.0));
-        assert_eq!(m.service.dram_bytes(), 0);
+        // Policy side zero; the pinned directory + SOC index residual is
+        // reported (honest accounting fix).
+        assert_eq!(m.service.plan().policy_dram_bytes(), 0);
+        assert_eq!(m.service.dram_bytes(), m.service.residual_dram_bytes());
+        assert!(m.service.residual_dram_bytes() > 0);
         summarize(&st, &m.service.stats)
     };
     assert_eq!(

@@ -1,0 +1,266 @@
+//! Measured access-frequency planner invariants (`kvs::placement`'s
+//! `AccessProfile` + `Plan::replan` + the stores' `replan`):
+//!
+//! 1. **Profile/DriveCounts consistency**: every `MemAccess` a directed op
+//!    emits is tagged with its structure class, so the per-tier profile
+//!    totals equal the `drive_op_tiers` DRAM/secondary splits in all three
+//!    stores — a missing class tag at any access site breaks the equality.
+//! 2. **Replan determinism + static fallback**: the same profile always
+//!    produces the same plan; an empty profile reproduces the static
+//!    ranking.
+//! 3. **Equal-budget throughput**: at equal DRAM budget the measured plan's
+//!    simulated throughput is never worse than the static plan's beyond
+//!    the documented `PLANNER_SLACK`, and coincident rankings yield
+//!    bit-identical runs (same seeds, same plan ⇒ same simulation).
+
+use cxlkvs::coordinator::experiments::PLANNER_SLACK;
+use cxlkvs::coordinator::runner::{
+    run_store_ycsb_profiled, store_offload_bytes, StoreKind, SweepCfg,
+};
+use cxlkvs::kvs::{
+    drive_op_tiers, AccessProfile, CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, Plan,
+    PlacementPolicy, TreeKv, TreeKvConfig,
+};
+use cxlkvs::sim::{Dur, Rng, Tier};
+use cxlkvs::workload::YcsbWorkload;
+
+/// Split a profile's access totals by the plan's per-class tier.
+fn tier_split(plan: &Plan, profile: &AccessProfile) -> (u64, u64) {
+    let (mut dram, mut sec) = (0u64, 0u64);
+    // Class ids are small (≤ 64 tree levels; ≤ 4 for the cache stores);
+    // out-of-range ids are secondary by definition, matching the stores.
+    for c in 0..64 {
+        match plan.tier(c) {
+            Tier::Dram => dram += profile.accesses(c),
+            Tier::Secondary => sec += profile.accesses(c),
+        }
+    }
+    (dram, sec)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Per-class profile totals == drive_op_tiers splits (all sites tagged).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn treekv_profile_matches_drive_counts_per_tier() {
+    // A budget pinning the top level: the plan's class tiers and the
+    // per-entry bits agree (entries are placed from the same plan), so the
+    // class-split profile must reproduce the DriveCounts split exactly.
+    let mut rng = Rng::new(0x91a1);
+    let mut kv = TreeKv::new(
+        TreeKvConfig {
+            n_items: 20_000,
+            sprigs: 16,
+            placement: PlacementPolicy::Budget { dram_bytes: 16 * 64 },
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let (mut dram, mut sec) = (0u32, 0u32);
+    let mut tally = |c: cxlkvs::kvs::DriveCounts| {
+        dram += c.dram;
+        sec += c.secondary;
+    };
+    let op = kv.op_get(123);
+    tally(drive_op_tiers(&mut kv, op, &mut rng));
+    let op = kv.op_write(5, 200);
+    tally(drive_op_tiers(&mut kv, op, &mut rng));
+    let op = kv.op_rmw(9, 100);
+    tally(drive_op_tiers(&mut kv, op, &mut rng));
+    let op = kv.op_delete(77);
+    tally(drive_op_tiers(&mut kv, op, &mut rng));
+    let op = kv.op_scan(7, 20);
+    tally(drive_op_tiers(&mut kv, op, &mut rng));
+    assert!(dram > 0, "the pinned top level must absorb accesses");
+    assert!(sec > 0);
+    let (p_dram, p_sec) = tier_split(kv.plan(), &kv.profile);
+    assert_eq!(
+        (p_dram, p_sec),
+        (dram as u64, sec as u64),
+        "every treekv access site must tag its level class"
+    );
+    assert_eq!(kv.profile.total(), (dram + sec) as u64);
+}
+
+#[test]
+fn lsmkv_profile_matches_drive_counts_per_tier() {
+    // Budget covering exactly the cache handles: chains inline, restarts +
+    // block bytes secondary, memtable pinned (DRAM). All four classes see
+    // traffic across the directed op set.
+    let cfg = LsmKvConfig {
+        n_items: 100_000,
+        cache_blocks: 1024,
+        shards: 16,
+        buckets_per_shard: 64,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(0x91a2);
+    let probe = LsmKv::new(cfg.clone(), &mut rng);
+    let handles = probe.plan().classes()[0].bytes;
+    drop(probe);
+    let mut rng = Rng::new(0x91a2);
+    let mut kv = LsmKv::new(
+        LsmKvConfig {
+            placement: PlacementPolicy::Budget { dram_bytes: handles },
+            ..cfg
+        },
+        &mut rng,
+    );
+    let (mut dram, mut sec) = (0u32, 0u32);
+    let ops: Vec<cxlkvs::kvs::lsmkv::LsmOp> = vec![
+        kv.op_get(777),
+        kv.op_put(42),
+        kv.op_rmw(4242),
+        kv.op_delete(99),
+        kv.op_scan(100, 16),
+    ];
+    for op in ops {
+        let c = drive_op_tiers(&mut kv, op, &mut rng);
+        dram += c.dram;
+        sec += c.secondary;
+    }
+    assert!(dram > 0 && sec > 0, "both tiers must see traffic: {dram}/{sec}");
+    let (p_dram, p_sec) = tier_split(kv.plan(), &kv.profile);
+    assert_eq!(
+        (p_dram, p_sec),
+        (dram as u64, sec as u64),
+        "every lsmkv access site (memtable probes included) must tag its class"
+    );
+}
+
+#[test]
+fn cachekv_profile_matches_drive_counts_per_tier() {
+    // Budget covering exactly the hash chains: chains inline, LRU lists
+    // secondary, directory + SOC index pinned (DRAM).
+    let cfg = CacheKvConfig {
+        n_items: 20_000,
+        t1_items: 2_400,
+        t2_items: 11_000,
+        buckets: 4_096,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(0x91a3);
+    let probe = CacheKv::new(cfg.clone(), &mut rng);
+    let chains = probe.plan().classes()[0].bytes;
+    drop(probe);
+    let mut rng = Rng::new(0x91a3);
+    let mut kv = CacheKv::new(
+        CacheKvConfig {
+            placement: PlacementPolicy::Budget { dram_bytes: chains },
+            ..cfg
+        },
+        &mut rng,
+    );
+    let (mut dram, mut sec) = (0u32, 0u32);
+    let ops: Vec<cxlkvs::kvs::cachekv::CacheOp> = vec![
+        kv.op_get(777),
+        kv.op_put(31),
+        kv.op_rmw(555),
+        kv.op_delete(777),
+        kv.op_scan(),
+    ];
+    for op in ops {
+        let c = drive_op_tiers(&mut kv, op, &mut rng);
+        dram += c.dram;
+        sec += c.secondary;
+    }
+    assert!(dram > 0, "bucket reads + inline chains: {dram}/{sec}");
+    let (p_dram, p_sec) = tier_split(kv.plan(), &kv.profile);
+    assert_eq!(
+        (p_dram, p_sec),
+        (dram as u64, sec as u64),
+        "every cachekv access site (directory reads included) must tag its class"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. Replan determinism and static fallback, through the store surface.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn store_replan_is_deterministic_and_empty_profile_is_static() {
+    // lsmkv: churn a scan-only profile, replan twice — identical plans.
+    let cfg = LsmKvConfig {
+        n_items: 100_000,
+        cache_blocks: 1024,
+        shards: 16,
+        buckets_per_shard: 64,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(0x91a4);
+    let mut kv = LsmKv::new(cfg, &mut rng);
+    for start in (0..4_000u64).step_by(83) {
+        let op = kv.op_scan(start, 12);
+        drive_op_tiers(&mut kv, op, &mut rng);
+    }
+    let profile = kv.profile.clone();
+    assert!(!profile.is_empty());
+    kv.replan(&profile);
+    let rank1 = kv.plan().ranking().to_vec();
+    let bytes1 = kv.dram_bytes();
+    kv.replan(&profile);
+    assert_eq!(kv.plan().ranking(), rank1.as_slice());
+    assert_eq!(kv.dram_bytes(), bytes1);
+    // Empty profile: the static ranking, unchanged accounting.
+    let static_rank: Vec<usize> = vec![0, 1, 2];
+    kv.replan(&AccessProfile::default());
+    assert_eq!(kv.plan().ranking(), static_rank.as_slice());
+}
+
+// ---------------------------------------------------------------------------
+// 3. Equal-budget: measured plan never worse than static beyond the slack.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn measured_plan_not_worse_than_static_at_equal_budget() {
+    // The preset grid's discriminators plus the null case, measured past
+    // the full-offload knee (8 µs) where placement genuinely moves
+    // throughput: cachekv-A (LRU lists overtake the chains), lsmkv-E
+    // (restart arrays are never scanned), treekv-C (the static prior is
+    // provably right — the measured ranking coincides and the arms are
+    // bit-identical).
+    let points = [
+        (StoreKind::Cache, YcsbWorkload::A),
+        (StoreKind::Lsm, YcsbWorkload::E),
+        (StoreKind::Tree, YcsbWorkload::C),
+    ];
+    for (kind, wl) in points {
+        let total = store_offload_bytes(kind, wl, SweepCfg::default().seed);
+        let sweep = SweepCfg {
+            l_mem: Dur::us(8.0),
+            warmup: Dur::ms(1.0),
+            window: Dur::ms(4.0),
+            thread_candidates: vec![32],
+            placement: PlacementPolicy::Budget {
+                dram_bytes: total / 2,
+            },
+            ..Default::default()
+        };
+        let run = run_store_ycsb_profiled(kind, wl, &sweep, 32);
+        let s_ops = run.static_arm.stats.ops_per_sec;
+        let m_ops = run.measured_arm.stats.ops_per_sec;
+        assert!(
+            m_ops >= s_ops * (1.0 - PLANNER_SLACK),
+            "{}/{}: measured placement lost more than the slack: {s_ops} -> {m_ops}",
+            kind.name(),
+            wl.tag()
+        );
+        if !run.rank_differs {
+            // Same ranking ⇒ same plan ⇒ same seeds drive the identical
+            // simulation: the comparison is exact, not within noise.
+            assert_eq!(
+                run.measured_arm.stats.ops, run.static_arm.stats.ops,
+                "{}/{}: coincident rankings must be bit-identical",
+                kind.name(),
+                wl.tag()
+            );
+        }
+        // (No identity-ranking assertion for treekv here: the last,
+        // partially-filled level class may legitimately out-rank its full
+        // predecessor depending on the config's n_items/sprigs remainder —
+        // the stable claim is the full-level prefix order, pinned by
+        // `replan_keeps_the_hot_level_prefix_static` in treekv's unit
+        // tests; either way gate 1 above still applies.)
+    }
+}
