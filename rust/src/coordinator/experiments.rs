@@ -9,15 +9,16 @@
 use super::report::{f1, f2, f3, Report};
 use super::runner::{
     best_threads, best_threads_by, parallel_map, run_cache_with, run_lsm_with, run_microbench,
-    run_store, run_store_ycsb_placed, run_store_ycsb_profiled, run_store_ycsb_snap, run_tree_with,
-    store_offload_bytes, MeasuredParams, StoreKind, SweepCfg,
+    run_store, run_store_ycsb_adaptive, run_store_ycsb_placed, run_store_ycsb_profiled,
+    run_store_ycsb_snap, run_tree_with, store_offload_bytes, AdaptiveCfg, MeasuredParams,
+    StoreKind, SweepCfg,
 };
 use crate::kvs::{model_mix, CacheKvConfig, LsmKvConfig, PlacementPolicy, TreeKv, TreeKvConfig};
 use crate::microbench::MicrobenchConfig;
 use crate::model::{self, CprScenario, ExtParams, KindCost, OpParams, SysParams};
 use crate::runtime::{BaseIn, ExtIn, ModelEvaluator};
 use crate::sim::Dur;
-use crate::workload::{KeyDist, OpMix, ScanLen, ValueSize, YcsbWorkload};
+use crate::workload::{KeyDist, OpMix, PhasedWorkload, ScanLen, ValueSize, YcsbWorkload};
 
 /// Model evaluation backend: PJRT artifact (preferred) or native fallback.
 pub enum ModelBackend {
@@ -1758,6 +1759,239 @@ pub fn planner(fast: bool) -> (Report, bool) {
         }
     }
     r.write_csv("planner").ok();
+    (r, all_ok)
+}
+
+// ---------------------------------------------------------------------------
+// adaptive — online replanning under drifting (phased) workloads.
+// ---------------------------------------------------------------------------
+
+/// Documented slack for the adaptive gate: after the first workload turn
+/// the online arm must score at least `1 - ADAPTIVE_SLACK` of the **best**
+/// frozen arm (static or offline-replanned). Where the online planner never
+/// fires the arms are bit-identical and the ratio is exactly 1; once a
+/// migration fires the arms' event streams diverge, so genuinely-different
+/// runs carry short-window noise the slack absorbs. A planner that
+/// thrashes — or mis-times its migrations into measured windows — blows
+/// far past it, because every migration is charged as simulated work.
+pub const ADAPTIVE_SLACK: f64 = 0.10;
+
+/// Drifting-workload experiment: store × phase scenario × DRAM budget ×
+/// L_mem through [`run_store_ycsb_adaptive`], racing three arms from the
+/// same seed:
+///
+/// - **static**: the initial plan, frozen for the whole schedule;
+/// - **offline**: one replan from the whole-schedule aggregate profile
+///   (the hindsight placement), then frozen;
+/// - **online**: decaying-window profile + hysteresis replanning, with
+///   every migration charged (`Machine::charge_migration`).
+///
+/// Two gates, **exit non-zero** on violation:
+///
+/// 1. on every *designed* cell the online arm's window-weighted post-turn
+///    throughput is ≥ the best frozen arm's minus [`ADAPTIVE_SLACK`];
+/// 2. the designed adapting cell — cachekv × diurnal at the one-class
+///    budget, where the night-write phase genuinely flips the
+///    LRU-vs-chains density ordering — must actually replan online
+///    (`replans ≥ 1` with lines migrated), otherwise every arm was
+///    identical and the gate validated nothing.
+///
+/// The designed cells pair each store with the scenario that stresses its
+/// own ordering: cachekv × diurnal (ordering flips → adapt), lsmkv ×
+/// scan-swing (restart-array density collapses but the freed bytes cannot
+/// admit the data blocks → hysteresis correctly declines), treekv ×
+/// hotspot-shift (level reach stays monotone → ranking is drift-stable).
+/// Full mode adds exploratory cells that report ungated.
+pub fn adaptive(fast: bool) -> (Report, bool) {
+    type Ctor = fn(Dur) -> PhasedWorkload;
+    let designed: [(StoreKind, Ctor); 3] = [
+        (StoreKind::Cache, PhasedWorkload::diurnal),
+        (StoreKind::Lsm, PhasedWorkload::scan_swing),
+        (StoreKind::Tree, PhasedWorkload::hotspot_shift),
+    ];
+    let exploratory: [(StoreKind, Ctor); 3] = [
+        (StoreKind::Cache, PhasedWorkload::zipf_drift),
+        (StoreKind::Lsm, PhasedWorkload::diurnal),
+        (StoreKind::Tree, PhasedWorkload::zipf_drift),
+    ];
+    let mut cells: Vec<(StoreKind, Ctor, bool)> =
+        designed.iter().map(|&(k, c)| (k, c, true)).collect();
+    if !fast {
+        cells.extend(exploratory.iter().map(|&(k, c)| (k, c, false)));
+    }
+    let grid: Vec<f64> = if fast { vec![2.0] } else { vec![2.0, 5.0] };
+    // Budget fractions of each store's offloadable footprint; 0.5 is the
+    // discriminator (for cachekv it fits exactly one of the two equal-byte
+    // tier-1 classes, so a replan swaps whole structures at equal cost).
+    let fracs: Vec<f64> = if fast { vec![0.5] } else { vec![0.25, 0.5] };
+    let window = if fast { Dur::ms(5.0) } else { Dur::ms(8.0) };
+    let base_seed = SweepCfg::default().seed;
+
+    let mut jobs = Vec::new();
+    for &(kind, ctor, _) in &cells {
+        let scenario = ctor(window);
+        let total = store_offload_bytes(kind, scenario.base, base_seed);
+        for &frac in &fracs {
+            let budget = (frac * total as f64) as u64;
+            for &l in &grid {
+                let scenario = scenario.clone();
+                jobs.push(move || {
+                    let sweep = SweepCfg {
+                        l_mem: Dur::us(l),
+                        thread_candidates: vec![32],
+                        placement: PlacementPolicy::Budget { dram_bytes: budget },
+                        ..Default::default()
+                    };
+                    run_store_ycsb_adaptive(kind, &scenario, &sweep, &AdaptiveCfg::default(), 32)
+                });
+            }
+        }
+    }
+    let results = parallel_map(jobs);
+
+    let mut r = Report::new(
+        "adaptive — online replanning vs frozen placements under drift",
+        &[
+            "scenario",
+            "store",
+            "dram_frac",
+            "L_mem(us)",
+            "phase",
+            "static_ops",
+            "offline_ops",
+            "online_ops",
+            "on/best",
+            "p50(us)",
+            "p99(us)",
+            "replans",
+            "lines",
+            "refill_rd",
+            "stall(us)",
+            "gate",
+        ],
+    );
+    let mut all_ok = true;
+    let mut failures: Vec<String> = Vec::new();
+    let mut discriminator_adapted = false;
+    let mut idx = 0usize;
+    for &(kind, ctor, gated) in &cells {
+        let scenario = ctor(window);
+        for &frac in &fracs {
+            for &l in &grid {
+                let run = &results[idx];
+                idx += 1;
+                let on = &run.online_arm;
+                for (i, ps) in on.phases.iter().enumerate() {
+                    let s_ops = run.static_arm.phases[i].stats.ops_per_sec;
+                    let f_ops = run.offline_arm.phases[i].stats.ops_per_sec;
+                    let o_ops = ps.stats.ops_per_sec;
+                    r.row(vec![
+                        scenario.tag.into(),
+                        kind.name().into(),
+                        f2(frac),
+                        f1(l),
+                        ps.phase.into(),
+                        format!("{s_ops:.0}"),
+                        format!("{f_ops:.0}"),
+                        format!("{o_ops:.0}"),
+                        f3(o_ops / s_ops.max(f_ops).max(1e-9)),
+                        f2(ps.stats.op_latency_p50.as_us()),
+                        f2(ps.stats.op_latency_p99.as_us()),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                }
+                let s_post = run.static_arm.ops_per_sec_from(1);
+                let f_post = run.offline_arm.ops_per_sec_from(1);
+                let o_post = on.ops_per_sec_from(1);
+                let best = s_post.max(f_post);
+                let ratio = o_post / best.max(1e-9);
+                let pass = !gated || ratio >= 1.0 - ADAPTIVE_SLACK;
+                if !pass {
+                    all_ok = false;
+                    failures.push(format!(
+                        "{}/{} frac={frac} L={l}: online lost {:.1}% > {:.0}% slack \
+                         post-turn (best frozen {best:.0} -> online {o_post:.0})",
+                        scenario.tag,
+                        kind.name(),
+                        100.0 * (1.0 - ratio),
+                        100.0 * ADAPTIVE_SLACK
+                    ));
+                }
+                if kind == StoreKind::Cache
+                    && scenario.tag == "diurnal"
+                    && on.replans >= 1
+                    && on.migrated_lines > 0
+                {
+                    discriminator_adapted = true;
+                }
+                r.row(vec![
+                    scenario.tag.into(),
+                    kind.name().into(),
+                    f2(frac),
+                    f1(l),
+                    "post-turn".into(),
+                    format!("{s_post:.0}"),
+                    format!("{f_post:.0}"),
+                    format!("{o_post:.0}"),
+                    f3(ratio),
+                    "-".into(),
+                    "-".into(),
+                    on.replans.to_string(),
+                    on.migrated_lines.to_string(),
+                    on.migration_reads.to_string(),
+                    format!("{:.1}", on.migration_stall.as_us()),
+                    if !gated {
+                        "report".into()
+                    } else if pass {
+                        "ok".into()
+                    } else {
+                        "FAIL".into()
+                    },
+                ]);
+            }
+        }
+    }
+    if !discriminator_adapted {
+        all_ok = false;
+        failures.push(
+            "the designed adapting cell (cachekv x diurnal) never replanned \
+             online (replans = 0 or nothing migrated) — the gate compared \
+             three identical arms and validated nothing"
+                .to_string(),
+        );
+    }
+    r.note("three arms per point, same seed: static (initial plan frozen),");
+    r.note("offline (one replan from the whole-schedule profile, then");
+    r.note("frozen), online (decaying EWMA profile + hysteresis margin,");
+    r.note("migrations charged as MemAccess line traffic + SSD refills via");
+    r.note("Machine::charge_migration — thrash is visible in throughput)");
+    r.note("score = window-weighted ops/s over post-turn phases (the first");
+    r.note("phase is excluded: all three arms still agree there)");
+    r.note("headline: cachekv x diurnal — night-write flips the LRU-vs-");
+    r.note("chains density ordering; online migrates inside the settle");
+    r.note("slack and holds the best frozen arm's throughput after the turn");
+    r.note("lsmkv x scan-swing: hysteresis correctly declines to act (the");
+    r.note("restart arrays' density collapses, but evicting them frees too");
+    r.note("few bytes to admit the data blocks at this budget)");
+    r.note("treekv: per-level reach stays monotone under drift, so the");
+    r.note("ranking is stable and online == static bit-for-bit");
+    r.note("exploratory cells (full mode) report ungated");
+    if failures.is_empty() {
+        r.note(format!(
+            "all adaptive gates passed (online >= best frozen - {:.0}% \
+             post-turn on designed cells; discriminator cell adapted)",
+            100.0 * ADAPTIVE_SLACK
+        ));
+    } else {
+        for f in &failures {
+            r.note(format!("GATE FAILED: {f}"));
+        }
+    }
+    r.write_csv("adaptive").ok();
     (r, all_ok)
 }
 

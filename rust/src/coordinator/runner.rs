@@ -4,12 +4,13 @@
 //! of threads"). Points run in parallel across host threads.
 
 use crate::kvs::{
-    model_mix, CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, PlacementPolicy, TreeKv, TreeKvConfig,
+    model_mix, should_replan, AccessProfile, CacheKv, CacheKvConfig, DriveCounts, LsmKv,
+    LsmKvConfig, Plan, PlacementPolicy, TreeKv, TreeKvConfig,
 };
 use crate::microbench::{Microbench, MicrobenchConfig};
 use crate::model::{ExtParams, KindCost};
 use crate::sim::{Dur, Machine, MachineConfig, MemConfig, Rng, RunStats, SsdConfig, TailProfile};
-use crate::workload::YcsbWorkload;
+use crate::workload::{PhasedWorkload, YcsbWorkload};
 
 /// Which KV store design a sweep drives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -413,6 +414,271 @@ pub fn run_store_ycsb_profiled(
                 ..ycsb_cache_cfg(wl)
             };
             two_phase!(|rng: &mut Rng| CacheKv::new(cfg.clone(), rng), |kv: CacheKv| kv)
+        }
+    }
+}
+
+/// Knobs of the online adaptive replanner (`kvs::placement` module docs,
+/// "Online replanning": decay, hysteresis, migration cost).
+#[derive(Debug, Clone)]
+pub struct AdaptiveCfg {
+    /// Replan-evaluation period: at every simulated-time epoch boundary the
+    /// profile decays and the hysteresis trigger is evaluated.
+    pub epoch: Dur,
+    /// Unmeasured grace after each workload turn before the phase's
+    /// measured window opens. The online arm adapts here, so per-phase
+    /// columns compare steady-state throughput rather than the adaptation
+    /// transient (the transient's cost still shows up as the migration
+    /// stall and in any replans that fire inside a measured window).
+    pub settle: Dur,
+    /// Hysteresis margin: replan only when the candidate plan would absorb
+    /// more than `(1 + margin)×` the incumbent's access mass. `0.0`
+    /// thrashes on any measured gain; `f64::INFINITY` never replans.
+    pub margin: f64,
+    /// Per-epoch EWMA retain fraction `decay_num / decay_den`.
+    pub decay_num: u32,
+    pub decay_den: u32,
+}
+
+impl Default for AdaptiveCfg {
+    fn default() -> Self {
+        AdaptiveCfg {
+            epoch: Dur::ms(1.0),
+            // Four epochs of grace: with retain 1/2 the stale phase's share
+            // of the profile is < 10% by the window opening, so a genuine
+            // turn's replan fires (and its migration is charged) inside the
+            // grace, not inside the measured window.
+            settle: Dur::ms(4.0),
+            // A noise flip between near-equal-density classes moves
+            // `absorbed` by their density gap — a few percent — while a
+            // genuine workload turn roughly doubles the candidate's mass;
+            // 0.25 sits between the two regimes.
+            margin: 0.25,
+            decay_num: 1,
+            decay_den: 2,
+        }
+    }
+}
+
+impl AdaptiveCfg {
+    /// The non-adaptive control: never replan, never decay — the final
+    /// cumulative profile then doubles as the offline arm's whole-schedule
+    /// aggregate.
+    fn frozen(&self) -> AdaptiveCfg {
+        AdaptiveCfg {
+            margin: f64::INFINITY,
+            decay_num: 1,
+            decay_den: 1,
+            ..self.clone()
+        }
+    }
+}
+
+/// One measured phase of an adaptive arm.
+#[derive(Debug, Clone)]
+pub struct PhaseStats {
+    pub phase: &'static str,
+    pub window: Dur,
+    pub stats: RunStats,
+}
+
+/// One arm of [`run_store_ycsb_adaptive`], with its migration bill.
+#[derive(Debug, Clone)]
+pub struct AdaptiveArm {
+    pub phases: Vec<PhaseStats>,
+    /// Times the hysteresis trigger fired.
+    pub replans: u32,
+    /// 64-byte line touches charged for migrations (dram + secondary).
+    pub migrated_lines: u64,
+    /// SSD refill reads charged for migrations.
+    pub migration_reads: u64,
+    /// Simulated time the migrations stalled every core.
+    pub migration_stall: Dur,
+    /// Final honest DRAM footprint (policy-placed + pinned residual).
+    pub dram_bytes: u64,
+}
+
+impl AdaptiveArm {
+    fn new() -> AdaptiveArm {
+        AdaptiveArm {
+            phases: Vec::new(),
+            replans: 0,
+            migrated_lines: 0,
+            migration_reads: 0,
+            migration_stall: Dur::ZERO,
+            dram_bytes: 0,
+        }
+    }
+
+    /// Window-weighted mean throughput over phases `skip..`. `skip = 1`
+    /// drops the pre-turn phase (the one the static prior was tuned for) —
+    /// the quantity the `cxlkvs run adaptive` gate scores.
+    pub fn ops_per_sec_from(&self, skip: usize) -> f64 {
+        let (num, den) = self
+            .phases
+            .iter()
+            .skip(skip)
+            .fold((0.0, 0u64), |(n, d), p| {
+                (n + p.stats.ops_per_sec * p.window.0 as f64, d + p.window.0)
+            });
+        if den == 0 {
+            0.0
+        } else {
+            num / den as f64
+        }
+    }
+}
+
+/// Result of [`run_store_ycsb_adaptive`]: one drifting schedule over the
+/// same seeds under three placement regimes.
+pub struct AdaptiveRun {
+    /// Static prior placement, never replanned (doubles as the offline
+    /// arm's profiling run).
+    pub static_arm: AdaptiveArm,
+    /// One hindsight replan over the whole schedule's aggregate profile,
+    /// then fixed for the run.
+    pub offline_arm: AdaptiveArm,
+    /// Online: per-epoch EWMA decay + hysteresis replanning, migrations
+    /// charged as simulated work.
+    pub online_arm: AdaptiveArm,
+}
+
+/// Run one store through a phased (drifting) schedule three ways — static,
+/// offline-replanned, online-adaptive — on identical seeds and machine
+/// configs (`kvs::placement` module docs, "Online replanning").
+///
+/// Per phase: swap the workload (`set_workload` — no RNG draws), run an
+/// unmeasured settle grace, then measure `phase.window` via
+/// `Machine::start_window`/`window_stats`. Throughout, at every
+/// `acfg.epoch` boundary, the store's [`AccessProfile`] decays by
+/// `decay_num/decay_den` and a candidate replan is evaluated against the
+/// hysteresis margin; a fired replan migrates entries via the store's
+/// `replan_migrate` and charges the traffic to the machine clock via
+/// `charge_migration` — thrash is visible in measured throughput. With
+/// `margin = ∞` the decay/candidate bookkeeping is pure observation (no
+/// simulated effect), which is why the static arm is bit-identical to an
+/// online arm that never triggers — `tests/adaptive.rs` pins this.
+pub fn run_store_ycsb_adaptive(
+    kind: StoreKind,
+    scenario: &PhasedWorkload,
+    sweep: &SweepCfg,
+    acfg: &AdaptiveCfg,
+    threads: usize,
+) -> AdaptiveRun {
+    assert!(acfg.epoch > Dur::ZERO, "epoch must be positive");
+    assert!(!scenario.phases.is_empty(), "a schedule needs phases");
+    let mcfg = sweep.machine(threads);
+    let seed = sweep.seed ^ 0xfeed ^ scenario.tag.as_bytes()[0] as u64;
+    macro_rules! run_arm {
+        ($new:expr, $bg:expr, $io:expr, $cfg:expr, $preplan:expr) => {{
+            let a: &AdaptiveCfg = $cfg;
+            let mut rng = Rng::new(seed);
+            let mut kv = $bg($new(&mut rng));
+            if let Some(p) = $preplan {
+                kv.replan(p);
+            }
+            let mut m = Machine::new(mcfg.clone(), kv);
+            let mut arm = AdaptiveArm::new();
+            for (i, phase) in scenario.phases.iter().enumerate() {
+                m.service.set_workload(Some(phase.ops), phase.key_dist);
+                let settle = if i == 0 { sweep.warmup + a.settle } else { a.settle };
+                for measured in [false, true] {
+                    let span = if measured { phase.window } else { settle };
+                    if measured {
+                        m.start_window(span);
+                    }
+                    let mut left = span;
+                    while left > Dur::ZERO {
+                        let step = if left < a.epoch { left } else { a.epoch };
+                        m.run_until(m.now() + step);
+                        left -= step;
+                        // Epoch boundary: age the profile, evaluate the
+                        // hysteresis trigger (pure observation unless it
+                        // fires).
+                        m.service.profile.decay(a.decay_num, a.decay_den);
+                        let profile = m.service.profile.clone();
+                        let candidate = Plan::replan(
+                            m.service.cfg.placement,
+                            m.service.plan().classes().to_vec(),
+                            &profile,
+                        );
+                        if should_replan(m.service.plan(), &candidate, &profile, a.margin) {
+                            let mig = m.service.replan_migrate(&profile);
+                            arm.replans += 1;
+                            if mig != DriveCounts::default() {
+                                let io_bytes = $io(&m.service);
+                                let stall = m.charge_migration(
+                                    mig.dram,
+                                    mig.secondary,
+                                    mig.reads,
+                                    io_bytes,
+                                );
+                                arm.migrated_lines += mig.dram as u64 + mig.secondary as u64;
+                                arm.migration_reads += mig.reads as u64;
+                                arm.migration_stall += stall;
+                            }
+                        }
+                    }
+                    if measured {
+                        arm.phases.push(PhaseStats {
+                            phase: phase.name,
+                            window: span,
+                            stats: m.window_stats(span),
+                        });
+                    }
+                }
+            }
+            arm.dram_bytes = m.service.dram_bytes();
+            (arm, m.service.profile.clone())
+        }};
+    }
+    macro_rules! arms {
+        ($new:expr, $bg:expr, $io:expr) => {{
+            let frozen = acfg.frozen();
+            let (static_arm, aggregate) = run_arm!($new, $bg, $io, &frozen, None::<&AccessProfile>);
+            let (offline_arm, _) = run_arm!($new, $bg, $io, &frozen, Some(&aggregate));
+            let (online_arm, _) = run_arm!($new, $bg, $io, acfg, None::<&AccessProfile>);
+            AdaptiveRun {
+                static_arm,
+                offline_arm,
+                online_arm,
+            }
+        }};
+    }
+    match kind {
+        StoreKind::Tree => {
+            let cfg = TreeKvConfig {
+                placement: sweep.placement,
+                ..ycsb_tree_cfg(scenario.base)
+            };
+            let cores = mcfg.cores;
+            arms!(
+                |rng: &mut Rng| TreeKv::new(cfg.clone(), rng),
+                |kv: TreeKv| kv.with_background(cores, threads),
+                |_kv: &TreeKv| 0u32
+            )
+        }
+        StoreKind::Lsm => {
+            let cfg = LsmKvConfig {
+                placement: sweep.placement,
+                ..ycsb_lsm_cfg(scenario.base)
+            };
+            arms!(
+                |rng: &mut Rng| LsmKv::new(cfg.clone(), rng),
+                |kv: LsmKv| kv.with_background(threads),
+                |kv: &LsmKv| kv.block_bytes()
+            )
+        }
+        StoreKind::Cache => {
+            let cfg = CacheKvConfig {
+                placement: sweep.placement,
+                ..ycsb_cache_cfg(scenario.base)
+            };
+            arms!(
+                |rng: &mut Rng| CacheKv::new(cfg.clone(), rng),
+                |kv: CacheKv| kv,
+                |_kv: &CacheKv| 0u32
+            )
         }
     }
 }

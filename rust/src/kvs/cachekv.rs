@@ -28,7 +28,7 @@
 //!   of compute; it is counted in `stats.scans` so workload-E sweeps can
 //!   report the store as degenerate rather than silently misbehaving.
 
-use super::common::{fnv1a, KvStats, NIL};
+use super::common::{fnv1a, DriveCounts, KvStats, NIL};
 use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step};
@@ -444,6 +444,39 @@ impl CacheKv {
     /// snapshots split `m`/`m_dram` from the replanned plan.
     pub fn replan(&mut self, profile: &AccessProfile) {
         self.plan = Plan::replan(self.cfg.placement, Self::placement_classes(&self.cfg), profile);
+    }
+
+    /// Swap the workload mid-run (phased schedules): new operation weights
+    /// and key distribution over the same store. `KeyGen::new` draws no
+    /// randomness, so the simulation's RNG stream is untouched and
+    /// determinism holds.
+    pub fn set_workload(&mut self, ops: Option<OpWeights>, key_dist: KeyDist) {
+        self.cfg.ops = ops;
+        self.cfg.key_dist = key_dist;
+        self.keygen = KeyGen::new(self.cfg.n_items, key_dist);
+    }
+
+    /// [`CacheKv::replan`] with honest migration accounting (`kvs::placement`
+    /// module docs, "Online replanning"). Placement is class-granular over
+    /// the two intrusive tier-1 halves: a tier flip copies every 64-byte
+    /// line of the flipped class — one read on the tier it leaves plus one
+    /// write on the tier it lands (one `dram` + one `secondary` touch
+    /// whichever direction). Item metadata is authoritative in memory, so
+    /// no SSD traffic moves (`reads`/`writes` stay 0); the pinned directory
+    /// and SOC index never move. An unchanged plan costs nothing.
+    pub fn replan_migrate(&mut self, profile: &AccessProfile) -> DriveCounts {
+        let before: Vec<bool> = (0..CC_DIRECTORY).map(|c| self.plan.in_dram(c)).collect();
+        self.replan(profile);
+        let mut mig = DriveCounts::default();
+        for (c, &was) in before.iter().enumerate() {
+            if self.plan.in_dram(c) == was {
+                continue;
+            }
+            let lines = ((self.plan.classes()[c].bytes + 63) / 64) as u32;
+            mig.dram += lines;
+            mig.secondary += lines;
+        }
+        mig
     }
 
     /// One simulated access to a placement class: tag the [`AccessProfile`]
@@ -1357,6 +1390,68 @@ mod tests {
         placed.replan(&profile);
         assert!(!placed.plan().in_dram(CC_CHAINS) && placed.plan().in_dram(CC_LRU));
         assert_eq!(placed.plan().policy_dram_bytes(), one_class);
+    }
+
+    #[test]
+    fn replan_migrate_charges_the_swapped_halves() {
+        // small_cfg: chains = lru = 2,400·32 = 76,800 B = 1,200 lines each.
+        // A one-class budget statically holds the chains; a profile ranking
+        // the LRU lists first swaps the halves — 2,400 lines move, one
+        // touch on each tier per line, and no SSD traffic (tier-1 metadata
+        // is authoritative in memory).
+        let mut rng = Rng::new(41);
+        let one_class = CacheKv::placement_classes(&small_cfg())[CC_CHAINS].bytes;
+        let mut kv = CacheKv::new(
+            CacheKvConfig {
+                placement: PlacementPolicy::Budget {
+                    dram_bytes: one_class,
+                },
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        assert!(kv.plan().in_dram(CC_CHAINS) && !kv.plan().in_dram(CC_LRU));
+        let mut profile = AccessProfile::new(4);
+        for _ in 0..1_000 {
+            profile.tick(CC_LRU);
+        }
+        profile.tick(CC_CHAINS);
+        let mig = kv.replan_migrate(&profile);
+        assert!(!kv.plan().in_dram(CC_CHAINS) && kv.plan().in_dram(CC_LRU));
+        assert_eq!((mig.dram, mig.secondary), (2_400, 2_400), "{mig:?}");
+        assert_eq!((mig.reads, mig.writes), (0, 0), "metadata moves carry no IO");
+        // Same profile again: the plan is already optimal, nothing moves.
+        assert_eq!(kv.replan_migrate(&profile), DriveCounts::default());
+        // Ranking-independent policies never migrate.
+        let mut rng = Rng::new(42);
+        let mut all_sec = CacheKv::new(small_cfg(), &mut rng);
+        assert_eq!(all_sec.replan_migrate(&profile), DriveCounts::default());
+    }
+
+    #[test]
+    fn set_workload_keeps_rng_untouched() {
+        let mut rng = Rng::new(43);
+        let _kv = CacheKv::new(small_cfg(), &mut rng);
+        let mark = rng.below(u64::MAX);
+        let mut rng2 = Rng::new(43);
+        let mut kv2 = CacheKv::new(small_cfg(), &mut rng2);
+        kv2.set_workload(
+            Some(OpWeights::new(0.5, 0.5, 0.0, 0.0, 0.0)),
+            KeyDist::HotSet {
+                hot_frac: 0.4,
+                hot_weight: 0.95,
+            },
+        );
+        assert_eq!(
+            rng2.below(u64::MAX),
+            mark,
+            "set_workload must not consume randomness"
+        );
+        assert!(matches!(kv2.cfg.key_dist, KeyDist::HotSet { .. }));
+        let key = kv2.keygen.sample(&mut rng2);
+        let op = kv2.op_get(key);
+        let _ = drive(&mut kv2, op, &mut rng2);
+        assert!(kv2.stats.gets > 0);
     }
 
     #[test]

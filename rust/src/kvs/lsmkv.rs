@@ -32,7 +32,7 @@
 
 use std::collections::HashSet;
 
-use super::common::{fnv1a, KvStats, NIL};
+use super::common::{fnv1a, DriveCounts, KvStats, NIL};
 use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step};
@@ -354,8 +354,10 @@ impl LsmKv {
         ((fnv1a(block as u64) >> 8) % self.cfg.buckets_per_shard as u64) as usize
     }
 
+    /// Bytes of one data block (also the per-read IO size a `PC_DATA`
+    /// migration refill pays — see [`LsmKv::replan_migrate`]).
     #[inline]
-    fn block_bytes(&self) -> u32 {
+    pub fn block_bytes(&self) -> u32 {
         self.cfg.keys_per_block * (self.cfg.value_size.mean() as u32 + 20 + 8)
     }
 
@@ -514,6 +516,44 @@ impl LsmKv {
     /// split `m`/`m_dram` from the replanned plan.
     pub fn replan(&mut self, profile: &AccessProfile) {
         self.plan = Plan::replan(self.cfg.placement, Self::placement_classes(&self.cfg), profile);
+    }
+
+    /// Swap the workload mid-run (phased schedules): new operation weights
+    /// and key distribution over the same store. `KeyGen::new` draws no
+    /// randomness, so the simulation's RNG stream is untouched and
+    /// determinism holds.
+    pub fn set_workload(&mut self, ops: Option<OpWeights>, key_dist: KeyDist) {
+        self.cfg.ops = ops;
+        self.cfg.key_dist = key_dist;
+        self.keygen = KeyGen::new(self.cfg.n_items, key_dist);
+    }
+
+    /// [`LsmKv::replan`] with honest migration accounting (`kvs::placement`
+    /// module docs, "Online replanning"). Placement is class-granular, so a
+    /// tier flip moves the whole class: every 64-byte line of a flipped
+    /// class is one read on the tier it leaves plus one write on the tier
+    /// it lands (one `dram` + one `secondary` touch whichever direction).
+    /// A `PC_DATA` flip additionally refetches every live cached block over
+    /// the SSD shard route — `reads` live block reads of
+    /// [`LsmKv::block_bytes`] each — because block *bytes* are not pointer
+    /// metadata: rehoming them re-reads the authoritative SSD copy. The
+    /// pinned memtable never moves. An unchanged plan costs nothing.
+    pub fn replan_migrate(&mut self, profile: &AccessProfile) -> DriveCounts {
+        let before: Vec<bool> = (0..PC_MEMTABLE).map(|c| self.plan.in_dram(c)).collect();
+        self.replan(profile);
+        let mut mig = DriveCounts::default();
+        for (c, &was) in before.iter().enumerate() {
+            if self.plan.in_dram(c) == was {
+                continue;
+            }
+            let lines = ((self.plan.classes()[c].bytes + 63) / 64) as u32;
+            mig.dram += lines;
+            mig.secondary += lines;
+            if c == PC_DATA {
+                mig.reads += self.shards.iter().map(|s| s.len).sum::<u32>();
+            }
+        }
+        mig
     }
 
     /// One simulated access to a placement class: tag the [`AccessProfile`]
@@ -1615,6 +1655,70 @@ mod tests {
         let rank0 = kv.plan().ranking().to_vec();
         kv.replan(&profile);
         assert_eq!(kv.plan().ranking(), rank0.as_slice());
+    }
+
+    #[test]
+    fn replan_migrate_charges_lines_and_block_refills() {
+        // small_cfg class bytes: handles 1024·64 + 16·64·8 = 73,728;
+        // restarts 1024·12 = 12,288; data 1024·3,424 = 3,506,176. A budget
+        // of 3,580,000 statically places {handles, restarts} (data
+        // overflows); a profile ranking data past restarts re-resolves to
+        // {handles, data} — restarts leave DRAM (192 lines), data enters
+        // (54,784 lines), and every live cached block refills over the SSD
+        // shard route.
+        let mut rng = Rng::new(31);
+        let mut kv = LsmKv::new(
+            LsmKvConfig {
+                placement: PlacementPolicy::Budget {
+                    dram_bytes: 3_580_000,
+                },
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        assert!(kv.plan().in_dram(PC_HANDLES) && kv.plan().in_dram(PC_RESTARTS));
+        assert!(!kv.plan().in_dram(PC_DATA));
+        let live: u32 = kv.shards.iter().map(|s| s.len).sum();
+        assert!(live > 0, "the warmed cache must hold blocks");
+        let mut profile = AccessProfile::new(4);
+        for _ in 0..1_000 {
+            profile.tick(PC_HANDLES);
+            profile.tick(PC_DATA);
+        }
+        let mig = kv.replan_migrate(&profile);
+        assert!(kv.plan().in_dram(PC_DATA) && !kv.plan().in_dram(PC_RESTARTS));
+        assert_eq!((mig.dram, mig.secondary), (54_976, 54_976), "{mig:?}");
+        assert_eq!(mig.reads, live, "every cached block refills from SSD");
+        assert_eq!(mig.writes, 0);
+        // Same profile again: the plan is already optimal, nothing moves.
+        assert_eq!(kv.replan_migrate(&profile), DriveCounts::default());
+        // Ranking-independent policies never migrate.
+        let mut rng = Rng::new(32);
+        let mut all_sec = LsmKv::new(small_cfg(), &mut rng);
+        assert_eq!(all_sec.replan_migrate(&profile), DriveCounts::default());
+    }
+
+    #[test]
+    fn set_workload_keeps_rng_untouched() {
+        let mut rng = Rng::new(33);
+        let _kv = LsmKv::new(small_cfg(), &mut rng);
+        let mark = rng.below(u64::MAX);
+        let mut rng2 = Rng::new(33);
+        let mut kv2 = LsmKv::new(small_cfg(), &mut rng2);
+        kv2.set_workload(
+            Some(OpWeights::new(0.0, 0.05, 0.0, 0.95, 0.0)),
+            KeyDist::Uniform,
+        );
+        assert_eq!(
+            rng2.below(u64::MAX),
+            mark,
+            "set_workload must not consume randomness"
+        );
+        assert!(matches!(kv2.cfg.key_dist, KeyDist::Uniform));
+        let key = kv2.keygen.sample(&mut rng2);
+        let op = kv2.op_scan(key, 8);
+        drive(&mut kv2, op, &mut rng2);
+        assert!(kv2.stats.scans > 0);
     }
 
     #[test]

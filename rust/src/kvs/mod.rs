@@ -54,7 +54,7 @@ pub mod treekv;
 pub use cachekv::{CacheKv, CacheKvConfig};
 pub use common::{drive_op, drive_op_tiers, fnv1a, DriveCounts, KvStats};
 pub use lsmkv::{LsmKv, LsmKvConfig};
-pub use placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
+pub use placement::{should_replan, AccessProfile, Plan, PlacementPolicy, StructClass};
 pub use treekv::{TreeKv, TreeKvConfig, SCAN_IO_BATCH};
 
 use crate::model::KindCost;

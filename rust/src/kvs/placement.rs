@@ -77,6 +77,53 @@
 //! measure path, and `cxlkvs run planner` gates measured-vs-static
 //! placement at equal DRAM budget.
 //!
+//! ## Online replanning: decay, hysteresis, migration cost
+//!
+//! A two-phase offline plan goes stale the moment the access distribution
+//! turns (hotspot shift, diurnal read↔write swing). The online planner in
+//! `run_store_ycsb_adaptive` closes the loop with three mechanisms, each
+//! with a knob whose derivation lives here:
+//!
+//! **Epoch-bucketed EWMA decay** ([`AccessProfile::decay`]). At every
+//! simulated-time epoch boundary (never wall clock — determinism), each
+//! class count is scaled by a rational retain factor `num/den` in integer
+//! arithmetic: `c ← ⌊c · num / den⌋` through `u128`, so identical seeds
+//! and epochs reproduce identical profiles bit-for-bit. After a workload
+//! turn, the share of the profile still describing the *old* phase decays
+//! as `(num/den)^k` over `k` epochs; with the default `1/2` the stale half
+//! falls below 10% within 4 epochs and below 1% within 7 — the adaptation
+//! horizon is `log(ε)/log(num/den)` epochs for staleness tolerance `ε`.
+//! Larger retain fractions average over longer windows (smoother, slower);
+//! `num = 0` forgets everything each epoch (memoryless, noisy).
+//!
+//! **Hysteresis** ([`should_replan`]). The replan trigger compares what the
+//! *current* plan and a *candidate* replan would absorb into DRAM under the
+//! decayed profile ([`Plan::absorbed`]: the profile mass of the placed
+//! prefix). Replanning fires only when
+//!
+//! ```text
+//! absorbed(candidate) > absorbed(current) · (1 + margin)
+//! ```
+//!
+//! i.e. the measured density ordering must shift enough that the candidate
+//! beats the incumbent by more than `margin` (relative). A ranking
+//! perturbation from sampling noise flips neighboring classes of nearly
+//! equal density, which changes `absorbed` by at most their density gap —
+//! below any reasonable margin — while a genuine phase change moves whole
+//! access mass between classes and clears it. `margin = 0` replans on any
+//! measured gain (the thrash configuration the adaptive tests use);
+//! `margin = ∞` never replans (the static arm, bit-identical by
+//! construction — see `tests/adaptive.rs`).
+//!
+//! **Honest migration cost**. A replan that re-tiers entries is not free:
+//! every migrated line costs a read from its old tier plus a write to its
+//! new tier, and cache contents that move across the SSD shard route cost
+//! their value IO. Each store's `replan_migrate` returns the migration
+//! traffic as a `DriveCounts` (dram + secondary line touches, SSD reads),
+//! and the machine's `charge_migration` turns it into simulated time on
+//! the device servers — so a thrashing planner loses measured throughput
+//! instead of teleporting structures between tiers for free.
+//!
 //! ## The split-hop Θ (Eq 14 with DRAM-resident hops)
 //!
 //! Eq 14 prices a whole operation as `S` split units of `M/S` dependent
@@ -226,6 +273,59 @@ impl AccessProfile {
     pub fn clear(&mut self) {
         self.counts.iter_mut().for_each(|c| *c = 0);
     }
+
+    /// One epoch of EWMA decay: scale every class count by the rational
+    /// retain factor `retain_num / retain_den` (module docs, "Online
+    /// replanning"). Integer arithmetic through `u128` — no float
+    /// rounding, so decayed profiles are bit-identical across runs with
+    /// the same epoch schedule. Called at simulated-time epoch boundaries
+    /// only, never from wall clock.
+    ///
+    /// Panics if `retain_den == 0` or `retain_num > retain_den` (the
+    /// retain factor must be a fraction in `[0, 1]`).
+    pub fn decay(&mut self, retain_num: u32, retain_den: u32) {
+        assert!(
+            retain_den > 0 && retain_num <= retain_den,
+            "retain factor must be a fraction in [0, 1]: {retain_num}/{retain_den}"
+        );
+        if retain_num == retain_den {
+            return;
+        }
+        for c in self.counts.iter_mut() {
+            *c = (*c as u128 * retain_num as u128 / retain_den as u128) as u64;
+        }
+    }
+
+    /// Merge another profile's counts into this one (the offline arm's
+    /// whole-schedule aggregate profile).
+    pub fn merge(&mut self, other: &AccessProfile) {
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+    }
+}
+
+/// The online planner's replan trigger (module docs, "Online replanning"):
+/// replace `current` with `candidate` only when the candidate's absorbed
+/// access mass under `profile` beats the incumbent's by more than the
+/// relative `margin`.
+///
+/// `margin = 0.0` replans on any measured gain (thrash configuration);
+/// `margin = f64::INFINITY` never replans (`x > y·∞` is false for every
+/// finite `y > 0`, and `x > NaN` is false when `y == 0`), which makes the
+/// adaptive loop bit-identical to a static run.
+pub fn should_replan(
+    current: &Plan,
+    candidate: &Plan,
+    profile: &AccessProfile,
+    margin: f64,
+) -> bool {
+    let cur = current.absorbed(profile) as f64;
+    let cand = candidate.absorbed(profile) as f64;
+    cand > cur * (1.0 + margin)
 }
 
 /// A resolved placement: which classes are DRAM-resident under a policy,
@@ -347,6 +447,19 @@ impl Plan {
     /// measured accesses-per-byte order from [`Plan::replan`].
     pub fn ranking(&self) -> &[usize] {
         &self.order
+    }
+
+    /// Profile access mass this plan's DRAM-placed offloadable prefix
+    /// absorbs — the objective the density ranking maximizes, and the
+    /// quantity [`should_replan`]'s hysteresis compares between the
+    /// incumbent plan and a candidate replan. Pinned classes are DRAM
+    /// under every plan, so they cancel in any comparison and are left
+    /// out.
+    pub fn absorbed(&self, profile: &AccessProfile) -> u64 {
+        self.order[..self.dram_prefix]
+            .iter()
+            .map(|&i| profile.accesses(i))
+            .sum()
     }
 
     /// Split per-class expected access counts into `(m_sec, m_dram)`:
@@ -626,6 +739,111 @@ mod tests {
         assert_eq!(p.ranking(), &[1, 0]);
         assert!(p.in_dram(1), "a free accessed class always fits the budget");
         assert!(!p.in_dram(0));
+    }
+
+    // ---- online replanning: decay + hysteresis -----------------------------
+
+    #[test]
+    fn decay_is_deterministic_integer_ewma() {
+        let mut a = AccessProfile::new(3);
+        for _ in 0..1_001 {
+            a.tick(0);
+        }
+        for _ in 0..7 {
+            a.tick(2);
+        }
+        let mut b = a.clone();
+        a.decay(1, 2);
+        b.decay(1, 2);
+        assert_eq!(a, b, "same profile, same decay, bit-identical");
+        assert_eq!(a.accesses(0), 500, "floor(1001/2)");
+        assert_eq!(a.accesses(2), 3, "floor(7/2)");
+        // Retain 1/1 is the identity; retain 0/1 forgets everything.
+        let before = a.clone();
+        a.decay(1, 1);
+        assert_eq!(a, before);
+        a.decay(0, 1);
+        assert!(a.is_empty());
+        // No u64 overflow on huge counts (u128 intermediate): double a
+        // single tick up to 2^63 via merge, then decay by 3/4.
+        let mut q = AccessProfile::new(1);
+        q.tick(0);
+        for _ in 0..63 {
+            let clone = q.clone();
+            q.merge(&clone);
+        }
+        assert_eq!(q.accesses(0), 1u64 << 63);
+        q.decay(3, 4);
+        assert_eq!(q.accesses(0), ((1u128 << 63) * 3 / 4) as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "retain factor")]
+    fn decay_rejects_improper_fraction() {
+        AccessProfile::new(1).decay(3, 2);
+    }
+
+    #[test]
+    fn merge_adds_and_grows() {
+        let mut a = AccessProfile::new(1);
+        a.tick(0);
+        let mut b = AccessProfile::new(3);
+        b.tick(0);
+        b.tick(2);
+        a.merge(&b);
+        assert_eq!(a.accesses(0), 2);
+        assert_eq!(a.accesses(2), 1);
+        assert_eq!(a.total(), 3);
+    }
+
+    #[test]
+    fn absorbed_sums_the_placed_prefix() {
+        let mut prof = AccessProfile::new(3);
+        for _ in 0..10 {
+            prof.tick(0);
+        }
+        for _ in 0..5 {
+            prof.tick(1);
+        }
+        for _ in 0..200 {
+            prof.tick(2);
+        }
+        let none = Plan::resolve(PlacementPolicy::AllSecondary, classes());
+        assert_eq!(none.absorbed(&prof), 0);
+        let top2 = Plan::resolve(PlacementPolicy::TopLevels { k: 2 }, classes());
+        assert_eq!(top2.absorbed(&prof), 15, "hot + warm");
+        let re = Plan::replan(PlacementPolicy::TopLevels { k: 2 }, classes(), &prof);
+        assert_eq!(re.absorbed(&prof), 210, "hot + cold after the re-rank");
+        // Pinned classes never count: they cancel in any comparison.
+        let pinned = Plan::resolve(PlacementPolicy::AllSecondary, with_pinned());
+        assert_eq!(pinned.absorbed(&prof), 0);
+    }
+
+    #[test]
+    fn hysteresis_margins_bracket_the_trigger() {
+        let mut prof = AccessProfile::new(3);
+        for _ in 0..10 {
+            prof.tick(0);
+        }
+        for _ in 0..200 {
+            prof.tick(2);
+        }
+        let current = Plan::resolve(PlacementPolicy::TopLevels { k: 2 }, classes());
+        let candidate = Plan::replan(PlacementPolicy::TopLevels { k: 2 }, classes(), &prof);
+        // Gain 210 vs 10: fires at margin 0 and at any margin below 20x,
+        // not above it.
+        assert!(should_replan(&current, &candidate, &prof, 0.0));
+        assert!(should_replan(&current, &candidate, &prof, 0.10));
+        assert!(!should_replan(&current, &candidate, &prof, 25.0));
+        // margin = ∞ never fires — even from an absorbed-nothing incumbent
+        // (0 · ∞ = NaN, and `x > NaN` is false).
+        let none = Plan::resolve(PlacementPolicy::AllSecondary, classes());
+        assert!(!should_replan(&none, &candidate, &prof, f64::INFINITY));
+        assert!(!should_replan(&current, &candidate, &prof, f64::INFINITY));
+        // No gain → no replan at any margin (margin 0 requires *strict*
+        // improvement, so identical plans never thrash).
+        assert!(!should_replan(&candidate, &candidate, &prof, 0.0));
+        assert!(!should_replan(&candidate, &current, &prof, 0.0));
     }
 
     #[test]

@@ -42,11 +42,11 @@
 //! increasing digests) so the ordered/duplicate-free result contract holds
 //! even when slots are recycled mid-scan.
 
-use super::common::{fnv1a, KvStats, NIL};
+use super::common::{fnv1a, DriveCounts, KvStats, NIL};
 use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
-use crate::workload::{KeyGen, OpKind, OpMix, OpWeights, ScanLen, ValueSize};
+use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ScanLen, ValueSize};
 
 /// Records fetched per scan value-read IO (Aerospike batches record reads).
 pub const SCAN_IO_BATCH: usize = 8;
@@ -369,6 +369,48 @@ impl TreeKv {
             }
             node.in_dram = self.plan.in_dram(Self::level_class(node.depth as u32));
         }
+    }
+
+    /// Swap the workload mid-run (phased schedules): new operation weights
+    /// and key distribution over the same store. The keygen rebuild is
+    /// pure arithmetic (`KeyGen::new` draws no randomness), so the
+    /// simulation's RNG stream is untouched and determinism holds.
+    pub fn set_workload(&mut self, ops: Option<OpWeights>, key_dist: KeyDist) {
+        self.cfg.ops = ops;
+        self.cfg.key_dist = key_dist;
+        self.keygen = KeyGen::new(self.cfg.n_items, key_dist);
+    }
+
+    /// [`TreeKv::replan`] with honest migration accounting (`kvs::placement`
+    /// module docs, "Online replanning"): every live entry whose tier flips
+    /// is one 64-byte line copied between tiers — a read on the side it
+    /// leaves and a write on the side it lands, tallied as one `dram` plus
+    /// one `secondary` line touch whichever direction it moves. Index
+    /// entries carry their value-block pointers with them, so no value IO
+    /// moves (`reads`/`writes` stay 0). Feed the counts to
+    /// `sim::Machine::charge_migration`; an unchanged plan costs nothing.
+    pub fn replan_migrate(&mut self, profile: &AccessProfile) -> DriveCounts {
+        let before: Vec<bool> = self.nodes.iter().map(|n| n.in_dram).collect();
+        self.replan(profile);
+        let mut mig = DriveCounts::default();
+        if !matches!(
+            self.cfg.placement,
+            PlacementPolicy::TopLevels { .. } | PlacementPolicy::Budget { .. }
+        ) {
+            return mig;
+        }
+        let mut free = vec![false; self.nodes.len()];
+        for &id in &self.free_nodes {
+            free[id as usize] = true;
+        }
+        for (id, node) in self.nodes.iter().enumerate() {
+            if free[id] || node.in_dram == before[id] {
+                continue;
+            }
+            mig.dram += 1;
+            mig.secondary += 1;
+        }
+        mig
     }
 
     /// The placement structure classes: one per sprig-forest level,
@@ -1689,6 +1731,69 @@ mod tests {
         let rank0 = kv.plan().ranking().to_vec();
         kv.replan(&profile);
         assert_eq!(kv.plan().ranking(), rank0.as_slice());
+    }
+
+    #[test]
+    fn replan_migrate_charges_exactly_the_flipped_entries() {
+        // Budget of 2048 B: statically the 16-entry level 0 fits (1024 B)
+        // and level 1 (2048 B) does not. A synthetic profile making level 1
+        // the densest class flips the plan — 16 entries leave DRAM, 32
+        // enter — and the migration bill is exactly those 48 line copies,
+        // one touch on each tier per line, no value IO. Replaying the same
+        // profile is free.
+        let mut rng = Rng::new(43);
+        let mut kv = TreeKv::new(
+            TreeKvConfig {
+                placement: PlacementPolicy::Budget {
+                    dram_bytes: 32 * 64,
+                },
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        let mut profile = AccessProfile::new(4);
+        for _ in 0..10_000 {
+            profile.tick(1);
+        }
+        profile.tick(0);
+        let mig = kv.replan_migrate(&profile);
+        assert_eq!((mig.dram, mig.secondary), (48, 48), "{mig:?}");
+        assert_eq!((mig.reads, mig.writes), (0, 0), "index moves carry no IO");
+        assert_eq!(kv.plan().ranking()[0], 1, "level 1 must out-rank level 0");
+        let again = kv.replan_migrate(&profile);
+        assert_eq!(again, DriveCounts::default(), "same plan, no migration");
+        // Policies that never re-tier entries migrate nothing.
+        let mut rng = Rng::new(44);
+        let mut all_sec = TreeKv::new(small_cfg(), &mut rng);
+        assert_eq!(all_sec.replan_migrate(&profile), DriveCounts::default());
+    }
+
+    #[test]
+    fn set_workload_swaps_mix_and_keys_without_rng_draws() {
+        let mut rng = Rng::new(45);
+        let mut kv = TreeKv::new(small_cfg(), &mut rng);
+        let mark = rng.below(u64::MAX);
+        let mut rng2 = Rng::new(45);
+        let mut kv2 = TreeKv::new(small_cfg(), &mut rng2);
+        kv2.set_workload(
+            Some(OpWeights::new(0.0, 0.05, 0.0, 0.95, 0.0)),
+            KeyDist::Zipf {
+                s: 1.0,
+                scrambled: true,
+            },
+        );
+        assert_eq!(
+            rng2.below(u64::MAX),
+            mark,
+            "set_workload must not consume randomness"
+        );
+        assert!(kv2.cfg.ops.is_some());
+        // The swapped keygen actually drives sampling (guarded θ = 1 pole).
+        let key = kv2.keygen.sample(&mut rng2);
+        let op = kv2.op_scan(key, 4);
+        drive(&mut kv2, op, &mut rng2);
+        assert!(kv2.stats.scans > 0);
+        let _ = kv.op_get(1);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //!
 //! Experiments: fig3 fig10 fig11micro fig11kvs fig12 fig14 fig15 fig16
 //!              fig17 fig18 table6 val1404 ycsb ssdscale modelcheck
-//!              placement planner
+//!              placement planner adaptive
 //! (The offline image has no argument-parsing crate; parsing is by hand.)
 //!
 //! `modelcheck` validates the Θ_scan-extended analytic model against the
@@ -21,13 +21,18 @@
 //! measured-ranking placement loses more than the documented slack against
 //! the static prior at equal DRAM budget, when no discriminator workload
 //! (lsmkv-E / cachekv-A) actually re-ranks, or when the replanned model
-//! drifts outside the modelcheck bands.
+//! drifts outside the modelcheck bands. `adaptive` races online
+//! hysteresis replanning against static and offline-replanned placements
+//! across drifting (phased) schedules and exits non-zero when the online
+//! arm loses more than the documented slack after a workload turn, or when
+//! the designed adapting cell (cachekv × diurnal) never actually replans.
 
 use cxlkvs::coordinator::experiments::{self, ModelBackend};
 
 const EXPERIMENTS: &[&str] = &[
     "fig3", "fig10", "fig11micro", "fig11kvs", "fig12", "fig14", "fig15", "fig16", "fig17",
     "fig18", "table6", "val1404", "ycsb", "ssdscale", "modelcheck", "placement", "planner",
+    "adaptive",
 ];
 
 fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
@@ -80,6 +85,19 @@ fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
                     "planner: a measured-placement gate failed (measured worse than \
                      static beyond the slack, no discriminator re-rank, or replanned \
                      model drift — see the GATE FAILED notes)"
+                );
+                std::process::exit(1);
+            }
+        }
+        "adaptive" => {
+            let (r, ok) = experiments::adaptive(fast);
+            r.print();
+            if !ok {
+                eprintln!(
+                    "adaptive: an online-replanning gate failed (online worse than \
+                     the best frozen arm beyond the slack after a turn, or the \
+                     designed adapting cell never replanned — see the GATE FAILED \
+                     notes)"
                 );
                 std::process::exit(1);
             }

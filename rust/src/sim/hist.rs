@@ -44,13 +44,10 @@ impl LatencyHist {
     #[inline]
     pub fn record(&mut self, d: Dur) {
         // Perf fast path: the overwhelmingly common case on the simulator's
-        // hot path is a zero/near-zero wait (prefetch hit) — skip the ln().
-        if d.0 == 0 {
-            self.counts[0] += 1;
-            self.total += 1;
-            return;
-        }
-        let idx = if (d.0 as f64) < self.lo_ps {
+        // hot path is a zero/near-zero wait (prefetch hit) — skip only the
+        // ln(), not the sum/max bookkeeping, so the zero path stays
+        // symmetric with the slow path (both updates are identities at 0).
+        let idx = if d.0 == 0 || (d.0 as f64) < self.lo_ps {
             0
         } else {
             let i = ((d.0 as f64 / self.lo_ps).ln() / self.log_g) as usize;
@@ -78,7 +75,10 @@ impl LatencyHist {
         Dur(self.max_ps)
     }
 
-    /// Quantile (0.0..=1.0) estimated as the upper edge of the containing bucket.
+    /// Quantile (0.0..=1.0) estimated as the upper edge of the containing
+    /// bucket. Bucket 0 means "effectively zero wait" (below `lo`, i.e.
+    /// prefetch/cache hits), so it reports `Dur::ZERO` rather than its
+    /// ~`lo * g` upper edge — an all-hit histogram has an honest zero p50.
     pub fn quantile(&self, q: f64) -> Dur {
         if self.total == 0 {
             return Dur::ZERO;
@@ -88,6 +88,9 @@ impl LatencyHist {
         for (i, &c) in self.counts.iter().enumerate() {
             acc += c;
             if acc >= target {
+                if i == 0 {
+                    return Dur::ZERO;
+                }
                 let edge = self.lo_ps * ((i as f64 + 1.0) * self.log_g).exp();
                 return Dur(edge as u64);
             }
@@ -190,6 +193,35 @@ mod tests {
         h.record(Dur::secs(1.0)); // way past hi
         assert_eq!(h.total(), 2);
         assert_eq!(h.buckets().len(), 2);
+    }
+
+    #[test]
+    fn zero_wait_bucket_reports_zero_quantile() {
+        // Regression: the pre-fix quantile reported bucket 0's upper edge
+        // (~1.2 ns) for zero-wait samples, so an all-prefetch-hit histogram
+        // showed a nonzero p50. Bucket 0 must read as `Dur::ZERO`.
+        let mut h = LatencyHist::new();
+        for _ in 0..100 {
+            h.record(Dur::ZERO);
+        }
+        assert_eq!(h.quantile(0.50), Dur::ZERO);
+        assert_eq!(h.quantile(0.99), Dur::ZERO);
+        assert_eq!(h.mean(), Dur::ZERO);
+        assert_eq!(h.max(), Dur::ZERO);
+        // A mostly-hit histogram: zero p50, honest nonzero tail.
+        for _ in 0..5 {
+            h.record(Dur::us(9.0));
+        }
+        assert_eq!(h.quantile(0.50), Dur::ZERO);
+        assert!(h.quantile(0.99) >= Dur::us(8.0));
+        assert_eq!(h.max(), Dur::us(9.0));
+        // Sub-`lo` (but nonzero) samples land in bucket 0 and keep the
+        // sum/max bookkeeping symmetric with the zero fast path.
+        let mut s = LatencyHist::new();
+        s.record(Dur(1));
+        assert_eq!(s.quantile(0.5), Dur::ZERO);
+        assert_eq!(s.max(), Dur(1));
+        assert_eq!(s.mean(), Dur(1));
     }
 
     #[test]

@@ -291,15 +291,82 @@ impl<S: Service> Machine<S> {
     pub fn run(&mut self, warmup: Dur, window: Dur) -> RunStats {
         let t0 = self.now();
         self.run_until(t0 + warmup);
+        self.start_window(window);
+        let w_end = self.metrics.window_end;
+        self.run_until(w_end);
+        self.window_stats(window)
+    }
+
+    /// Open a measurement window at the current simulated time: reset every
+    /// counter and mark the window bounds. Drive it with `run_until(t)` —
+    /// one call or several slices (the adaptive replan loop runs
+    /// epoch-sized slices and inspects the service between them); slicing
+    /// is observationally identical to one long `run_until`, so a sliced
+    /// window with no intervening mutation reproduces `run` bit-for-bit.
+    pub fn start_window(&mut self, window: Dur) {
         self.metrics.reset();
         self.mem.reset_stats();
         self.ssd.reset_stats();
         let w_start = self.now();
-        let w_end = w_start + window;
         self.metrics.window_start = w_start;
-        self.metrics.window_end = w_end;
-        self.run_until(w_end);
+        self.metrics.window_end = w_start + window;
+    }
+
+    /// Summarize the window opened by [`Machine::start_window`] — exactly
+    /// the [`RunStats`] that [`Machine::run`] would have returned.
+    pub fn window_stats(&self, window: Dur) -> RunStats {
         RunStats::from_metrics(&self.metrics, window, &self.mem, &self.ssd)
+    }
+
+    /// Charge a replan's migration traffic as simulated work (see
+    /// `kvs::placement`, "Online replanning"): every re-tiered 64-byte line
+    /// costs a read from its old tier plus a write to its new tier —
+    /// `secondary_lines` of them touch the secondary device, `dram_lines`
+    /// are inline DRAM touches — and cache contents whose flip moved them
+    /// across the SSD shard route cost `refill_reads` value reads of
+    /// `io_bytes` each.
+    ///
+    /// Cost model: the secondary-line copy streams through the device as a
+    /// pipelined loop — successive transfers issue one per
+    /// `max(T_sw + L_dram, L_mem/P)` (the CPU side of the copy vs. the
+    /// prefetch-depth wall), and the copy completes when the last line
+    /// lands. This prices the copy even on a device with an unthrottled
+    /// bandwidth server, where back-to-back same-instant transfers would
+    /// otherwise all complete after one latency. The migration is
+    /// stop-the-world: every core's clock advances to the copy's end,
+    /// attributed to the stall breakdown — so a thrashing planner pays for
+    /// every flip inside its measurement window. Returns the stall.
+    pub fn charge_migration(
+        &mut self,
+        dram_lines: u32,
+        secondary_lines: u32,
+        refill_reads: u32,
+        io_bytes: u32,
+    ) -> Dur {
+        let t0 = self.now();
+        let mut done = t0;
+        let cpu = self.cfg.t_sw + self.cfg.dram_latency;
+        let wall = Dur(self.mem.cfg.mean_latency().0 / self.cfg.prefetch_depth.max(1) as u64);
+        let gap = if cpu >= wall { cpu } else { wall };
+        for i in 0..secondary_lines as u64 {
+            let d = self.mem.transfer(t0 + Dur(gap.0 * i), &mut self.rng);
+            done = done.max(d);
+        }
+        done = done.max(t0 + Dur(self.cfg.dram_latency.0 * dram_lines as u64));
+        for i in 0..refill_reads as u64 {
+            let d = self.ssd.submit(t0, i, IoKind::Read, io_bytes, &mut self.rng);
+            done = done.max(d);
+        }
+        self.metrics.dram_accesses += dram_lines as u64;
+        self.metrics.secondary_accesses += secondary_lines as u64;
+        self.metrics.ios += refill_reads as u64;
+        for c in self.cores.iter_mut() {
+            if c.time < done {
+                c.breakdown.stall += done - c.time;
+                c.time = done;
+            }
+        }
+        done - t0
     }
 
     /// Advance the simulation until every core's local clock reaches `t_end`.
@@ -989,6 +1056,71 @@ mod tests {
         let recip_us = 1e6 / st.ops_per_sec;
         assert!(recip_us > 4.0, "recip_us={recip_us}: lock did not serialize");
         assert!(st.lock_contention > 0.5);
+    }
+
+    #[test]
+    fn sliced_window_reproduces_run() {
+        // start_window + repeated run_until + window_stats must be
+        // bit-identical to one run() call: the adaptive loop's epoch
+        // slicing (with no intervening mutation) is pure observation.
+        let svc = || FixedOps {
+            m: 5,
+            t_mem: Dur::ns(120.0),
+            tier: Tier::Secondary,
+        };
+        let mut a = Machine::new(base_cfg(), svc());
+        let sa = a.run(Dur::ms(1.0), Dur::ms(6.0));
+        let mut b = Machine::new(base_cfg(), svc());
+        let t0 = b.now();
+        b.run_until(t0 + Dur::ms(1.0));
+        b.start_window(Dur::ms(6.0));
+        let end = b.metrics.window_end;
+        let mut t = b.now();
+        while t < end {
+            t = (t + Dur::ms(1.0)).min(end);
+            b.run_until(t);
+        }
+        let sb = b.window_stats(Dur::ms(6.0));
+        assert_eq!(sa.ops, sb.ops);
+        assert_eq!(sa.op_latency_mean, sb.op_latency_mean);
+        assert_eq!(sa.io_reads, sb.io_reads);
+    }
+
+    #[test]
+    fn charge_migration_costs_time_and_counts() {
+        let svc = FixedOps {
+            m: 2,
+            t_mem: Dur::ns(100.0),
+            tier: Tier::Secondary,
+        };
+        let mut m = Machine::new(base_cfg(), svc);
+        m.run(Dur::ms(1.0), Dur::ms(2.0));
+        let before = m.now();
+        // Nothing to migrate: free, clocks untouched.
+        assert_eq!(m.charge_migration(0, 0, 0, 0), Dur::ZERO);
+        assert_eq!(m.now(), before);
+        // 1000 secondary lines at L_mem=1us, P=12: the pipelined copy is
+        // gapped at max(T_sw + L_dram, L_mem/P) = max(140ns, 83ns) = 140ns,
+        // so the copy takes ~ 999*140ns + 1us ≈ 141us of stop-the-world.
+        let (s0, d0, i0) = (
+            m.metrics.secondary_accesses,
+            m.metrics.dram_accesses,
+            m.metrics.ios,
+        );
+        let d = m.charge_migration(1000, 1000, 0, 0);
+        assert!(
+            d > Dur::us(100.0) && d < Dur::us(200.0),
+            "migration stall {d}"
+        );
+        assert_eq!(m.now(), before + d, "stop-the-world advances the clocks");
+        assert_eq!(m.metrics.secondary_accesses, s0 + 1000);
+        assert_eq!(m.metrics.dram_accesses, d0 + 1000);
+        // Refill reads land on the SSD stats (the window's io accounting).
+        let r0 = m.ssd.reads();
+        let d = m.charge_migration(0, 0, 8, 1536);
+        assert!(d >= Dur::us(10.0), "an SSD read costs its latency: {d}");
+        assert_eq!(m.ssd.reads(), r0 + 8);
+        assert_eq!(m.metrics.ios, i0 + 8);
     }
 
     #[test]

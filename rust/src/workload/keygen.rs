@@ -22,6 +22,12 @@ pub enum KeyDist {
     HotSet { hot_frac: f64, hot_weight: f64 },
 }
 
+/// Zipf exponents within this distance of 1.0 are nudged to `1.0 - guard`:
+/// the YCSB closed form divides by `1 - θ`, so θ = 1 exactly is a pole.
+/// Wide enough that fp drift through a phased-sweep schedule cannot land on
+/// the pole, narrow enough that no preset (0.99, 1.1) is touched.
+pub const ZIPF_THETA_GUARD: f64 = 1e-4;
+
 /// A sampler bound to a keyspace size.
 #[derive(Debug, Clone)]
 pub struct KeyGen {
@@ -76,12 +82,23 @@ impl KeyGen {
         assert!(n > 0);
         let zipf = match dist {
             KeyDist::Zipf { s, .. } => {
-                let zetan = zeta(n, s);
-                let zeta2 = zeta(2, s);
-                let alpha = 1.0 / (1.0 - s);
-                let eta = (1.0 - (2.0 / n as f64).powf(1.0 - s)) / (1.0 - zeta2 / zetan);
+                // The YCSB generator's `alpha = 1/(1-θ)` blows up at θ = 1
+                // (alpha → ±∞ makes every deep draw collapse to rank n-1),
+                // so an exponent within ZIPF_THETA_GUARD of 1 is nudged just
+                // below it. The pmf shift is O(guard·ln n) — invisible next
+                // to the generator's own deep-rank approximation — and
+                // exponents outside the guard band are untouched.
+                let theta = if (s - 1.0).abs() < ZIPF_THETA_GUARD {
+                    1.0 - ZIPF_THETA_GUARD
+                } else {
+                    s
+                };
+                let zetan = zeta(n, theta);
+                let zeta2 = zeta(2, theta);
+                let alpha = 1.0 / (1.0 - theta);
+                let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
                 Some(ZipfState {
-                    theta: s,
+                    theta,
                     zetan,
                     alpha,
                     eta,
@@ -127,8 +144,12 @@ impl KeyGen {
                 hot_frac,
                 hot_weight,
             } => {
-                let hot_n = ((self.n as f64 * hot_frac) as u64).max(1);
-                let raw = if rng.chance(hot_weight) {
+                // Clamp to the keyspace, and short-circuit the cold branch
+                // when the hot set *is* the keyspace (`hot_frac` ≥ 1 made
+                // the pre-fix code reach `rng.below(0)`): with no cold keys
+                // every draw is hot, so the weight coin is never tossed.
+                let hot_n = ((self.n as f64 * hot_frac) as u64).clamp(1, self.n);
+                let raw = if hot_n == self.n || rng.chance(hot_weight) {
                     rng.below(hot_n)
                 } else {
                     hot_n + rng.below(self.n - hot_n)
@@ -264,6 +285,73 @@ mod tests {
         }
         let frac = distinct as f64 / 100_000.0;
         assert!(frac < 0.15, "90% of mass in {frac} of keyspace");
+    }
+
+    #[test]
+    fn degenerate_hotset_full_keyspace_is_safe() {
+        // Regression: `hot_frac: 1.0` made the cold branch call
+        // `rng.below(0)`. A hot set spanning the keyspace must behave as a
+        // hashed-uniform draw over [0, n).
+        for hot_frac in [1.0, 1.5] {
+            let g = KeyGen::new(
+                1000,
+                KeyDist::HotSet {
+                    hot_frac,
+                    hot_weight: 0.9,
+                },
+            );
+            let mut rng = Rng::new(6);
+            let mut seen = vec![false; 1000];
+            for _ in 0..50_000 {
+                let k = g.sample(&mut rng);
+                assert!(k < 1000);
+                seen[k as usize] = true;
+            }
+            let covered = seen.iter().filter(|&&s| s).count();
+            assert!(covered > 900, "full-keyspace hot set covered {covered}/1000");
+        }
+    }
+
+    #[test]
+    fn degenerate_zipf_exponent_one_is_guarded() {
+        // Regression: `s: 1.0` made `alpha = 1/(1-s)` infinite and collapsed
+        // every deep draw onto rank n-1. The guarded exponent must keep the
+        // head Zipf-shaped: rank 0 strictly most popular, deep ranks still
+        // reachable, skew between s=0.9 and s=1.1.
+        let g = KeyGen::new(
+            100_000,
+            KeyDist::Zipf {
+                s: 1.0,
+                scrambled: false,
+            },
+        );
+        let mut rng = Rng::new(7);
+        let trials = 200_000;
+        let (mut rank0, mut top1000, mut tail) = (0u64, 0u64, 0u64);
+        for _ in 0..trials {
+            let k = g.sample(&mut rng);
+            assert!(k < 100_000);
+            if k == 0 {
+                rank0 += 1;
+            }
+            if k < 1000 {
+                top1000 += 1;
+            }
+            if k >= 50_000 {
+                tail += 1;
+            }
+        }
+        let head = top1000 as f64 / trials as f64;
+        assert!(rank0 > 0, "rank 0 never drawn at s=1.0");
+        assert!(tail > 0, "deep ranks unreachable at s=1.0 (collapsed head)");
+        assert!(
+            tail < trials / 4,
+            "tail share {tail} looks collapsed onto the last rank"
+        );
+        // Between the neighbouring exponents' head shares (~0.4 at s=0.9,
+        // ~0.75 at s=1.1 for n=1e5), as a guarded θ→1⁻ should be; pre-fix
+        // the head held only the two exactly-generated ranks (~12%).
+        assert!((0.40..0.78).contains(&head), "head share {head}");
     }
 
     #[test]

@@ -4,8 +4,10 @@
 
 pub mod keygen;
 pub mod opgen;
+pub mod phased;
 pub mod ycsb;
 
 pub use keygen::{KeyDist, KeyGen};
 pub use opgen::{OpKind, OpMix, OpWeights, ScanLen, ValueSize};
+pub use phased::{Phase, PhasedWorkload};
 pub use ycsb::{churn_weights, YcsbWorkload};

@@ -122,24 +122,32 @@ impl OpWeights {
 
     #[inline]
     pub fn sample(&self, rng: &mut Rng) -> OpKind {
+        // `x` can reach `total()` despite `f64() < 1`: the product rounds up
+        // when the draw is within an ulp of 1 (and saturating weight sums
+        // make `x >= acc` for every bucket). Skipping zero-weight kinds and
+        // clamping the fallthrough to the last *positive*-weight kind keeps
+        // that fp-epsilon path from fabricating an operation the mix
+        // excludes; for in-range draws the branch points are unchanged
+        // (adding 0.0 is exact), so well-scaled sequences are bit-identical.
         let x = rng.f64() * self.total();
-        let mut acc = self.read;
-        if x < acc {
-            return OpKind::Read;
+        let mut acc = 0.0;
+        let mut last = OpKind::Read;
+        for (kind, w) in [
+            (OpKind::Read, self.read),
+            (OpKind::Write, self.update),
+            (OpKind::Delete, self.delete),
+            (OpKind::Scan, self.scan),
+            (OpKind::Rmw, self.rmw),
+        ] {
+            if w > 0.0 {
+                acc += w;
+                last = kind;
+                if x < acc {
+                    return kind;
+                }
+            }
         }
-        acc += self.update;
-        if x < acc {
-            return OpKind::Write;
-        }
-        acc += self.delete;
-        if x < acc {
-            return OpKind::Delete;
-        }
-        acc += self.scan;
-        if x < acc {
-            return OpKind::Scan;
-        }
-        OpKind::Rmw
+        last
     }
 }
 
@@ -284,6 +292,44 @@ mod tests {
         assert!((fr(2) - 0.1).abs() < 0.01, "delete {}", fr(2));
         assert!((fr(3) - 0.1).abs() < 0.01, "scan {}", fr(3));
         assert!((fr(4) - 0.1).abs() < 0.01, "rmw {}", fr(4));
+    }
+
+    #[test]
+    fn zero_weight_kinds_are_never_sampled() {
+        // Regression: the pre-fix fallthrough returned `Rmw` whenever
+        // `x = f64() * total` reached the accumulated mass, even with
+        // `rmw == 0`. Millions of draws across mixes with structural zeros
+        // must never produce a zero-weight kind.
+        let mixes = [
+            OpWeights::new(0.95, 0.05, 0.0, 0.0, 0.0), // YCSB B/D shape
+            OpWeights::new(0.0, 0.05, 0.0, 0.95, 0.0), // YCSB E shape
+            OpWeights::new(0.5, 0.0, 0.0, 0.0, 0.5),   // YCSB F shape
+            OpWeights::new(0.1, 0.2, 0.3, 0.4, 0.0),   // non-dyadic sums
+        ];
+        let mut rng = Rng::new(0xa11);
+        for w in mixes {
+            for _ in 0..1_000_000u32 {
+                let k = w.sample(&mut rng);
+                assert!(w.fraction(k) > 0.0, "sampled zero-weight {k:?} from {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn saturating_weight_sums_clamp_to_last_positive_kind() {
+        // The deterministic instance of the fallthrough bug: weights whose
+        // sum saturates to infinity make `x = f64() * inf` either `inf`
+        // (draw > 0) or NaN (draw == 0), so every `x < acc` test fails and
+        // the pre-fix code returned `Rmw` for a read/update-only mix.
+        let w = OpWeights::new(f64::MAX, f64::MAX, 0.0, 0.0, 0.0);
+        let mut rng = Rng::new(0xa12);
+        for _ in 0..1000 {
+            let k = w.sample(&mut rng);
+            assert!(
+                matches!(k, OpKind::Read | OpKind::Write),
+                "saturating sum leaked a zero-weight kind: {k:?}"
+            );
+        }
     }
 
     #[test]

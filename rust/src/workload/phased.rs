@@ -1,0 +1,213 @@
+//! Phased (drifting) workload schedules: piecewise-stationary sequences of
+//! (operation weights, key distribution) composed over `opgen`/`keygen`.
+//!
+//! The stationary YCSB presets validate the paper's claim at equilibrium;
+//! these schedules supply the scenario where an *online* placement planner
+//! earns its keep — the measured density ranking that was right for phase
+//! `k` is wrong for phase `k+1`:
+//!
+//! - **diurnal** read↔write swing (C-like days, write-heavy nights): under
+//!   the write-heavy phase cachekv's LRU lists out-access its hash chains
+//!   (every insert walks eviction candidates), the reverse under reads.
+//! - **scan swing** (B-like point reads ↔ E-like scans): scans never touch
+//!   lsmkv's block restart arrays (they walk chains and block bytes), so
+//!   the restarts' placement density collapses mid-run.
+//! - **Zipf-exponent drift** sweeping `s` *through* 1.0 — the schedule that
+//!   made the `keygen` θ-pole guard a prerequisite.
+//! - **hotspot shift**: the hashed hot set changes membership mid-run, so
+//!   hit ratios (and with them the access mix) turn.
+//!
+//! Each phase runs for a simulated-time `window`; the adaptive runner
+//! prepends a settle slack before measuring (see
+//! `coordinator::runner::run_store_ycsb_adaptive`). Phases after the first
+//! are the "post-turn" phases the `cxlkvs run adaptive` gate scores.
+
+use super::keygen::KeyDist;
+use super::opgen::OpWeights;
+use super::ycsb::YcsbWorkload;
+use crate::sim::Dur;
+
+/// One stationary phase of a drifting schedule.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub name: &'static str,
+    pub ops: OpWeights,
+    pub key_dist: KeyDist,
+    /// Measured window of this phase (settle slack not included).
+    pub window: Dur,
+}
+
+/// A named piecewise-stationary schedule over one store configuration.
+#[derive(Debug, Clone)]
+pub struct PhasedWorkload {
+    pub name: &'static str,
+    /// Short tag for CSV/report keys.
+    pub tag: &'static str,
+    /// YCSB preset supplying the store sizing context and scan lengths
+    /// (phases override only op weights and key distribution).
+    pub base: YcsbWorkload,
+    pub phases: Vec<Phase>,
+}
+
+impl PhasedWorkload {
+    /// Total measured time across all phases.
+    pub fn total_window(&self) -> Dur {
+        Dur(self.phases.iter().map(|p| p.window.0).sum())
+    }
+
+    /// Number of workload turns (phase boundaries).
+    pub fn turns(&self) -> usize {
+        self.phases.len().saturating_sub(1)
+    }
+
+    /// Diurnal read↔write swing: C-like (read-only) → write-heavy (20/80)
+    /// → back. Flips cachekv's chains-vs-LRU density ordering at each turn.
+    pub fn diurnal(window: Dur) -> PhasedWorkload {
+        let zipf = KeyDist::Zipf {
+            s: 0.99,
+            scrambled: true,
+        };
+        PhasedWorkload {
+            name: "diurnal(read<->write)",
+            tag: "diurnal",
+            base: YcsbWorkload::A,
+            phases: vec![
+                Phase {
+                    name: "day-read",
+                    ops: OpWeights::READ_ONLY,
+                    key_dist: zipf,
+                    window,
+                },
+                Phase {
+                    name: "night-write",
+                    ops: OpWeights::new(0.2, 0.8, 0.0, 0.0, 0.0),
+                    key_dist: zipf,
+                    window,
+                },
+                Phase {
+                    name: "day-read-2",
+                    ops: OpWeights::READ_ONLY,
+                    key_dist: zipf,
+                    window,
+                },
+            ],
+        }
+    }
+
+    /// Point-read ↔ scan swing: B-like → E-like. Collapses the placement
+    /// density of lsmkv's restart arrays mid-run (scans never touch them).
+    pub fn scan_swing(window: Dur) -> PhasedWorkload {
+        let zipf = KeyDist::Zipf {
+            s: 0.99,
+            scrambled: true,
+        };
+        PhasedWorkload {
+            name: "scan-swing(B<->E)",
+            tag: "scan",
+            base: YcsbWorkload::E,
+            phases: vec![
+                Phase {
+                    name: "point-reads",
+                    ops: OpWeights::new(0.95, 0.05, 0.0, 0.0, 0.0),
+                    key_dist: zipf,
+                    window,
+                },
+                Phase {
+                    name: "scans",
+                    ops: OpWeights::new(0.0, 0.05, 0.0, 0.95, 0.0),
+                    key_dist: zipf,
+                    window,
+                },
+            ],
+        }
+    }
+
+    /// Zipfian-exponent drift sweeping `s` through the θ = 1 pole — the
+    /// schedule the `keygen` guard exists for.
+    pub fn zipf_drift(window: Dur) -> PhasedWorkload {
+        let phase = |name, s| Phase {
+            name,
+            ops: OpWeights::new(0.95, 0.05, 0.0, 0.0, 0.0),
+            key_dist: KeyDist::Zipf { s, scrambled: true },
+            window,
+        };
+        PhasedWorkload {
+            name: "zipf-drift(s:0.7->1.0->1.3)",
+            tag: "zipf",
+            base: YcsbWorkload::B,
+            phases: vec![
+                phase("s0.7", 0.7),
+                phase("s1.0", 1.0),
+                phase("s1.3", 1.3),
+            ],
+        }
+    }
+
+    /// Hotspot shift: the hashed hot set widens mid-run (5% of the keyspace
+    /// absorbing 95% of accesses → 40%), turning hit ratios and the access
+    /// mix they drive.
+    pub fn hotspot_shift(window: Dur) -> PhasedWorkload {
+        let phase = |name, hot_frac| Phase {
+            name,
+            ops: OpWeights::new(0.5, 0.5, 0.0, 0.0, 0.0),
+            key_dist: KeyDist::HotSet {
+                hot_frac,
+                hot_weight: 0.95,
+            },
+            window,
+        };
+        PhasedWorkload {
+            name: "hotspot-shift(5%->40%)",
+            tag: "hotspot",
+            base: YcsbWorkload::A,
+            phases: vec![phase("narrow-hot", 0.05), phase("wide-hot", 0.40)],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenarios_turn_at_least_once() {
+        let w = Dur::ms(2.0);
+        for s in [
+            PhasedWorkload::diurnal(w),
+            PhasedWorkload::scan_swing(w),
+            PhasedWorkload::zipf_drift(w),
+            PhasedWorkload::hotspot_shift(w),
+        ] {
+            assert!(s.turns() >= 1, "{}: no workload turn", s.name);
+            assert_eq!(s.total_window().0, w.0 * s.phases.len() as u64);
+            for p in &s.phases {
+                assert!(p.window > Dur::ZERO);
+            }
+            // Each turn changes the workload: neighboring phases differ in
+            // weights or key distribution.
+            for pair in s.phases.windows(2) {
+                let differs = pair[0].ops != pair[1].ops || pair[0].key_dist != pair[1].key_dist;
+                assert!(differs, "{}: a turn that changes nothing", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_drift_crosses_the_pole() {
+        let s = PhasedWorkload::zipf_drift(Dur::ms(1.0));
+        assert!(
+            s.phases
+                .iter()
+                .any(|p| matches!(p.key_dist, KeyDist::Zipf { s, .. } if s == 1.0)),
+            "the drift schedule must sweep through the guarded exponent"
+        );
+    }
+
+    #[test]
+    fn diurnal_swings_reads_to_writes() {
+        let s = PhasedWorkload::diurnal(Dur::ms(1.0));
+        assert!(!s.phases[0].ops.has_writes());
+        assert!(s.phases[1].ops.has_writes());
+        assert!(!s.phases[2].ops.has_writes());
+    }
+}

@@ -1,0 +1,207 @@
+//! Online adaptive replanning invariants (`run_store_ycsb_adaptive` over
+//! `kvs::placement`'s decay + hysteresis + migration accounting):
+//!
+//! 1. **Determinism**: the whole three-arm run is a pure function of its
+//!    inputs — same scenario, seed, and knobs ⇒ bit-identical arms.
+//! 2. **Margin = ∞ identity**: an online arm whose trigger can never fire
+//!    is bit-identical to the static arm even though its profile decays
+//!    each epoch — the decay/candidate bookkeeping is pure observation
+//!    (no simulated time, no RNG draws) until a replan actually fires.
+//! 3. **Honest charging**: migration costs appear exactly when a plan
+//!    flips — a margin-0 run through a genuine workload turn migrates
+//!    lines and pays a positive stop-the-world stall, while the frozen
+//!    arms of the same run charge nothing.
+//! 4. **Thrash bill**: a margin-0, no-grace config replans inside its
+//!    measured windows and measurably loses post-turn throughput to the
+//!    hysteresis default, whose migrations land in the settle grace.
+
+use cxlkvs::coordinator::runner::{
+    run_store_ycsb_adaptive, store_offload_bytes, AdaptiveCfg, StoreKind, SweepCfg,
+};
+use cxlkvs::kvs::PlacementPolicy;
+use cxlkvs::sim::Dur;
+use cxlkvs::workload::{KeyDist, OpWeights, Phase, PhasedWorkload, YcsbWorkload};
+
+/// The cache store's one-class discriminator budget: half the offloadable
+/// footprint fits exactly one of the two equal-byte tier-1 classes (hash
+/// chains or LRU lists), so a replan swaps whole structures at equal cost.
+fn one_class_budget() -> u64 {
+    store_offload_bytes(StoreKind::Cache, YcsbWorkload::A, SweepCfg::default().seed) / 2
+}
+
+fn sweep(budget: u64) -> SweepCfg {
+    SweepCfg {
+        thread_candidates: vec![32],
+        placement: PlacementPolicy::Budget { dram_bytes: budget },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn adaptive_run_is_deterministic() {
+    let scenario = PhasedWorkload::diurnal(Dur::ms(2.0));
+    let acfg = AdaptiveCfg {
+        epoch: Dur::ms(0.5),
+        settle: Dur::ms(1.0),
+        ..Default::default()
+    };
+    let budget = one_class_budget();
+    let a = run_store_ycsb_adaptive(StoreKind::Cache, &scenario, &sweep(budget), &acfg, 32);
+    let b = run_store_ycsb_adaptive(StoreKind::Cache, &scenario, &sweep(budget), &acfg, 32);
+    for (x, y) in [
+        (&a.static_arm, &b.static_arm),
+        (&a.offline_arm, &b.offline_arm),
+        (&a.online_arm, &b.online_arm),
+    ] {
+        assert_eq!(x.replans, y.replans);
+        assert_eq!(x.migrated_lines, y.migrated_lines);
+        assert_eq!(x.migration_stall.0, y.migration_stall.0);
+        assert_eq!(x.dram_bytes, y.dram_bytes);
+        assert_eq!(x.phases.len(), y.phases.len());
+        for (p, q) in x.phases.iter().zip(&y.phases) {
+            assert_eq!(p.stats.ops, q.stats.ops, "{}", p.phase);
+            assert_eq!(p.stats.op_latency_p50.0, q.stats.op_latency_p50.0);
+            assert_eq!(p.stats.op_latency_p99.0, q.stats.op_latency_p99.0);
+            assert_eq!(p.stats.io_reads, q.stats.io_reads);
+        }
+    }
+}
+
+#[test]
+fn margin_infinity_online_is_bit_identical_to_static() {
+    let scenario = PhasedWorkload::diurnal(Dur::ms(2.0));
+    // The online arm decays its profile 1/2 per epoch; the static control
+    // never decays. Bit-identity across them proves the per-epoch decay +
+    // candidate evaluation is pure observation until a replan fires.
+    let acfg = AdaptiveCfg {
+        margin: f64::INFINITY,
+        epoch: Dur::ms(0.5),
+        settle: Dur::ms(1.0),
+        ..Default::default()
+    };
+    let run = run_store_ycsb_adaptive(
+        StoreKind::Cache,
+        &scenario,
+        &sweep(one_class_budget()),
+        &acfg,
+        32,
+    );
+    assert_eq!(run.online_arm.replans, 0, "margin = infinity must never fire");
+    assert_eq!(run.online_arm.migrated_lines, 0);
+    assert_eq!(run.online_arm.migration_stall.0, 0);
+    assert_eq!(run.static_arm.replans, 0, "the frozen control must never fire");
+    assert_eq!(run.static_arm.phases.len(), run.online_arm.phases.len());
+    for (s, o) in run.static_arm.phases.iter().zip(&run.online_arm.phases) {
+        assert_eq!(
+            s.stats.ops, o.stats.ops,
+            "{}: decay bookkeeping must not perturb the simulation",
+            s.phase
+        );
+        assert_eq!(s.stats.op_latency_p50.0, o.stats.op_latency_p50.0);
+        assert_eq!(s.stats.op_latency_p99.0, o.stats.op_latency_p99.0);
+        assert_eq!(s.stats.io_reads, o.stats.io_reads);
+        assert_eq!(s.stats.io_writes, o.stats.io_writes);
+    }
+    assert_eq!(run.static_arm.dram_bytes, run.online_arm.dram_bytes);
+}
+
+#[test]
+fn online_migration_is_charged_exactly_when_the_plan_flips() {
+    let scenario = PhasedWorkload::diurnal(Dur::ms(2.0));
+    // margin 0 fires on any strict measured gain, so the night-write
+    // phase's LRU-over-chains flip is guaranteed to trigger at least one
+    // migration; with no settle grace it lands inside a measured window.
+    let acfg = AdaptiveCfg {
+        margin: 0.0,
+        settle: Dur::ZERO,
+        epoch: Dur::ms(0.5),
+        ..Default::default()
+    };
+    let run = run_store_ycsb_adaptive(
+        StoreKind::Cache,
+        &scenario,
+        &sweep(one_class_budget()),
+        &acfg,
+        32,
+    );
+    let on = &run.online_arm;
+    assert!(on.replans >= 1, "margin 0 must fire across the write turn");
+    assert!(on.migrated_lines > 0, "a fired replan must migrate lines");
+    assert_eq!(
+        on.migrated_lines % 2,
+        0,
+        "cachekv line charges come in equal dram+secondary halves"
+    );
+    assert!(
+        on.migration_stall > Dur::ZERO,
+        "migration must cost simulated time"
+    );
+    // The frozen arms of the very same run never migrate: charges appear
+    // exactly when a plan changes, not per epoch.
+    assert_eq!(run.static_arm.replans, 0);
+    assert_eq!(run.static_arm.migrated_lines, 0);
+    assert_eq!(run.static_arm.migration_stall.0, 0);
+    assert_eq!(run.offline_arm.migrated_lines, 0);
+}
+
+/// Read-only ↔ update-only swings: the starkest density alternation the
+/// cache store can see (every update walks LRU eviction candidates).
+fn alternating(window: Dur) -> PhasedWorkload {
+    let zipf = KeyDist::Zipf {
+        s: 0.99,
+        scrambled: true,
+    };
+    let phase = |name, ops| Phase {
+        name,
+        ops,
+        key_dist: zipf,
+        window,
+    };
+    PhasedWorkload {
+        name: "alternating(read<->update)",
+        tag: "alt",
+        base: YcsbWorkload::A,
+        phases: vec![
+            phase("reads", OpWeights::READ_ONLY),
+            phase("updates", OpWeights::new(0.0, 1.0, 0.0, 0.0, 0.0)),
+            phase("reads-2", OpWeights::READ_ONLY),
+        ],
+    }
+}
+
+#[test]
+fn thrashing_margin_zero_loses_to_the_hysteresis_default() {
+    let scenario = alternating(Dur::ms(5.0));
+    let budget = one_class_budget();
+    // Thrash config: fire on any strict gain, no settle grace — every
+    // turn's migration stalls inside the measured window (and near-tie
+    // jitter may fire extra flips). The default config pays the same
+    // genuine migrations inside its settle grace instead.
+    let thrash = AdaptiveCfg {
+        margin: 0.0,
+        settle: Dur::ZERO,
+        ..Default::default()
+    };
+    let a = run_store_ycsb_adaptive(StoreKind::Cache, &scenario, &sweep(budget), &thrash, 32);
+    let b = run_store_ycsb_adaptive(
+        StoreKind::Cache,
+        &scenario,
+        &sweep(budget),
+        &AdaptiveCfg::default(),
+        32,
+    );
+    let t_arm = &a.online_arm;
+    assert!(
+        t_arm.replans >= 1,
+        "margin 0 must fire across the update turns: {}",
+        t_arm.replans
+    );
+    assert!(t_arm.migration_stall > Dur::ZERO);
+    let t = t_arm.ops_per_sec_from(1);
+    let h = b.online_arm.ops_per_sec_from(1);
+    assert!(
+        h > t * 1.02,
+        "in-window thrash must measurably lose post-turn throughput: \
+         default {h:.0} ops/s vs margin-0 {t:.0} ops/s"
+    );
+}
