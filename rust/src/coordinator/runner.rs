@@ -4,12 +4,15 @@
 //! of threads"). Points run in parallel across host threads.
 
 use crate::kvs::{
-    model_mix, should_replan, AccessProfile, CacheKv, CacheKvConfig, DriveCounts, LsmKv,
-    LsmKvConfig, Plan, PlacementPolicy, TreeKv, TreeKvConfig,
+    model_mix, should_replan, AccessProfile, CacheKv, CacheKvConfig, DriveCounts, Durable, LsmKv,
+    LsmKvConfig, Plan, PlacementPolicy, TreeKv, TreeKvConfig, WalConfig, WalKind, WalStats,
 };
 use crate::microbench::{Microbench, MicrobenchConfig};
 use crate::model::{ExtParams, KindCost};
-use crate::sim::{Dur, Machine, MachineConfig, MemConfig, Rng, RunStats, SsdConfig, TailProfile};
+use crate::sim::{
+    Dur, Machine, MachineConfig, MemConfig, RetryPolicy, Rng, RunStats, Service, SsdConfig,
+    TailProfile,
+};
 use crate::workload::{PhasedWorkload, YcsbWorkload};
 
 /// Which KV store design a sweep drives.
@@ -55,6 +58,9 @@ pub struct SweepCfg {
     /// Index/cache tier placement — the DRAM-budget axis (`kvs::placement`;
     /// `AllSecondary` = the classic full-offload sweeps).
     pub placement: PlacementPolicy,
+    /// Transient-IO-error retry policy (the durability sweeps' no-retry
+    /// control sets `max_retries: 0`; inert on a fault-free array).
+    pub retry: RetryPolicy,
     pub seed: u64,
 }
 
@@ -72,6 +78,7 @@ impl Default for SweepCfg {
             ssd: SsdConfig::optane_array(),
             n_ssd: 1,
             placement: PlacementPolicy::AllSecondary,
+            retry: RetryPolicy::default(),
             seed: 0x5eed,
         }
     }
@@ -95,6 +102,7 @@ impl SweepCfg {
             },
             n_locks: 64,
             contention_factor: 0.025,
+            retry: self.retry,
             seed: self.seed,
             ..MachineConfig::default()
         }
@@ -144,6 +152,11 @@ impl SweepCfg {
             r_io: self.ssd.iops / 1e6,
             s: 1.0,
             n_ssd: self.n_ssd.max(1) as f64,
+            // Durability terms default off; `ExtParams::with_log_traffic`
+            // attaches measured WAL/retry rates where a run logs.
+            w_log: 0.0,
+            s_log: 0.0,
+            retry_factor: 1.0,
         }
     }
 
@@ -301,6 +314,208 @@ pub fn run_store_ycsb_placed(
             let bytes = m.service.dram_bytes();
             (st, model_mix(&m.service, &w), bytes)
         }
+    }
+}
+
+/// Result of one durability arm ([`run_store_ycsb_durable`]): the window
+/// stats plus the post-run WAL/robustness counters the `durability`
+/// experiment gates on.
+pub struct DurableRun {
+    pub stats: RunStats,
+    /// Post-run WAL counters (appends/flushes/bytes — the measured
+    /// `s_log`/`w_log` inputs of the extended model's sharing terms).
+    pub wal: WalStats,
+    /// The acked-durable invariant: every acked LSN was durable at ack time.
+    pub acked_all_durable: bool,
+    /// `Service::io_failed` deliveries (store-level view of fault injection).
+    pub io_errors: u64,
+    /// Operations that finished with an error instead of a result.
+    pub failed_ops: u64,
+    /// Post-run per-kind model snapshot for `model::theta_mix_recip`.
+    pub mix: Vec<(f64, KindCost)>,
+}
+
+/// Run one store under one YCSB preset with an explicit [`WalConfig`] —
+/// the durability sweep's store×{no-WAL, WAL, WAL+faults} arms. Fault
+/// injection and the retry policy ride the sweep itself (`sweep.ssd.faults`
+/// via `SsdConfig::with_fault`, `sweep.retry`); this helper only threads
+/// the WAL knob into the store config and extracts the post-run counters.
+/// Same seeds and store construction as [`run_store_ycsb_placed`], so a
+/// `WalConfig::default()` (disabled) arm is bit-identical to that path.
+pub fn run_store_ycsb_durable(
+    kind: StoreKind,
+    wl: YcsbWorkload,
+    sweep: &SweepCfg,
+    threads: usize,
+    wal: WalConfig,
+) -> DurableRun {
+    let mcfg = sweep.machine(threads);
+    let mut rng = Rng::new(sweep.seed ^ 0xfeed ^ wl.tag().as_bytes()[0] as u64);
+    let w = wl.weights();
+    macro_rules! arm {
+        ($kv:expr) => {{
+            let mut m = Machine::new(mcfg, $kv);
+            let stats = m.run(sweep.warmup, sweep.window);
+            DurableRun {
+                acked_all_durable: m.service.wal.acked_all_durable(),
+                wal: m.service.wal.stats.clone(),
+                io_errors: m.service.stats.io_errors,
+                failed_ops: m.service.stats.failed_ops,
+                mix: model_mix(&m.service, &w),
+                stats,
+            }
+        }};
+    }
+    match kind {
+        StoreKind::Tree => {
+            let cfg = TreeKvConfig {
+                placement: sweep.placement,
+                wal,
+                ..ycsb_tree_cfg(wl)
+            };
+            let cores = mcfg.cores;
+            arm!(TreeKv::new(cfg, &mut rng).with_background(cores, threads))
+        }
+        StoreKind::Lsm => {
+            let cfg = LsmKvConfig {
+                placement: sweep.placement,
+                wal,
+                ..ycsb_lsm_cfg(wl)
+            };
+            arm!(LsmKv::new(cfg, &mut rng).with_background(threads))
+        }
+        StoreKind::Cache => {
+            let cfg = CacheKvConfig {
+                placement: sweep.placement,
+                wal,
+                ..ycsb_cache_cfg(wl)
+            };
+            arm!(CacheKv::new(cfg, &mut rng))
+        }
+    }
+}
+
+/// Verdict of one crash–recovery drill ([`crash_recover_check`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashCheck {
+    /// Records the dead store had made durable by the crash.
+    pub durable_lsn: u64,
+    /// All records appended (durable or not) by the crash.
+    pub total_records: u64,
+    /// Durable-final-Put keys absent after replay. Must be zero for the
+    /// index stores; the cache contract allows capacity eviction, so the
+    /// cache gate only scores `resurrected_deletes`.
+    pub missing_puts: u64,
+    /// Durable-final-Delete keys present after replay — forbidden
+    /// everywhere (an acked delete must never resurrect).
+    pub resurrected_deletes: u64,
+    /// Keys whose **only** records were unacked at the crash and whose
+    /// presence changed across recovery — a torn partial effect; must be 0.
+    pub unacked_perturbed: u64,
+    /// Records applied by the first replay (== `durable_lsn` on success).
+    pub replayed: u64,
+    /// Records applied by a second, idempotence-probing replay (must be 0).
+    pub second_replay: u64,
+}
+
+impl CrashCheck {
+    /// The invariants every store must satisfy (the cache's weaker put
+    /// contract is the caller's extra allowance, not a weaker baseline).
+    pub fn holds_for_index_store(&self) -> bool {
+        self.missing_puts == 0 && self.holds_for_cache()
+    }
+
+    pub fn holds_for_cache(&self) -> bool {
+        self.resurrected_deletes == 0
+            && self.unacked_perturbed == 0
+            && self.replayed == self.durable_lsn
+            && self.second_replay == 0
+    }
+}
+
+/// One crash–recovery drill: build a WAL-enabled store, run it to
+/// `crash_at` of simulated time, then "crash" — drop the machine mid-flight
+/// and keep only what a real recovery would have: the durable WAL prefix
+/// and the (deterministically reconstructible) initial disk image. A fresh
+/// store built from the same constructor seed replays the log and the
+/// recovered state is audited against the WAL's own oracle
+/// (`Wal::durable_last_kind`):
+///
+/// - acked-durable: every durable-final Put present, Delete absent;
+/// - unacked-atomic: keys only touched after the durable horizon keep
+///   their pre-crash-run state;
+/// - idempotence: a second replay applies nothing (the `applied_lsn`
+///   watermark), leaving state identical.
+///
+/// `build` must construct the store with its WAL enabled and must be
+/// deterministic in the `Rng` it is handed (both invocations get
+/// `Rng::new(seed)`).
+pub fn crash_recover_check<S, F>(
+    build: F,
+    mcfg: MachineConfig,
+    seed: u64,
+    crash_at: Dur,
+) -> CrashCheck
+where
+    S: Service + Durable,
+    F: Fn(&mut Rng) -> S,
+{
+    // Run to the crash point and stop: in-memory state dies, the log lives.
+    let mut rng = Rng::new(seed);
+    let kv = build(&mut rng);
+    let mut m = Machine::new(mcfg, kv);
+    let t0 = m.now();
+    m.run_until(t0 + crash_at);
+    let dead = m.service;
+    assert!(dead.wal().enabled(), "crash drill needs a WAL-enabled store");
+
+    let oracle = dead.wal().durable_last_kind();
+    let durable = dead.wal().durable_lsn();
+    // Keys only touched beyond the durable horizon: recovery must leave
+    // them exactly as a never-crashed rebuild would (no torn effects).
+    let unacked_keys: Vec<u64> = dead.wal().records()[durable as usize..]
+        .iter()
+        .map(|r| r.key)
+        .filter(|k| !oracle.contains_key(k))
+        .collect();
+
+    // Recovery: same constructor seed → same preloaded disk image.
+    let mut rng = Rng::new(seed);
+    let mut fresh = build(&mut rng);
+    let before: Vec<bool> = unacked_keys.iter().map(|&k| fresh.wal_present(k)).collect();
+    let mut replay_rng = Rng::new(seed ^ 0x4ec0_4ec0);
+    let replayed = fresh.wal_replay(dead.wal(), &mut replay_rng);
+    let second_replay = fresh.wal_replay(dead.wal(), &mut replay_rng);
+
+    let mut missing_puts = 0;
+    let mut resurrected_deletes = 0;
+    for (k, kind) in &oracle {
+        match kind {
+            WalKind::Put => {
+                if !fresh.wal_present(*k) {
+                    missing_puts += 1;
+                }
+            }
+            WalKind::Delete => {
+                if fresh.wal_present(*k) {
+                    resurrected_deletes += 1;
+                }
+            }
+        }
+    }
+    let unacked_perturbed = unacked_keys
+        .iter()
+        .zip(&before)
+        .filter(|(k, was)| fresh.wal_present(**k) != **was)
+        .count() as u64;
+    CrashCheck {
+        durable_lsn: durable,
+        total_records: dead.wal().records().len() as u64,
+        missing_puts,
+        resurrected_deletes,
+        unacked_perturbed,
+        replayed,
+        second_replay,
     }
 }
 
@@ -873,6 +1088,8 @@ mod tests {
             io_reads: 0,
             io_writes: 0,
             io_bytes: 0,
+            io_retries: 0,
+            io_errors: 0,
             lock_contention: 0.0,
         }
     }
@@ -952,6 +1169,73 @@ mod tests {
         // t_mem = (2 - 1*(0.8)) / 10 = 0.12
         assert!((p.t_mem - 0.12).abs() < 1e-9, "t_mem={}", p.t_mem);
         assert!((p.m_per_io() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn durable_run_disabled_wal_matches_placed_path() {
+        use crate::workload::YcsbWorkload;
+        // WAL off: the durable helper is the placed path plus zeroed WAL
+        // counters — same seeds, same store, bit-identical stats.
+        let sweep = SweepCfg {
+            window: Dur::ms(4.0),
+            warmup: Dur::ms(1.0),
+            l_mem: Dur::us(2.0),
+            ..Default::default()
+        };
+        let d = run_store_ycsb_durable(
+            StoreKind::Lsm,
+            YcsbWorkload::A,
+            &sweep,
+            16,
+            WalConfig::default(),
+        );
+        let (st, _, _) = run_store_ycsb_placed(StoreKind::Lsm, YcsbWorkload::A, &sweep, 16);
+        assert_eq!(d.stats.ops, st.ops);
+        assert_eq!(d.stats.io_writes, st.io_writes);
+        assert_eq!(d.wal, WalStats::default());
+        assert!(d.acked_all_durable, "vacuously true with no acks");
+        assert_eq!((d.io_errors, d.failed_ops), (0, 0));
+        // WAL on: same workload now carries log flushes and extra writes.
+        let w = run_store_ycsb_durable(
+            StoreKind::Lsm,
+            YcsbWorkload::A,
+            &sweep,
+            16,
+            WalConfig::on(),
+        );
+        assert!(w.wal.appends > 0 && w.wal.flushes > 0);
+        assert!(w.acked_all_durable);
+        assert!(w.stats.io_writes > d.stats.io_writes, "log writes are real IO");
+    }
+
+    #[test]
+    fn crash_drill_holds_on_a_quiet_and_busy_store() {
+        use crate::workload::OpMix;
+        let build = |rng: &mut Rng| {
+            LsmKv::new(
+                LsmKvConfig {
+                    mix: OpMix::ratio(1, 3),
+                    wal: WalConfig::on(),
+                    ..Default::default()
+                },
+                rng,
+            )
+        };
+        let mcfg = MachineConfig {
+            threads_per_core: 32,
+            n_locks: 64,
+            ..MachineConfig::default()
+        };
+        for crash_ms in [0.5, 4.0] {
+            let c = crash_recover_check(build, mcfg.clone(), 0xc4a5, Dur::ms(crash_ms));
+            assert!(
+                c.holds_for_index_store(),
+                "crash at {crash_ms}ms violated recovery invariants: {c:?}"
+            );
+            if crash_ms > 1.0 {
+                assert!(c.durable_lsn > 0, "a busy run must have durable records");
+            }
+        }
     }
 
     #[test]

@@ -30,6 +30,7 @@
 
 use super::common::{fnv1a, DriveCounts, KvStats, NIL};
 use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
+use super::wal::{Durable, Wal, WalConfig, WalKind, WalRecord};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step};
 use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ValueSize};
@@ -83,6 +84,11 @@ pub struct CacheKvConfig {
     /// hash chains ≻ LRU lists. The write-path invalidations route through
     /// the same policy (they previously assumed secondary-tier hops).
     pub placement: PlacementPolicy,
+    /// Write-ahead log (`kvs::wal`; disabled by default). For a cache the
+    /// recovery contract is deliberately weaker: an acked **delete** must
+    /// never resurrect after replay; an acked write is present-or-evicted
+    /// (capacity eviction of a durable put is legal cache behavior).
+    pub wal: WalConfig,
 }
 
 impl Default for CacheKvConfig {
@@ -104,6 +110,7 @@ impl Default for CacheKvConfig {
             t2_admit_prob: 0.9,
             page_bytes: 4096,
             placement: PlacementPolicy::AllSecondary,
+            wal: WalConfig::default(),
         }
     }
 }
@@ -144,6 +151,8 @@ pub struct CacheKv {
     /// class, the pinned bucket directory included.
     pub profile: AccessProfile,
     pub stats: KvStats,
+    /// The store's write-ahead log (`kvs::wal`; inert when disabled).
+    pub wal: Wal,
 }
 
 #[derive(Debug)]
@@ -156,22 +165,25 @@ pub enum CacheOp {
         cur: u32,
         bucket_read: bool,
     },
-    /// Hit: maybe refresh LRU (lock + 3 dependent accesses).
-    Refresh { key: u64, hops: u8 },
+    /// Hit: maybe refresh LRU (lock + 3 dependent accesses). `durable` —
+    /// this is a write/RMW update-in-place that must WAL-commit before ack.
+    Refresh { key: u64, hops: u8, durable: bool },
     /// Tier-1 miss: read the tier-2 page.
-    T2Read { key: u64 },
+    T2Read { key: u64, durable: bool },
     /// After the page read (or backend fetch): insert into tier 1.
     Insert {
         key: u64,
         hops: u8,
         evict_write: bool,
         locked: bool,
+        durable: bool,
     },
     /// Both tiers missed: backend fetch (compute), then insert.
-    Backend { key: u64 },
+    Backend { key: u64, durable: bool },
     /// Deferred SOC page write for an admitted tier-1 eviction; `shard` is
     /// the slab hash routing the page to its device of the SSD array.
-    SocWrite { shard: u64 },
+    /// `commit` carries the op's WAL record into commit-wait afterwards.
+    SocWrite { shard: u64, commit: Option<u64> },
     /// Invalidation: chain walk, locked tier-1 unlink, tier-2 index removal.
     Delete {
         key: u64,
@@ -181,6 +193,10 @@ pub enum CacheOp {
     },
     /// Unsupported ordered scan: one API-call of compute, then done.
     ScanNoop,
+    /// WAL commit wait (`kvs::wal` protocol; entered lock-free).
+    WalCommit { lsn: u64 },
+    /// This op leads the flush of records `[.., upto)`; its own is `lsn`.
+    WalFlush { upto: u64, lsn: u64 },
     Finished,
 }
 
@@ -223,6 +239,7 @@ impl CacheKv {
             plan,
             profile,
             stats: KvStats::default(),
+            wal: Wal::new(cfg.wal.clone()),
             keygen,
             cfg,
         };
@@ -588,16 +605,19 @@ impl Service for CacheKv {
                     // Tier-1 miss (counted for every kind — see
                     // KvStats::t1_probes).
                     self.stats.t1_probes += 1;
+                    // Writes and the RMW's write half are durable mutations
+                    // (WAL-committed before ack when the log is enabled).
+                    let durable = kd != OpKind::Read;
                     match kd {
                         OpKind::Read | OpKind::Rmw => {
                             if self.t2_set.contains_key(&k) {
-                                *op = CacheOp::T2Read { key: k };
+                                *op = CacheOp::T2Read { key: k, durable };
                             } else {
                                 // Absent from both tiers (deleted or never
                                 // cached): read-through from the backend.
                                 self.stats.misses += 1;
                                 self.stats.absent += 1;
-                                *op = CacheOp::Backend { key: k };
+                                *op = CacheOp::Backend { key: k, durable };
                             }
                         }
                         _ => {
@@ -607,6 +627,7 @@ impl Service for CacheKv {
                                 hops: 0,
                                 evict_write: false,
                                 locked: false,
+                                durable,
                             };
                         }
                     }
@@ -620,7 +641,11 @@ impl Service for CacheKv {
                     self.stats.t1_hits += 1;
                     self.stats.t1_probes += 1;
                     if rng.chance(self.cfg.lru_refresh_prob) || kd != OpKind::Read {
-                        *op = CacheOp::Refresh { key: k, hops: 0 };
+                        *op = CacheOp::Refresh {
+                            key: k,
+                            hops: 0,
+                            durable: kd != OpKind::Read,
+                        };
                         // Neighbor reads happen unlocked; only the final
                         // splice runs under the (sharded) LRU lock —
                         // holding a lock across prefetch+yield accesses
@@ -635,8 +660,9 @@ impl Service for CacheKv {
                 // Chain hop: dependent access at the chain class's tier.
                 self.class_access(CC_CHAINS)
             }
-            CacheOp::Refresh { key, hops } => {
+            CacheOp::Refresh { key, hops, durable } => {
                 let k = *key;
+                let durable = *durable;
                 match *hops {
                     0 => {
                         *hops = 1;
@@ -660,12 +686,20 @@ impl Service for CacheKv {
                     }
                     _ => {
                         self.stats.verified += 1;
-                        *op = CacheOp::Finished;
+                        // Mutation done and lock released below: writes
+                        // enter commit-wait, read refreshes just finish.
+                        *op = if durable && self.wal.enabled() {
+                            let vsize = self.cfg.value_size.mean() as u32;
+                            let lsn = self.wal.append(WalKind::Put, k, vsize);
+                            CacheOp::WalCommit { lsn }
+                        } else {
+                            CacheOp::Finished
+                        };
                         Step::Unlock(lru_lock(k))
                     }
                 }
             }
-            CacheOp::T2Read { key } => {
+            CacheOp::T2Read { key, durable } => {
                 let k = *key;
                 self.stats.hits += 1;
                 self.stats.t2_hits += 1;
@@ -674,6 +708,7 @@ impl Service for CacheKv {
                     hops: 0,
                     evict_write: false,
                     locked: false,
+                    durable: *durable,
                 };
                 Step::Io {
                     kind: IoKind::Read,
@@ -685,13 +720,14 @@ impl Service for CacheKv {
                     shard: fnv1a(k),
                 }
             }
-            CacheOp::Backend { key } => {
+            CacheOp::Backend { key, durable } => {
                 let k = *key;
                 *op = CacheOp::Insert {
                     key: k,
                     hops: 0,
                     evict_write: false,
                     locked: false,
+                    durable: *durable,
                 };
                 // Backend fetch: the paper's CacheBench treats this as a set;
                 // charge marshalling compute only.
@@ -702,6 +738,7 @@ impl Service for CacheKv {
                 hops,
                 evict_write,
                 locked,
+                durable,
             } => {
                 // Walk/eviction-candidate reads happen unlocked (4 dependent
                 // accesses over the LRU lists); only the final structural
@@ -728,17 +765,33 @@ impl Service for CacheKv {
                 // Release the lock first (CacheLib enqueues the flash write
                 // outside the eviction critical section), then issue the
                 // deferred SOC page write if the eviction was admitted.
+                // Durable inserts append their record now (the mutation is
+                // done) and commit-wait after the unlock / page write.
                 let k = *key;
+                let commit = if *durable && self.wal.enabled() {
+                    let vsize = self.cfg.value_size.mean() as u32;
+                    Some(self.wal.append(WalKind::Put, k, vsize))
+                } else {
+                    None
+                };
                 *op = if write_page {
-                    CacheOp::SocWrite { shard: fnv1a(k) }
+                    CacheOp::SocWrite {
+                        shard: fnv1a(k),
+                        commit,
+                    }
+                } else if let Some(lsn) = commit {
+                    CacheOp::WalCommit { lsn }
                 } else {
                     CacheOp::Finished
                 };
                 Step::Unlock(evict_lock(k))
             }
-            CacheOp::SocWrite { shard } => {
+            CacheOp::SocWrite { shard, commit } => {
                 let s = *shard;
-                *op = CacheOp::Finished;
+                *op = match *commit {
+                    Some(lsn) => CacheOp::WalCommit { lsn },
+                    None => CacheOp::Finished,
+                };
                 Step::Io {
                     kind: IoKind::Write,
                     bytes: self.cfg.page_bytes,
@@ -765,12 +818,19 @@ impl Service for CacheKv {
                         let id = *cur;
                         if id == NIL {
                             // Not tier-1 resident: invalidate the tier-2
-                            // index entry (a DRAM structure update).
+                            // index entry (a DRAM structure update). The
+                            // invalidation is still acked — it must not
+                            // resurrect after a crash, so it WAL-commits.
                             let was_t2 = self.t2_invalidate(k);
                             if !was_t2 {
                                 self.stats.absent += 1;
                             }
-                            *op = CacheOp::Finished;
+                            *op = if self.wal.enabled() {
+                                let lsn = self.wal.append(WalKind::Delete, k, 0);
+                                CacheOp::WalCommit { lsn }
+                            } else {
+                                CacheOp::Finished
+                            };
                             return Step::Compute(self.cfg.t_node);
                         }
                         let it = self.items[id as usize];
@@ -796,7 +856,12 @@ impl Service for CacheKv {
                         Step::Compute(self.cfg.t_node)
                     }
                     _ => {
-                        *op = CacheOp::Finished;
+                        *op = if self.wal.enabled() {
+                            let lsn = self.wal.append(WalKind::Delete, k, 0);
+                            CacheOp::WalCommit { lsn }
+                        } else {
+                            CacheOp::Finished
+                        };
                         Step::Unlock(lru_lock(k))
                     }
                 }
@@ -807,7 +872,80 @@ impl Service for CacheKv {
                 *op = CacheOp::Finished;
                 Step::Compute(self.cfg.t_node)
             }
+            CacheOp::WalCommit { lsn } => {
+                let lsn = *lsn;
+                if self.wal.is_durable(lsn) {
+                    self.wal.mark_acked(lsn);
+                    *op = CacheOp::Finished;
+                    return Step::Compute(self.cfg.t_node);
+                }
+                if let Some((upto, bytes)) = self.wal.try_lead(lsn) {
+                    *op = CacheOp::WalFlush { upto, lsn };
+                    return Step::Io {
+                        kind: IoKind::Write,
+                        bytes,
+                        extra_pre: Dur::ZERO,
+                        extra_post: Dur::ZERO,
+                        shard: self.wal.cfg.log_shard,
+                    };
+                }
+                self.wal.note_poll();
+                Step::Yield
+            }
+            CacheOp::WalFlush { upto, lsn } => {
+                self.wal.flush_done(*upto);
+                self.wal.mark_acked(*lsn);
+                *op = CacheOp::Finished;
+                Step::Compute(self.cfg.t_node)
+            }
             CacheOp::Finished => Step::Done,
+        }
+    }
+
+    fn io_failed(&mut self, _tid: usize, op: &mut CacheOp) {
+        // Graceful degradation: surface the error per-op and terminate
+        // without acking. No cachekv IO is issued while holding a lock
+        // (T2Read fires before the eviction lock, the SOC write after the
+        // unlock), so terminating here leaks nothing. A failed log flush
+        // releases WAL leadership for re-election.
+        self.stats.io_errors += 1;
+        if let CacheOp::WalFlush { upto, .. } = *op {
+            self.wal.flush_aborted(upto);
+        }
+        self.stats.failed_ops += 1;
+        *op = CacheOp::Finished;
+    }
+}
+
+impl Durable for CacheKv {
+    fn wal(&self) -> &Wal {
+        &self.wal
+    }
+
+    fn wal_mut(&mut self) -> &mut Wal {
+        &mut self.wal
+    }
+
+    fn wal_present(&self, key: u64) -> bool {
+        self.contains_key(key)
+    }
+
+    /// Cache recovery: replayed puts re-enter tier 1 (later capacity
+    /// evictions are legal), replayed deletes invalidate both tiers — the
+    /// no-resurrection half of the contract, which is strict.
+    fn replay_record(&mut self, rec: &WalRecord, rng: &mut Rng) {
+        match rec.kind {
+            WalKind::Put => {
+                if self.t1_lookup(rec.key).is_none() {
+                    self.t1_insert(rec.key, rng);
+                }
+            }
+            WalKind::Delete => {
+                if let Some(id) = self.t1_lookup(rec.key) {
+                    self.t1_remove(id);
+                }
+                self.t2_invalidate(rec.key);
+            }
         }
     }
 }
@@ -1474,5 +1612,80 @@ mod tests {
         // The RMW write-half splices unconditionally: more hops than a read.
         let rmw = kv.model_params(OpKind::Rmw);
         assert!(rmw.m > read.m);
+    }
+
+    #[test]
+    fn wal_commits_writes_and_deletes_before_ack() {
+        let mut rng = Rng::new(50);
+        let mut kv = CacheKv::new(
+            CacheKvConfig {
+                wal: WalConfig::on(),
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        let key = 77u64;
+        let op = kv.op_put(key);
+        let (_, _, writes) = drive(&mut kv, op, &mut rng);
+        assert!(writes >= 1, "put must issue a log write");
+        assert!(kv.wal.is_durable(0));
+        let op = kv.op_delete(key);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.wal.stats.appends, 2);
+        assert!(kv.wal.acked_all_durable());
+        // Reads never log — the get-after-delete read-throughs and
+        // re-caches, but its insert is not a durable mutation.
+        let op = kv.op_get(key);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.wal.stats.appends, 2, "reads must not log");
+        // An RMW is a durable mutation whichever tier it lands on.
+        let op = kv.op_rmw(key);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.wal.stats.appends, 3, "rmw must log its write half");
+        assert!(kv.wal.acked_all_durable());
+    }
+
+    #[test]
+    fn wal_replay_never_resurrects_acked_deletes() {
+        let mut rng = Rng::new(51);
+        let mut kv = CacheKv::new(
+            CacheKvConfig {
+                wal: WalConfig::on(),
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        // Interleave puts and deletes; the last durable record per key
+        // decides its post-recovery fate.
+        for k in 0..50u64 {
+            let op = kv.op_put(k);
+            drive(&mut kv, op, &mut rng);
+        }
+        for k in 0..50u64 {
+            if k % 2 == 0 {
+                let op = kv.op_delete(k);
+                drive(&mut kv, op, &mut rng);
+            }
+        }
+        assert!(kv.wal.acked_all_durable());
+
+        // Crash and recover into a fresh store.
+        let mut rng2 = Rng::new(51);
+        let mut kv2 = CacheKv::new(
+            CacheKvConfig {
+                wal: WalConfig::on(),
+                ..small_cfg()
+            },
+            &mut rng2,
+        );
+        kv2.wal_replay(&kv.wal, &mut rng2);
+        for (key, kind) in kv.wal.durable_last_kind() {
+            if kind == WalKind::Delete {
+                assert!(!kv2.contains_key(key), "resurrected delete {key}");
+            }
+            // Puts are present-or-evicted: no assertion (cache contract).
+        }
+        // Idempotence: a second replay applies nothing.
+        assert_eq!(kv2.wal_replay(&kv.wal, &mut rng2), 0);
     }
 }

@@ -60,7 +60,9 @@ pub fn fnv1a(x: u64) -> u64 {
 
 /// Correctness counters maintained by every store: reads verify the value
 /// fetched from the (simulated) SSD against the deterministic disk image.
-#[derive(Debug, Clone, Default)]
+/// (`PartialEq` so the WAL replay-idempotence property test can assert
+/// bit-identical recovered state.)
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct KvStats {
     pub gets: u64,
     pub hits: u64,
@@ -89,6 +91,11 @@ pub struct KvStats {
     pub t1_probes: u64,
     /// Background work performed.
     pub bg_ops: u64,
+    /// IO errors surfaced to this store (`Service::io_failed` deliveries).
+    pub io_errors: u64,
+    /// Operations that finished with an error instead of a result (the
+    /// graceful-degradation path: errors surface per-op, nothing wedges).
+    pub failed_ops: u64,
 }
 
 impl KvStats {

@@ -34,6 +34,7 @@ use std::collections::HashSet;
 
 use super::common::{fnv1a, DriveCounts, KvStats, NIL};
 use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
+use super::wal::{Durable, Wal, WalConfig, WalKind, WalRecord};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step};
 use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ScanLen, ValueSize};
@@ -88,6 +89,9 @@ pub struct LsmKvConfig {
     /// Tier placement of the block cache's structures (`kvs::placement`):
     /// handles (chains+LRU) ≻ restart arrays ≻ data-block bytes.
     pub placement: PlacementPolicy,
+    /// Write-ahead log (`kvs::wal`; disabled by default — mutations then
+    /// ack straight from the memtable, the historical behavior).
+    pub wal: WalConfig,
 }
 
 impl Default for LsmKvConfig {
@@ -115,6 +119,7 @@ impl Default for LsmKvConfig {
             memtable_cap: 4096,
             compaction: true,
             placement: PlacementPolicy::AllSecondary,
+            wal: WalConfig::default(),
         }
     }
 }
@@ -162,6 +167,8 @@ pub struct LsmKv {
     /// background thread flushes them into the SSTable levels.
     sealed_tombstones: HashSet<u64>,
     pub stats: KvStats,
+    /// The store's write-ahead log (`kvs::wal`; inert when disabled).
+    pub wal: Wal,
     /// Resolved tier placement over the block-cache structure classes
     /// (re-resolved over measured access densities by [`LsmKv::replan`]).
     plan: Plan,
@@ -235,6 +242,12 @@ pub enum LsmOp {
     BgFlush { ios_left: u8, write: bool },
     BgPause,
     BgYield,
+    /// WAL commit wait: ack once the record at `lsn` is durable, leading a
+    /// group flush if none is in flight (`kvs::wal` protocol).
+    WalCommit { lsn: u64 },
+    /// This op leads the flush of records `[.., upto)`; its own record is
+    /// `lsn`. Reached after the log write completes (or fails).
+    WalFlush { upto: u64, lsn: u64 },
     Finished,
 }
 
@@ -297,6 +310,7 @@ impl LsmKv {
             fresh_tombstones: HashSet::new(),
             sealed_tombstones: HashSet::new(),
             stats: KvStats::default(),
+            wal: Wal::new(cfg.wal.clone()),
             plan,
             profile,
             bg_tid_floor: usize::MAX,
@@ -1097,6 +1111,12 @@ impl Service for LsmKv {
                 }
                 let k = *key;
                 self.memtable_write(k);
+                if self.wal.enabled() {
+                    let vsize = self.cfg.value_size.mean() as u32;
+                    let lsn = self.wal.append(WalKind::Put, k, vsize);
+                    *op = LsmOp::WalCommit { lsn };
+                    return Step::Compute(self.wal.cfg.append_cpu);
+                }
                 *op = LsmOp::Finished;
                 Step::Compute(Dur::ns(150.0)) // WAL append (buffered)
             }
@@ -1110,6 +1130,11 @@ impl Service for LsmKv {
                 self.deleted.insert(k);
                 self.fresh_tombstones.insert(k);
                 self.memtable_fill_tick();
+                if self.wal.enabled() {
+                    let lsn = self.wal.append(WalKind::Delete, k, 0);
+                    *op = LsmOp::WalCommit { lsn };
+                    return Step::Compute(self.wal.cfg.append_cpu);
+                }
                 *op = LsmOp::Finished;
                 Step::Compute(Dur::ns(150.0)) // WAL tombstone append
             }
@@ -1243,7 +1268,76 @@ impl Service for LsmKv {
                 *op = LsmOp::Finished;
                 Step::Yield
             }
+            LsmOp::WalCommit { lsn } => {
+                let lsn = *lsn;
+                if self.wal.is_durable(lsn) {
+                    // Another leader's group flush covered this record.
+                    self.wal.mark_acked(lsn);
+                    *op = LsmOp::Finished;
+                    return Step::Compute(self.cfg.t_node);
+                }
+                if let Some((upto, bytes)) = self.wal.try_lead(lsn) {
+                    *op = LsmOp::WalFlush { upto, lsn };
+                    return Step::Io {
+                        kind: IoKind::Write,
+                        bytes,
+                        extra_pre: Dur::ZERO,
+                        extra_post: Dur::ZERO,
+                        shard: self.wal.cfg.log_shard,
+                    };
+                }
+                // A flush is in flight: commit-wait (one T_sw poll).
+                self.wal.note_poll();
+                Step::Yield
+            }
+            LsmOp::WalFlush { upto, lsn } => {
+                // Reached only when the log write succeeded (`io_failed`
+                // reroutes failures before this state is re-entered).
+                self.wal.flush_done(*upto);
+                self.wal.mark_acked(*lsn);
+                *op = LsmOp::Finished;
+                Step::Compute(self.cfg.t_node)
+            }
             LsmOp::Finished => Step::Done,
+        }
+    }
+
+    fn io_failed(&mut self, _tid: usize, op: &mut LsmOp) {
+        // Graceful degradation: the op surfaces an error and terminates;
+        // nothing wedges. A failed log flush releases the WAL leadership so
+        // a later committer can re-elect itself. Every IO-bearing state in
+        // this store holds no lock at IO time, so terminating here leaks
+        // nothing.
+        self.stats.io_errors += 1;
+        if let LsmOp::WalFlush { upto, .. } = *op {
+            self.wal.flush_aborted(upto);
+        }
+        self.stats.failed_ops += 1;
+        *op = LsmOp::Finished;
+    }
+}
+
+impl Durable for LsmKv {
+    fn wal(&self) -> &Wal {
+        &self.wal
+    }
+
+    fn wal_mut(&mut self) -> &mut Wal {
+        &mut self.wal
+    }
+
+    fn wal_present(&self, key: u64) -> bool {
+        self.contains_key(key)
+    }
+
+    fn replay_record(&mut self, rec: &WalRecord, _rng: &mut Rng) {
+        match rec.kind {
+            WalKind::Put => self.memtable_write(rec.key),
+            WalKind::Delete => {
+                self.deleted.insert(rec.key);
+                self.fresh_tombstones.insert(rec.key);
+                self.memtable_fill_tick();
+            }
         }
     }
 }
@@ -1264,6 +1358,7 @@ mod tests {
     }
 
     use super::super::common::drive_op;
+    use super::super::wal::WalStats;
 
     /// Drive an op to completion; returns (mem accesses, total IOs).
     fn drive(kv: &mut LsmKv, op: LsmOp, rng: &mut Rng) -> (u32, u32) {
@@ -1740,5 +1835,131 @@ mod tests {
         let op = kv.op_rmw(key);
         drive(&mut kv, op, &mut rng);
         assert!(kv.contains_key(key), "rmw must resurrect the key");
+    }
+
+    #[test]
+    fn wal_disabled_is_inert() {
+        let mut rng = Rng::new(40);
+        let mut kv = LsmKv::new(small_cfg(), &mut rng);
+        for k in 0..10u64 {
+            let op = kv.op_put(k);
+            drive(&mut kv, op, &mut rng);
+            let op = kv.op_delete(k);
+            drive(&mut kv, op, &mut rng);
+        }
+        assert_eq!(kv.wal.stats, WalStats::default(), "WAL off must be inert");
+    }
+
+    #[test]
+    fn wal_commit_acks_only_after_log_write() {
+        let mut rng = Rng::new(41);
+        let mut kv = LsmKv::new(
+            LsmKvConfig {
+                wal: WalConfig::on(),
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        let op = kv.op_put(5);
+        let (_, _, writes) = drive_op(&mut kv, op, &mut rng);
+        assert!(writes >= 1, "commit must issue a log write");
+        assert!(kv.wal.is_durable(0));
+        assert!(kv.wal.acked_all_durable());
+        assert_eq!(kv.wal.stats.appends, 1);
+        assert_eq!(kv.wal.stats.flushes, 1);
+        assert_eq!(kv.wal.stats.flush_bytes, 4096);
+
+        let op = kv.op_delete(5);
+        drive_op(&mut kv, op, &mut rng);
+        assert_eq!(kv.wal.stats.appends, 2);
+        assert!(kv.wal.acked_all_durable());
+        assert_eq!(
+            kv.wal.durable_last_kind().get(&5),
+            Some(&WalKind::Delete)
+        );
+    }
+
+    #[test]
+    fn wal_group_commit_amortizes_flushes_under_machine() {
+        let mut rng = Rng::new(42);
+        let kv = LsmKv::new(
+            LsmKvConfig {
+                mix: OpMix::ratio(0, 1),
+                wal: WalConfig::on(),
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        let mut m = Machine::new(
+            MachineConfig {
+                threads_per_core: 32,
+                n_locks: 64,
+                ..Default::default()
+            },
+            kv,
+        );
+        let st = m.run(Dur::ms(2.0), Dur::ms(10.0));
+        let w = &m.service.wal;
+        assert!(st.ops > 100);
+        assert!(w.stats.appends > 100);
+        assert!(
+            w.stats.flushes * 2 < w.stats.appends,
+            "group commit must amortize: {} flushes for {} appends",
+            w.stats.flushes,
+            w.stats.appends
+        );
+        assert!(w.acked_all_durable(), "never ack before durability");
+    }
+
+    #[test]
+    fn wal_replay_restores_durable_state_and_is_idempotent() {
+        let mut rng = Rng::new(43);
+        let kv = LsmKv::new(
+            LsmKvConfig {
+                mix: OpMix::ratio(1, 3),
+                wal: WalConfig::on(),
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        let mut m = Machine::new(
+            MachineConfig {
+                threads_per_core: 32,
+                n_locks: 64,
+                ..Default::default()
+            },
+            kv,
+        );
+        let _ = m.run(Dur::ms(1.0), Dur::ms(8.0));
+        // Crash: drop the machine mid-flight; only the WAL survives.
+        let old = m.service;
+        assert!(old.wal.stats.appends > 50);
+        assert!(old.wal.acked_all_durable());
+
+        let mut rng2 = Rng::new(43);
+        let mut kv2 = LsmKv::new(
+            LsmKvConfig {
+                wal: WalConfig::on(),
+                ..small_cfg()
+            },
+            &mut rng2,
+        );
+        let applied = kv2.wal_replay(&old.wal, &mut rng2);
+        assert_eq!(applied, old.wal.durable_lsn());
+        // Recovery oracle: last durable record per key decides presence.
+        for (key, kind) in old.wal.durable_last_kind() {
+            match kind {
+                WalKind::Put => assert!(kv2.contains_key(key), "lost put {key}"),
+                WalKind::Delete => {
+                    assert!(!kv2.contains_key(key), "resurrected delete {key}")
+                }
+            }
+        }
+        // Idempotence: a second replay applies nothing and changes nothing.
+        let stats_before = kv2.stats.clone();
+        let fill_before = kv2.memtable_fill;
+        assert_eq!(kv2.wal_replay(&old.wal, &mut rng2), 0);
+        assert_eq!(kv2.stats, stats_before);
+        assert_eq!(kv2.memtable_fill, fill_before);
     }
 }

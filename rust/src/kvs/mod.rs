@@ -50,12 +50,14 @@ pub mod common;
 pub mod lsmkv;
 pub mod placement;
 pub mod treekv;
+pub mod wal;
 
 pub use cachekv::{CacheKv, CacheKvConfig};
 pub use common::{drive_op, drive_op_tiers, fnv1a, DriveCounts, KvStats};
 pub use lsmkv::{LsmKv, LsmKvConfig};
 pub use placement::{should_replan, AccessProfile, Plan, PlacementPolicy, StructClass};
 pub use treekv::{TreeKv, TreeKvConfig, SCAN_IO_BATCH};
+pub use wal::{Durable, Wal, WalConfig, WalKind, WalRecord, WalStats};
 
 use crate::model::KindCost;
 use crate::workload::{OpKind, OpWeights};

@@ -44,6 +44,7 @@
 
 use super::common::{fnv1a, DriveCounts, KvStats, NIL};
 use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
+use super::wal::{Durable, Wal, WalConfig, WalKind, WalRecord};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
 use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ScanLen, ValueSize};
@@ -111,6 +112,10 @@ pub struct TreeKvConfig {
     pub defrag: bool,
     /// Number of sprig locks (write path).
     pub n_locks: u32,
+    /// Write-ahead log (`kvs::wal`; disabled by default). Records are keyed
+    /// by **digest** — the index's native encoding — so recovery replays at
+    /// the digest level.
+    pub wal: WalConfig,
 }
 
 impl Default for TreeKvConfig {
@@ -129,6 +134,7 @@ impl Default for TreeKvConfig {
             t_node: Dur::ns(110.0),
             defrag: true,
             n_locks: 64,
+            wal: WalConfig::default(),
         }
     }
 }
@@ -156,6 +162,8 @@ pub struct TreeKv {
     /// ticks its level class) — the input to [`TreeKv::replan`].
     pub profile: AccessProfile,
     pub stats: KvStats,
+    /// The store's write-ahead log (`kvs::wal`; inert when disabled).
+    pub wal: Wal,
     /// `tid % bg_threads_per_core == bg_tid_floor` marks a background
     /// defragger thread (one per core); `usize::MAX` disables them.
     bg_tid_floor: usize,
@@ -243,6 +251,18 @@ pub enum TreeOp {
     },
     Unlock {
         lock: u32,
+        /// The op's WAL record to commit-wait on after the lock release
+        /// (`None`: nothing durable happened, finish directly).
+        commit: Option<u64>,
+    },
+    /// WAL commit wait (`kvs::wal` protocol; entered lock-free).
+    WalCommit {
+        lsn: u64,
+    },
+    /// This op leads the flush of records `[.., upto)`; its own is `lsn`.
+    WalFlush {
+        upto: u64,
+        lsn: u64,
     },
     /// Background defrag: read an old block, re-append its live entry.
     DefragRead,
@@ -267,6 +287,7 @@ impl TreeKv {
             plan,
             profile: AccessProfile::new(n_classes),
             stats: KvStats::default(),
+            wal: Wal::new(cfg.wal.clone()),
             bg_tid_floor: usize::MAX,
             bg_threads_per_core: 1,
             keygen,
@@ -500,6 +521,86 @@ impl TreeKv {
             debug_assert_eq!(self.nodes[parent as usize].right, child);
             self.nodes[parent as usize].right = with;
         }
+    }
+
+    /// Append a WAL record for a completed index mutation (digest-keyed);
+    /// `None` when the log is disabled.
+    #[inline]
+    fn wal_append(&mut self, kind: WalKind, digest: u64, vsize: u32) -> Option<u64> {
+        self.wal
+            .enabled()
+            .then(|| self.wal.append(kind, digest, vsize))
+    }
+
+    /// Recovery applier for a durable `Put`: upsert at the digest level
+    /// (update-in-place when the digest exists, fresh attach otherwise) —
+    /// unsimulated, like the load phase.
+    fn upsert_unsimulated(&mut self, digest: u64, vsize: u32, rng: &mut Rng) {
+        let block = self.append_to_log(digest);
+        let sprig = self.sprig_of(digest);
+        let mut cur = self.roots[sprig];
+        let mut parent = NIL;
+        let mut depth = 0u32;
+        while cur != NIL {
+            let n = self.nodes[cur as usize];
+            if digest == n.digest {
+                self.nodes[cur as usize].block = block;
+                self.nodes[cur as usize].vsize = vsize;
+                self.dead_blocks += 1;
+                return;
+            }
+            depth += 1;
+            parent = cur;
+            cur = if digest < n.digest { n.left } else { n.right };
+        }
+        self.attach_new(digest, block, vsize, parent, depth, rng);
+    }
+
+    /// Recovery applier for a durable `Delete`: BST unlink at the digest
+    /// level (successor splice for two-child nodes), mirroring the
+    /// simulated delete path's structural effect.
+    fn delete_unsimulated(&mut self, digest: u64) {
+        let sprig = self.sprig_of(digest);
+        let mut parent = NIL;
+        let mut cur = self.roots[sprig];
+        while cur != NIL {
+            let n = self.nodes[cur as usize];
+            if digest == n.digest {
+                break;
+            }
+            parent = cur;
+            cur = if digest < n.digest { n.left } else { n.right };
+        }
+        if cur == NIL {
+            return;
+        }
+        let n = self.nodes[cur as usize];
+        if n.left != NIL && n.right != NIL {
+            let mut sp = cur;
+            let mut s = n.right;
+            while self.nodes[s as usize].left != NIL {
+                sp = s;
+                s = self.nodes[s as usize].left;
+            }
+            let succ = self.nodes[s as usize];
+            if sp == cur {
+                self.nodes[cur as usize].right = succ.right;
+            } else {
+                self.nodes[sp as usize].left = succ.right;
+            }
+            let tn = &mut self.nodes[cur as usize];
+            tn.digest = succ.digest;
+            tn.block = succ.block;
+            tn.vsize = succ.vsize;
+            self.nodes[s as usize].in_dram = false;
+            self.free_nodes.push(s);
+        } else {
+            let child = if n.left != NIL { n.left } else { n.right };
+            self.replace_child(sprig, parent, cur, child);
+            self.nodes[cur as usize].in_dram = false;
+            self.free_nodes.push(cur);
+        }
+        self.dead_blocks += 1;
     }
 
     fn insert_unsimulated(&mut self, digest: u64, block: u32, vsize: u32, rng: &mut Rng) {
@@ -1046,7 +1147,8 @@ impl Service for TreeKv {
                     let (d, nb, vs, par, dep, lock) =
                         (*digest, *new_block, *vsize, *parent, *depth, *locked);
                     let id = self.attach_new(d, nb, vs, par, dep, rng);
-                    *op = TreeOp::Unlock { lock };
+                    let commit = self.wal_append(WalKind::Put, d, vs);
+                    *op = TreeOp::Unlock { lock, commit };
                     return self.entry_access(id);
                 }
                 if !*compute_done {
@@ -1061,8 +1163,9 @@ impl Service for TreeKv {
                     self.nodes[idx].block = *new_block;
                     self.nodes[idx].vsize = *vsize;
                     self.dead_blocks += 1;
-                    let lock = *locked;
-                    *op = TreeOp::Unlock { lock };
+                    let (d, vs, lock) = (*digest, *vsize, *locked);
+                    let commit = self.wal_append(WalKind::Put, d, vs);
+                    *op = TreeOp::Unlock { lock, commit };
                 } else {
                     *parent = *node;
                     *depth += 1;
@@ -1091,10 +1194,11 @@ impl Service for TreeKv {
                     *parent = NIL;
                 }
                 if *node == NIL {
-                    // Key absent (already deleted / never written).
+                    // Key absent (already deleted / never written): nothing
+                    // mutated, nothing to log.
                     self.stats.absent += 1;
                     let lock = *locked;
-                    *op = TreeOp::Unlock { lock };
+                    *op = TreeOp::Unlock { lock, commit: None };
                     return Step::Compute(self.cfg.t_node);
                 }
                 if !*compute_done {
@@ -1127,7 +1231,9 @@ impl Service for TreeKv {
                         self.nodes[nd as usize].in_dram = false;
                         self.free_nodes.push(nd);
                         self.dead_blocks += 1;
-                        *op = TreeOp::Unlock { lock };
+                        let d = *digest;
+                        let commit = self.wal_append(WalKind::Delete, d, 0);
+                        *op = TreeOp::Unlock { lock, commit };
                     }
                 } else {
                     *parent = *node;
@@ -1158,6 +1264,7 @@ impl Service for TreeKv {
                     // into the target slot (the target's old value block
                     // becomes garbage).
                     let (t, p, c, lock) = (*target, *parent, *cur, *locked);
+                    let deleted = self.nodes[t as usize].digest;
                     let succ = self.nodes[c as usize];
                     if p == t {
                         self.nodes[t as usize].right = succ.right;
@@ -1171,7 +1278,8 @@ impl Service for TreeKv {
                     self.nodes[c as usize].in_dram = false;
                     self.free_nodes.push(c);
                     self.dead_blocks += 1;
-                    *op = TreeOp::Unlock { lock };
+                    let commit = self.wal_append(WalKind::Delete, deleted, 0);
+                    *op = TreeOp::Unlock { lock, commit };
                 }
                 step
             }
@@ -1246,10 +1354,39 @@ impl Service for TreeKv {
                     shard,
                 }
             }
-            TreeOp::Unlock { lock } => {
+            TreeOp::Unlock { lock, commit } => {
                 let l = *lock;
-                *op = TreeOp::Finished;
+                *op = match *commit {
+                    Some(lsn) => TreeOp::WalCommit { lsn },
+                    None => TreeOp::Finished,
+                };
                 Step::Unlock(l)
+            }
+            TreeOp::WalCommit { lsn } => {
+                let lsn = *lsn;
+                if self.wal.is_durable(lsn) {
+                    self.wal.mark_acked(lsn);
+                    *op = TreeOp::Finished;
+                    return Step::Compute(self.cfg.t_node);
+                }
+                if let Some((upto, bytes)) = self.wal.try_lead(lsn) {
+                    *op = TreeOp::WalFlush { upto, lsn };
+                    return Step::Io {
+                        kind: IoKind::Write,
+                        bytes,
+                        extra_pre: Dur::ZERO,
+                        extra_post: Dur::ZERO,
+                        shard: self.wal.cfg.log_shard,
+                    };
+                }
+                self.wal.note_poll();
+                Step::Yield
+            }
+            TreeOp::WalFlush { upto, lsn } => {
+                self.wal.flush_done(*upto);
+                self.wal.mark_acked(*lsn);
+                *op = TreeOp::Finished;
+                Step::Compute(self.cfg.t_node)
             }
             TreeOp::DefragRead => {
                 // Read a random old block; the dead-block cursor stands in
@@ -1291,6 +1428,54 @@ impl Service for TreeKv {
                 Step::Yield
             }
             TreeOp::Finished => Step::Done,
+        }
+    }
+
+    fn io_failed(&mut self, _tid: usize, op: &mut TreeOp) {
+        // Graceful degradation: surface the error per-op and terminate
+        // without acking. Every IO here is issued lock-free — the value
+        // read/write fires before the sprig lock is taken (`UpdateIndex`
+        // locks on its first visit *after* the IO), the log flush after the
+        // unlock — so terminating mid-op leaks nothing. A failed log flush
+        // releases WAL leadership for re-election; a failed value write
+        // leaves only an unreferenced log block (append-only garbage), so
+        // unacked writes stay atomic.
+        self.stats.io_errors += 1;
+        if let TreeOp::WalFlush { upto, .. } = *op {
+            self.wal.flush_aborted(upto);
+        }
+        self.stats.failed_ops += 1;
+        *op = TreeOp::Finished;
+    }
+}
+
+impl Durable for TreeKv {
+    fn wal(&self) -> &Wal {
+        &self.wal
+    }
+
+    fn wal_mut(&mut self) -> &mut Wal {
+        &mut self.wal
+    }
+
+    /// Presence at the WAL's key encoding: records store digests.
+    fn wal_present(&self, key: u64) -> bool {
+        let digest = key;
+        let mut cur = self.roots[self.sprig_of(digest)];
+        while cur != NIL {
+            let n = self.nodes[cur as usize];
+            if digest == n.digest {
+                return true;
+            }
+            cur = if digest < n.digest { n.left } else { n.right };
+        }
+        false
+    }
+
+    fn replay_record(&mut self, rec: &WalRecord, rng: &mut Rng) {
+        match rec.kind {
+            WalKind::Put => self.upsert_unsimulated(rec.key, rec.vsize, rng),
+            WalKind::Delete => self.delete_unsimulated(rec.key),
         }
     }
 }
@@ -1811,5 +1996,85 @@ mod tests {
         let _ = m.run(Dur::ms(1.0), Dur::ms(5.0));
         assert_eq!(m.service.stats.corruptions, 0);
         assert!(m.service.stats.verified > 100);
+    }
+
+    #[test]
+    fn wal_logs_mutations_by_digest_and_acks_after_flush() {
+        use super::super::wal::WalKind;
+        let mut rng = Rng::new(60);
+        let mut kv = TreeKv::new(
+            TreeKvConfig {
+                wal: WalConfig::on(),
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        let key = 123u64;
+        let op = kv.op_write(key, 512);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.wal.stats.appends, 1);
+        assert!(kv.wal.is_durable(0));
+        assert_eq!(kv.wal.records()[0].key, fnv1a(key), "digest encoding");
+        let op = kv.op_delete(key);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.wal.stats.appends, 2);
+        assert_eq!(kv.wal.records()[1].kind, WalKind::Delete);
+        assert!(kv.wal.acked_all_durable());
+        // An absent delete mutates nothing and logs nothing.
+        let op = kv.op_delete(key);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.wal.stats.appends, 2);
+        // Reads never log.
+        let op = kv.op_get(1);
+        drive(&mut kv, op, &mut rng);
+        assert_eq!(kv.wal.stats.appends, 2);
+    }
+
+    #[test]
+    fn wal_replay_restores_durable_index_state() {
+        let mut rng = Rng::new(61);
+        let kv = TreeKv::new(
+            TreeKvConfig {
+                ops: Some(OpWeights::new(0.3, 0.4, 0.3, 0.0, 0.0)),
+                wal: WalConfig::on(),
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        let mut m = Machine::new(
+            MachineConfig {
+                threads_per_core: 16,
+                n_locks: 64,
+                ..Default::default()
+            },
+            kv,
+        );
+        let _ = m.run(Dur::ms(1.0), Dur::ms(8.0));
+        let old = m.service;
+        assert!(old.wal.stats.appends > 20);
+        assert!(old.wal.acked_all_durable());
+
+        // Crash; recover a fresh store from the durable WAL prefix.
+        let mut rng2 = Rng::new(61);
+        let mut kv2 = TreeKv::new(
+            TreeKvConfig {
+                wal: WalConfig::on(),
+                ..small_cfg()
+            },
+            &mut rng2,
+        );
+        let applied = kv2.wal_replay(&old.wal, &mut rng2);
+        assert_eq!(applied, old.wal.durable_lsn());
+        for (digest, kind) in old.wal.durable_last_kind() {
+            use super::super::wal::WalKind;
+            match kind {
+                WalKind::Put => assert!(kv2.wal_present(digest), "lost put {digest:#x}"),
+                WalKind::Delete => {
+                    assert!(!kv2.wal_present(digest), "resurrected delete {digest:#x}")
+                }
+            }
+        }
+        // Idempotent: re-replay applies zero records.
+        assert_eq!(kv2.wal_replay(&old.wal, &mut rng2), 0);
     }
 }

@@ -1,0 +1,435 @@
+//! Write-ahead log with group commit — the durability layer shared by all
+//! three stores.
+//!
+//! Real SSD-backed KV stores do not ack a write when the in-memory index
+//! mutation lands: they first append a log record and make it durable with
+//! an fsync-class device write. This module adds that path to the
+//! simulator's stores while preserving the repo's two core invariants:
+//! **off by default** (a disabled WAL adds zero steps, zero RNG draws, and
+//! keeps every existing summary bit-identical) and **all costs simulated**
+//! (appends are CPU `Step`s, commit waits are `Step::Yield` polls charged
+//! at `T_sw`, and every flush is one `Step::Io` through the `SsdArray`, so
+//! log traffic visibly steals `R_IO`/`B_IO` from foreground reads).
+//!
+//! ## Protocol
+//!
+//! A mutating op applies its in-memory effect, appends a record
+//! ([`Wal::append`], one `append_cpu` compute step), and enters the commit
+//! state. There it loops:
+//!
+//! 1. **Durable already?** (`is_durable`) — ack and finish.
+//! 2. **No flush in flight?** ([`Wal::try_lead`]) — become the *leader*:
+//!    seal every appended-but-unflushed record (group commit) or just its
+//!    own (per-op commit) and issue one log write for the sealed bytes on
+//!    the dedicated `log_shard` route.
+//! 3. **Otherwise** — *follower*: `Step::Yield` (a commit-wait poll, cost
+//!    `T_sw`) and re-check next slice.
+//!
+//! When the leader's IO completes, [`Wal::flush_done`] advances the durable
+//! LSN and every parked follower acks on its next poll. If the log write
+//! *fails* (fault injection), the leader aborts the flush
+//! ([`Wal::flush_aborted`]) so another op can re-elect itself — a failed
+//! log device degrades to per-op errors, never a wedged commit queue.
+//!
+//! ## Group-commit cost model (the Eq 14 extension)
+//!
+//! Let `w_rec` be the record size, `A_sec` the device sector size (a flush
+//! is sector-rounded: one fsync-class write), and `G` the mean batch size
+//! (records per flush, measured as `appends / flushes`). Per foreground op
+//! the log adds
+//!
+//! ```text
+//!   s_log = flushes / ops            log IOs per op      (= 1/G when every
+//!                                                          op logs once)
+//!   w_log = flush_bytes / ops        log bytes per op
+//! ```
+//!
+//! and the Eq 14 device floors gain a foreground/background sharing term —
+//! log writes and foreground value IOs drain the *same* per-device command
+//! and byte servers:
+//!
+//! ```text
+//!   Θ ≤ (R_IO · n_ssd) / (S·r_retry + s_log)      IOPS floor
+//!   Θ ≤ (B_IO · n_ssd) / (S·A_IO   + w_log)      bandwidth floor
+//! ```
+//!
+//! where `r_retry ≥ 1` inflates foreground IO slots by transient-error
+//! resubmissions (`io_retries / ios`). See `model::extended::ExtParams`
+//! {`s_log`, `w_log`, `retry_factor`}. Group commit's whole value is that
+//! `s_log → 1/G`: at `G = 32` threads per batch the per-op IOPS tax is
+//! 1/32nd of per-op commit's, while the byte tax only shrinks until the
+//! batch outgrows one sector — exactly the fsync-amortization argument,
+//! replayed with the paper's floor algebra.
+//!
+//! The commit path also adds per-op CPU/latency (not a floor, an additive
+//! `t_fixed` term): `append_cpu` for the record, `polls/op × T_sw` of
+//! commit-wait, and the leader's IO pre/post amortized over the batch —
+//! `(T_IO_pre + T_IO_post)/G`. The durability experiment predicts WAL-on
+//! throughput from these measured WAL counters and gates on the simulator
+//! agreeing within a documented band.
+//!
+//! ## Crash–recovery
+//!
+//! [`Durable`] is the store-side surface: a crash at simulated time `t` is
+//! modeled by *dropping the machine* (volatile index state is gone) and
+//! constructing a fresh store from the same config + seed, then replaying
+//! the crashed WAL's durable prefix ([`Durable::wal_replay`]). The replay
+//! honors an applied-LSN watermark, so replaying twice is a no-op —
+//! idempotence is by construction, and the property tests assert
+//! bit-identical counters. Recovery invariants:
+//!
+//! - **acked-durable**: every op acked before the crash is in the durable
+//!   prefix (`Wal::acked_all_durable`) and therefore present after replay;
+//! - **unacked-atomic**: an op whose record missed the durable prefix has
+//!   no visible effect after recovery (the fresh store never saw it).
+
+use std::collections::HashMap;
+
+use crate::sim::{Dur, Rng};
+
+/// What a WAL record logs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WalKind {
+    /// Upsert (put or the write half of an RMW); `vsize` is the value size.
+    Put,
+    /// Delete / tombstone.
+    Delete,
+}
+
+/// One log record. `key` is the store's durable key encoding — treekv logs
+/// the 64-bit digest it indexes by; lsmkv/cachekv log the key itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalRecord {
+    pub kind: WalKind,
+    pub key: u64,
+    pub vsize: u32,
+}
+
+/// WAL configuration (a field of every store's config; disabled by default
+/// so existing runs are bit-identical).
+#[derive(Debug, Clone)]
+pub struct WalConfig {
+    pub enabled: bool,
+    /// Group commit (true): the leader seals every unflushed record.
+    /// False: per-op commit — each op flushes exactly its own record (the
+    /// control arm group commit must beat at equal durability).
+    pub group_commit: bool,
+    /// On-log size of one record (header + key + value metadata).
+    pub record_bytes: u32,
+    /// Sector granularity of a flush: the log write is rounded up (an
+    /// fsync-class write always pays at least one sector).
+    pub sector_bytes: u32,
+    /// CPU cost of formatting + buffering one record.
+    pub append_cpu: Dur,
+    /// Shard route of the log writes (`shard % n_ssd` picks the device;
+    /// `u64::MAX` lands on the last device of a power-of-two array). With
+    /// `n_ssd = 1` the log shares the only device and its traffic visibly
+    /// competes with foreground IO — the bandwidth-sharing term above.
+    pub log_shard: u64,
+}
+
+impl Default for WalConfig {
+    fn default() -> WalConfig {
+        WalConfig {
+            enabled: false,
+            group_commit: true,
+            record_bytes: 64,
+            sector_bytes: 4096,
+            append_cpu: Dur::ns(150.0),
+            log_shard: u64::MAX,
+        }
+    }
+}
+
+impl WalConfig {
+    pub fn on() -> WalConfig {
+        WalConfig {
+            enabled: true,
+            ..WalConfig::default()
+        }
+    }
+
+    pub fn per_op() -> WalConfig {
+        WalConfig {
+            enabled: true,
+            group_commit: false,
+            ..WalConfig::default()
+        }
+    }
+}
+
+/// Counters for the WAL cost model (all plain counts; `PartialEq` so the
+/// idempotence property test can assert bit-identical state).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WalStats {
+    /// Records appended.
+    pub appends: u64,
+    /// Log writes issued (leader flushes).
+    pub flushes: u64,
+    /// Records covered by completed flushes.
+    pub flushed_records: u64,
+    /// Bytes of completed log writes (sector-rounded).
+    pub flush_bytes: u64,
+    /// Follower commit-wait polls (each cost one `T_sw` yield).
+    pub commit_polls: u64,
+    /// Flushes aborted by a failed log write.
+    pub aborted_flushes: u64,
+}
+
+/// The write-ahead log of one store. Purely structural — all timing is
+/// charged by the store's op state machine through `Step`s.
+#[derive(Debug, Clone)]
+pub struct Wal {
+    pub cfg: WalConfig,
+    records: Vec<WalRecord>,
+    acked: Vec<bool>,
+    /// Records `[0, durable_lsn)` are on stable storage.
+    durable_lsn: u64,
+    /// A leader's in-flight flush seals `[durable_lsn, upto)`.
+    flush_upto: Option<u64>,
+    /// Replay watermark: records below this were already applied to the
+    /// owning store by `wal_replay` (idempotence).
+    applied_lsn: u64,
+    pub stats: WalStats,
+}
+
+impl Wal {
+    pub fn new(cfg: WalConfig) -> Wal {
+        Wal {
+            cfg,
+            records: Vec::new(),
+            acked: Vec::new(),
+            durable_lsn: 0,
+            flush_upto: None,
+            applied_lsn: 0,
+            stats: WalStats::default(),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Append one record; returns its LSN. The caller charges
+    /// `cfg.append_cpu` as a `Step::Compute`.
+    pub fn append(&mut self, kind: WalKind, key: u64, vsize: u32) -> u64 {
+        let lsn = self.records.len() as u64;
+        self.records.push(WalRecord { kind, key, vsize });
+        self.acked.push(false);
+        self.stats.appends += 1;
+        lsn
+    }
+
+    #[inline]
+    pub fn is_durable(&self, lsn: u64) -> bool {
+        lsn < self.durable_lsn
+    }
+
+    /// Commit-state election. `None` = poll again later (a flush is in
+    /// flight, or `my_lsn` is already durable — the caller checks
+    /// `is_durable` first). `Some((upto, bytes))` = the caller is now the
+    /// flush leader and must issue one log write of `bytes` on
+    /// `cfg.log_shard`, then call `flush_done(upto)` (or `flush_aborted`
+    /// if the write fails).
+    pub fn try_lead(&mut self, my_lsn: u64) -> Option<(u64, u32)> {
+        if self.flush_upto.is_some() || self.is_durable(my_lsn) {
+            return None;
+        }
+        let upto = if self.cfg.group_commit {
+            self.records.len() as u64
+        } else {
+            my_lsn + 1
+        };
+        debug_assert!(upto > self.durable_lsn);
+        let raw = (upto - self.durable_lsn) as u32 * self.cfg.record_bytes;
+        let sector = self.cfg.sector_bytes.max(1);
+        let bytes = raw.div_ceil(sector) * sector;
+        self.flush_upto = Some(upto);
+        self.stats.flushes += 1;
+        Some((upto, bytes))
+    }
+
+    /// The leader's log write completed: `[durable_lsn, upto)` is durable.
+    pub fn flush_done(&mut self, upto: u64) {
+        debug_assert_eq!(self.flush_upto, Some(upto));
+        let sector = self.cfg.sector_bytes.max(1);
+        let raw = (upto - self.durable_lsn) as u32 * self.cfg.record_bytes;
+        self.stats.flush_bytes += (raw.div_ceil(sector) * sector) as u64;
+        self.stats.flushed_records += upto - self.durable_lsn;
+        self.durable_lsn = upto;
+        self.flush_upto = None;
+    }
+
+    /// The leader's log write failed: release the flush so another op can
+    /// re-elect itself (no wedged commit queue). The sealed records stay
+    /// unflushed and unacked.
+    pub fn flush_aborted(&mut self, upto: u64) {
+        debug_assert_eq!(self.flush_upto, Some(upto));
+        self.flush_upto = None;
+        self.stats.aborted_flushes += 1;
+    }
+
+    /// Record a follower's commit-wait poll (cost charged by the caller's
+    /// `Step::Yield`).
+    #[inline]
+    pub fn note_poll(&mut self) {
+        self.stats.commit_polls += 1;
+    }
+
+    /// The op at `lsn` was acked to the client (only legal once durable).
+    pub fn mark_acked(&mut self, lsn: u64) {
+        debug_assert!(self.is_durable(lsn), "ack before durability");
+        self.acked[lsn as usize] = true;
+    }
+
+    #[inline]
+    pub fn durable_lsn(&self) -> u64 {
+        self.durable_lsn
+    }
+
+    #[inline]
+    pub fn applied_lsn(&self) -> u64 {
+        self.applied_lsn
+    }
+
+    pub fn set_applied_lsn(&mut self, lsn: u64) {
+        self.applied_lsn = self.applied_lsn.max(lsn);
+    }
+
+    pub fn records(&self) -> &[WalRecord] {
+        &self.records
+    }
+
+    /// The durable prefix (what survives a crash).
+    pub fn durable_records(&self) -> &[WalRecord] {
+        &self.records[..self.durable_lsn as usize]
+    }
+
+    /// LSNs acked to clients.
+    pub fn acked_lsns(&self) -> impl Iterator<Item = u64> + '_ {
+        self.acked
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a)
+            .map(|(i, _)| i as u64)
+    }
+
+    /// The acked-durable structural invariant: no op was ever acked whose
+    /// record is not on stable storage.
+    pub fn acked_all_durable(&self) -> bool {
+        self.acked_lsns().all(|l| self.is_durable(l))
+    }
+
+    /// Last durable record per key — the recovery oracle: `Put` keys must
+    /// be present after replay, `Delete` keys absent.
+    pub fn durable_last_kind(&self) -> HashMap<u64, WalKind> {
+        let mut m = HashMap::new();
+        for r in self.durable_records() {
+            m.insert(r.key, r.kind);
+        }
+        m
+    }
+}
+
+/// Store-side crash–recovery surface. A store implements the three
+/// accessors plus `replay_record`; `wal_replay` (provided) is the recovery
+/// procedure, watermarked for idempotence.
+pub trait Durable {
+    fn wal(&self) -> &Wal;
+    fn wal_mut(&mut self) -> &mut Wal;
+    /// Presence oracle in the WAL's key encoding (treekv: digest).
+    fn wal_present(&self, key: u64) -> bool;
+    /// Apply one record structurally (no simulated time — recovery runs
+    /// before the measured window).
+    fn replay_record(&mut self, rec: &WalRecord, rng: &mut Rng);
+
+    /// Replay `src`'s durable prefix into `self`, skipping records below
+    /// the local applied watermark. Returns the number of records applied;
+    /// a second call with the same `src` applies zero and leaves every
+    /// counter bit-identical.
+    fn wal_replay(&mut self, src: &Wal, rng: &mut Rng) -> u64 {
+        let upto = src.durable_lsn();
+        let from = self.wal().applied_lsn().min(upto);
+        for rec in &src.records()[from as usize..upto as usize] {
+            self.replay_record(rec, rng);
+        }
+        self.wal_mut().set_applied_lsn(upto);
+        upto - from
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_lead_flush_ack_roundtrip() {
+        let mut w = Wal::new(WalConfig::on());
+        let a = w.append(WalKind::Put, 1, 100);
+        let b = w.append(WalKind::Delete, 2, 0);
+        assert_eq!((a, b), (0, 1));
+        assert!(!w.is_durable(a));
+        // First committer leads and seals both records (group commit).
+        let (upto, bytes) = w.try_lead(a).expect("leader");
+        assert_eq!(upto, 2);
+        assert_eq!(bytes, 4096, "2×64B rounds up to one sector");
+        // Another committer cannot lead while the flush is in flight.
+        assert!(w.try_lead(b).is_none());
+        w.note_poll();
+        w.flush_done(upto);
+        assert!(w.is_durable(a) && w.is_durable(b));
+        w.mark_acked(a);
+        w.mark_acked(b);
+        assert!(w.acked_all_durable());
+        assert_eq!(w.stats.flushes, 1);
+        assert_eq!(w.stats.flushed_records, 2);
+        assert_eq!(w.stats.flush_bytes, 4096);
+        assert_eq!(w.stats.commit_polls, 1);
+    }
+
+    #[test]
+    fn per_op_commit_seals_only_own_prefix() {
+        let mut w = Wal::new(WalConfig::per_op());
+        let a = w.append(WalKind::Put, 1, 0);
+        let _b = w.append(WalKind::Put, 2, 0);
+        let (upto, _) = w.try_lead(a).unwrap();
+        assert_eq!(upto, 1, "per-op commit flushes just the leader's record");
+        w.flush_done(upto);
+        assert!(w.is_durable(a));
+        assert!(!w.is_durable(1));
+    }
+
+    #[test]
+    fn aborted_flush_allows_reelection() {
+        let mut w = Wal::new(WalConfig::on());
+        let a = w.append(WalKind::Put, 7, 0);
+        let (upto, _) = w.try_lead(a).unwrap();
+        w.flush_aborted(upto);
+        assert!(!w.is_durable(a));
+        assert_eq!(w.stats.aborted_flushes, 1);
+        // A new election succeeds and can complete.
+        let (upto2, _) = w.try_lead(a).unwrap();
+        w.flush_done(upto2);
+        assert!(w.is_durable(a));
+    }
+
+    #[test]
+    fn durable_last_kind_tracks_final_state() {
+        let mut w = Wal::new(WalConfig::on());
+        w.append(WalKind::Put, 1, 0);
+        w.append(WalKind::Delete, 1, 0);
+        w.append(WalKind::Put, 2, 0);
+        let not_durable = w.append(WalKind::Delete, 2, 0);
+        // Flush only the first three records (per-op seal from lsn 2).
+        w.cfg.group_commit = false;
+        let (upto, _) = w.try_lead(2).unwrap();
+        w.cfg.group_commit = true;
+        assert_eq!(upto, 3);
+        w.flush_done(upto);
+        let last = w.durable_last_kind();
+        assert_eq!(last.get(&1), Some(&WalKind::Delete));
+        assert_eq!(last.get(&2), Some(&WalKind::Put), "record 3 is not durable");
+        assert!(!w.is_durable(not_durable));
+    }
+}

@@ -7,7 +7,7 @@
 //!
 //! Experiments: fig3 fig10 fig11micro fig11kvs fig12 fig14 fig15 fig16
 //!              fig17 fig18 table6 val1404 ycsb ssdscale modelcheck
-//!              placement planner adaptive
+//!              placement planner adaptive durability
 //! (The offline image has no argument-parsing crate; parsing is by hand.)
 //!
 //! `modelcheck` validates the Θ_scan-extended analytic model against the
@@ -26,13 +26,18 @@
 //! across drifting (phased) schedules and exits non-zero when the online
 //! arm loses more than the documented slack after a workload turn, or when
 //! the designed adapting cell (cachekv × diurnal) never actually replans.
+//! `durability` drills crash–recovery on every store's WAL, gates the WAL's
+//! measured throughput overhead against the extended model's log-traffic
+//! terms, requires group commit to beat per-op commit at equal durability,
+//! and injects a transient SSD error window to check retry/backoff keeps
+//! goodput with bounded p99 while a no-retry control errors out.
 
 use cxlkvs::coordinator::experiments::{self, ModelBackend};
 
 const EXPERIMENTS: &[&str] = &[
     "fig3", "fig10", "fig11micro", "fig11kvs", "fig12", "fig14", "fig15", "fig16", "fig17",
     "fig18", "table6", "val1404", "ycsb", "ssdscale", "modelcheck", "placement", "planner",
-    "adaptive",
+    "adaptive", "durability",
 ];
 
 fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
@@ -98,6 +103,19 @@ fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
                      the best frozen arm beyond the slack after a turn, or the \
                      designed adapting cell never replanned — see the GATE FAILED \
                      notes)"
+                );
+                std::process::exit(1);
+            }
+        }
+        "durability" => {
+            let (r, ok) = experiments::durability(fast);
+            r.print();
+            if !ok {
+                eprintln!(
+                    "durability: a WAL/fault gate failed (crash-recovery invariant, \
+                     acked-durability, WAL overhead outside the model band, group \
+                     commit not beating per-op, or unbounded faulted p99 — see the \
+                     GATE FAILED notes)"
                 );
                 std::process::exit(1);
             }

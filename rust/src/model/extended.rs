@@ -82,6 +82,20 @@ pub struct ExtParams {
     /// aggregate ceilings `Θ_ssd = n_ssd·R_IO` and `n_ssd·B_IO` (balanced
     /// shard routing assumed; skew lowers the effective n_ssd).
     pub n_ssd: f64,
+    /// WAL log bytes per (whole) KV operation, `w_log = flush_bytes/ops` —
+    /// the foreground/background bandwidth-sharing term: group-commit
+    /// flushes ride the same array as foreground IO, so they join the
+    /// aggregate-bandwidth floor additively (see `kvs::wal` module docs for
+    /// the derivation). `0.0` = WAL off; existing results are unchanged.
+    pub w_log: f64,
+    /// WAL flush IOs per (whole) KV operation, `s_log = flushes/ops` — the
+    /// IOPS-side sharing term. Group commit amortizes it toward
+    /// `writes/ops / G` for group size G; per-op commit pays `writes/ops`.
+    pub s_log: f64,
+    /// Retry inflation on the IOPS floor, `r_retry = 1 + retries/IO ≥ 1`:
+    /// transient-error windows re-submit failed IOs, consuming device IOPS
+    /// without advancing any operation. `1.0` = fault-free.
+    pub retry_factor: f64,
 }
 
 impl ExtParams {
@@ -98,7 +112,21 @@ impl ExtParams {
             r_io: 2.2,       // 2.2 MIOPS
             s: 1.0,
             n_ssd: 1.0,
+            w_log: 0.0,
+            s_log: 0.0,
+            retry_factor: 1.0,
         }
+    }
+
+    /// Attach the durability terms (Eq 14 + WAL extension; `kvs::wal` module
+    /// docs): per-op log bytes `w_log`, per-op log flushes `s_log`, and the
+    /// retry inflation `r_retry`. All three come straight from measured or
+    /// predicted WAL/retry rates; zeros/one recover the log-free model.
+    pub fn with_log_traffic(mut self, w_log: f64, s_log: f64, retry_factor: f64) -> ExtParams {
+        self.w_log = w_log.max(0.0);
+        self.s_log = s_log.max(0.0);
+        self.retry_factor = retry_factor.max(1.0);
+        self
     }
 }
 
@@ -229,15 +257,37 @@ fn memonly_recip(m: f64, t_mem: f64, l_mem: f64, ext: &ExtParams, sys: &SysParam
 /// memory-only cost of its M accesses — previously this returned a spurious
 /// zero reciprocal (infinite throughput); see the module docs' Θ_scan
 /// derivation for the branch.
+///
+/// The durability extension (`kvs::wal` module docs): WAL flushes and IO
+/// retries share the array with foreground traffic, so the floors widen to
+///
+/// ```text
+/// Θ⁻¹ ≥ (S·r_retry + s_log) / (n_ssd·R_IO)       IOPS sharing
+/// Θ⁻¹ ≥ (S·A_IO + w_log)   / (n_ssd·B_IO)        bandwidth sharing
+/// ```
+///
+/// — per-op log flushes consume IOPS, per-op log bytes consume bandwidth,
+/// and each retry re-spends an IO slot without advancing the op. With the
+/// defaults (`w_log = s_log = 0`, `r_retry = 1`) both reduce to Eq 14
+/// exactly. The sharing terms apply even when the log rides a dedicated
+/// shard: `sim::SsdArray` routes `shard % n_ssd`, so log IO lands on one of
+/// the same devices and subtracts from the aggregate ceilings.
+///
+/// `S = 0` ops with log traffic still pay the floors (a memtable write that
+/// must flush its WAL record is IOPS-bound by `s_log` alone at short
+/// latency), so the `S ≤ ε` early-return only triggers when the log terms
+/// are zero too.
 pub fn theta_extended_recip(op: &OpParams, l_mem: f64, ext: &ExtParams, sys: &SysParams) -> f64 {
+    let n_ssd = ext.n_ssd.max(1.0);
+    let retry = ext.retry_factor.max(1.0);
+    let bw_floor = (ext.s * ext.a_io + ext.w_log) / (ext.b_io * n_ssd);
+    let iops_floor = (ext.s * retry + ext.s_log) / (ext.r_io * n_ssd);
     if ext.s <= S_EPS {
-        return memonly_recip(op.m, op.t_mem, l_mem, ext, sys);
+        let mem = memonly_recip(op.m, op.t_mem, l_mem, ext, sys);
+        return mem.max(bw_floor).max(iops_floor);
     }
     let per_io = theta_rev_recip(op, l_mem, ext, sys);
-    let n_ssd = ext.n_ssd.max(1.0);
     let whole = ext.s * per_io;
-    let bw_floor = ext.s * ext.a_io / (ext.b_io * n_ssd);
-    let iops_floor = ext.s / (ext.r_io * n_ssd);
     whole.max(bw_floor).max(iops_floor)
 }
 
@@ -889,6 +939,75 @@ mod tests {
         let plain = KindCost::scan(12.0, mean, 8.0, 1536.0, 0.1, 2.5, 1.7);
         assert!((dist.s - 6.76).abs() < 1e-9, "s={}", dist.s);
         assert_eq!(plain.s, 7.0);
+    }
+
+    #[test]
+    fn log_traffic_and_retries_widen_the_floors() {
+        let sys = sys();
+        // IOPS-bound baseline: 75 KIOPS per device at DRAM-class latency.
+        let base = ExtParams {
+            r_io: 0.075,
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        };
+        let clean = theta_extended_recip(&op(), 0.1, &base, &sys);
+        assert!((clean - 1.0 / 0.075).abs() < 1e-9);
+        // s_log = 0.25 flushes/op (group commit of 4): floor widens to
+        // (S + s_log)/R_IO.
+        let logged = base.with_log_traffic(0.0, 0.25, 1.0);
+        let r = theta_extended_recip(&op(), 0.1, &logged, &sys);
+        assert!((r - 1.25 / 0.075).abs() < 1e-9, "r={r}");
+        // Retry inflation multiplies only the foreground term.
+        let faulty = base.with_log_traffic(0.0, 0.25, 1.2);
+        let rf = theta_extended_recip(&op(), 0.1, &faulty, &sys);
+        assert!((rf - (1.2 + 0.25) / 0.075).abs() < 1e-9, "rf={rf}");
+        // Bandwidth side: per-op log bytes join S·A_IO against n_ssd·B_IO.
+        let bw = ExtParams {
+            a_io: 128.0 * 1024.0,
+            b_io: 2_500.0,
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        }
+        .with_log_traffic(4096.0, 0.0, 1.0);
+        let rb = theta_extended_recip(&op(), 0.1, &bw, &sys);
+        assert!((rb - (128.0 * 1024.0 + 4096.0) / 2_500.0).abs() < 1e-9);
+        // Zeros/one recover Eq 14 bit-for-bit.
+        let noop = base.with_log_traffic(0.0, 0.0, 1.0);
+        assert_eq!(theta_extended_recip(&op(), 0.1, &noop, &sys), clean);
+    }
+
+    #[test]
+    fn s_zero_ops_still_pay_log_floors() {
+        // A memtable write whose WAL record must flush: no foreground IO,
+        // but the log flush consumes device IOPS — at short latency the op
+        // is floor-bound by s_log alone, not free.
+        let sys = sys();
+        let ext = ExtParams {
+            s: 0.0,
+            r_io: 0.075,
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        }
+        .with_log_traffic(0.0, 1.0, 1.0);
+        let r = theta_extended_recip(&op(), 0.1, &ext, &sys);
+        let floor = 1.0 / 0.075;
+        let mem = memonly_recip_probe(&ext, &sys);
+        assert!((r - floor.max(mem)).abs() < 1e-9, "r={r} floor={floor} mem={mem}");
+        assert!(r >= floor - 1e-9);
+        // Without log traffic the S=0 branch is untouched.
+        let plain = ExtParams {
+            s: 0.0,
+            r_io: 0.075,
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        };
+        let r0 = theta_extended_recip(&op(), 5.0, &plain, &sys);
+        let expect = op().m * theta_mem_recip(op().t_mem, 5.0, &sys);
+        assert!((r0 - expect).abs() < 1e-9);
+    }
+
+    fn memonly_recip_probe(ext: &ExtParams, sys: &SysParams) -> f64 {
+        op().m * theta_mem_recip(op().t_mem, 0.1, sys) + ext.eps * op().m * 0.1
     }
 
     #[test]

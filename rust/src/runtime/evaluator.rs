@@ -160,8 +160,13 @@ impl ExtIn {
             // The 16-column artifact interface carries *aggregate* device
             // rates; callers with an SSD array pre-scale b_io/r_io by n_ssd
             // (see `ModelBackend::extended`), keeping the HLO signature
-            // stable across the multi-SSD extension.
+            // stable across the multi-SSD extension. The same reasoning
+            // keeps the WAL/retry terms out of the artifact: callers fold
+            // log traffic into the native model, not the frozen HLO.
             n_ssd: 1.0,
+            w_log: 0.0,
+            s_log: 0.0,
+            retry_factor: 1.0,
         }
     }
 }

@@ -38,7 +38,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use super::mem::{MemConfig, MemDevice};
 use super::metrics::{CoreBreakdown, Metrics};
 use super::rng::Rng;
-use super::ssd::{IoKind, SsdArray, SsdConfig};
+use super::ssd::{IoError, IoKind, SsdArray, SsdConfig};
 use super::time::{Dur, Time};
 
 /// Which memory a (simulated) pointer dereference goes to.
@@ -93,6 +93,63 @@ pub trait Service {
     fn step(&mut self, tid: usize, op: &mut Self::Op, rng: &mut Rng) -> Step;
     /// Notification that the op's outstanding IO completed (deliver data).
     fn io_done(&mut self, _tid: usize, _op: &mut Self::Op) {}
+    /// Notification that the op's outstanding IO failed permanently — all
+    /// retries exhausted, or the device is dead with no replica route. The
+    /// service should surface a per-op error and finish the op rather than
+    /// wedge (see `kvs::common::KvStats::failed_ops`).
+    fn io_failed(&mut self, _tid: usize, _op: &mut Self::Op) {}
+}
+
+/// IO retry policy: on a transient device error the machine resubmits the
+/// IO after a capped exponential backoff, charging the whole ladder as
+/// elapsed IO wait (the thread stays parked; latency and p99 pay for the
+/// robustness). `RetryPolicy::none()` is the no-retry control arm: the
+/// first error is final and `Service::io_failed` fires.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Max resubmissions after the first failed attempt.
+    pub max_retries: u32,
+    /// Backoff before retry k is `backoff_base << k`, capped below.
+    pub backoff_base: Dur,
+    pub backoff_cap: Dur,
+}
+
+impl RetryPolicy {
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 0,
+            backoff_base: Dur::ZERO,
+            backoff_cap: Dur::ZERO,
+        }
+    }
+
+    /// Backoff before the (attempt+1)-th resubmission (attempt is 0-based).
+    pub fn backoff(&self, attempt: u32) -> Dur {
+        let mult = 1u64 << attempt.min(20);
+        Dur(self.backoff_base.0.saturating_mul(mult).min(self.backoff_cap.0))
+    }
+
+    /// Total wait budget across a full retry ladder (for sizing fault
+    /// windows and p99 bounds in experiments).
+    pub fn total_backoff(&self) -> Dur {
+        let mut sum = Dur::ZERO;
+        for k in 0..self.max_retries {
+            sum += self.backoff(k);
+        }
+        sum
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        // 6 retries at 20us doubling, capped at 640us: ~1.26ms of total
+        // backoff — enough to ride out a sub-millisecond error window.
+        RetryPolicy {
+            max_retries: 6,
+            backoff_base: Dur::us(20.0),
+            backoff_cap: Dur::us(640.0),
+        }
+    }
 }
 
 /// Machine configuration (the Table 2/Table 3 knobs).
@@ -122,6 +179,9 @@ pub struct MachineConfig {
     /// Charge `T_sw` when a thread resumes from IO wait (the model's `2 T_sw`
     /// per IO in Eq 6). Default true.
     pub charge_resume_switch: bool,
+    /// Transient-IO-error retry policy (only exercised when an SSD
+    /// `FaultPlan` is configured; the fault-free path never consults it).
+    pub retry: RetryPolicy,
     /// RNG seed.
     pub seed: u64,
 }
@@ -140,6 +200,7 @@ impl Default for MachineConfig {
             n_locks: 0,
             contention_factor: 0.0,
             charge_resume_switch: true,
+            retry: RetryPolicy::default(),
             seed: 0x5eed,
         }
     }
@@ -195,7 +256,9 @@ struct SimLock {
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum EventKind {
-    IoDone(usize),
+    /// IO resolution for a thread; the flag is success (false = the IO
+    /// failed permanently and `Service::io_failed` fires on delivery).
+    IoDone(usize, bool),
     LockGrant(usize),
 }
 
@@ -461,14 +524,20 @@ impl<S: Service> Machine<S> {
     fn deliver_event(&mut self) {
         let Reverse((t, _, kind)) = self.events.pop().unwrap();
         match kind {
-            EventKind::IoDone(tid) => {
+            EventKind::IoDone(tid, ok) => {
                 let op = self.threads[tid].op.as_mut().unwrap();
-                self.service.io_done(tid, op);
-                // IO DMA lands in the LLC (DDIO): its lines push prefetched
-                // data toward eviction.
-                let lines = (self.threads[tid].pending_io_bytes / 64) as u64;
-                let core_id = self.threads[tid].core;
-                self.cores[core_id].fetch_seq += lines;
+                if ok {
+                    self.service.io_done(tid, op);
+                    // IO DMA lands in the LLC (DDIO): its lines push
+                    // prefetched data toward eviction.
+                    let lines = (self.threads[tid].pending_io_bytes / 64) as u64;
+                    let core_id = self.threads[tid].core;
+                    self.cores[core_id].fetch_seq += lines;
+                } else {
+                    // No data arrived; no DDIO fill. The service surfaces
+                    // the error and finishes the op.
+                    self.service.io_failed(tid, op);
+                }
                 self.make_ready(tid, t);
             }
             EventKind::LockGrant(tid) => {
@@ -610,7 +679,32 @@ impl<S: Service> Machine<S> {
                     core.time += t_pre;
                     core.breakdown.busy += t_pre;
                     let submit = core.time;
-                    let completion = self.ssd.submit(submit, shard, kind, bytes, &mut self.rng);
+                    let mut comp =
+                        self.ssd.submit_checked(submit, shard, kind, bytes, &mut self.rng);
+                    // Transient errors: resubmit after capped exponential
+                    // backoff. The whole ladder resolves synchronously at
+                    // submit time (the device model is a time function) but
+                    // is charged as elapsed IO wait — the thread stays
+                    // parked until the final attempt's resolution, so
+                    // retries inflate io_latency/p99 exactly like a real
+                    // driver's requeue path. A fault-free array never
+                    // returns an error, leaving this path cold.
+                    if comp.error.is_some() {
+                        let pol = self.cfg.retry;
+                        let mut attempt = 0u32;
+                        while comp.error == Some(IoError::Transient) && attempt < pol.max_retries {
+                            let resubmit = comp.at + pol.backoff(attempt);
+                            attempt += 1;
+                            self.metrics.io_retries += 1;
+                            comp = self
+                                .ssd
+                                .submit_checked(resubmit, shard, kind, bytes, &mut self.rng);
+                        }
+                        if comp.error.is_some() {
+                            self.metrics.io_errors += 1;
+                        }
+                    }
+                    let completion = comp.at;
                     // Yield: T_sw, block until completion.
                     let core = &mut self.cores[core_id];
                     core.time += self.cfg.t_sw;
@@ -623,7 +717,7 @@ impl<S: Service> Machine<S> {
                     th.op_compute += self.cfg.ssd.t_pre + extra_pre;
                     self.metrics.ios += 1;
                     self.metrics.io_latency.record(completion - submit);
-                    self.push_event(completion, EventKind::IoDone(tid));
+                    self.push_event(completion, EventKind::IoDone(tid, comp.error.is_none()));
                     return;
                 }
                 Step::Lock(id) => {
@@ -717,6 +811,10 @@ pub struct RunStats {
     pub io_reads: u64,
     pub io_writes: u64,
     pub io_bytes: u64,
+    /// Fault-injection statistics: transient-error resubmissions and IOs
+    /// that failed permanently (both zero on a fault-free array).
+    pub io_retries: u64,
+    pub io_errors: u64,
     /// Lock contention ratio.
     pub lock_contention: f64,
 }
@@ -761,6 +859,8 @@ impl RunStats {
             io_reads: ssd.reads(),
             io_writes: ssd.writes(),
             io_bytes: ssd.bytes(),
+            io_retries: m.io_retries,
+            io_errors: m.io_errors,
             lock_contention: if m.lock_acquires > 0 {
                 m.lock_contended as f64 / m.lock_acquires as f64
             } else {
@@ -1121,6 +1221,104 @@ mod tests {
         assert!(d >= Dur::us(10.0), "an SSD read costs its latency: {d}");
         assert_eq!(m.ssd.reads(), r0 + 8);
         assert_eq!(m.metrics.ios, i0 + 8);
+    }
+
+    #[test]
+    fn transient_fault_window_retries_and_recovers() {
+        // A 300us full-fail window early in the window: with the default
+        // retry policy every IO eventually succeeds (goodput > 0, no
+        // permanent errors), and the retries show up in the metrics.
+        use super::super::ssd::{ErrorWindow, FaultPlan};
+        let plan = FaultPlan {
+            error_windows: vec![ErrorWindow {
+                from: Time::ZERO + Dur::ms(2.0),
+                until: Time::ZERO + Dur::ms(2.3),
+                prob: 1.0,
+            }],
+            ..FaultPlan::default()
+        };
+        let cfg = MachineConfig {
+            threads_per_core: 8,
+            ssd: SsdConfig {
+                jitter_frac: 0.0,
+                ..SsdConfig::optane_array()
+            }
+            .with_fault(0, plan),
+            ..MachineConfig::default()
+        };
+        let mut m = Machine::new(
+            cfg,
+            FixedOps {
+                m: 2,
+                t_mem: Dur::ns(100.0),
+                tier: Tier::Dram,
+            },
+        );
+        let st = m.run(Dur::ms(1.0), Dur::ms(10.0));
+        assert!(st.ops > 0, "goodput must survive the fault window");
+        assert!(st.io_retries > 0, "the window must actually trigger retries");
+        assert_eq!(st.io_errors, 0, "backoff outlasts the window: no failures");
+    }
+
+    #[test]
+    fn no_retry_control_surfaces_errors() {
+        // Same fault window, RetryPolicy::none(): the first error is final,
+        // Service::io_failed fires, and ops finish with surfaced errors
+        // instead of wedging.
+        use super::super::ssd::{ErrorWindow, FaultPlan};
+        struct Failing {
+            failed: u64,
+        }
+        impl Service for Failing {
+            type Op = FixedOp;
+            fn next_op(&mut self, _tid: usize, _rng: &mut Rng) -> FixedOp {
+                FixedOp {
+                    left: 0,
+                    io_done: false,
+                    compute_next: false,
+                }
+            }
+            fn step(&mut self, _tid: usize, op: &mut FixedOp, _rng: &mut Rng) -> Step {
+                if !op.io_done {
+                    op.io_done = true;
+                    return Step::Io {
+                        kind: IoKind::Read,
+                        bytes: 1536,
+                        extra_pre: Dur::ZERO,
+                        extra_post: Dur::ZERO,
+                        shard: 0,
+                    };
+                }
+                Step::Done
+            }
+            fn io_failed(&mut self, _tid: usize, _op: &mut FixedOp) {
+                self.failed += 1;
+            }
+        }
+        let plan = FaultPlan {
+            error_windows: vec![ErrorWindow {
+                from: Time::ZERO,
+                until: Time::ZERO + Dur::secs(1.0),
+                prob: 1.0,
+            }],
+            ..FaultPlan::default()
+        };
+        let cfg = MachineConfig {
+            threads_per_core: 4,
+            retry: RetryPolicy::none(),
+            ssd: SsdConfig {
+                jitter_frac: 0.0,
+                ..SsdConfig::optane_array()
+            }
+            .with_fault(0, plan),
+            ..MachineConfig::default()
+        };
+        let mut m = Machine::new(cfg, Failing { failed: 0 });
+        let st = m.run(Dur::ms(1.0), Dur::ms(5.0));
+        assert!(st.ops > 0, "ops must still complete (with surfaced errors)");
+        assert_eq!(st.io_retries, 0);
+        assert!(st.io_errors > 0, "every IO fails under prob=1.0 / no retry");
+        assert!(m.service.failed > 0, "io_failed must be delivered");
     }
 
     #[test]

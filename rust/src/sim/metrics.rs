@@ -30,6 +30,10 @@ pub struct Metrics {
     pub evictions: u64,
     /// IOs issued.
     pub ios: u64,
+    /// Transient-error resubmissions (fault injection; see `sim::ssd`).
+    pub io_retries: u64,
+    /// IOs that failed permanently (retries exhausted / device dead).
+    pub io_errors: u64,
     /// Lock statistics.
     pub lock_acquires: u64,
     pub lock_contended: u64,
@@ -59,6 +63,8 @@ impl Metrics {
             loads: 0,
             evictions: 0,
             ios: 0,
+            io_retries: 0,
+            io_errors: 0,
             lock_acquires: 0,
             lock_contended: 0,
             sum_mem_accesses: 0,

@@ -14,9 +14,12 @@ pub mod ssd;
 pub mod time;
 
 pub use hist::LatencyHist;
-pub use machine::{Machine, MachineConfig, RunStats, Service, Step, Tier};
+pub use machine::{Machine, MachineConfig, RetryPolicy, RunStats, Service, Step, Tier};
 pub use mem::{MemConfig, MemDevice, TailProfile};
 pub use metrics::{CoreBreakdown, Metrics};
 pub use rng::Rng;
-pub use ssd::{IoKind, SsdArray, SsdConfig, SsdDevice};
+pub use ssd::{
+    DeviceStats, ErrorWindow, FaultPlan, IoCompletion, IoError, IoKind, LatencySpike, SsdArray,
+    SsdConfig, SsdDevice,
+};
 pub use time::{Dur, Time};

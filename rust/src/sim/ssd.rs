@@ -22,6 +22,23 @@
 //! per-device hotspots exactly like a real array. With `n_ssd = 1` every
 //! route maps to device 0 and the array is bit-identical to the former
 //! single-device path (same servers, same jitter RNG draw order).
+//!
+//! ## Fault injection
+//!
+//! Each device can carry a [`FaultPlan`]: scheduled latency-spike windows
+//! (a grey / thermally-throttling device), transient-error windows
+//! (submissions inside the window fail with a configured probability,
+//! drawn from the machine's seeded RNG so runs stay deterministic), and a
+//! permanent death time. [`SsdDevice::submit_checked`] reports the outcome
+//! as an [`IoCompletion`]; the plain [`SsdDevice::submit`] path is a
+//! success-assuming wrapper kept for fault-free callers. A failed transient
+//! attempt still occupies the device servers — a failed read costs its
+//! latency, exactly like a real drive returning an error after the flash
+//! access — while a dead device short-circuits (host-side timeout path)
+//! without touching the servers or the RNG, so fault-free devices in the
+//! same array are unaffected. With an empty plan every check is a pure
+//! comparison and zero extra RNG draws: the fault layer is bit-invisible
+//! unless configured.
 
 use super::rng::Rng;
 use super::time::{Dur, Time};
@@ -30,6 +47,71 @@ use super::time::{Dur, Time};
 pub enum IoKind {
     Read,
     Write,
+}
+
+/// Why a submitted IO failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoError {
+    /// Transient failure (media retry / link CRC class): the same IO
+    /// resubmitted after a backoff may succeed.
+    Transient,
+    /// The device is permanently dead (its `FaultPlan::dead_from` passed).
+    DeviceDead,
+}
+
+/// Outcome of one submitted IO: when the attempt resolves, and whether it
+/// succeeded. On error `at` is when the failure is reported to the
+/// submitter — for a transient error that is the full service time of the
+/// failed attempt; for a dead device it is the host's timeout detection
+/// (one uncontended read latency after submit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IoCompletion {
+    pub at: Time,
+    pub error: Option<IoError>,
+}
+
+impl IoCompletion {
+    #[inline]
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// A scheduled latency brown-out: submissions landing in `[from, until)`
+/// see the device's base latency multiplied by `factor` (jitter still
+/// applies on top, so the RNG draw count is unchanged).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencySpike {
+    pub from: Time,
+    pub until: Time,
+    pub factor: f64,
+}
+
+/// A transient-error window: submissions landing in `[from, until)` fail
+/// with probability `prob`. The draw comes from the caller's seeded RNG,
+/// so identical seeds reproduce identical fault sequences; `prob >= 1.0`
+/// fails unconditionally without a draw.
+#[derive(Debug, Clone, Copy)]
+pub struct ErrorWindow {
+    pub from: Time,
+    pub until: Time,
+    pub prob: f64,
+}
+
+/// Per-device fault schedule. `Default` is the empty plan (no faults); an
+/// empty plan adds zero RNG draws and zero behavior change.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub latency_spikes: Vec<LatencySpike>,
+    pub error_windows: Vec<ErrorWindow>,
+    /// Device is permanently dead from this time on.
+    pub dead_from: Option<Time>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.latency_spikes.is_empty() && self.error_windows.is_empty() && self.dead_from.is_none()
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -57,6 +139,9 @@ pub struct SsdConfig {
     /// IOPS / queue-depth fields above are **per device**; [`SsdArray`]
     /// instantiates `n_ssd` of them and routes each IO by its shard key.
     pub n_ssd: u32,
+    /// Per-device fault schedules: device `i` runs `faults[i]` (missing
+    /// entries mean fault-free). Empty by default.
+    pub faults: Vec<FaultPlan>,
 }
 
 impl SsdConfig {
@@ -73,6 +158,7 @@ impl SsdConfig {
             t_post: Dur::us(0.2),
             jitter_frac: 0.15,
             n_ssd: 1,
+            faults: Vec::new(),
         }
     }
 
@@ -97,6 +183,7 @@ impl SsdConfig {
             t_post: Dur::us(0.2),
             jitter_frac: 0.3,
             n_ssd: 1,
+            faults: Vec::new(),
         }
     }
 
@@ -111,49 +198,125 @@ impl SsdConfig {
         self.n_ssd = n.max(1);
         self
     }
+
+    /// Attach a fault plan to device `device` (list grows as needed).
+    pub fn with_fault(mut self, device: usize, plan: FaultPlan) -> SsdConfig {
+        if self.faults.len() <= device {
+            self.faults.resize(device + 1, FaultPlan::default());
+        }
+        self.faults[device] = plan;
+        self
+    }
+}
+
+/// Per-device observability snapshot (skew / brown-out analysis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceStats {
+    pub ios: u64,
+    pub bytes: u64,
+    pub errors: u64,
+    /// Mean submit→resolve latency over the attempted IOs (queue waits
+    /// included), so a grey device's spike windows show up directly.
+    pub mean_latency: Dur,
 }
 
 /// Runtime state of the SSD (array): latency + rate servers.
 #[derive(Debug, Clone)]
 pub struct SsdDevice {
     pub cfg: SsdConfig,
+    /// This device's fault schedule (empty plan = fault-free).
+    fault: FaultPlan,
     /// Bandwidth server: time the device's data channel frees up.
     bw_free: Time,
     /// IOPS server: time the command processor frees up.
     iops_free: Time,
-    /// Completion times of in-flight IOs (bounded by queue_depth). Kept as a
-    /// sorted-ish ring: completions are monotone given monotone submissions.
+    /// Completion times of in-flight IOs (bounded by queue_depth), kept
+    /// sorted ascending. Submissions arrive at per-core clocks that are not
+    /// globally monotone, so completions are inserted in sorted position —
+    /// a full queue then waits on the *earliest* completion, not on
+    /// whichever IO happened to be submitted first.
     inflight: std::collections::VecDeque<Time>,
     pub reads: u64,
     pub writes: u64,
     pub bytes: u64,
+    /// Failed attempts (transient + dead-device).
+    pub errors: u64,
+    /// Every submit_checked call, including dead-device short-circuits.
+    attempts: u64,
+    /// Sum of submit→resolve latencies (for `DeviceStats::mean_latency`).
+    lat_sum: Dur,
 }
 
 impl SsdDevice {
     pub fn new(cfg: SsdConfig) -> SsdDevice {
+        SsdDevice::for_index(cfg, 0)
+    }
+
+    /// Construct the device at array position `idx`, picking up its fault
+    /// plan from `cfg.faults[idx]` (fault-free when absent).
+    pub fn for_index(cfg: SsdConfig, idx: usize) -> SsdDevice {
+        let fault = cfg.faults.get(idx).cloned().unwrap_or_default();
         SsdDevice {
             cfg,
+            fault,
             bw_free: Time::ZERO,
             iops_free: Time::ZERO,
             inflight: std::collections::VecDeque::new(),
             reads: 0,
             writes: 0,
             bytes: 0,
+            errors: 0,
+            attempts: 0,
+            lat_sum: Dur::ZERO,
         }
     }
 
-    /// Submit one IO at time `submit`; returns its completion time.
+    /// Is the device permanently dead at `t`?
+    #[inline]
+    pub fn is_dead_at(&self, t: Time) -> bool {
+        matches!(self.fault.dead_from, Some(d) if t >= d)
+    }
+
+    /// Submit one IO at time `submit`; returns its completion time. Assumes
+    /// success — fault-aware callers use [`SsdDevice::submit_checked`].
     pub fn submit(&mut self, submit: Time, kind: IoKind, bytes: u32, rng: &mut Rng) -> Time {
-        // Queue-depth server: if the device queue is full, the IO effectively
-        // starts when the oldest in-flight IO completes.
+        self.submit_checked(submit, kind, bytes, rng).at
+    }
+
+    /// Submit one IO at time `submit`; returns its resolution time and
+    /// error status (see [`IoCompletion`]). With an empty fault plan this
+    /// is exactly the historical `submit` path: same servers, same single
+    /// jitter draw, never an error.
+    pub fn submit_checked(
+        &mut self,
+        submit: Time,
+        kind: IoKind,
+        bytes: u32,
+        rng: &mut Rng,
+    ) -> IoCompletion {
+        // Permanent death: the host's timeout path. Short-circuits before
+        // the servers and the jitter draw so sibling devices (and any
+        // fault-free rerun of the same seed) are unaffected.
+        if self.is_dead_at(submit) {
+            self.errors += 1;
+            self.attempts += 1;
+            let at = submit + self.cfg.read_latency;
+            self.lat_sum += at - submit;
+            return IoCompletion {
+                at,
+                error: Some(IoError::DeviceDead),
+            };
+        }
+
+        // Queue-depth server: drain completed IOs, then — if the device
+        // queue is still full — the new IO starts when the earliest
+        // in-flight completion frees a slot.
         while let Some(&front) = self.inflight.front() {
-            if front <= submit || self.inflight.len() < self.cfg.queue_depth as usize {
-                if front <= submit {
-                    self.inflight.pop_front();
-                    continue;
-                }
+            if front <= submit {
+                self.inflight.pop_front();
+            } else {
+                break;
             }
-            break;
         }
         let mut start = submit;
         if self.inflight.len() >= self.cfg.queue_depth as usize {
@@ -170,17 +333,27 @@ impl SsdDevice {
             self.iops_free = start + gap;
         }
 
-        // Bandwidth server: transfer occupies bytes/B_IO of channel time.
-        let base = match kind {
+        // Device latency: base, times any scheduled spike window, times
+        // jitter (the jitter draw happens regardless of spikes, keeping
+        // the RNG draw order identical across fault plans).
+        let mut base = match kind {
             IoKind::Read => self.cfg.read_latency,
             IoKind::Write => self.cfg.write_latency,
         };
+        for s in &self.fault.latency_spikes {
+            if submit >= s.from && submit < s.until {
+                base = Dur((base.0 as f64 * s.factor) as u64);
+                break;
+            }
+        }
         let lat = if self.cfg.jitter_frac > 0.0 {
             let f = 1.0 + self.cfg.jitter_frac * (2.0 * rng.f64() - 1.0);
             Dur((base.0 as f64 * f) as u64)
         } else {
             base
         };
+
+        // Bandwidth server: transfer occupies bytes/B_IO of channel time.
         let mut done = start + lat;
         if self.cfg.bandwidth_bps.is_finite() && self.cfg.bandwidth_bps > 0.0 {
             let xfer = Dur::secs(bytes as f64 / self.cfg.bandwidth_bps);
@@ -190,19 +363,51 @@ impl SsdDevice {
             done = done.max(chan_done);
         }
 
-        self.inflight.push_back(done);
+        // Sorted insert (equivalent to push_back when completions happen to
+        // be monotone, which keeps single-core runs bit-identical).
+        let pos = self.inflight.partition_point(|&t| t <= done);
+        self.inflight.insert(pos, done);
         match kind {
             IoKind::Read => self.reads += 1,
             IoKind::Write => self.writes += 1,
         }
         self.bytes += bytes as u64;
-        done
+        self.attempts += 1;
+        self.lat_sum += done - submit;
+
+        // Transient-error window: the attempt occupied the servers above
+        // (a failed read costs its latency); the draw happens only for
+        // submissions inside a window, so fault-free time regions consume
+        // no extra randomness.
+        let mut error = None;
+        for w in &self.fault.error_windows {
+            if submit >= w.from && submit < w.until {
+                if w.prob >= 1.0 || rng.f64() < w.prob {
+                    self.errors += 1;
+                    error = Some(IoError::Transient);
+                }
+                break;
+            }
+        }
+        IoCompletion { at: done, error }
+    }
+
+    pub fn stats(&self) -> DeviceStats {
+        DeviceStats {
+            ios: self.reads + self.writes,
+            bytes: self.bytes,
+            errors: self.errors,
+            mean_latency: Dur(self.lat_sum.0 / self.attempts.max(1)),
+        }
     }
 
     pub fn reset_stats(&mut self) {
         self.reads = 0;
         self.writes = 0;
         self.bytes = 0;
+        self.errors = 0;
+        self.attempts = 0;
+        self.lat_sum = Dur::ZERO;
     }
 }
 
@@ -211,7 +416,8 @@ impl SsdDevice {
 /// Each device keeps its own latency/queue-depth/IOPS/bandwidth servers and
 /// its own submission queue; the array only routes. Stats are aggregated on
 /// demand so `RunStats` stays device-count agnostic, while
-/// [`SsdArray::per_device_ios`] exposes the balance for skew analysis.
+/// [`SsdArray::per_device_ios`] / [`SsdArray::per_device_stats`] expose the
+/// balance for skew and brown-out analysis.
 #[derive(Debug, Clone)]
 pub struct SsdArray {
     pub cfg: SsdConfig,
@@ -221,7 +427,9 @@ pub struct SsdArray {
 impl SsdArray {
     pub fn new(cfg: SsdConfig) -> SsdArray {
         let n = cfg.n_ssd.max(1) as usize;
-        let devices = (0..n).map(|_| SsdDevice::new(cfg.clone())).collect();
+        let devices = (0..n)
+            .map(|i| SsdDevice::for_index(cfg.clone(), i))
+            .collect();
         SsdArray { cfg, devices }
     }
 
@@ -237,6 +445,8 @@ impl SsdArray {
     }
 
     /// Submit one IO routed by `shard`; returns its completion time.
+    /// Assumes success — fault-aware callers use
+    /// [`SsdArray::submit_checked`].
     #[inline]
     pub fn submit(
         &mut self,
@@ -246,8 +456,36 @@ impl SsdArray {
         bytes: u32,
         rng: &mut Rng,
     ) -> Time {
-        let d = self.device_of(shard);
-        self.devices[d].submit(submit, kind, bytes, rng)
+        self.submit_checked(submit, shard, kind, bytes, rng).at
+    }
+
+    /// Submit one IO routed by `shard`, with fault reporting. When the
+    /// routed device is permanently dead and the array has a live sibling,
+    /// the IO is re-routed to the next live device (the replica / refill
+    /// path: a mirrored array serves the read elsewhere) — the brown-out
+    /// then shows up as load skew on the survivors rather than hard errors.
+    /// A single-device array (or fully dead array) reports `DeviceDead`.
+    #[inline]
+    pub fn submit_checked(
+        &mut self,
+        submit: Time,
+        shard: u64,
+        kind: IoKind,
+        bytes: u32,
+        rng: &mut Rng,
+    ) -> IoCompletion {
+        let n = self.devices.len();
+        let mut d = self.device_of(shard);
+        if n > 1 && self.devices[d].is_dead_at(submit) {
+            for step in 1..n {
+                let alt = (d + step) % n;
+                if !self.devices[alt].is_dead_at(submit) {
+                    d = alt;
+                    break;
+                }
+            }
+        }
+        self.devices[d].submit_checked(submit, kind, bytes, rng)
     }
 
     pub fn reads(&self) -> u64 {
@@ -262,9 +500,18 @@ impl SsdArray {
         self.devices.iter().map(|d| d.bytes).sum()
     }
 
+    pub fn errors(&self) -> u64 {
+        self.devices.iter().map(|d| d.errors).sum()
+    }
+
     /// Per-device total IO counts (reads + writes), for balance reporting.
     pub fn per_device_ios(&self) -> Vec<u64> {
         self.devices.iter().map(|d| d.reads + d.writes).collect()
+    }
+
+    /// Per-device byte / error / latency stats (skew and brown-outs).
+    pub fn per_device_stats(&self) -> Vec<DeviceStats> {
+        self.devices.iter().map(|d| d.stats()).collect()
     }
 
     pub fn reset_stats(&mut self) {
@@ -370,6 +617,58 @@ mod tests {
     }
 
     #[test]
+    fn out_of_order_submissions_wait_on_earliest_completion() {
+        // Regression test for the in-flight queue invariant: multi-core
+        // stores submit at per-core clocks that are not globally monotone,
+        // so completion order can invert submission order. A full queue
+        // must wait on the *earliest* completion, not the oldest entry.
+        let cfg = SsdConfig {
+            queue_depth: 2,
+            bandwidth_bps: f64::INFINITY,
+            iops: f64::INFINITY,
+            jitter_frac: 0.0,
+            write_latency: Dur::us(100.0),
+            ..SsdConfig::optane_array()
+        };
+        let mut d = SsdDevice::new(cfg);
+        let mut rng = Rng::new(1);
+        let w = d.submit(Time::ZERO, IoKind::Write, 512, &mut rng);
+        assert_eq!(w, Time::ZERO + Dur::us(100.0));
+        // A read submitted 1us later (by another core) completes at 11us —
+        // long before the write.
+        let r1 = d.submit(Time::ZERO + Dur::us(1.0), IoKind::Read, 512, &mut rng);
+        assert_eq!(r1, Time::ZERO + Dur::us(11.0));
+        // Queue full: the third IO waits for the read slot at 11us and
+        // completes at 21us. The old pop_front-of-submission-order queue
+        // waited on the 100us write instead (completion at 110us).
+        let r2 = d.submit(Time::ZERO + Dur::us(2.0), IoKind::Read, 512, &mut rng);
+        assert_eq!(r2, Time::ZERO + Dur::us(21.0));
+    }
+
+    #[test]
+    fn out_of_order_submissions_qd1() {
+        // queue_depth 1: strictly serial device. Interleaved out-of-order
+        // submissions serialize on whatever is in flight.
+        let cfg = SsdConfig {
+            queue_depth: 1,
+            bandwidth_bps: f64::INFINITY,
+            iops: f64::INFINITY,
+            jitter_frac: 0.0,
+            write_latency: Dur::us(100.0),
+            ..SsdConfig::optane_array()
+        };
+        let mut d = SsdDevice::new(cfg);
+        let mut rng = Rng::new(1);
+        let w = d.submit(Time::ZERO + Dur::us(5.0), IoKind::Write, 512, &mut rng);
+        assert_eq!(w, Time::ZERO + Dur::us(105.0));
+        // Earlier-clock core submits at 1us: slot frees at 105us.
+        let r1 = d.submit(Time::ZERO + Dur::us(1.0), IoKind::Read, 512, &mut rng);
+        assert_eq!(r1, Time::ZERO + Dur::us(115.0));
+        let r2 = d.submit(Time::ZERO + Dur::us(2.0), IoKind::Read, 512, &mut rng);
+        assert_eq!(r2, Time::ZERO + Dur::us(125.0));
+    }
+
+    #[test]
     fn write_counts() {
         let mut d = SsdDevice::new(SsdConfig::optane_array());
         let mut rng = Rng::new(1);
@@ -397,6 +696,160 @@ mod tests {
         assert_eq!(dev.reads, arr.reads());
         assert_eq!(dev.writes, arr.writes());
         assert_eq!(dev.bytes, arr.bytes());
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical() {
+        // A configured-but-empty FaultPlan must not perturb completions or
+        // RNG draw order relative to no plan at all.
+        let base = SsdConfig::optane_array();
+        let with_plan = base.clone().with_fault(0, FaultPlan::default());
+        let mut d1 = SsdDevice::new(base);
+        let mut d2 = SsdDevice::new(with_plan);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        for i in 0..2_000u64 {
+            let t = Time::ZERO + Dur::ns(900.0) * i;
+            let a = d1.submit_checked(t, IoKind::Read, 1024, &mut r1);
+            let b = d2.submit_checked(t, IoKind::Read, 1024, &mut r2);
+            assert_eq!(a, b, "io {i}");
+            assert!(a.is_ok());
+        }
+        assert_eq!(r1.next_u64(), r2.next_u64(), "RNG streams must stay in sync");
+    }
+
+    #[test]
+    fn transient_error_window_is_deterministic_and_scoped() {
+        let plan = FaultPlan {
+            error_windows: vec![ErrorWindow {
+                from: Time::ZERO + Dur::us(100.0),
+                until: Time::ZERO + Dur::us(200.0),
+                prob: 1.0,
+            }],
+            ..FaultPlan::default()
+        };
+        let cfg = SsdConfig {
+            jitter_frac: 0.0,
+            ..SsdConfig::optane_array()
+        }
+        .with_fault(0, plan);
+        let mut d = SsdDevice::new(cfg);
+        let mut rng = Rng::new(11);
+        // Before the window: success.
+        let ok = d.submit_checked(Time::ZERO + Dur::us(50.0), IoKind::Read, 512, &mut rng);
+        assert!(ok.is_ok());
+        // Inside: Transient, and the failed attempt still costs its latency.
+        let bad = d.submit_checked(Time::ZERO + Dur::us(150.0), IoKind::Read, 512, &mut rng);
+        assert_eq!(bad.error, Some(IoError::Transient));
+        assert_eq!(bad.at, Time::ZERO + Dur::us(160.0));
+        // After: success again.
+        let ok2 = d.submit_checked(Time::ZERO + Dur::us(250.0), IoKind::Read, 512, &mut rng);
+        assert!(ok2.is_ok());
+        assert_eq!(d.errors, 1);
+        assert_eq!(d.reads, 3, "failed attempts still occupy the device");
+    }
+
+    #[test]
+    fn latency_spike_window_multiplies_latency() {
+        let plan = FaultPlan {
+            latency_spikes: vec![LatencySpike {
+                from: Time::ZERO + Dur::ms(1.0),
+                until: Time::ZERO + Dur::ms(2.0),
+                factor: 10.0,
+            }],
+            ..FaultPlan::default()
+        };
+        let cfg = SsdConfig {
+            jitter_frac: 0.0,
+            ..SsdConfig::optane_array()
+        }
+        .with_fault(0, plan);
+        let mut d = SsdDevice::new(cfg);
+        let mut rng = Rng::new(2);
+        let fast = d.submit_checked(Time::ZERO, IoKind::Read, 512, &mut rng);
+        assert_eq!(fast.at, Time::ZERO + Dur::us(10.0));
+        let slow = d.submit_checked(Time::ZERO + Dur::ms(1.5), IoKind::Read, 512, &mut rng);
+        assert_eq!(slow.at, Time::ZERO + Dur::ms(1.5) + Dur::us(100.0));
+        let after = d.submit_checked(Time::ZERO + Dur::ms(3.0), IoKind::Read, 512, &mut rng);
+        assert_eq!(after.at, Time::ZERO + Dur::ms(3.0) + Dur::us(10.0));
+    }
+
+    #[test]
+    fn dead_device_short_circuits_without_rng_draws() {
+        let plan = FaultPlan {
+            dead_from: Some(Time::ZERO),
+            ..FaultPlan::default()
+        };
+        // Jittered config: a served IO would draw from the RNG.
+        let cfg = SsdConfig::optane_array().with_fault(0, plan);
+        let mut d = SsdDevice::new(cfg);
+        let mut rng = Rng::new(13);
+        let mut shadow = Rng::new(13);
+        let c = d.submit_checked(Time::ZERO + Dur::us(5.0), IoKind::Read, 512, &mut rng);
+        assert_eq!(c.error, Some(IoError::DeviceDead));
+        assert_eq!(c.at, Time::ZERO + Dur::us(15.0), "timeout = one read latency");
+        assert_eq!(d.errors, 1);
+        assert_eq!(d.reads, 0, "a dead device serves nothing");
+        assert_eq!(rng.next_u64(), shadow.next_u64(), "no RNG draw on the dead path");
+    }
+
+    #[test]
+    fn array_routes_around_dead_device() {
+        let plan = FaultPlan {
+            dead_from: Some(Time::ZERO),
+            ..FaultPlan::default()
+        };
+        let cfg = SsdConfig {
+            jitter_frac: 0.0,
+            n_ssd: 2,
+            ..SsdConfig::optane_array()
+        }
+        .with_fault(0, plan);
+        let mut arr = SsdArray::new(cfg);
+        let mut rng = Rng::new(3);
+        // Shard 0 routes to the dead device 0; the array re-routes to 1.
+        let c = arr.submit_checked(Time::ZERO, 0, IoKind::Read, 512, &mut rng);
+        assert!(c.is_ok());
+        let per = arr.per_device_ios();
+        assert_eq!(per, vec![0, 1], "survivor absorbed the re-routed IO");
+        assert_eq!(arr.errors(), 0);
+
+        // A single-device array has no replica path: hard error surfaces.
+        let cfg1 = SsdConfig {
+            jitter_frac: 0.0,
+            ..SsdConfig::optane_array()
+        }
+        .with_fault(
+            0,
+            FaultPlan {
+                dead_from: Some(Time::ZERO),
+                ..FaultPlan::default()
+            },
+        );
+        let mut lone = SsdArray::new(cfg1);
+        let c = lone.submit_checked(Time::ZERO, 0, IoKind::Read, 512, &mut rng);
+        assert_eq!(c.error, Some(IoError::DeviceDead));
+    }
+
+    #[test]
+    fn per_device_stats_expose_bytes_and_errors() {
+        let cfg = SsdConfig {
+            jitter_frac: 0.0,
+            n_ssd: 2,
+            ..SsdConfig::optane_array()
+        };
+        let mut arr = SsdArray::new(cfg);
+        let mut rng = Rng::new(8);
+        for i in 0..10u64 {
+            arr.submit(Time::ZERO + Dur::us(20.0) * i, i % 2, IoKind::Read, 4096, &mut rng);
+        }
+        let stats = arr.per_device_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].ios, 5);
+        assert_eq!(stats[1].ios, 5);
+        assert_eq!(stats[0].bytes, 5 * 4096);
+        assert_eq!(stats[0].errors, 0);
+        assert_eq!(stats[0].mean_latency, Dur::us(10.0));
     }
 
     #[test]

@@ -144,6 +144,9 @@ fn pjrt_extended_matches_native_model() {
             r_io: 2.2,
             s: 1.0,
             n_ssd: 1.0,
+            w_log: 0.0,
+            s_log: 0.0,
+            retry_factor: 1.0,
         };
         let native_rev = theta_rev_recip(&op, *l as f64, &ext, &sys);
         let native_ext = theta_extended_recip(&op, *l as f64, &ext, &sys);
