@@ -10,8 +10,8 @@ use super::report::{f1, f2, f3, Report};
 use super::runner::{
     best_threads, best_threads_by, crash_recover_check, parallel_map, run_cache_with, run_lsm_with,
     run_microbench, run_store, run_store_ycsb_adaptive, run_store_ycsb_durable, run_store_ycsb_placed,
-    run_store_ycsb_profiled, run_store_ycsb_snap, run_tree_with, store_offload_bytes, AdaptiveCfg,
-    DurableRun, MeasuredParams, StoreKind, SweepCfg,
+    run_store_ycsb_profiled, run_store_ycsb_snap, run_store_ycsb_tenants, run_tree_with,
+    store_offload_bytes, AdaptiveCfg, DurableRun, MeasuredParams, StoreKind, SweepCfg,
 };
 use crate::kvs::{
     model_mix, CacheKv, CacheKvConfig, LsmKv, LsmKvConfig, PlacementPolicy, TreeKv, TreeKvConfig,
@@ -21,7 +21,10 @@ use crate::microbench::MicrobenchConfig;
 use crate::model::{self, CprScenario, ExtParams, KindCost, OpParams, SysParams};
 use crate::runtime::{BaseIn, ExtIn, ModelEvaluator};
 use crate::sim::{Dur, ErrorWindow, FaultPlan, RetryPolicy, Time};
-use crate::workload::{KeyDist, OpMix, OpWeights, PhasedWorkload, ScanLen, ValueSize, YcsbWorkload};
+use crate::workload::{
+    KeyDist, OpMix, OpWeights, PhasedWorkload, ScanLen, TenantSet, TenantSpec, ValueSize,
+    YcsbWorkload,
+};
 
 /// Model evaluation backend: PJRT artifact (preferred) or native fallback.
 pub enum ModelBackend {
@@ -1998,6 +2001,212 @@ pub fn adaptive(fast: bool) -> (Report, bool) {
         }
     }
     r.write_csv("adaptive").ok();
+    (r, all_ok)
+}
+
+// ---------------------------------------------------------------------------
+// Multi-tenant serving — noisy-neighbor isolation on per-tenant tail latency.
+// ---------------------------------------------------------------------------
+
+/// Noisy-neighbor isolation band: the point-read tenant's shared-arm p99 must
+/// stay within `band * solo_p99 + floor` at every swept L_mem.
+///
+/// Derivation: the two tenants issue ops in an exact 1:1 interleave (SWRR),
+/// and a YCSB-E scan costs ~`len/batch` SSD reads plus ~`len` extra memory
+/// hops versus a single point read, so the mixed mean service time is bounded
+/// by roughly `0.5 * 1 + 0.5 * scan_cost ≈ 3x` the solo mean. Queueing at the
+/// shared cores inflates the p99 by at most that mix ratio times a small
+/// burst factor, so 5x is a generous ceiling; starvation or priority
+/// inversion shows up as 10-100x and still trips the gate. v1 value — to be
+/// tightened from CI history like `WAL_OVERHEAD_BAND`.
+pub const TENANT_ISOLATION_BAND: f64 = 5.0;
+
+/// Absolute slack added to the isolation bound (µs). At DRAM-class L_mem the
+/// solo p99 is tiny and a pure ratio gate would amplify scheduling noise;
+/// the floor keeps the bound meaningful at small absolute latencies.
+pub const TENANT_P99_FLOOR_US: f64 = 50.0;
+
+/// Completed-ops fair-share tolerance. SWRR makes the *issued* stream match
+/// the weight ratio exactly; completed counts inside a finite window differ
+/// only by the in-flight ops straddling the window edges (<= threads ops per
+/// tenant), so the observed share may drift from the weight share by about
+/// `threads / window_ops`. 0.10 covers the shortest fast-mode windows.
+pub const TENANT_FAIR_SHARE_TOL: f64 = 0.10;
+
+/// Multi-tenant serving: two tenants share one store, one SSD, and one
+/// planner DRAM budget. Tenant `point` runs YCSB B point reads on the lower
+/// half of the keyspace; tenant `noisy` runs scan-heavy YCSB E on the upper
+/// half at equal weight. Per-tenant p50/p99/p999 come from the per-tenant
+/// latency histograms (interpolated quantiles). Gated:
+///
+/// 1. isolation — shared-arm point p99 within
+///    `TENANT_ISOLATION_BAND * solo p99 + TENANT_P99_FLOOR_US` per cell;
+/// 2. lanes — every tenant lane has ops > 0 and p50 <= p99 <= p999;
+/// 3. fair share — completed-ops split within `TENANT_FAIR_SHARE_TOL` of the
+///    1:1 weight ratio (SWRR flow conservation).
+///
+/// Cachekv is excluded: its tenant routing ignores scans (no scan support),
+/// so a noisy neighbor there is not scan-heavy and probes nothing new.
+pub fn tenants(fast: bool) -> (Report, bool) {
+    let stores = [StoreKind::Tree, StoreKind::Lsm];
+    let lats = [0.1, 1.0, 5.0];
+    let window = if fast { Dur::ms(6.0) } else { Dur::ms(10.0) };
+    let base = YcsbWorkload::B;
+    let base_seed = SweepCfg::default().seed;
+    let threads = 32usize;
+    let point = || TenantSpec::ycsb("point", YcsbWorkload::B, 1, 0.0, 0.5);
+    let noisy = || TenantSpec::ycsb("noisy", YcsbWorkload::E, 1, 0.5, 1.0);
+
+    let mut jobs = Vec::new();
+    for &kind in &stores {
+        // One shared budget per store: 25% of its offloadable bytes, split
+        // across tenants implicitly by the combined access profile.
+        let budget = (0.25 * store_offload_bytes(kind, base, base_seed) as f64) as u64;
+        for &l in &lats {
+            jobs.push(move || {
+                let sweep = SweepCfg {
+                    l_mem: Dur::us(l),
+                    thread_candidates: vec![threads],
+                    window,
+                    placement: PlacementPolicy::Budget { dram_bytes: budget },
+                    ..Default::default()
+                };
+                let solo_set = TenantSet::solo(point());
+                let shared_set = TenantSet::new(vec![point(), noisy()]);
+                let solo = run_store_ycsb_tenants(kind, base, &solo_set, &sweep, threads, true);
+                let shared = run_store_ycsb_tenants(kind, base, &shared_set, &sweep, threads, true);
+                (kind, l, solo, shared)
+            });
+        }
+    }
+    let results = parallel_map(jobs);
+
+    let mut r = Report::new(
+        "Multi-tenant serving — per-tenant tail latency under a noisy neighbor",
+        &[
+            "store",
+            "L_mem(us)",
+            "arm",
+            "tenant",
+            "ops/s",
+            "share",
+            "p50(us)",
+            "p99(us)",
+            "p999(us)",
+            "p99/solo",
+            "absorb",
+            "dram_MB",
+            "gate",
+        ],
+    );
+    let mut failures: Vec<String> = Vec::new();
+    for (kind, l, solo, shared) in &results {
+        let cell = format!("{kind:?} L={l}us");
+        if solo.stats.tenants.len() != 1 || shared.stats.tenants.len() != 2 {
+            failures.push(format!("{cell}: missing tenant lanes"));
+            continue;
+        }
+        let sp = &solo.stats.tenants[0];
+        let pt = &shared.stats.tenants[0];
+        let nn = &shared.stats.tenants[1];
+
+        let bound_us = sp.p99.as_us() * TENANT_ISOLATION_BAND + TENANT_P99_FLOOR_US;
+        let iso_ok = pt.p99.as_us() <= bound_us;
+        if !iso_ok {
+            failures.push(format!(
+                "{cell}: point p99 {:.1}us > bound {:.1}us (solo {:.1}us)",
+                pt.p99.as_us(),
+                bound_us,
+                sp.p99.as_us()
+            ));
+        }
+        let lanes_ok = [sp, pt, nn]
+            .iter()
+            .all(|t| t.ops > 0 && t.p50 <= t.p99 && t.p99 <= t.p999 && t.p999 > Dur::ZERO);
+        if !lanes_ok {
+            failures.push(format!("{cell}: empty or non-monotone tenant lane"));
+        }
+        let share = pt.ops as f64 / (pt.ops + nn.ops).max(1) as f64;
+        let share_ok = (share - 0.5).abs() <= TENANT_FAIR_SHARE_TOL;
+        if !share_ok {
+            failures.push(format!("{cell}: point completed-ops share {share:.3} vs 0.5"));
+        }
+
+        let gate = if iso_ok && lanes_ok && share_ok {
+            "ok"
+        } else {
+            "FAIL"
+        };
+        r.row(vec![
+            format!("{kind:?}"),
+            f1(*l),
+            "solo".into(),
+            "point".into(),
+            f1(sp.ops_per_sec),
+            f3(1.0),
+            f1(sp.p50.as_us()),
+            f1(sp.p99.as_us()),
+            f1(sp.p999.as_us()),
+            f2(1.0),
+            f3(solo.absorbed_frac),
+            f1(solo.dram_bytes as f64 / (1 << 20) as f64),
+            "-".into(),
+        ]);
+        r.row(vec![
+            format!("{kind:?}"),
+            f1(*l),
+            "shared".into(),
+            "point".into(),
+            f1(pt.ops_per_sec),
+            f3(share),
+            f1(pt.p50.as_us()),
+            f1(pt.p99.as_us()),
+            f1(pt.p999.as_us()),
+            f2(pt.p99.as_us() / sp.p99.as_us().max(1e-9)),
+            f3(shared.absorbed_frac),
+            f1(shared.dram_bytes as f64 / (1 << 20) as f64),
+            gate.into(),
+        ]);
+        r.row(vec![
+            format!("{kind:?}"),
+            f1(*l),
+            "shared".into(),
+            "noisy".into(),
+            f1(nn.ops_per_sec),
+            f3(1.0 - share),
+            f1(nn.p50.as_us()),
+            f1(nn.p99.as_us()),
+            f1(nn.p999.as_us()),
+            "-".into(),
+            f3(shared.absorbed_frac),
+            f1(shared.dram_bytes as f64 / (1 << 20) as f64),
+            "-".into(),
+        ]);
+    }
+
+    let all_ok = failures.is_empty();
+    r.note("two tenants share the store, the SSD, and one planner DRAM");
+    r.note("budget; SWRR multiplexing issues ops in an exact 1:1 interleave");
+    r.note("point = YCSB B on keys [0, 0.5), noisy = scan-heavy YCSB E on");
+    r.note("[0.5, 1.0); solo arm = point tenant alone, same budget and seed");
+    r.note("per-tenant quantiles use the interpolated histogram (p999 is a");
+    r.note("real intra-bucket estimate, not a bucket-edge overstatement)");
+    r.note(format!(
+        "isolation gate: shared point p99 <= {TENANT_ISOLATION_BAND:.0}x \
+         solo p99 + {TENANT_P99_FLOOR_US:.0}us (v1 band, see const docs)"
+    ));
+    r.note(format!(
+        "fair-share gate: completed-ops split within {TENANT_FAIR_SHARE_TOL:.2} \
+         of the 1:1 weight ratio"
+    ));
+    if all_ok {
+        r.note("all tenant gates passed at every swept L_mem");
+    } else {
+        for f in &failures {
+            r.note(format!("GATE FAILED: {f}"));
+        }
+    }
+    r.write_csv("tenants").ok();
     (r, all_ok)
 }
 

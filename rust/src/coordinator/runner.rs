@@ -13,7 +13,7 @@ use crate::sim::{
     Dur, Machine, MachineConfig, MemConfig, RetryPolicy, Rng, RunStats, Service, SsdConfig,
     TailProfile,
 };
-use crate::workload::{PhasedWorkload, YcsbWorkload};
+use crate::workload::{PhasedWorkload, TenantSet, YcsbWorkload};
 
 /// Which KV store design a sweep drives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -633,6 +633,97 @@ pub fn run_store_ycsb_profiled(
     }
 }
 
+/// Result of one multi-tenant arm ([`run_store_ycsb_tenants`]): the window
+/// stats (whose `tenants` lanes the `tenants` experiment gates on) plus the
+/// shared-budget accounting.
+pub struct TenantRun {
+    pub stats: RunStats,
+    /// Share of the run's measured offloadable accesses the shared DRAM
+    /// budget absorbed ([`Plan::absorbed_fraction`] over the *combined*
+    /// multi-tenant profile — the implicit cross-tenant budget split).
+    pub absorbed_frac: f64,
+    /// Simulated DRAM bytes the placement consumed.
+    pub dram_bytes: u64,
+}
+
+/// Run one store under a multi-tenant workload ([`crate::workload::tenants`])
+/// at one sweep point. `base` supplies the store sizing/seed identity (same
+/// formula as [`run_store_ycsb`], so a solo full-slice tenant whose spec
+/// matches `base` is bit-identical to that path — `tests/tenants.rs` pins
+/// it); the tenant set supplies the per-op behaviour.
+///
+/// With `replan`, the [`run_store_ycsb_profiled`] two-phase macro applies:
+/// phase 1 profiles the *combined* tenant access stream under the static
+/// ranking, phase 2 rebuilds the identical store and replans the one shared
+/// budget over that profile — the planner's cross-tenant budget split.
+pub fn run_store_ycsb_tenants(
+    kind: StoreKind,
+    base: YcsbWorkload,
+    tenants: &TenantSet,
+    sweep: &SweepCfg,
+    threads: usize,
+    replan: bool,
+) -> TenantRun {
+    let mcfg = sweep.machine(threads);
+    let seed = sweep.seed ^ 0xfeed ^ base.tag().as_bytes()[0] as u64;
+    macro_rules! tenant_run {
+        ($new:expr, $bg:expr) => {{
+            let mut rng = Rng::new(seed);
+            let kv = $bg($new(&mut rng));
+            let mut m = Machine::new(mcfg.clone(), kv);
+            let mut stats = m.run(sweep.warmup, sweep.window);
+            if replan {
+                // Rebuild the identical store, replan the shared budget
+                // over the combined profile, re-measure.
+                let profile = m.service.profile.clone();
+                let mut rng = Rng::new(seed);
+                let mut kv = $bg($new(&mut rng));
+                kv.replan(&profile);
+                m = Machine::new(mcfg, kv);
+                stats = m.run(sweep.warmup, sweep.window);
+            }
+            TenantRun {
+                absorbed_frac: m.service.plan().absorbed_fraction(&m.service.profile),
+                dram_bytes: m.service.dram_bytes(),
+                stats,
+            }
+        }};
+    }
+    match kind {
+        StoreKind::Tree => {
+            let cfg = TreeKvConfig {
+                placement: sweep.placement,
+                tenants: Some(tenants.clone()),
+                ..ycsb_tree_cfg(base)
+            };
+            let cores = mcfg.cores;
+            tenant_run!(
+                |rng: &mut Rng| TreeKv::new(cfg.clone(), rng),
+                |kv: TreeKv| kv.with_background(cores, threads)
+            )
+        }
+        StoreKind::Lsm => {
+            let cfg = LsmKvConfig {
+                placement: sweep.placement,
+                tenants: Some(tenants.clone()),
+                ..ycsb_lsm_cfg(base)
+            };
+            tenant_run!(
+                |rng: &mut Rng| LsmKv::new(cfg.clone(), rng),
+                |kv: LsmKv| kv.with_background(threads)
+            )
+        }
+        StoreKind::Cache => {
+            let cfg = CacheKvConfig {
+                placement: sweep.placement,
+                tenants: Some(tenants.clone()),
+                ..ycsb_cache_cfg(base)
+            };
+            tenant_run!(|rng: &mut Rng| CacheKv::new(cfg.clone(), rng), |kv: CacheKv| kv)
+        }
+    }
+}
+
 /// Knobs of the online adaptive replanner (`kvs::placement` module docs,
 /// "Online replanning": decay, hysteresis, migration cost).
 #[derive(Debug, Clone)]
@@ -1078,6 +1169,7 @@ mod tests {
             op_latency_mean: Dur::ZERO,
             op_latency_p50: Dur::ZERO,
             op_latency_p99: Dur::ZERO,
+            op_latency_p999: Dur::ZERO,
             mean_m: 10.0,
             mean_m_dram: 0.0,
             mean_s: 1.0,
@@ -1091,6 +1183,7 @@ mod tests {
             io_retries: 0,
             io_errors: 0,
             lock_contention: 0.0,
+            tenants: Vec::new(),
         }
     }
 

@@ -33,7 +33,9 @@ use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
 use super::wal::{Durable, Wal, WalConfig, WalKind, WalRecord};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step};
-use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ValueSize};
+use crate::workload::{
+    KeyDist, KeyGen, OpKind, OpMix, OpWeights, TenantRouter, TenantSet, TenantTracker, ValueSize,
+};
 
 /// Placement structure classes (`kvs::placement`), hottest-first: the
 /// tier-1 hash chains (CacheLib's AccessContainer — walked on every
@@ -89,6 +91,11 @@ pub struct CacheKvConfig {
     /// never resurrect after replay; an acked write is present-or-evicted
     /// (capacity eviction of a durable put is legal cache behavior).
     pub wal: WalConfig,
+    /// Multi-tenant workload multiplexing (`workload::tenants`); `None`
+    /// (the default) is the legacy single-tenant path, bit-identical to
+    /// pre-tenant behaviour. The cache has no scan path, so tenant
+    /// `scan_len` is ignored here.
+    pub tenants: Option<TenantSet>,
 }
 
 impl Default for CacheKvConfig {
@@ -111,6 +118,7 @@ impl Default for CacheKvConfig {
             page_bytes: 4096,
             placement: PlacementPolicy::AllSecondary,
             wal: WalConfig::default(),
+            tenants: None,
         }
     }
 }
@@ -153,6 +161,10 @@ pub struct CacheKv {
     pub stats: KvStats,
     /// The store's write-ahead log (`kvs::wal`; inert when disabled).
     pub wal: Wal,
+    /// Tenant scheduler + per-tenant key generators (`cfg.tenants`).
+    tenants: Option<TenantRouter>,
+    /// Which tenant owns each thread's in-flight op (`Service::op_tenant`).
+    tenant_tids: TenantTracker,
 }
 
 #[derive(Debug)]
@@ -240,6 +252,8 @@ impl CacheKv {
             profile,
             stats: KvStats::default(),
             wal: Wal::new(cfg.wal.clone()),
+            tenants: cfg.tenants.as_ref().map(|set| TenantRouter::new(set, cfg.n_items)),
+            tenant_tids: TenantTracker::default(),
             keygen,
             cfg,
         };
@@ -573,15 +587,29 @@ fn evict_lock(key: u64) -> u32 {
 impl Service for CacheKv {
     type Op = CacheOp;
 
-    fn next_op(&mut self, _tid: usize, rng: &mut Rng) -> CacheOp {
-        let key = self.keygen.sample(rng);
-        match self.weights().sample(rng) {
+    fn next_op(&mut self, tid: usize, rng: &mut Rng) -> CacheOp {
+        // Tenant selection is RNG-free (SWRR), so the single-tenant path
+        // consumes the exact legacy draw sequence: key, kind.
+        let tenant = self.tenants.as_mut().map(|r| r.pick());
+        self.tenant_tids.note(tid, tenant);
+        let (key, kind) = if let Some(t) = tenant {
+            let router = self.tenants.as_ref().unwrap();
+            let key = router.sample_key(t, rng);
+            (key, router.spec(t).ops.sample(rng))
+        } else {
+            (self.keygen.sample(rng), self.weights().sample(rng))
+        };
+        match kind {
             OpKind::Read => self.op_get(key),
             OpKind::Write => self.op_put(key),
             OpKind::Delete => self.op_delete(key),
             OpKind::Rmw => self.op_rmw(key),
             OpKind::Scan => self.op_scan(),
         }
+    }
+
+    fn op_tenant(&self, tid: usize) -> Option<u32> {
+        self.tenant_tids.current(tid)
     }
 
     fn step(&mut self, _tid: usize, op: &mut CacheOp, rng: &mut Rng) -> Step {

@@ -37,7 +37,10 @@ use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
 use super::wal::{Durable, Wal, WalConfig, WalKind, WalRecord};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step};
-use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ScanLen, ValueSize};
+use crate::workload::{
+    KeyDist, KeyGen, OpKind, OpMix, OpWeights, ScanLen, TenantRouter, TenantSet, TenantTracker,
+    ValueSize,
+};
 
 /// Placement structure classes (`kvs::placement`), hottest-first: the
 /// sharded hash + LRU cache handles are touched several times per lookup
@@ -92,6 +95,10 @@ pub struct LsmKvConfig {
     /// Write-ahead log (`kvs::wal`; disabled by default — mutations then
     /// ack straight from the memtable, the historical behavior).
     pub wal: WalConfig,
+    /// Multi-tenant workload multiplexing (`workload::tenants`); `None`
+    /// (the default) is the legacy single-tenant path, bit-identical to
+    /// pre-tenant behaviour.
+    pub tenants: Option<TenantSet>,
 }
 
 impl Default for LsmKvConfig {
@@ -120,6 +127,7 @@ impl Default for LsmKvConfig {
             compaction: true,
             placement: PlacementPolicy::AllSecondary,
             wal: WalConfig::default(),
+            tenants: None,
         }
     }
 }
@@ -177,6 +185,10 @@ pub struct LsmKv {
     pub profile: AccessProfile,
     bg_tid_floor: usize,
     bg_threads_per_core: usize,
+    /// Tenant scheduler + per-tenant key generators (`cfg.tenants`).
+    tenants: Option<TenantRouter>,
+    /// Which tenant owns each thread's in-flight op (`Service::op_tenant`).
+    tenant_tids: TenantTracker,
 }
 
 #[derive(Debug)]
@@ -315,6 +327,8 @@ impl LsmKv {
             profile,
             bg_tid_floor: usize::MAX,
             bg_threads_per_core: 1,
+            tenants: cfg.tenants.as_ref().map(|set| TenantRouter::new(set, cfg.n_items)),
+            tenant_tids: TenantTracker::default(),
             keygen,
             cfg,
         };
@@ -341,8 +355,17 @@ impl LsmKv {
         }
     }
 
+    /// Whether the effective workload (tenant set when present, else the
+    /// store's own mix) has mutating mass — drives background flushes.
+    fn workload_has_writes(&self) -> bool {
+        match &self.cfg.tenants {
+            Some(set) => set.any_writes(),
+            None => self.weights().has_writes(),
+        }
+    }
+
     pub fn with_background(mut self, threads_per_core: usize) -> LsmKv {
-        if self.cfg.compaction && self.weights().has_writes() {
+        if self.cfg.compaction && self.workload_has_writes() {
             self.bg_tid_floor = threads_per_core - 1;
             self.bg_threads_per_core = threads_per_core;
         }
@@ -857,6 +880,8 @@ impl Service for LsmKv {
 
     fn next_op(&mut self, tid: usize, rng: &mut Rng) -> LsmOp {
         if self.is_bg(tid) {
+            // Flush ops are the store's own work, owned by no tenant.
+            self.tenant_tids.note(tid, None);
             if self.flush_backlog > 0 {
                 self.flush_backlog -= 1;
                 // The flush moves *sealed* (rotated-memtable) tombstones
@@ -872,17 +897,36 @@ impl Service for LsmKv {
             }
             return LsmOp::BgPause;
         }
-        let key = self.keygen.sample(rng);
-        match self.weights().sample(rng) {
+        // Tenant selection is RNG-free (SWRR), so the single-tenant path
+        // consumes the exact legacy draw sequence: key, kind[, len].
+        let tenant = self.tenants.as_mut().map(|r| r.pick());
+        self.tenant_tids.note(tid, tenant);
+        let (key, kind, scan_len) = if let Some(t) = tenant {
+            let router = self.tenants.as_ref().unwrap();
+            let key = router.sample_key(t, rng);
+            let spec = router.spec(t);
+            (key, spec.ops.sample(rng), spec.scan_len)
+        } else {
+            (
+                self.keygen.sample(rng),
+                self.weights().sample(rng),
+                self.cfg.scan_len,
+            )
+        };
+        match kind {
             OpKind::Read => self.op_get(key),
             OpKind::Write => self.op_put(key),
             OpKind::Delete => self.op_delete(key),
             OpKind::Rmw => self.op_rmw(key),
             OpKind::Scan => {
-                let len = self.cfg.scan_len.sample(rng);
+                let len = scan_len.sample(rng);
                 self.op_scan(key, len)
             }
         }
+    }
+
+    fn op_tenant(&self, tid: usize) -> Option<u32> {
+        self.tenant_tids.current(tid)
     }
 
     fn step(&mut self, _tid: usize, op: &mut LsmOp, _rng: &mut Rng) -> Step {

@@ -462,6 +462,30 @@ impl Plan {
             .sum()
     }
 
+    /// Share of all *measured* offloadable accesses the DRAM-placed prefix
+    /// absorbs, in `[0, 1]` (0.0 on an empty profile).
+    ///
+    /// ## Multi-tenant budget splitting
+    ///
+    /// Under `workload::tenants` the profile is accumulated by **every**
+    /// tenant's ops against the *shared* structure classes, so a replan
+    /// over it splits the one shared `Budget` across tenants implicitly:
+    /// classes hot for high-traffic tenants out-rank classes only a light
+    /// tenant touches, and the absorbed fraction reports how much of the
+    /// *combined* multi-tenant access stream the split serves from DRAM.
+    /// There is no per-tenant quota — isolation is scheduled (SWRR
+    /// issuance shares), while placement optimizes aggregate absorbed
+    /// accesses per DRAM byte exactly as in the single-tenant case. The
+    /// `tenants` experiment reports this fraction per cell so the CSV
+    /// shows what the shared budget bought under contention.
+    pub fn absorbed_fraction(&self, profile: &AccessProfile) -> f64 {
+        let total = profile.total();
+        if total == 0 {
+            return 0.0;
+        }
+        self.absorbed(profile) as f64 / total as f64
+    }
+
     /// Split per-class expected access counts into `(m_sec, m_dram)`:
     /// DRAM-resident classes' hops move to the inline side of the
     /// split-hop Θ (module docs). The shared bucketing for every store's
@@ -598,6 +622,28 @@ mod tests {
             let p = Plan::resolve(PlacementPolicy::Budget { dram_bytes: budget }, classes());
             assert_eq!(p.dram_classes(), want, "budget {budget}");
         }
+    }
+
+    #[test]
+    fn absorbed_fraction_tracks_placed_prefix() {
+        let mut profile = AccessProfile::new(3);
+        for _ in 0..80 {
+            profile.tick(0);
+        }
+        for _ in 0..15 {
+            profile.tick(1);
+        }
+        for _ in 0..5 {
+            profile.tick(2);
+        }
+        let none = Plan::resolve(PlacementPolicy::AllSecondary, classes());
+        assert_eq!(none.absorbed_fraction(&profile), 0.0);
+        let top2 = Plan::resolve(PlacementPolicy::TopLevels { k: 2 }, classes());
+        assert!((top2.absorbed_fraction(&profile) - 0.95).abs() < 1e-12);
+        let all = Plan::resolve(PlacementPolicy::AllDram, classes());
+        assert_eq!(all.absorbed_fraction(&profile), 1.0);
+        // Empty profile → 0.0, not NaN.
+        assert_eq!(all.absorbed_fraction(&AccessProfile::new(3)), 0.0);
     }
 
     #[test]

@@ -47,7 +47,10 @@ use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
 use super::wal::{Durable, Wal, WalConfig, WalKind, WalRecord};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
-use crate::workload::{KeyDist, KeyGen, OpKind, OpMix, OpWeights, ScanLen, ValueSize};
+use crate::workload::{
+    KeyDist, KeyGen, OpKind, OpMix, OpWeights, ScanLen, TenantRouter, TenantSet, TenantTracker,
+    ValueSize,
+};
 
 /// Records fetched per scan value-read IO (Aerospike batches record reads).
 pub const SCAN_IO_BATCH: usize = 8;
@@ -116,6 +119,13 @@ pub struct TreeKvConfig {
     /// by **digest** — the index's native encoding — so recovery replays at
     /// the digest level.
     pub wal: WalConfig,
+    /// Multi-tenant workload multiplexing (`workload::tenants`): when set,
+    /// each op is issued on behalf of a deterministically scheduled tenant
+    /// using that tenant's keyspace slice, mix, and scan lengths; `ops`/
+    /// `mix`/`key_dist` then only describe the sizing baseline. `None`
+    /// (the default) is the legacy single-tenant path, bit-identical to
+    /// pre-tenant behaviour.
+    pub tenants: Option<TenantSet>,
 }
 
 impl Default for TreeKvConfig {
@@ -135,6 +145,7 @@ impl Default for TreeKvConfig {
             defrag: true,
             n_locks: 64,
             wal: WalConfig::default(),
+            tenants: None,
         }
     }
 }
@@ -168,6 +179,10 @@ pub struct TreeKv {
     /// defragger thread (one per core); `usize::MAX` disables them.
     bg_tid_floor: usize,
     bg_threads_per_core: usize,
+    /// Tenant scheduler + per-tenant key generators (`cfg.tenants`).
+    tenants: Option<TenantRouter>,
+    /// Which tenant owns each thread's in-flight op (`Service::op_tenant`).
+    tenant_tids: TenantTracker,
 }
 
 /// Operation state machine.
@@ -290,6 +305,8 @@ impl TreeKv {
             wal: Wal::new(cfg.wal.clone()),
             bg_tid_floor: usize::MAX,
             bg_threads_per_core: 1,
+            tenants: cfg.tenants.as_ref().map(|set| TenantRouter::new(set, cfg.n_items)),
+            tenant_tids: TenantTracker::default(),
             keygen,
             cfg,
         };
@@ -313,10 +330,19 @@ impl TreeKv {
         }
     }
 
+    /// Whether the effective workload (tenant set when present, else the
+    /// store's own mix) has mutating mass — drives background defrag.
+    fn workload_has_writes(&self) -> bool {
+        match &self.cfg.tenants {
+            Some(set) => set.any_writes(),
+            None => self.weights().has_writes(),
+        }
+    }
+
     /// Designate background threads: the machine's thread ids are laid out
     /// core-major; the last thread of each core becomes the defragger.
     pub fn with_background(mut self, cores: usize, threads_per_core: usize) -> TreeKv {
-        if self.cfg.defrag && self.weights().has_writes() {
+        if self.cfg.defrag && self.workload_has_writes() {
             self.bg_tid_floor = threads_per_core - 1; // tid % tpc == floor
             self.bg_threads_per_core = threads_per_core;
             let _ = cores;
@@ -970,14 +996,30 @@ impl Service for TreeKv {
 
     fn next_op(&mut self, tid: usize, rng: &mut Rng) -> TreeOp {
         if self.is_bg(tid) {
+            // Defrag ops are the store's own work, owned by no tenant.
+            self.tenant_tids.note(tid, None);
             // Defrag pacing: only work when enough dead blocks accumulated.
             if self.dead_blocks > 64 {
                 return TreeOp::DefragRead;
             }
             return TreeOp::DefragPause;
         }
-        let key = self.keygen.sample(rng);
-        let kind = self.weights().sample(rng);
+        // Tenant selection is RNG-free (SWRR), so the single-tenant path
+        // consumes the exact legacy draw sequence: key, kind, vsize[, len].
+        let tenant = self.tenants.as_mut().map(|r| r.pick());
+        self.tenant_tids.note(tid, tenant);
+        let (key, kind, scan_len) = if let Some(t) = tenant {
+            let router = self.tenants.as_ref().unwrap();
+            let key = router.sample_key(t, rng);
+            let spec = router.spec(t);
+            (key, spec.ops.sample(rng), spec.scan_len)
+        } else {
+            (
+                self.keygen.sample(rng),
+                self.weights().sample(rng),
+                self.cfg.scan_len,
+            )
+        };
         let vsize = self.cfg.value_size.sample(rng);
         match kind {
             OpKind::Read => self.op_get(key),
@@ -985,10 +1027,14 @@ impl Service for TreeKv {
             OpKind::Delete => self.op_delete(key),
             OpKind::Rmw => self.op_rmw(key, vsize),
             OpKind::Scan => {
-                let len = self.cfg.scan_len.sample(rng);
+                let len = scan_len.sample(rng);
                 self.op_scan(key, len)
             }
         }
+    }
+
+    fn op_tenant(&self, tid: usize) -> Option<u32> {
+        self.tenant_tids.current(tid)
     }
 
     fn step(&mut self, _tid: usize, op: &mut TreeOp, rng: &mut Rng) -> Step {

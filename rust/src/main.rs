@@ -7,7 +7,7 @@
 //!
 //! Experiments: fig3 fig10 fig11micro fig11kvs fig12 fig14 fig15 fig16
 //!              fig17 fig18 table6 val1404 ycsb ssdscale modelcheck
-//!              placement planner adaptive durability
+//!              placement planner adaptive durability tenants
 //! (The offline image has no argument-parsing crate; parsing is by hand.)
 //!
 //! `modelcheck` validates the Θ_scan-extended analytic model against the
@@ -31,13 +31,18 @@
 //! terms, requires group commit to beat per-op commit at equal durability,
 //! and injects a transient SSD error window to check retry/backoff keeps
 //! goodput with bounded p99 while a no-retry control errors out.
+//! `tenants` multiplexes a point-read tenant against a scan-heavy noisy
+//! neighbor on one shared store/SSD/DRAM budget and exits non-zero when the
+//! point tenant's p99 leaves the documented isolation band versus its solo
+//! baseline, a per-tenant latency lane is empty or non-monotone, or the
+//! completed-ops split drifts from the scheduler's weight ratio.
 
 use cxlkvs::coordinator::experiments::{self, ModelBackend};
 
 const EXPERIMENTS: &[&str] = &[
     "fig3", "fig10", "fig11micro", "fig11kvs", "fig12", "fig14", "fig15", "fig16", "fig17",
     "fig18", "table6", "val1404", "ycsb", "ssdscale", "modelcheck", "placement", "planner",
-    "adaptive", "durability",
+    "adaptive", "durability", "tenants",
 ];
 
 fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
@@ -116,6 +121,19 @@ fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
                      acked-durability, WAL overhead outside the model band, group \
                      commit not beating per-op, or unbounded faulted p99 — see the \
                      GATE FAILED notes)"
+                );
+                std::process::exit(1);
+            }
+        }
+        "tenants" => {
+            let (r, ok) = experiments::tenants(fast);
+            r.print();
+            if !ok {
+                eprintln!(
+                    "tenants: a multi-tenant gate failed (point-tenant p99 outside \
+                     the isolation band vs its solo baseline, an empty/non-monotone \
+                     tenant latency lane, or completed-ops share off the weight \
+                     ratio — see the GATE FAILED notes)"
                 );
                 std::process::exit(1);
             }

@@ -10,7 +10,7 @@ use super::time::Dur;
 /// `n_buckets` buckets span `[lo, hi)`. Values below `lo` land in bucket 0
 /// (that bucket therefore means "effectively zero wait" — cache hits);
 /// values at or above `hi` land in the last bucket.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LatencyHist {
     counts: Vec<u64>,
     lo_ps: f64,
@@ -75,10 +75,18 @@ impl LatencyHist {
         Dur(self.max_ps)
     }
 
-    /// Quantile (0.0..=1.0) estimated as the upper edge of the containing
-    /// bucket. Bucket 0 means "effectively zero wait" (below `lo`, i.e.
+    /// Quantile (0.0..=1.0) with intra-bucket linear interpolation.
+    ///
+    /// Bucket 0 means "effectively zero wait" (below `lo`, i.e.
     /// prefetch/cache hits), so it reports `Dur::ZERO` rather than its
     /// ~`lo * g` upper edge — an all-hit histogram has an honest zero p50.
+    /// A quantile landing in the *last* bucket reports the observed
+    /// `max()` instead of the bucket edge: samples at or above `hi` clamp
+    /// into that bucket, so its edge can understate the true tail
+    /// arbitrarily (a 1 s sample in a 100 µs histogram read as ~100 µs).
+    /// Everywhere else the rank fraction within the containing bucket
+    /// interpolates between the bucket edges — at 120-bucket (~12%)
+    /// resolution the raw upper edge would quantize p999 onto p99.
     pub fn quantile(&self, q: f64) -> Dur {
         if self.total == 0 {
             return Dur::ZERO;
@@ -91,8 +99,14 @@ impl LatencyHist {
                 if i == 0 {
                     return Dur::ZERO;
                 }
-                let edge = self.lo_ps * ((i as f64 + 1.0) * self.log_g).exp();
-                return Dur(edge as u64);
+                if i == self.counts.len() - 1 {
+                    return Dur(self.max_ps);
+                }
+                let lower = self.lo_ps * (i as f64 * self.log_g).exp();
+                let upper = self.lo_ps * ((i as f64 + 1.0) * self.log_g).exp();
+                let f = (target - (acc - c)) as f64 / c as f64;
+                let v = lower + f * (upper - lower);
+                return Dur((v as u64).min(self.max_ps));
             }
         }
         Dur(self.max_ps)
@@ -100,12 +114,25 @@ impl LatencyHist {
 
     /// Fraction of samples at or above a threshold (used to estimate the
     /// premature-eviction ratio ε from the load-wait distribution).
+    ///
+    /// Bucket 0 holds zero/sub-`lo` samples ("effectively zero wait" —
+    /// prefetch hits), but its upper edge is `lo·g` ≈ 1.2 ns, so the
+    /// generic edge test would count every hit as "at least d" for any
+    /// threshold below that edge and an all-hit histogram would report
+    /// 1.0. Mirror the quantile's bucket-0 handling: hits only count
+    /// against a zero threshold.
     pub fn frac_at_least(&self, d: Dur) -> f64 {
         if self.total == 0 {
             return 0.0;
         }
         let mut acc = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
+            if i == 0 {
+                if d.0 == 0 {
+                    acc += c;
+                }
+                continue;
+            }
             let upper = self.lo_ps * ((i as f64 + 1.0) * self.log_g).exp();
             if upper as u64 > d.0 {
                 acc += c;
@@ -128,7 +155,16 @@ impl LatencyHist {
     }
 
     pub fn merge(&mut self, other: &LatencyHist) {
-        assert_eq!(self.counts.len(), other.counts.len());
+        // Equal bucket *count* is not enough: `load_wait` (1 ns–100 µs,
+        // 120) and `io_latency` (100 ns–10 ms, 120) would pass a
+        // count-only assert yet merge into garbage. Ranges are built from
+        // the same constants when they match, so bit-compare.
+        assert!(
+            self.counts.len() == other.counts.len()
+                && self.lo_ps.to_bits() == other.lo_ps.to_bits()
+                && self.log_g.to_bits() == other.log_g.to_bits(),
+            "LatencyHist::merge requires identical bucket ranges"
+        );
         for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
             *a += b;
         }
@@ -222,6 +258,84 @@ mod tests {
         assert_eq!(s.quantile(0.5), Dur::ZERO);
         assert_eq!(s.max(), Dur(1));
         assert_eq!(s.mean(), Dur(1));
+    }
+
+    #[test]
+    fn frac_at_least_ignores_zero_bucket() {
+        // Regression: bucket 0's upper edge is ~1.2 ns, so the pre-fix
+        // frac_at_least counted every zero-wait (prefetch hit) sample as
+        // "at least d" for thresholds below that edge — an all-hit
+        // histogram reported fraction 1.0 and inflated the ε estimate.
+        let mut h = LatencyHist::new();
+        for _ in 0..100 {
+            h.record(Dur::ZERO);
+        }
+        assert_eq!(h.frac_at_least(Dur::ns(1.0)), 0.0);
+        assert_eq!(h.frac_at_least(Dur(1)), 0.0);
+        // A zero threshold is satisfied by every sample, hits included.
+        assert_eq!(h.frac_at_least(Dur::ZERO), 1.0);
+        // Mixed: 100 hits + 25 slow loads → 20% at or above 1 µs.
+        for _ in 0..25 {
+            h.record(Dur::us(9.0));
+        }
+        let f = h.frac_at_least(Dur::us(1.0));
+        assert!((f - 0.20).abs() < 1e-9, "f={f}");
+    }
+
+    #[test]
+    fn top_bucket_quantile_reports_observed_max() {
+        // Regression: samples at or above `hi` clamp into the last
+        // bucket, and the pre-fix quantile reported that bucket's edge
+        // (~100 µs) even when every sample was 1 s — a 10⁴× tail
+        // understatement.
+        let mut h = LatencyHist::new();
+        for _ in 0..10 {
+            h.record(Dur::secs(1.0));
+        }
+        assert_eq!(h.quantile(0.50), Dur::secs(1.0));
+        assert_eq!(h.quantile(0.999), Dur::secs(1.0));
+    }
+
+    #[test]
+    fn quantile_interpolates_within_bucket() {
+        // 100 identical samples land in one bucket; pre-fix every
+        // quantile reported the same upper edge. The rank fraction now
+        // spreads across the bucket (capped at the observed max).
+        let mut h = LatencyHist::new();
+        for _ in 0..100 {
+            h.record(Dur::us(5.0));
+        }
+        let p10 = h.quantile(0.10);
+        let p90 = h.quantile(0.90);
+        assert!(p10 < p90, "p10={p10} p90={p90}");
+        assert!(p10 > Dur::us(4.0) && p90 <= h.max());
+        // A distinguishable tail: p999 resolves past p99 instead of
+        // quantizing onto the same bucket edge.
+        let mut t = LatencyHist::new();
+        for _ in 0..900 {
+            t.record(Dur::us(1.0));
+        }
+        for _ in 0..90 {
+            t.record(Dur::us(5.0));
+        }
+        for _ in 0..10 {
+            t.record(Dur::us(50.0));
+        }
+        let p99 = t.quantile(0.99);
+        let p999 = t.quantile(0.999);
+        assert!(p99 < p999, "p99={p99} p999={p999}");
+        assert!(p999 > Dur::us(20.0) && p999 <= t.max());
+    }
+
+    #[test]
+    #[should_panic(expected = "identical bucket ranges")]
+    fn merge_rejects_mismatched_ranges() {
+        // Regression: `load_wait` (1 ns–100 µs, 120) and `io_latency`
+        // (100 ns–10 ms, 120) have equal bucket counts, so the pre-fix
+        // count-only assert let them merge into garbage.
+        let mut a = LatencyHist::new();
+        let b = LatencyHist::with_range(Dur::ns(100.0), Dur::ms(10.0), 120);
+        a.merge(&b);
     }
 
     #[test]

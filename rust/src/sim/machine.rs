@@ -98,6 +98,14 @@ pub trait Service {
     /// service should surface a per-op error and finish the op rather than
     /// wedge (see `kvs::common::KvStats::failed_ops`).
     fn io_failed(&mut self, _tid: usize, _op: &mut Self::Op) {}
+    /// Which tenant owns thread `tid`'s in-flight op, if the service is
+    /// multi-tenant (see `workload::tenants`). Queried by the machine at
+    /// `Step::Done` so `Metrics` can account the op to a per-tenant lane;
+    /// `None` (the default, and background workers' answer) records the op
+    /// globally only.
+    fn op_tenant(&self, _tid: usize) -> Option<u32> {
+        None
+    }
 }
 
 /// IO retry policy: on a transient device error the machine resubmits the
@@ -760,6 +768,7 @@ impl<S: Service> Machine<S> {
                 }
                 Step::Done => {
                     let now = self.cores[core_id].time;
+                    let tenant = self.service.op_tenant(tid);
                     let th = &mut self.threads[tid];
                     self.metrics.record_op(
                         now,
@@ -767,6 +776,7 @@ impl<S: Service> Machine<S> {
                         th.op_mem_accesses,
                         th.op_ios,
                         th.op_compute,
+                        tenant,
                     );
                     th.op = None;
                     // Continue in the same slice: the next op's first memory
@@ -780,6 +790,12 @@ impl<S: Service> Machine<S> {
     pub fn breakdowns(&self) -> Vec<CoreBreakdown> {
         self.cores.iter().map(|c| c.breakdown.clone()).collect()
     }
+
+    /// The current window's raw counters (read-only; tests use this to
+    /// check the per-tenant accounting invariant against the globals).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
 }
 
 /// Summary of one measurement window.
@@ -788,10 +804,13 @@ pub struct RunStats {
     /// Operations completed per second of simulated time.
     pub ops_per_sec: f64,
     pub ops: u64,
-    /// Mean KV-op latency and quantiles.
+    /// Mean KV-op latency and quantiles (p999 is meaningful because the
+    /// histogram interpolates within buckets and reports the observed max
+    /// for the clamped top bucket — see `sim::hist`).
     pub op_latency_mean: Dur,
     pub op_latency_p50: Dur,
     pub op_latency_p99: Dur,
+    pub op_latency_p999: Dur,
     /// Mean secondary-memory accesses per op (the measured M_sec).
     pub mean_m: f64,
     /// Mean inline DRAM accesses per op (the measured M_dram of the
@@ -817,6 +836,20 @@ pub struct RunStats {
     pub io_errors: u64,
     /// Lock contention ratio.
     pub lock_contention: f64,
+    /// Per-tenant lanes, indexed by tenant id (empty on the single-tenant
+    /// path — names live in the tenant set, not the machine).
+    pub tenants: Vec<TenantStats>,
+}
+
+/// One tenant's slice of a measurement window (see `workload::tenants`).
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub ops: u64,
+    pub ops_per_sec: f64,
+    pub mean: Dur,
+    pub p50: Dur,
+    pub p99: Dur,
+    pub p999: Dur,
 }
 
 impl RunStats {
@@ -829,6 +862,7 @@ impl RunStats {
             op_latency_mean: m.op_latency.mean(),
             op_latency_p50: m.op_latency.quantile(0.5),
             op_latency_p99: m.op_latency.quantile(0.99),
+            op_latency_p999: m.op_latency.quantile(0.999),
             mean_m: if ops > 0 {
                 m.sum_mem_accesses as f64 / ops as f64
             } else {
@@ -866,6 +900,19 @@ impl RunStats {
             } else {
                 0.0
             },
+            tenants: m
+                .tenant_ops
+                .iter()
+                .zip(&m.tenant_latency)
+                .map(|(&ops, h)| TenantStats {
+                    ops,
+                    ops_per_sec: ops as f64 / secs,
+                    mean: h.mean(),
+                    p50: h.quantile(0.5),
+                    p99: h.quantile(0.99),
+                    p999: h.quantile(0.999),
+                })
+                .collect(),
         }
     }
 }

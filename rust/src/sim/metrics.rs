@@ -48,6 +48,12 @@ pub struct Metrics {
     pub op_latency: LatencyHist,
     /// Distribution of device-side IO latency.
     pub io_latency: LatencyHist,
+    /// Per-tenant completed ops (indexed by tenant id; grown on demand —
+    /// empty on the single-tenant path, where `record_op` sees no tenant).
+    pub tenant_ops: Vec<u64>,
+    /// Per-tenant op-latency histograms, same range as `op_latency` so
+    /// they merge with it (and with each other) cleanly.
+    pub tenant_latency: Vec<LatencyHist>,
     #[allow(dead_code)]
     cores: usize,
 }
@@ -71,10 +77,18 @@ impl Metrics {
             sum_ios: 0,
             sum_compute: Dur::ZERO,
             load_wait: LatencyHist::new(),
-            op_latency: LatencyHist::with_range(Dur::ns(10.0), Dur::ms(10.0), 160),
+            op_latency: Metrics::op_latency_hist(),
             io_latency: LatencyHist::with_range(Dur::ns(100.0), Dur::ms(10.0), 120),
+            tenant_ops: Vec::new(),
+            tenant_latency: Vec::new(),
             cores,
         }
+    }
+
+    /// The op-latency bucket layout (shared by the global and per-tenant
+    /// histograms so `LatencyHist::merge`'s range check always passes).
+    pub fn op_latency_hist() -> LatencyHist {
+        LatencyHist::with_range(Dur::ns(10.0), Dur::ms(10.0), 160)
     }
 
     pub fn reset(&mut self) {
@@ -83,12 +97,29 @@ impl Metrics {
     }
 
     #[inline]
-    pub fn record_op(&mut self, _now: Time, latency: Dur, mem_accesses: u32, ios: u32, compute: Dur) {
+    pub fn record_op(
+        &mut self,
+        _now: Time,
+        latency: Dur,
+        mem_accesses: u32,
+        ios: u32,
+        compute: Dur,
+        tenant: Option<u32>,
+    ) {
         self.ops += 1;
         self.sum_mem_accesses += mem_accesses as u64;
         self.sum_ios += ios as u64;
         self.sum_compute += compute;
         self.op_latency.record(latency);
+        if let Some(t) = tenant {
+            let t = t as usize;
+            if t >= self.tenant_ops.len() {
+                self.tenant_ops.resize(t + 1, 0);
+                self.tenant_latency.resize_with(t + 1, Metrics::op_latency_hist);
+            }
+            self.tenant_ops[t] += 1;
+            self.tenant_latency[t].record(latency);
+        }
     }
 }
 
@@ -99,13 +130,32 @@ mod tests {
     #[test]
     fn record_and_reset() {
         let mut m = Metrics::new(2);
-        m.record_op(Time::ZERO, Dur::us(3.0), 10, 1, Dur::us(1.0));
-        m.record_op(Time::ZERO, Dur::us(5.0), 12, 2, Dur::us(1.2));
+        m.record_op(Time::ZERO, Dur::us(3.0), 10, 1, Dur::us(1.0), None);
+        m.record_op(Time::ZERO, Dur::us(5.0), 12, 2, Dur::us(1.2), None);
         assert_eq!(m.ops, 2);
         assert_eq!(m.sum_mem_accesses, 22);
         assert_eq!(m.sum_ios, 3);
+        assert!(m.tenant_ops.is_empty());
         m.reset();
         assert_eq!(m.ops, 0);
         assert_eq!(m.op_latency.total(), 0);
+    }
+
+    #[test]
+    fn per_tenant_lanes_sum_to_global() {
+        let mut m = Metrics::new(1);
+        m.record_op(Time::ZERO, Dur::us(3.0), 1, 0, Dur::ZERO, Some(1));
+        m.record_op(Time::ZERO, Dur::us(5.0), 1, 0, Dur::ZERO, Some(0));
+        m.record_op(Time::ZERO, Dur::us(7.0), 1, 0, Dur::ZERO, Some(1));
+        // Untenanted (background) ops count globally but in no lane.
+        m.record_op(Time::ZERO, Dur::us(9.0), 1, 0, Dur::ZERO, None);
+        assert_eq!(m.tenant_ops, vec![1, 2]);
+        assert_eq!(m.tenant_ops.iter().sum::<u64>() + 1, m.ops);
+        let mut merged = Metrics::op_latency_hist();
+        for h in &m.tenant_latency {
+            merged.merge(h);
+        }
+        assert_eq!(merged.total(), 3);
+        assert_eq!(merged.max(), Dur::us(7.0));
     }
 }

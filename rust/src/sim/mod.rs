@@ -14,7 +14,7 @@ pub mod ssd;
 pub mod time;
 
 pub use hist::LatencyHist;
-pub use machine::{Machine, MachineConfig, RetryPolicy, RunStats, Service, Step, Tier};
+pub use machine::{Machine, MachineConfig, RetryPolicy, RunStats, Service, Step, TenantStats, Tier};
 pub use mem::{MemConfig, MemDevice, TailProfile};
 pub use metrics::{CoreBreakdown, Metrics};
 pub use rng::Rng;

@@ -5,9 +5,11 @@
 pub mod keygen;
 pub mod opgen;
 pub mod phased;
+pub mod tenants;
 pub mod ycsb;
 
 pub use keygen::{KeyDist, KeyGen};
 pub use opgen::{OpKind, OpMix, OpWeights, ScanLen, ValueSize};
 pub use phased::{Phase, PhasedWorkload};
+pub use tenants::{TenantRouter, TenantSet, TenantSpec, TenantTracker};
 pub use ycsb::{churn_weights, YcsbWorkload};

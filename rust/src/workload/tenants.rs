@@ -1,0 +1,292 @@
+//! Multi-tenant workload multiplexing: N tenants, each with its own
+//! keyspace slice, key distribution, and YCSB mix, scheduled over one
+//! shared store by a *deterministic* weighted round-robin.
+//!
+//! Determinism discipline: tenant selection must consume **zero** RNG
+//! draws, so a single tenant spanning the full keyspace with the store's
+//! own mix produces a bit-identical RNG stream to the legacy single-tenant
+//! path (`tests/tenants.rs` pins this). The scheduler is smooth weighted
+//! round-robin (nginx's `swrr`): each pick adds every tenant's weight to
+//! its credit, takes the max-credit tenant (lowest index on ties), and
+//! subtracts the total weight from the winner — exact `w_i / Σw` issuance
+//! shares over any window of `Σw` picks, with maximal interleaving.
+
+use super::keygen::{KeyDist, KeyGen};
+use super::opgen::{OpWeights, ScanLen};
+use super::ycsb::YcsbWorkload;
+use crate::sim::Rng;
+
+/// One tenant: a named workload over a slice of the shared keyspace.
+///
+/// `lo_frac..hi_frac` is the tenant's half-open keyspace slice as fractions
+/// of the store's `n_items`; slices may overlap (shared data) or partition
+/// the space (isolated tenants).
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: &'static str,
+    /// Scheduling weight (issuance share is `weight / Σ weights`).
+    pub weight: u32,
+    pub ops: OpWeights,
+    pub key_dist: KeyDist,
+    pub scan_len: ScanLen,
+    pub lo_frac: f64,
+    pub hi_frac: f64,
+}
+
+impl TenantSpec {
+    /// A tenant running a YCSB preset over `[lo_frac, hi_frac)` of the
+    /// keyspace.
+    pub fn ycsb(
+        name: &'static str,
+        wl: YcsbWorkload,
+        weight: u32,
+        lo_frac: f64,
+        hi_frac: f64,
+    ) -> TenantSpec {
+        TenantSpec {
+            name,
+            weight,
+            ops: wl.weights(),
+            key_dist: wl.key_dist(),
+            scan_len: wl.scan_len(),
+            lo_frac,
+            hi_frac,
+        }
+    }
+}
+
+/// A validated set of tenants (the store-config handle).
+#[derive(Debug, Clone)]
+pub struct TenantSet {
+    specs: Vec<TenantSpec>,
+}
+
+impl TenantSet {
+    pub fn new(specs: Vec<TenantSpec>) -> TenantSet {
+        assert!(!specs.is_empty(), "tenant set must be non-empty");
+        for s in &specs {
+            assert!(s.weight > 0, "tenant {} has zero weight", s.name);
+            assert!(
+                s.lo_frac >= 0.0 && s.lo_frac < s.hi_frac && s.hi_frac <= 1.0,
+                "tenant {} slice [{}, {}) out of range",
+                s.name,
+                s.lo_frac,
+                s.hi_frac
+            );
+        }
+        TenantSet { specs }
+    }
+
+    /// A one-tenant set (full-slice solo baseline arms).
+    pub fn solo(spec: TenantSpec) -> TenantSet {
+        TenantSet::new(vec![spec])
+    }
+
+    pub fn specs(&self) -> &[TenantSpec] {
+        &self.specs
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// True when any tenant's mix has mutating mass (drives the stores'
+    /// background workers the same way `OpWeights::has_writes` does).
+    pub fn any_writes(&self) -> bool {
+        self.specs.iter().any(|s| s.ops.has_writes())
+    }
+}
+
+/// The runtime router a store builds from a [`TenantSet`]: per-tenant key
+/// generators bound to keyspace slices, plus the SWRR scheduler state.
+#[derive(Debug, Clone)]
+pub struct TenantRouter {
+    specs: Vec<TenantSpec>,
+    gens: Vec<KeyGen>,
+    starts: Vec<u64>,
+    credit: Vec<i64>,
+    total_weight: i64,
+}
+
+impl TenantRouter {
+    pub fn new(set: &TenantSet, n_keys: u64) -> TenantRouter {
+        assert!(n_keys > 0);
+        let mut gens = Vec::with_capacity(set.len());
+        let mut starts = Vec::with_capacity(set.len());
+        for s in set.specs() {
+            let start = (s.lo_frac * n_keys as f64) as u64;
+            let end = ((s.hi_frac * n_keys as f64) as u64).clamp(start + 1, n_keys);
+            let start = start.min(end - 1);
+            gens.push(KeyGen::new(end - start, s.key_dist));
+            starts.push(start);
+        }
+        let total_weight = set.specs().iter().map(|s| s.weight as i64).sum();
+        TenantRouter {
+            specs: set.specs().to_vec(),
+            gens,
+            starts,
+            credit: vec![0; set.len()],
+            total_weight,
+        }
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn spec(&self, t: usize) -> &TenantSpec {
+        &self.specs[t]
+    }
+
+    pub fn any_writes(&self) -> bool {
+        self.specs.iter().any(|s| s.ops.has_writes())
+    }
+
+    /// Pick the next tenant to issue an op — smooth weighted round-robin,
+    /// RNG-free and deterministic.
+    pub fn pick(&mut self) -> usize {
+        for (c, s) in self.credit.iter_mut().zip(&self.specs) {
+            *c += s.weight as i64;
+        }
+        let mut best = 0usize;
+        for (i, &c) in self.credit.iter().enumerate() {
+            // Strict `>` gives the lowest index on ties.
+            if c > self.credit[best] {
+                best = i;
+            }
+        }
+        self.credit[best] -= self.total_weight;
+        best
+    }
+
+    /// Draw a key for tenant `t` from its slice (one draw of the tenant's
+    /// own distribution, offset into the shared keyspace).
+    #[inline]
+    pub fn sample_key(&self, t: usize, rng: &mut Rng) -> u64 {
+        self.starts[t] + self.gens[t].sample(rng)
+    }
+
+    /// `[start, end)` key range of tenant `t` in the shared keyspace.
+    pub fn slice(&self, t: usize) -> (u64, u64) {
+        (self.starts[t], self.starts[t] + self.gens[t].n)
+    }
+}
+
+/// Per-thread "which tenant owns the in-flight op" map, so a store can
+/// answer [`crate::sim::Service::op_tenant`] when the op completes many
+/// simulated microseconds after `next_op` chose the tenant.
+#[derive(Debug, Clone, Default)]
+pub struct TenantTracker {
+    by_tid: Vec<u32>,
+}
+
+const NO_TENANT: u32 = u32::MAX;
+
+impl TenantTracker {
+    pub fn note(&mut self, tid: usize, tenant: Option<usize>) {
+        if tid >= self.by_tid.len() {
+            self.by_tid.resize(tid + 1, NO_TENANT);
+        }
+        self.by_tid[tid] = tenant.map(|t| t as u32).unwrap_or(NO_TENANT);
+    }
+
+    pub fn current(&self, tid: usize) -> Option<u32> {
+        match self.by_tid.get(tid) {
+            Some(&t) if t != NO_TENANT => Some(t),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_tenants() -> TenantSet {
+        TenantSet::new(vec![
+            TenantSpec::ycsb("pt", YcsbWorkload::B, 3, 0.0, 0.5),
+            TenantSpec::ycsb("nn", YcsbWorkload::E, 1, 0.5, 1.0),
+        ])
+    }
+
+    #[test]
+    fn swrr_issuance_shares_are_exact() {
+        let set = two_tenants();
+        let mut r = TenantRouter::new(&set, 1000);
+        let mut counts = [0u64; 2];
+        for _ in 0..40 {
+            counts[r.pick()] += 1;
+        }
+        // 3:1 weights → exactly 30/10 over any 40-pick window.
+        assert_eq!(counts, [30, 10]);
+    }
+
+    #[test]
+    fn swrr_is_deterministic_and_interleaved() {
+        let set = two_tenants();
+        let mut a = TenantRouter::new(&set, 1000);
+        let mut b = TenantRouter::new(&set, 1000);
+        let seq_a: Vec<usize> = (0..16).map(|_| a.pick()).collect();
+        let seq_b: Vec<usize> = (0..16).map(|_| b.pick()).collect();
+        assert_eq!(seq_a, seq_b);
+        // Smooth WRR interleaves rather than bursting: the weight-1 tenant
+        // appears within every weight-total window.
+        for w in seq_a.chunks(4) {
+            assert!(w.contains(&1), "window {w:?} starves tenant 1");
+        }
+    }
+
+    #[test]
+    fn single_tenant_always_picked() {
+        let set = TenantSet::solo(TenantSpec::ycsb("solo", YcsbWorkload::B, 1, 0.0, 1.0));
+        let mut r = TenantRouter::new(&set, 500);
+        for _ in 0..10 {
+            assert_eq!(r.pick(), 0);
+        }
+        assert_eq!(r.slice(0), (0, 500));
+    }
+
+    #[test]
+    fn keys_stay_inside_the_tenant_slice() {
+        let set = two_tenants();
+        let r = TenantRouter::new(&set, 1000);
+        let mut rng = Rng::new(7);
+        for t in 0..r.n_tenants() {
+            let (lo, hi) = r.slice(t);
+            for _ in 0..5000 {
+                let k = r.sample_key(t, &mut rng);
+                assert!(k >= lo && k < hi, "tenant {t} key {k} outside [{lo},{hi})");
+            }
+        }
+        assert_eq!(r.slice(0), (0, 500));
+        assert_eq!(r.slice(1), (500, 1000));
+    }
+
+    #[test]
+    fn tracker_maps_threads_to_tenants() {
+        let mut tr = TenantTracker::default();
+        assert_eq!(tr.current(3), None);
+        tr.note(3, Some(1));
+        tr.note(0, None);
+        assert_eq!(tr.current(3), Some(1));
+        assert_eq!(tr.current(0), None);
+        tr.note(3, None);
+        assert_eq!(tr.current(3), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero weight")]
+    fn zero_weight_rejected() {
+        TenantSet::new(vec![TenantSpec::ycsb("z", YcsbWorkload::C, 0, 0.0, 1.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn bad_slice_rejected() {
+        TenantSet::new(vec![TenantSpec::ycsb("s", YcsbWorkload::C, 1, 0.6, 0.4)]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Multi-tenant serving invariants.
+//!
+//! 1. **Bit-identity**: a solo full-slice tenant whose spec matches the base
+//!    YCSB preset must reproduce the legacy single-tenant path exactly — the
+//!    tenant scheduler is RNG-free (SWRR) and the per-op draw order is
+//!    unchanged, so adding the tenant axis cannot perturb any existing
+//!    experiment number.
+//! 2. **Accounting**: with no background threads, every completed op belongs
+//!    to exactly one tenant — per-tenant op counts sum to the global count
+//!    and the merged per-tenant latency histograms equal the global
+//!    histogram bit-for-bit.
+//! 3. **Fair share**: completed ops split by the SWRR weight ratio (up to
+//!    window-edge in-flight skew).
+//! 4. **Shared-arm shape**: a point + noisy-neighbor pair populates both
+//!    lanes with monotone p50 <= p99 <= p999 quantiles.
+
+use cxlkvs::coordinator::runner::{
+    run_store_ycsb, run_store_ycsb_tenants, ycsb_cache_cfg, ycsb_tree_cfg, StoreKind, SweepCfg,
+};
+use cxlkvs::kvs::{CacheKv, CacheKvConfig, TreeKv, TreeKvConfig};
+use cxlkvs::sim::{Dur, Machine, MachineConfig, MemConfig, Metrics, Rng};
+use cxlkvs::workload::{TenantSet, TenantSpec, YcsbWorkload};
+
+fn small_sweep() -> SweepCfg {
+    SweepCfg {
+        warmup: Dur::ms(1.0),
+        window: Dur::ms(3.0),
+        l_mem: Dur::us(2.0),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn solo_full_slice_tenant_is_bit_identical_to_the_legacy_path() {
+    let sweep = small_sweep();
+    for kind in [StoreKind::Tree, StoreKind::Lsm, StoreKind::Cache] {
+        let base = YcsbWorkload::B;
+        let legacy = run_store_ycsb(kind, base, &sweep, 32);
+        let solo = TenantSet::solo(TenantSpec::ycsb("solo", base, 1, 0.0, 1.0));
+        let tenant = run_store_ycsb_tenants(kind, base, &solo, &sweep, 32, false);
+        let st = &tenant.stats;
+        assert_eq!(legacy.ops, st.ops, "{kind:?} ops diverged");
+        assert_eq!(legacy.io_reads, st.io_reads, "{kind:?} io_reads diverged");
+        assert_eq!(legacy.io_writes, st.io_writes, "{kind:?} io_writes diverged");
+        assert_eq!(
+            legacy.op_latency_mean, st.op_latency_mean,
+            "{kind:?} op latency diverged"
+        );
+        assert_eq!(
+            legacy.mean_m.to_bits(),
+            st.mean_m.to_bits(),
+            "{kind:?} mean M diverged"
+        );
+        // The tenant lane exists and only background completions (treekv
+        // defrag under a write mix) escape it.
+        assert_eq!(st.tenants.len(), 1, "{kind:?} lane count");
+        assert!(st.tenants[0].ops > 0, "{kind:?} empty lane");
+        assert!(st.tenants[0].ops <= st.ops, "{kind:?} lane exceeds global");
+    }
+}
+
+fn machine_cfg() -> MachineConfig {
+    MachineConfig {
+        threads_per_core: 32,
+        n_locks: 64,
+        mem: MemConfig::fpga(Dur::us(2.0)),
+        seed: 0x90_1d_e2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn tenant_lanes_sum_to_the_global_metrics_bit_exactly() {
+    // No background threads (treekv without `with_background`, cachekv has
+    // none), so every completed op is tenanted and the lanes must be a
+    // partition of the global counters.
+    let set = TenantSet::new(vec![
+        TenantSpec::ycsb("hot", YcsbWorkload::C, 3, 0.0, 0.5),
+        TenantSpec::ycsb("cold", YcsbWorkload::C, 1, 0.5, 1.0),
+    ]);
+
+    let mut rng = Rng::new(0x7e_4a_47);
+    let tree = TreeKv::new(
+        TreeKvConfig {
+            n_items: 30_000,
+            sprigs: 32,
+            tenants: Some(set.clone()),
+            ..ycsb_tree_cfg(YcsbWorkload::C)
+        },
+        &mut rng,
+    );
+    let mut m = Machine::new(machine_cfg(), tree);
+    m.run(Dur::ms(1.0), Dur::ms(4.0));
+    check_partition(m.metrics());
+
+    let mixed = TenantSet::new(vec![
+        TenantSpec::ycsb("reads", YcsbWorkload::C, 3, 0.0, 0.5),
+        TenantSpec::ycsb("writes", YcsbWorkload::A, 1, 0.5, 1.0),
+    ]);
+    let mut rng = Rng::new(0x7e_4a_48);
+    let cache = CacheKv::new(
+        CacheKvConfig {
+            n_items: 20_000,
+            t1_items: 2_400,
+            t2_items: 11_000,
+            buckets: 4_096,
+            tenants: Some(mixed),
+            ..ycsb_cache_cfg(YcsbWorkload::A)
+        },
+        &mut rng,
+    );
+    let mut m = Machine::new(machine_cfg(), cache);
+    m.run(Dur::ms(1.0), Dur::ms(4.0));
+    check_partition(m.metrics());
+}
+
+fn check_partition(mm: &Metrics) {
+    assert_eq!(mm.tenant_ops.len(), 2, "both lanes populated");
+    let total: u64 = mm.tenant_ops.iter().sum();
+    assert_eq!(total, mm.ops, "tenant ops must partition the global count");
+    let mut merged = Metrics::op_latency_hist();
+    for h in &mm.tenant_latency {
+        merged.merge(h);
+    }
+    assert_eq!(
+        merged, mm.op_latency,
+        "merged tenant histograms must equal the global histogram"
+    );
+    // 3:1 SWRR weights — completed share matches issuance up to the
+    // in-flight ops straddling the window edges (<= threads per tenant).
+    let share = mm.tenant_ops[0] as f64 / total as f64;
+    assert!(
+        (share - 0.75).abs() < 0.05,
+        "3:1 weights should complete ~0.75 share, got {share}"
+    );
+}
+
+#[test]
+fn shared_arm_populates_monotone_lanes_for_both_tenants() {
+    let set = TenantSet::new(vec![
+        TenantSpec::ycsb("point", YcsbWorkload::B, 1, 0.0, 0.5),
+        TenantSpec::ycsb("noisy", YcsbWorkload::E, 1, 0.5, 1.0),
+    ]);
+    let run =
+        run_store_ycsb_tenants(StoreKind::Lsm, YcsbWorkload::B, &set, &small_sweep(), 16, true);
+    assert_eq!(run.stats.tenants.len(), 2);
+    for (i, t) in run.stats.tenants.iter().enumerate() {
+        assert!(t.ops > 0, "lane {i} empty");
+        assert!(t.ops_per_sec > 0.0, "lane {i} rate");
+        assert!(t.p50 <= t.p99 && t.p99 <= t.p999, "lane {i} non-monotone");
+        assert!(t.p999 > Dur::ZERO, "lane {i} p999 unpopulated");
+        assert!(t.mean > Dur::ZERO, "lane {i} mean unpopulated");
+    }
+    assert!(
+        (0.0..=1.0).contains(&run.absorbed_frac),
+        "absorbed fraction out of range: {}",
+        run.absorbed_frac
+    );
+}
