@@ -4,6 +4,7 @@
 //!
 //! - simulator event-loop throughput (suboperation slices per second),
 //! - KV store slice throughput per design,
+//! - compressed-class slice throughput (the inline decompress charge),
 //! - PJRT artifact evaluation latency (batch of 64),
 //! - native model evaluation latency.
 //!
@@ -113,6 +114,51 @@ fn kv_slice_throughput() {
     );
 }
 
+fn compressed_slice_throughput() {
+    use cxlkvs::kvs::{CompressMode, Compression, LsmKv, LsmKvConfig, PlacementPolicy};
+    // Same machine as kv_slice_throughput; unbounded budget so every
+    // offloadable class is DRAM-resident, once plain and once forced
+    // compressed — the delta is the host-side cost of the inline
+    // decompress charge on the store hot path.
+    let mcfg = || MachineConfig {
+        threads_per_core: 64,
+        n_locks: 64,
+        mem: MemConfig::fpga(Dur::us(5.0)),
+        ..Default::default()
+    };
+    let run = |mode: CompressMode| {
+        best_of(3, move || {
+            let mut rng = Rng::new(5);
+            let kv = LsmKv::new(
+                LsmKvConfig {
+                    placement: PlacementPolicy::Budget {
+                        dram_bytes: u64::MAX,
+                    },
+                    compression: mode,
+                    ..Default::default()
+                },
+                &mut rng,
+            );
+            let mut m = Machine::new(mcfg(), kv);
+            let t = Instant::now();
+            let ops = m.run(Dur::ms(2.0), Dur::ms(60.0)).ops;
+            (t.elapsed(), ops)
+        })
+    };
+    let (dt, ops) = run(CompressMode::Off);
+    println!(
+        "lsmkv_plain:    {:>12.0} sim-ops/wall-sec ({:.1?})",
+        ops as f64 / dt.as_secs_f64(),
+        dt
+    );
+    let (dt, ops) = run(CompressMode::Forced(Compression::new(0.5, 0.12)));
+    println!(
+        "lsmkv_cpr:      {:>12.0} sim-ops/wall-sec ({:.1?})",
+        ops as f64 / dt.as_secs_f64(),
+        dt
+    );
+}
+
 fn pjrt_eval() {
     let Ok(mut ev) = ModelEvaluator::load_default() else {
         println!("pjrt_eval:      skipped (run `make artifacts`)");
@@ -171,6 +217,7 @@ fn main() {
     println!("== perf_hotpath ==");
     sim_event_loop();
     kv_slice_throughput();
+    compressed_slice_throughput();
     pjrt_eval();
     native_eval();
 }

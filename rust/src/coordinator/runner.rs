@@ -4,8 +4,9 @@
 //! of threads"). Points run in parallel across host threads.
 
 use crate::kvs::{
-    model_mix, should_replan, AccessProfile, CacheKv, CacheKvConfig, DriveCounts, Durable, LsmKv,
-    LsmKvConfig, Plan, PlacementPolicy, TreeKv, TreeKvConfig, WalConfig, WalKind, WalStats,
+    model_mix, should_replan, AccessProfile, CacheKv, CacheKvConfig, CompressMode, DriveCounts,
+    Durable, LsmKv, LsmKvConfig, Plan, PlacementPolicy, TreeKv, TreeKvConfig, WalConfig, WalKind,
+    WalStats,
 };
 use crate::microbench::{Microbench, MicrobenchConfig};
 use crate::model::{ExtParams, KindCost};
@@ -306,6 +307,62 @@ pub fn run_store_ycsb_placed(
         StoreKind::Cache => {
             let cfg = CacheKvConfig {
                 placement: sweep.placement,
+                ..ycsb_cache_cfg(wl)
+            };
+            let kv = CacheKv::new(cfg, &mut rng);
+            let mut m = Machine::new(mcfg, kv);
+            let st = m.run(sweep.warmup, sweep.window);
+            let bytes = m.service.dram_bytes();
+            (st, model_mix(&m.service, &w), bytes)
+        }
+    }
+}
+
+/// [`run_store_ycsb_placed`] with an explicit per-class [`CompressMode`] —
+/// the `compress` experiment's off/joint/forced arms. Same seeds and store
+/// construction as the placed path, so a `CompressMode::Off` arm is
+/// bit-identical to it (pinned by `compressed_run_off_matches_placed_path`).
+/// The returned byte accounting is the honest post-run total: compressed
+/// classes count their *scaled* resident bytes plus the pinned residual.
+pub fn run_store_ycsb_compressed(
+    kind: StoreKind,
+    wl: YcsbWorkload,
+    sweep: &SweepCfg,
+    threads: usize,
+    compress: CompressMode,
+) -> (RunStats, Vec<(f64, KindCost)>, u64) {
+    let mcfg = sweep.machine(threads);
+    let mut rng = Rng::new(sweep.seed ^ 0xfeed ^ wl.tag().as_bytes()[0] as u64);
+    let w = wl.weights();
+    match kind {
+        StoreKind::Tree => {
+            let cfg = TreeKvConfig {
+                placement: sweep.placement,
+                compression: compress,
+                ..ycsb_tree_cfg(wl)
+            };
+            let kv = TreeKv::new(cfg, &mut rng).with_background(mcfg.cores, threads);
+            let mut m = Machine::new(mcfg, kv);
+            let st = m.run(sweep.warmup, sweep.window);
+            let bytes = m.service.dram_bytes();
+            (st, model_mix(&m.service, &w), bytes)
+        }
+        StoreKind::Lsm => {
+            let cfg = LsmKvConfig {
+                placement: sweep.placement,
+                compression: compress,
+                ..ycsb_lsm_cfg(wl)
+            };
+            let kv = LsmKv::new(cfg, &mut rng).with_background(threads);
+            let mut m = Machine::new(mcfg, kv);
+            let st = m.run(sweep.warmup, sweep.window);
+            let bytes = m.service.dram_bytes();
+            (st, model_mix(&m.service, &w), bytes)
+        }
+        StoreKind::Cache => {
+            let cfg = CacheKvConfig {
+                placement: sweep.placement,
+                compression: compress,
                 ..ycsb_cache_cfg(wl)
             };
             let kv = CacheKv::new(cfg, &mut rng);
@@ -1299,6 +1356,42 @@ mod tests {
         assert!(w.wal.appends > 0 && w.wal.flushes > 0);
         assert!(w.acked_all_durable);
         assert!(w.stats.io_writes > d.stats.io_writes, "log writes are real IO");
+    }
+
+    #[test]
+    fn compressed_run_off_matches_placed_path() {
+        use crate::kvs::Compression;
+        use crate::workload::YcsbWorkload;
+        // CompressMode::Off: the compressed helper is the placed path —
+        // same seeds, same store, bit-identical stats and byte accounting.
+        let sweep = SweepCfg {
+            window: Dur::ms(4.0),
+            warmup: Dur::ms(1.0),
+            l_mem: Dur::us(2.0),
+            ..Default::default()
+        };
+        let (st0, _, b0) = run_store_ycsb_placed(StoreKind::Lsm, YcsbWorkload::C, &sweep, 16);
+        let (st1, _, b1) = run_store_ycsb_compressed(
+            StoreKind::Lsm,
+            YcsbWorkload::C,
+            &sweep,
+            16,
+            CompressMode::Off,
+        );
+        assert_eq!(st0.ops, st1.ops);
+        assert_eq!(st0.io_reads, st1.io_reads);
+        assert_eq!(st0.io_writes, st1.io_writes);
+        assert_eq!(b0, b1);
+        // A ratio-1.0 spec normalizes away: still bit-identical.
+        let (st2, _, b2) = run_store_ycsb_compressed(
+            StoreKind::Lsm,
+            YcsbWorkload::C,
+            &sweep,
+            16,
+            CompressMode::Joint(Compression::new(1.0, 0.5)),
+        );
+        assert_eq!(st0.ops, st2.ops);
+        assert_eq!(b0, b2);
     }
 
     #[test]

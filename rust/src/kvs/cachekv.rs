@@ -29,7 +29,7 @@
 //!   report the store as degenerate rather than silently misbehaving.
 
 use super::common::{fnv1a, DriveCounts, KvStats, NIL};
-use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
+use super::placement::{AccessProfile, CompressMode, HopSplit, Plan, PlacementPolicy, StructClass};
 use super::wal::{Durable, Wal, WalConfig, WalKind, WalRecord};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step};
@@ -96,6 +96,12 @@ pub struct CacheKvConfig {
     /// pre-tenant behaviour. The cache has no scan path, so tenant
     /// `scan_len` is ignored here.
     pub tenants: Option<TenantSet>,
+    /// Per-class compression for the offloadable tier-1 structures
+    /// (`kvs::placement`): chains and LRU lists may be held compressed in
+    /// DRAM at `ratio_q` of their bytes for a per-access decompress cost.
+    /// The pinned directory and SOC index never compress. `Off` (default)
+    /// is bit-identical to pre-compression behaviour.
+    pub compression: CompressMode,
 }
 
 impl Default for CacheKvConfig {
@@ -119,6 +125,7 @@ impl Default for CacheKvConfig {
             placement: PlacementPolicy::AllSecondary,
             wal: WalConfig::default(),
             tenants: None,
+            compression: CompressMode::Off,
         }
     }
 }
@@ -159,6 +166,9 @@ pub struct CacheKv {
     /// class, the pinned bucket directory included.
     pub profile: AccessProfile,
     pub stats: KvStats,
+    /// Decompress CPU owed by the last access to a compressed class,
+    /// drained as an inline `Step::Compute` at the top of the next step.
+    pending_cpu: Option<Dur>,
     /// The store's write-ahead log (`kvs::wal`; inert when disabled).
     pub wal: Wal,
     /// Tenant scheduler + per-tenant key generators (`cfg.tenants`).
@@ -218,9 +228,10 @@ impl CacheKv {
     /// (key + hash link) and its LRU half (prev/next links).
     fn placement_classes(cfg: &CacheKvConfig) -> Vec<StructClass> {
         let items = cfg.t1_items as u64;
+        let spec = cfg.compression.spec();
         vec![
-            StructClass::new("t1-hash-chains", items * 32, 2.0),
-            StructClass::new("t1-lru-lists", items * 32, 1.0),
+            StructClass::new("t1-hash-chains", items * 32, 2.0).with_compression(spec),
+            StructClass::new("t1-lru-lists", items * 32, 1.0).with_compression(spec),
             // The residual DRAM footprint: the bucket directory (one
             // pointer per bucket) and the tier-2 SOC index (key → page
             // entry per admitted item). Pinned — DRAM under every policy,
@@ -251,6 +262,7 @@ impl CacheKv {
             plan,
             profile,
             stats: KvStats::default(),
+            pending_cpu: None,
             wal: Wal::new(cfg.wal.clone()),
             tenants: cfg.tenants.as_ref().map(|set| TenantRouter::new(set, cfg.n_items)),
             tenant_tids: TenantTracker::default(),
@@ -515,6 +527,9 @@ impl CacheKv {
     #[inline]
     fn class_access(&mut self, class: usize) -> Step {
         self.profile.tick(class);
+        if self.plan.is_compressed(class) {
+            self.pending_cpu = Some(Dur::us(self.plan.decompress_us(class)));
+        }
         Step::MemAccess(self.plan.tier(class))
     }
 
@@ -613,6 +628,12 @@ impl Service for CacheKv {
     }
 
     fn step(&mut self, _tid: usize, op: &mut CacheOp, rng: &mut Rng) -> Step {
+        // Inline decompress CPU owed by the previous compressed-class
+        // access: a dependent Compute on the op's critical path (the op
+        // state already advanced, so this purely adds busy time).
+        if let Some(d) = self.pending_cpu.take() {
+            return Step::Compute(d);
+        }
         match op {
             CacheOp::Lookup {
                 kind,
@@ -1044,9 +1065,10 @@ impl CacheKv {
     }
 
     /// Split per-class expected access counts by the live placement plan
-    /// (chains vs LRU lists; see [`Plan::split_hops`]).
-    fn split_classes(&self, chains: f64, lru: f64) -> (f64, f64) {
-        self.plan.split_hops(&[(CC_CHAINS, chains), (CC_LRU, lru)])
+    /// (chains vs LRU lists; see [`Plan::split3`]): secondary vs plain-DRAM
+    /// vs compressed-DRAM hops, with the access-weighted decompress cost.
+    fn split_classes(&self, chains: f64, lru: f64) -> HopSplit {
+        self.plan.split3(&[(CC_CHAINS, chains), (CC_LRU, lru)])
     }
 
     /// Snapshot tier hit ratios `(h1, h2 | t1-miss)`: measured counters when
@@ -1101,7 +1123,7 @@ impl super::ModelCosts for CacheKv {
                 } else {
                     self.cfg.lru_refresh_prob
                 };
-                let (m, m_dram) = self.split_classes(chains, h1 * p_refresh + (1.0 - h1) * 4.0);
+                let hops = self.split_classes(chains, h1 * p_refresh + (1.0 - h1) * 4.0);
                 // IOs: tier-2 page read on a t1-miss hit, plus the admitted
                 // eviction's page write behind every tier-1 insert.
                 let rd = (1.0 - h1) * h2;
@@ -1116,8 +1138,10 @@ impl super::ModelCosts for CacheKv {
                     (IO_PAGE_READ_PRE, IO_PAGE_READ_POST)
                 };
                 KindCost {
-                    m,
-                    m_dram,
+                    m: hops.sec,
+                    m_dram: hops.dram,
+                    m_cpr: hops.cpr,
+                    t_cpu: hops.cpr_us,
                     s,
                     a_io: self.cfg.page_bytes as f64,
                     t_mem,
@@ -1129,10 +1153,12 @@ impl super::ModelCosts for CacheKv {
             }
             OpKind::Write => {
                 // Hit: update-in-place (splice always). Miss: fresh insert.
-                let (m, m_dram) = self.split_classes(chains, h1 + (1.0 - h1) * 4.0);
+                let hops = self.split_classes(chains, h1 + (1.0 - h1) * 4.0);
                 KindCost {
-                    m,
-                    m_dram,
+                    m: hops.sec,
+                    m_dram: hops.dram,
+                    m_cpr: hops.cpr,
+                    t_cpu: hops.cpr_us,
                     s: (1.0 - h1) * admit,
                     a_io: self.cfg.page_bytes as f64,
                     t_mem,
@@ -1144,8 +1170,10 @@ impl super::ModelCosts for CacheKv {
             OpKind::Delete => {
                 // Invalidation: the chain walk routes through the policy
                 // just like the read path.
-                let (m, m_dram) = self.split_classes(chains, 0.0);
-                KindCost::memory_only(m, t_mem, DRAM_US + t_mem).with_m_dram(m_dram)
+                let hops = self.split_classes(chains, 0.0);
+                KindCost::memory_only(hops.sec, t_mem, DRAM_US + t_mem)
+                    .with_m_dram(hops.dram)
+                    .with_compressed(hops.cpr, hops.cpr_us)
             }
             // Handled by the early return above.
             OpKind::Scan => unreachable!(),
@@ -1640,6 +1668,68 @@ mod tests {
         // The RMW write-half splices unconditionally: more hops than a read.
         let rmw = kv.model_params(OpKind::Rmw);
         assert!(rmw.m > read.m);
+    }
+
+    #[test]
+    fn compressed_budget_accounting_and_results_stay_consistent() {
+        use super::super::placement::Compression;
+        use super::super::ModelCosts;
+        // Half the chain class in budget: plain placement fits nothing,
+        // the joint knapsack fits the chains *compressed* at ratio 0.5.
+        let spec = Compression::new(0.5, 0.12);
+        let chains = CacheKv::placement_classes(&small_cfg())[CC_CHAINS].bytes;
+        let budget = chains / 2;
+        let mut rng_j = Rng::new(60);
+        let mut joint = CacheKv::new(
+            CacheKvConfig {
+                placement: PlacementPolicy::Budget { dram_bytes: budget },
+                compression: CompressMode::Joint(spec),
+                ..small_cfg()
+            },
+            &mut rng_j,
+        );
+        assert_eq!(joint.plan().compressed_classes(), 1);
+        assert!(joint.plan().is_compressed(CC_CHAINS) && !joint.plan().in_dram(CC_LRU));
+        // Byte accounting: the compressed class consumes exactly its
+        // scaled bytes of budget; the honest total adds the pinned residual.
+        assert_eq!(joint.plan().policy_dram_bytes(), budget);
+        assert_eq!(joint.dram_bytes(), budget + joint.residual_dram_bytes());
+
+        let mut rng_p = Rng::new(60);
+        let mut plain = CacheKv::new(
+            CacheKvConfig {
+                placement: PlacementPolicy::Budget { dram_bytes: budget },
+                ..small_cfg()
+            },
+            &mut rng_p,
+        );
+        assert_eq!(plain.plan().compressed_classes(), 0);
+        assert!(!plain.plan().in_dram(CC_CHAINS));
+
+        // Compression must be invisible to KV results: same ops, same
+        // seeds, same access/IO counts and stats as the uncompressed twin
+        // (the decompress Compute adds no accesses and draws no RNG).
+        let mut dj = Rng::new(61);
+        let mut dp = Rng::new(61);
+        for key in [5u64, 1_234, 19_999] {
+            let oj = joint.op_get(key);
+            let op = plain.op_get(key);
+            let cj = drive(&mut joint, oj, &mut dj);
+            let cp = drive(&mut plain, op, &mut dp);
+            assert_eq!(cj, cp, "key {key}: twin counts diverged");
+        }
+        assert_eq!(joint.stats, plain.stats);
+
+        // Model snapshots: the compressed chain hops move to m_cpr with the
+        // spec's decompress cost; total hops are conserved across twins.
+        let read_j = joint.model_params(OpKind::Read);
+        let read_p = plain.model_params(OpKind::Read);
+        assert!(read_j.m_cpr > 0.3, "chain hops compressed: {}", read_j.m_cpr);
+        assert!((read_j.t_cpu - 0.12).abs() < 1e-12);
+        assert_eq!((read_p.m_cpr, read_p.t_cpu), (0.0, 0.0));
+        let tot_j = read_j.m + read_j.m_dram + read_j.m_cpr;
+        let tot_p = read_p.m + read_p.m_dram + read_p.m_cpr;
+        assert!((tot_j - tot_p).abs() < 1e-9, "{tot_j} vs {tot_p}");
     }
 
     #[test]

@@ -33,7 +33,7 @@
 use std::collections::HashSet;
 
 use super::common::{fnv1a, DriveCounts, KvStats, NIL};
-use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
+use super::placement::{AccessProfile, CompressMode, HopSplit, Plan, PlacementPolicy, StructClass};
 use super::wal::{Durable, Wal, WalConfig, WalKind, WalRecord};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step};
@@ -99,6 +99,14 @@ pub struct LsmKvConfig {
     /// (the default) is the legacy single-tenant path, bit-identical to
     /// pre-tenant behaviour.
     pub tenants: Option<TenantSet>,
+    /// Joint placement×compression (`kvs::placement` module docs): when not
+    /// `Off`, the offloadable cache classes carry the given
+    /// [`super::placement::Compression`] spec and the `Budget` knapsack may
+    /// place them compressed-in-DRAM — fewer resident bytes, an inline
+    /// decompress `Compute` on every access. The pinned memtable never
+    /// compresses. `Off` (the default) is bit-identical to pre-compression
+    /// behaviour.
+    pub compression: CompressMode,
 }
 
 impl Default for LsmKvConfig {
@@ -128,6 +136,7 @@ impl Default for LsmKvConfig {
             placement: PlacementPolicy::AllSecondary,
             wal: WalConfig::default(),
             tenants: None,
+            compression: CompressMode::Off,
         }
     }
 }
@@ -175,6 +184,10 @@ pub struct LsmKv {
     /// background thread flushes them into the SSTable levels.
     sealed_tombstones: HashSet<u64>,
     pub stats: KvStats,
+    /// Pending inline decompress CPU from the last access to a
+    /// compressed-in-DRAM class, charged as the next step's `Compute`
+    /// (dependent work on the op's critical path — never prefetch-hidden).
+    pending_cpu: Option<Dur>,
     /// The store's write-ahead log (`kvs::wal`; inert when disabled).
     pub wal: Wal,
     /// Resolved tier placement over the block-cache structure classes
@@ -271,18 +284,21 @@ impl LsmKv {
     fn placement_classes(cfg: &LsmKvConfig) -> Vec<StructClass> {
         let blocks = cfg.cache_blocks as u64;
         let block_bytes = cfg.keys_per_block as u64 * (cfg.value_size.mean() as u64 + 20 + 8);
+        let spec = cfg.compression.spec();
         vec![
             StructClass::new(
                 "cache-handles(chains+lru)",
                 blocks * 64 + cfg.shards as u64 * cfg.buckets_per_shard as u64 * 8,
                 4.0,
-            ),
+            )
+            .with_compression(spec),
             StructClass::new(
                 "block-restarts",
                 blocks * ((cfg.keys_per_block as u64 / 4).max(1) * 4 + 4),
                 1.0,
-            ),
-            StructClass::new("block-data", blocks * block_bytes, 1.5),
+            )
+            .with_compression(spec),
+            StructClass::new("block-data", blocks * block_bytes, 1.5).with_compression(spec),
             // The residual DRAM footprint: skiplist memtable entries (key +
             // value + tower links, ~60 B overhead each) for the active plus
             // one sealed (rotated, not yet flushed) generation. Pinned —
@@ -322,6 +338,7 @@ impl LsmKv {
             fresh_tombstones: HashSet::new(),
             sealed_tombstones: HashSet::new(),
             stats: KvStats::default(),
+            pending_cpu: None,
             wal: Wal::new(cfg.wal.clone()),
             plan,
             profile,
@@ -594,10 +611,15 @@ impl LsmKv {
     }
 
     /// One simulated access to a placement class: tag the [`AccessProfile`]
-    /// and charge the access at the class's planned tier.
+    /// and charge the access at the class's planned tier. Accesses to a
+    /// compressed-in-DRAM class additionally queue the class's inline
+    /// decompress CPU, charged as the next step's `Compute`.
     #[inline]
     fn class_access(&mut self, class: usize) -> Step {
         self.profile.tick(class);
+        if self.plan.is_compressed(class) {
+            self.pending_cpu = Some(Dur::us(self.plan.decompress_us(class)));
+        }
         Step::MemAccess(self.plan.tier(class))
     }
 
@@ -776,10 +798,11 @@ impl LsmKv {
     }
 
     /// Split per-class expected access counts by the live placement plan
-    /// (returns `(m_sec, m_dram)` — see [`Plan::split_hops`]).
-    fn split_classes(&self, handles: f64, restarts: f64, data: f64) -> (f64, f64) {
+    /// into secondary / plain-DRAM / compressed-DRAM hops plus the mean
+    /// per-compressed-hop decompress CPU (see [`Plan::split3`]).
+    fn split_classes(&self, handles: f64, restarts: f64, data: f64) -> HopSplit {
         let classes = [(PC_HANDLES, handles), (PC_RESTARTS, restarts), (PC_DATA, data)];
-        self.plan.split_hops(&classes)
+        self.plan.split3(&classes)
     }
 
     /// Θ_scan cost vector for an explicit scan length: the merged iterator
@@ -808,10 +831,12 @@ impl LsmKv {
         // data access per 4-entry restart interval, compute otherwise.
         let handles = blocks * (h * probe.hit_scan + (1.0 - h) * probe.miss_scan);
         let data = blocks * h + len / 4.0;
-        let (m_sec, m_dram) = self.split_classes(handles, 0.0, data);
+        let hops = self.split_classes(handles, 0.0, data);
         KindCost {
-            m: m_sec,
-            m_dram,
+            m: hops.sec,
+            m_dram: hops.dram,
+            m_cpr: hops.cpr,
+            t_cpu: hops.cpr_us,
             s: blocks * (1.0 - h),
             a_io: self.block_bytes() as f64,
             t_mem,
@@ -853,13 +878,15 @@ impl super::ModelCosts for LsmKv {
                 // 1 data read). Miss: chain to the end + 3 insert-walk
                 // handle accesses + the same 2 in-block after the fetch.
                 let handles = h * probe.hit_acc + (1.0 - h) * (probe.miss_acc + 3.0);
-                let (m_sec, m_dram) = self.split_classes(handles, 1.0, 1.0);
+                let hops = self.split_classes(handles, 1.0, 1.0);
                 let t_fixed = 3.0 * DRAM_US
                     + t_mem
                     + if kind == OpKind::Rmw { write_fixed } else { 0.0 };
                 KindCost {
-                    m: m_sec,
-                    m_dram,
+                    m: hops.sec,
+                    m_dram: hops.dram,
+                    m_cpr: hops.cpr,
+                    t_cpu: hops.cpr_us,
                     s: 1.0 - h,
                     a_io: self.block_bytes() as f64,
                     t_mem,
@@ -930,6 +957,12 @@ impl Service for LsmKv {
     }
 
     fn step(&mut self, _tid: usize, op: &mut LsmOp, _rng: &mut Rng) -> Step {
+        // Inline decompress CPU owed by the previous compressed-class
+        // access: a dependent Compute on the op's critical path (the op
+        // state already advanced, so this purely adds busy time).
+        if let Some(d) = self.pending_cpu.take() {
+            return Step::Compute(d);
+        }
         match op {
             LsmOp::Memtable { kind, key, probes } => {
                 // Skiplist probe in host DRAM: inline accesses, no yield.
@@ -1740,6 +1773,62 @@ mod tests {
         let read = kv.model_params(OpKind::Read);
         assert_eq!(read.m, 2.0, "in-block accesses stay secondary");
         assert!(read.m_dram > 0.5, "chain hops moved to DRAM: {}", read.m_dram);
+    }
+
+    #[test]
+    fn compressed_budget_accounting_and_results_stay_consistent() {
+        use super::super::placement::{CompressMode, Compression, PlacementPolicy};
+        let spec = Compression::new(0.5, 0.12);
+        // Half the handles class: nothing fits plain, but the handles fit
+        // compressed (bytes are even, so ⌈q·bytes⌉ = bytes/2 exactly).
+        let handles = LsmKv::placement_classes(&small_cfg())[PC_HANDLES].bytes;
+        let budget = handles / 2;
+        let mut rng = Rng::new(50);
+        let mut joint = LsmKv::new(
+            LsmKvConfig {
+                placement: PlacementPolicy::Budget { dram_bytes: budget },
+                compression: CompressMode::Joint(spec),
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        assert!(joint.plan().is_compressed(PC_HANDLES));
+        assert!(!joint.plan().in_dram(PC_DATA));
+        assert_eq!(joint.plan().policy_dram_bytes(), budget);
+        assert_eq!(joint.dram_bytes(), budget + joint.residual_dram_bytes());
+        // KV-visible results and access counts match an uncompressed twin
+        // at the same seeds: the decompress is pure added Compute, which
+        // drive_op ignores.
+        let mut rng2 = Rng::new(50);
+        let mut plain = LsmKv::new(
+            LsmKvConfig {
+                placement: PlacementPolicy::Budget { dram_bytes: budget },
+                ..small_cfg()
+            },
+            &mut rng2,
+        );
+        assert_eq!(plain.plan().policy_dram_bytes(), 0, "nothing fits plain");
+        for key in [7u64, 500, 99_999] {
+            let mut ra = Rng::new(60);
+            let mut rb = Rng::new(60);
+            let oa = joint.op_get(key);
+            let ob = plain.op_get(key);
+            let a = drive(&mut joint, oa, &mut ra);
+            let b = drive(&mut plain, ob, &mut rb);
+            assert_eq!(a, b, "key {key}: (mems, ios) must match");
+        }
+        assert_eq!(joint.stats, plain.stats);
+        // The model snapshot carries the compressed hops + their t_cpu.
+        use super::super::ModelCosts;
+        let read = joint.model_params(OpKind::Read);
+        assert!(read.m_cpr > 0.5, "m_cpr = {}", read.m_cpr);
+        assert!((read.t_cpu - 0.12).abs() < 1e-12);
+        let pread = plain.model_params(OpKind::Read);
+        assert_eq!((pread.m_cpr, pread.t_cpu), (0.0, 0.0));
+        assert!(
+            ((read.m + read.m_dram + read.m_cpr) - (pread.m + pread.m_dram)).abs() < 1e-9,
+            "hops move buckets, they do not vanish"
+        );
     }
 
     #[test]

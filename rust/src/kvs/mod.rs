@@ -37,7 +37,11 @@
 //! [`placement::AccessProfile`], so the planner can re-rank classes by
 //! *measured* accesses per byte (`replan`) instead of the static hotness
 //! prior — see [`placement`] for the split-hop Θ derivation, the measured
-//! re-ranking rule, and per-store class lists.
+//! re-ranking rule, and per-store class lists. Offloadable classes can
+//! additionally be held **compressed** in DRAM ([`placement::CompressMode`]):
+//! fewer budget bytes at a per-access decompress CPU cost, chosen jointly
+//! by the planner's two-variant knapsack and charged inline at every
+//! compressed `MemAccess` site.
 //!
 //! Each store holds *real* data structures: every simulated pointer
 //! dereference corresponds to an actual traversal step over actual keys, so
@@ -55,7 +59,10 @@ pub mod wal;
 pub use cachekv::{CacheKv, CacheKvConfig};
 pub use common::{drive_op, drive_op_tiers, fnv1a, DriveCounts, KvStats};
 pub use lsmkv::{LsmKv, LsmKvConfig};
-pub use placement::{should_replan, AccessProfile, Plan, PlacementPolicy, StructClass};
+pub use placement::{
+    should_replan, AccessProfile, ClassState, CompressMode, Compression, HopSplit, Plan,
+    PlacementPolicy, StructClass,
+};
 pub use treekv::{TreeKv, TreeKvConfig, SCAN_IO_BATCH};
 pub use wal::{Durable, Wal, WalConfig, WalKind, WalRecord, WalStats};
 

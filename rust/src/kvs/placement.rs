@@ -153,6 +153,60 @@
 //! validates this split against the simulator within the documented
 //! `modelcheck` tolerance bands; `cxlkvs run planner` does the same for
 //! replanned placements.
+//!
+//! ## Joint placement×compression (the two-variant density knapsack)
+//!
+//! Compression adds a third per-class state: a class may live in DRAM
+//! **compressed**, consuming only `⌈q·bytes⌉` of the budget
+//! (`q =` [`Compression::ratio_q`] `< 1`) while every access pays an
+//! inline decompress cost `t_cpu` on the accessing core. Per access and
+//! per budget byte the three states cost:
+//!
+//! ```text
+//! state        per-access time                  budget bytes
+//! Dram         T_mem + L_DRAM                   bytes
+//! Compressed   T_mem + L_DRAM + t_cpu           ⌈q·bytes⌉
+//! Secondary    c_sec(L)   (prefetch + T_sw)     0
+//! ```
+//!
+//! Compressed dominates Secondary per byte whenever
+//! `t_cpu < Δ(L) = c_sec(L) − (T_mem + L_DRAM)`: at microsecond memory
+//! latencies Δ(L) is microseconds while a Table 6-class decompressor
+//! costs ~0.1 µs per line, so the dominance order is
+//! `Dram ≻ Compressed ≻ Secondary` and the two-variant density knapsack
+//! collapses to a greedy with an upgrade pass:
+//!
+//! 1. **Place** (pass 1): walk the (static or measured) ranking placing
+//!    each class in its *cheapest-byte* variant — compressed when the
+//!    class carries a spec — until the next class no longer fits. The
+//!    prefix rule, deterministic ranking, and static-order tie-break of
+//!    the plain knapsack are unchanged.
+//! 2. **Upgrade** (pass 2): spend the leftover budget walking the placed
+//!    prefix in rank order, upgrading each compressed class whose
+//!    uncompression delta `(1−q)·bytes` still fits — each upgrade buys
+//!    `accesses·t_cpu` of CPU, so hotter classes upgrade first. Classes
+//!    with [`Compression::always`] (the forced-compression experiment
+//!    arm) are never upgraded.
+//!
+//! The crossover `cxlkvs run compress` gates on falls out directly: at a
+//! **tight budget** pass 1 fits strictly more hot classes than the
+//! uncompressed knapsack can place in the same bytes, so throughput wins
+//! whenever the absorbed secondary hops save more than the added
+//! decompress CPU — i.e. at long `L_mem`, where `Δ(L) ≫ t_cpu`; at a
+//! **loose budget** pass 2 upgrades everything, the plans coincide, and
+//! forced compression can only lose (pure added CPU at equal placement).
+//! With no compression specs (`ratio_q ≥ 1` is normalized away at
+//! [`StructClass::with_compression`]) both passes degenerate to the plain
+//! prefix rule bit-for-bit.
+//!
+//! In the split-hop Θ, compressed hops enter as a third bucket
+//! `M_cpr·(T_mem + L_DRAM + t_cpu)` — inline core-busy time exactly like
+//! `M_dram`, never prefetch-hidden and never paying `T_sw` (the
+//! decompressor runs on the line the core just loaded). `KindCost`
+//! carries `m_cpr`/`t_cpu`, [`Plan::split3`] buckets per-class expected
+//! hops three ways for every store's `model_params` snapshot, and
+//! `theta_kind_recip` adds the term in both the IO and memory-only
+//! branches (`model/extended.rs` module docs carry the derivation).
 
 use crate::sim::Tier;
 
@@ -184,6 +238,84 @@ pub enum PlacementPolicy {
     Random { dram_frac: f64 },
 }
 
+/// Per-class compression spec: the joint planner's second item variant
+/// (module docs, "Joint placement×compression"). A compressed class
+/// consumes `⌈ratio_q · bytes⌉` of the DRAM budget and charges
+/// `decompress_us` of inline CPU at every access.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Compression {
+    /// Compressed-size ratio in `(0, 1)` — the paper's Table 6
+    /// compressed-DRAM scenarios assume ~0.5. Values `≥ 1` (or non-finite,
+    /// or `≤ 0`) are normalized to "no compression" at
+    /// [`StructClass::with_compression`], which makes a `ratio = 1.0`
+    /// passthrough arm bit-identical to compression off.
+    pub ratio_q: f64,
+    /// Inline decompress CPU per access, in µs — core-busy, never
+    /// prefetch-hidden.
+    pub decompress_us: f64,
+    /// Never upgrade to uncompressed DRAM in pass 2 (the forced-compression
+    /// experiment arm; the joint planner otherwise upgrades when budget
+    /// allows).
+    pub always: bool,
+}
+
+impl Compression {
+    pub fn new(ratio_q: f64, decompress_us: f64) -> Compression {
+        Compression {
+            ratio_q,
+            decompress_us,
+            always: false,
+        }
+    }
+
+    /// The forced variant: stays compressed even when the budget could
+    /// upgrade it.
+    pub fn forced(mut self) -> Compression {
+        self.always = true;
+        self
+    }
+}
+
+/// Store-config knob attaching one [`Compression`] spec to every
+/// offloadable class (`Off` by default — bit-identical to the
+/// pre-compression stores; pinned by the placement property tests).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum CompressMode {
+    /// No compression anywhere (the default; all plans bit-identical to
+    /// the two-state knapsack).
+    #[default]
+    Off,
+    /// The joint planner chooses per class: Dram, Compressed, or
+    /// Secondary (pass 1 + upgrade pass).
+    Joint(Compression),
+    /// Every DRAM-placed class stays compressed (no upgrade pass) — the
+    /// experiment's ablation arm isolating the decompress CPU cost.
+    Forced(Compression),
+}
+
+impl CompressMode {
+    /// The per-class spec this mode attaches to offloadable classes
+    /// (`None` for `Off`).
+    pub fn spec(&self) -> Option<Compression> {
+        match *self {
+            CompressMode::Off => None,
+            CompressMode::Joint(c) => Some(c),
+            CompressMode::Forced(c) => Some(c.forced()),
+        }
+    }
+}
+
+/// Resolved residency of one class under a [`Plan`] — the three states of
+/// the joint knapsack. `Dram` and `Compressed` are both DRAM-tier at the
+/// `MemAccess` site; `Compressed` additionally charges the class's
+/// decompress cost inline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClassState {
+    Dram,
+    Compressed,
+    Secondary,
+}
+
 /// One structure class: a contiguous placement unit with a simulated byte
 /// footprint. Offloadable classes are supplied hottest-first ([`Plan`]
 /// places prefixes only); pinned classes are DRAM-resident under every
@@ -191,7 +323,7 @@ pub enum PlacementPolicy {
 #[derive(Debug, Clone)]
 pub struct StructClass {
     pub name: &'static str,
-    /// Simulated bytes this class occupies if DRAM-resident.
+    /// Simulated bytes this class occupies if DRAM-resident uncompressed.
     pub bytes: u64,
     /// Expected secondary accesses per operation this class absorbs when
     /// DRAM-placed (documentation/reporting; static resolution is
@@ -201,6 +333,10 @@ pub struct StructClass {
     /// memtable, cachekv's bucket directory / SOC index). Pinned bytes
     /// count toward [`Plan::dram_bytes`] but never consume the budget.
     pub pinned: bool,
+    /// Optional compressed variant for the joint planner (module docs,
+    /// "Joint placement×compression"). `None` — the default from every
+    /// constructor — resolves exactly as before compression existed.
+    pub compression: Option<Compression>,
 }
 
 impl StructClass {
@@ -211,6 +347,7 @@ impl StructClass {
             bytes,
             hotness,
             pinned: false,
+            compression: None,
         }
     }
 
@@ -221,6 +358,29 @@ impl StructClass {
             bytes,
             hotness: 0.0,
             pinned: true,
+            compression: None,
+        }
+    }
+
+    /// Attach (or clear) a compression spec. Specs that cannot shrink the
+    /// class — `ratio_q ≥ 1`, non-positive, or non-finite — are normalized
+    /// to `None`, so a `ratio = 1.0` passthrough is bit-identical to
+    /// compression off by construction.
+    pub fn with_compression(mut self, spec: Option<Compression>) -> StructClass {
+        self.compression = match spec {
+            Some(s) if s.ratio_q.is_finite() && s.ratio_q > 0.0 && s.ratio_q < 1.0 => Some(s),
+            _ => None,
+        };
+        self
+    }
+
+    /// DRAM budget bytes this class consumes in its compressed variant
+    /// (`⌈ratio_q · bytes⌉`, capped at the uncompressed size); the plain
+    /// `bytes` without a spec.
+    pub fn compressed_bytes(&self) -> u64 {
+        match self.compression {
+            Some(s) => ((s.ratio_q * self.bytes as f64).ceil() as u64).min(self.bytes),
+            None => self.bytes,
         }
     }
 }
@@ -328,6 +488,19 @@ pub fn should_replan(
     cand > cur * (1.0 + margin)
 }
 
+/// Per-kind expected hop counts bucketed by resolved class state
+/// ([`Plan::split3`]): `sec` hops pay the secondary prefetch path, `dram`
+/// hops are inline loads, `cpr` hops are inline loads plus `cpr_us` of
+/// decompress CPU each (access-weighted mean over the compressed
+/// classes).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct HopSplit {
+    pub sec: f64,
+    pub dram: f64,
+    pub cpr: f64,
+    pub cpr_us: f64,
+}
+
 /// A resolved placement: which classes are DRAM-resident under a policy,
 /// over either the static hottest-first ranking ([`Plan::resolve`]) or a
 /// measured accesses-per-byte re-ranking ([`Plan::replan`]).
@@ -340,8 +513,11 @@ pub struct Plan {
     order: Vec<usize>,
     /// Number of leading `order` entries resident in DRAM.
     dram_prefix: usize,
-    /// Per-class DRAM residency (pinned, or inside the placed prefix).
+    /// Per-class DRAM residency (pinned, or inside the placed prefix) —
+    /// compressed classes count as DRAM-resident.
     dram: Vec<bool>,
+    /// Per-class joint-knapsack state (pinned classes are `Dram`).
+    state: Vec<ClassState>,
 }
 
 impl Plan {
@@ -389,33 +565,93 @@ impl Plan {
         Plan::resolve_order(policy, classes, order)
     }
 
-    /// Shared resolution over an explicit offloadable ranking.
+    /// Shared resolution over an explicit offloadable ranking. Byte-budget
+    /// policies run the joint placement×compression greedy (place at
+    /// cheapest-byte variant, then upgrade — module docs); count-based
+    /// policies place the prefix with compressed-variant classes only when
+    /// their spec is forced (`always`), since without budget pressure
+    /// uncompressed DRAM dominates. Without compression specs every branch
+    /// is bit-identical to the plain prefix rule.
     fn resolve_order(
         policy: PlacementPolicy,
         classes: Vec<StructClass>,
         order: Vec<usize>,
     ) -> Plan {
         let offloadable: u64 = order.iter().map(|&i| classes[i].bytes).sum();
-        let dram_prefix = match policy {
-            PlacementPolicy::AllSecondary => 0,
-            PlacementPolicy::AllDram => order.len(),
-            PlacementPolicy::TopLevels { k } => (k as usize).min(order.len()),
-            PlacementPolicy::Budget { dram_bytes } => prefix_within(&classes, &order, dram_bytes),
+        let budget = match policy {
+            PlacementPolicy::AllSecondary => None,
+            PlacementPolicy::AllDram => None,
+            PlacementPolicy::TopLevels { .. } => None,
+            PlacementPolicy::Budget { dram_bytes } => Some(dram_bytes),
             PlacementPolicy::Random { dram_frac } => {
-                let budget = (dram_frac.clamp(0.0, 1.0) * offloadable as f64).round() as u64;
-                prefix_within(&classes, &order, budget)
+                Some((dram_frac.clamp(0.0, 1.0) * offloadable as f64).round() as u64)
             }
         };
-        let mut dram: Vec<bool> = classes.iter().map(|c| c.pinned).collect();
-        for &i in &order[..dram_prefix] {
-            dram[i] = true;
+        let mut state: Vec<ClassState> = classes
+            .iter()
+            .map(|c| {
+                if c.pinned {
+                    ClassState::Dram
+                } else {
+                    ClassState::Secondary
+                }
+            })
+            .collect();
+        let dram_prefix = match (policy, budget) {
+            (PlacementPolicy::AllSecondary, _) => 0,
+            (PlacementPolicy::AllDram, _) => order.len(),
+            (PlacementPolicy::TopLevels { k }, _) => (k as usize).min(order.len()),
+            (_, Some(budget)) => {
+                // Pass 1: longest prefix at cheapest-byte variants.
+                let mut used = 0u64;
+                let mut prefix = 0usize;
+                for &i in &order {
+                    let b = classes[i].compressed_bytes();
+                    if used.saturating_add(b) > budget {
+                        break;
+                    }
+                    used = used.saturating_add(b);
+                    prefix += 1;
+                }
+                // Pass 2: upgrade compressed → uncompressed DRAM in rank
+                // order while the uncompression delta fits the leftover.
+                let mut remaining = budget - used;
+                for &i in &order[..prefix] {
+                    match classes[i].compression {
+                        Some(spec) => {
+                            let delta = classes[i].bytes - classes[i].compressed_bytes();
+                            if !spec.always && delta <= remaining {
+                                remaining -= delta;
+                                state[i] = ClassState::Dram;
+                            } else {
+                                state[i] = ClassState::Compressed;
+                            }
+                        }
+                        None => state[i] = ClassState::Dram,
+                    }
+                }
+                prefix
+            }
+            (_, None) => unreachable!("count-based policies matched above"),
+        };
+        if budget.is_none() {
+            // Count-based placement: placed classes are uncompressed DRAM
+            // unless their spec is forced.
+            for &i in &order[..dram_prefix] {
+                state[i] = match classes[i].compression {
+                    Some(spec) if spec.always => ClassState::Compressed,
+                    _ => ClassState::Dram,
+                };
+            }
         }
+        let dram: Vec<bool> = state.iter().map(|&s| s != ClassState::Secondary).collect();
         Plan {
             policy,
             classes,
             order,
             dram_prefix,
             dram,
+            state,
         }
     }
 
@@ -430,10 +666,47 @@ impl Plan {
         }
     }
 
-    /// Whether one class is DRAM-resident (pinned or placed).
+    /// Whether one class is DRAM-resident (pinned or placed; compressed
+    /// classes are DRAM-resident).
     #[inline]
     pub fn in_dram(&self, class: usize) -> bool {
         self.dram.get(class).copied().unwrap_or(false)
+    }
+
+    /// Joint-knapsack state of one class. Out-of-range ids are secondary,
+    /// like [`Plan::tier`].
+    #[inline]
+    pub fn state(&self, class: usize) -> ClassState {
+        self.state.get(class).copied().unwrap_or(ClassState::Secondary)
+    }
+
+    /// Whether one class is DRAM-resident **compressed** — its accesses
+    /// charge [`Plan::decompress_us`] of inline CPU.
+    #[inline]
+    pub fn is_compressed(&self, class: usize) -> bool {
+        self.state(class) == ClassState::Compressed
+    }
+
+    /// Inline decompress CPU per access of one class, in µs — 0.0 unless
+    /// the class is placed compressed.
+    #[inline]
+    pub fn decompress_us(&self, class: usize) -> f64 {
+        if self.is_compressed(class) {
+            self.classes[class]
+                .compression
+                .map(|s| s.decompress_us)
+                .unwrap_or(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Number of classes placed compressed (reporting).
+    pub fn compressed_classes(&self) -> usize {
+        self.state
+            .iter()
+            .filter(|&&s| s == ClassState::Compressed)
+            .count()
     }
 
     /// Number of leading (hottest-ranked) offloadable classes resident in
@@ -488,8 +761,9 @@ impl Plan {
 
     /// Split per-class expected access counts into `(m_sec, m_dram)`:
     /// DRAM-resident classes' hops move to the inline side of the
-    /// split-hop Θ (module docs). The shared bucketing for every store's
-    /// `ModelCosts` snapshot.
+    /// split-hop Θ (module docs). Compressed classes count on the DRAM
+    /// side here — use [`Plan::split3`] when the model needs the
+    /// decompress term.
     pub fn split_hops(&self, per_class: &[(usize, f64)]) -> (f64, f64) {
         let (mut sec, mut dram) = (0.0, 0.0);
         for &(class, m) in per_class {
@@ -502,27 +776,62 @@ impl Plan {
         (sec, dram)
     }
 
+    /// Split per-class expected access counts three ways — secondary,
+    /// uncompressed DRAM, compressed DRAM — with the access-weighted mean
+    /// decompress cost over the compressed hops. The bucketing for every
+    /// store's `ModelCosts` snapshot once compression is in play
+    /// (`KindCost::with_compressed`).
+    pub fn split3(&self, per_class: &[(usize, f64)]) -> HopSplit {
+        let mut h = HopSplit::default();
+        let mut cost = 0.0;
+        for &(class, m) in per_class {
+            match self.state(class) {
+                ClassState::Secondary => h.sec += m,
+                ClassState::Dram => h.dram += m,
+                ClassState::Compressed => {
+                    h.cpr += m;
+                    cost += m * self.decompress_us(class);
+                }
+            }
+        }
+        if h.cpr > 0.0 {
+            h.cpr_us = cost / h.cpr;
+        }
+        h
+    }
+
     /// Simulated DRAM bytes this placement consumes — the **honest** total:
     /// policy-placed offloadable classes *plus* the pinned residual
     /// footprint (`AllSecondary` on a store with pinned classes is nonzero
-    /// by design).
+    /// by design). Compressed classes count at their compressed size —
+    /// that shrinkage is the whole point of the joint knapsack.
     pub fn dram_bytes(&self) -> u64 {
         self.classes
             .iter()
             .enumerate()
             .filter(|&(i, _)| self.dram[i])
-            .map(|(_, c)| c.bytes)
+            .map(|(i, c)| self.resident_bytes_of(i, c))
             .sum()
     }
 
     /// DRAM bytes consumed by the *policy* alone (placed offloadable
     /// classes, excluding the pinned residual) — the quantity capped by
-    /// `Budget { dram_bytes }`.
+    /// `Budget { dram_bytes }`. Compressed classes count at their
+    /// compressed size.
     pub fn policy_dram_bytes(&self) -> u64 {
         self.order[..self.dram_prefix]
             .iter()
-            .map(|&i| self.classes[i].bytes)
+            .map(|&i| self.resident_bytes_of(i, &self.classes[i]))
             .sum()
+    }
+
+    /// Budget bytes class `i` consumes in its resolved state.
+    fn resident_bytes_of(&self, i: usize, c: &StructClass) -> u64 {
+        if self.state[i] == ClassState::Compressed {
+            c.compressed_bytes()
+        } else {
+            c.bytes
+        }
     }
 
     /// The pinned residual footprint (DRAM under every policy).
@@ -555,18 +864,6 @@ impl Plan {
     pub fn classes(&self) -> &[StructClass] {
         &self.classes
     }
-}
-
-/// Longest prefix of `order` whose cumulative bytes fit `budget`.
-fn prefix_within(classes: &[StructClass], order: &[usize], budget: u64) -> usize {
-    let mut used = 0u64;
-    for (pos, &i) in order.iter().enumerate() {
-        used = used.saturating_add(classes[i].bytes);
-        if used > budget {
-            return pos;
-        }
-    }
-    order.len()
 }
 
 #[cfg(test)]
@@ -890,6 +1187,194 @@ mod tests {
         // improvement, so identical plans never thrash).
         assert!(!should_replan(&candidate, &candidate, &prof, 0.0));
         assert!(!should_replan(&candidate, &current, &prof, 0.0));
+    }
+
+    // ---- joint placement×compression ---------------------------------------
+
+    /// The standard classes, each compressible to half at 0.12 µs/access.
+    fn cclasses() -> Vec<StructClass> {
+        classes()
+            .into_iter()
+            .map(|c| c.with_compression(Some(Compression::new(0.5, 0.12))))
+            .collect()
+    }
+
+    #[test]
+    fn no_compression_specs_resolve_bit_identically() {
+        for policy in [
+            PlacementPolicy::AllSecondary,
+            PlacementPolicy::AllDram,
+            PlacementPolicy::TopLevels { k: 2 },
+            PlacementPolicy::Budget { dram_bytes: 1_100 },
+            PlacementPolicy::Random { dram_frac: 0.5 },
+        ] {
+            let p = Plan::resolve(policy, classes());
+            assert_eq!(p.compressed_classes(), 0, "{policy:?}");
+            for i in 0..3 {
+                assert_eq!(
+                    p.state(i) == ClassState::Secondary,
+                    !p.in_dram(i),
+                    "{policy:?} class {i}"
+                );
+                assert!(!p.is_compressed(i));
+                assert_eq!(p.decompress_us(i), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn ratio_one_and_degenerate_specs_normalize_to_none() {
+        for q in [1.0, 1.5, 0.0, -0.3, f64::NAN, f64::INFINITY] {
+            let c = StructClass::new("x", 1_000, 1.0)
+                .with_compression(Some(Compression::new(q, 0.12)));
+            assert!(c.compression.is_none(), "ratio {q} must normalize away");
+            assert_eq!(c.compressed_bytes(), 1_000);
+        }
+        let c = StructClass::new("x", 1_000, 1.0)
+            .with_compression(Some(Compression::new(0.5, 0.12)));
+        assert_eq!(c.compressed_bytes(), 500);
+        // Ceiling, capped at the uncompressed size.
+        let c = StructClass::new("x", 3, 1.0).with_compression(Some(Compression::new(0.5, 0.1)));
+        assert_eq!(c.compressed_bytes(), 2);
+    }
+
+    #[test]
+    fn tight_budget_fits_more_classes_compressed() {
+        // Plain knapsack at 550 B: only hot (100 B) fits. Joint: hot + warm
+        // fit compressed (50 + 500 = 550), absorbing warm's accesses too.
+        let plain = Plan::resolve(PlacementPolicy::Budget { dram_bytes: 550 }, classes());
+        assert_eq!(plain.dram_classes(), 1);
+        let joint = Plan::resolve(PlacementPolicy::Budget { dram_bytes: 550 }, cclasses());
+        assert_eq!(joint.dram_classes(), 2);
+        assert_eq!(joint.state(0), ClassState::Compressed);
+        assert_eq!(joint.state(1), ClassState::Compressed);
+        assert_eq!(joint.state(2), ClassState::Secondary);
+        assert_eq!(joint.dram_bytes(), 550);
+        assert_eq!(joint.policy_dram_bytes(), 550);
+        assert_eq!(joint.compressed_classes(), 2);
+        assert_eq!(joint.decompress_us(0), 0.12);
+        assert_eq!(joint.decompress_us(2), 0.0, "secondary never decompresses");
+        // Uncompressed footprint accessors are state-independent.
+        assert_eq!(joint.total_bytes(), 11_100);
+        assert_eq!(joint.offloadable_bytes(), 11_100);
+    }
+
+    #[test]
+    fn loose_budget_upgrades_everything_to_plain_dram() {
+        // At the full uncompressed footprint the upgrade pass lifts every
+        // class: the joint plan coincides with the plain one.
+        let joint = Plan::resolve(PlacementPolicy::Budget { dram_bytes: 11_100 }, cclasses());
+        assert_eq!(joint.dram_classes(), 3);
+        assert_eq!(joint.compressed_classes(), 0);
+        for i in 0..3 {
+            assert_eq!(joint.state(i), ClassState::Dram);
+        }
+        assert_eq!(joint.dram_bytes(), 11_100);
+    }
+
+    #[test]
+    fn partial_upgrade_spends_leftover_hottest_first() {
+        // 5,650 B: pass 1 places all three compressed (5,550); the 100 B
+        // leftover upgrades hot (delta 50) but not warm (500) or cold
+        // (5,000).
+        let p = Plan::resolve(PlacementPolicy::Budget { dram_bytes: 5_650 }, cclasses());
+        assert_eq!(p.dram_classes(), 3);
+        assert_eq!(p.state(0), ClassState::Dram);
+        assert_eq!(p.state(1), ClassState::Compressed);
+        assert_eq!(p.state(2), ClassState::Compressed);
+        assert_eq!(p.dram_bytes(), 100 + 500 + 5_000);
+    }
+
+    #[test]
+    fn forced_compression_never_upgrades() {
+        let forced: Vec<StructClass> = classes()
+            .into_iter()
+            .map(|c| c.with_compression(Some(Compression::new(0.5, 0.12).forced())))
+            .collect();
+        let p = Plan::resolve(PlacementPolicy::Budget { dram_bytes: u64::MAX }, forced.clone());
+        assert_eq!(p.dram_classes(), 3);
+        assert_eq!(p.compressed_classes(), 3, "forced classes stay compressed");
+        assert_eq!(p.dram_bytes(), 5_550);
+        // Count-based policies honor forced specs too.
+        let p = Plan::resolve(PlacementPolicy::TopLevels { k: 2 }, forced.clone());
+        assert_eq!(p.state(0), ClassState::Compressed);
+        assert_eq!(p.state(1), ClassState::Compressed);
+        assert_eq!(p.state(2), ClassState::Secondary);
+        let p = Plan::resolve(PlacementPolicy::AllDram, forced);
+        assert_eq!(p.compressed_classes(), 3);
+        // Joint (non-forced) specs under count-based policies place plain
+        // DRAM — no budget pressure, so uncompressed dominates.
+        let p = Plan::resolve(PlacementPolicy::AllDram, cclasses());
+        assert_eq!(p.compressed_classes(), 0);
+    }
+
+    #[test]
+    fn joint_replan_follows_the_measured_order() {
+        // Same profile as replan_reorders_by_measured_accesses_per_byte:
+        // measured order hot ≻ cold ≻ warm. Budget 5,050 fits hot + cold
+        // compressed (50 + 5,000); the plain replan would place only hot.
+        let mut prof = AccessProfile::new(3);
+        for _ in 0..10 {
+            prof.tick(0);
+        }
+        prof.tick(1);
+        for _ in 0..200 {
+            prof.tick(2);
+        }
+        let p = Plan::replan(PlacementPolicy::Budget { dram_bytes: 5_050 }, cclasses(), &prof);
+        assert_eq!(p.ranking(), &[0, 2, 1]);
+        assert!(p.is_compressed(0) && p.is_compressed(2) && !p.in_dram(1));
+        assert_eq!(p.policy_dram_bytes(), 5_050);
+    }
+
+    #[test]
+    fn split3_buckets_hops_and_averages_decompress_cost() {
+        // hot compressed at 0.12 µs, warm compressed at 0.36 µs, cold
+        // secondary.
+        let cs = vec![
+            StructClass::new("hot", 100, 4.0)
+                .with_compression(Some(Compression::new(0.5, 0.12).forced())),
+            StructClass::new("warm", 1_000, 1.0)
+                .with_compression(Some(Compression::new(0.5, 0.36).forced())),
+            StructClass::new("cold", 10_000, 0.5),
+        ];
+        let p = Plan::resolve(PlacementPolicy::Budget { dram_bytes: 550 }, cs);
+        assert!(p.is_compressed(0) && p.is_compressed(1) && !p.in_dram(2));
+        let h = p.split3(&[(0, 3.0), (1, 1.0), (2, 2.0)]);
+        assert_eq!(h.sec, 2.0);
+        assert_eq!(h.dram, 0.0);
+        assert_eq!(h.cpr, 4.0);
+        // Weighted mean: (3·0.12 + 1·0.36) / 4 = 0.18.
+        assert!((h.cpr_us - 0.18).abs() < 1e-12);
+        // Two-way split counts compressed hops as DRAM-side.
+        let (sec, dram) = p.split_hops(&[(0, 3.0), (1, 1.0), (2, 2.0)]);
+        assert_eq!(sec, 2.0);
+        assert_eq!(dram, 4.0);
+        // No compressed hops → cpr_us stays 0.0, not NaN.
+        let h = p.split3(&[(2, 2.0)]);
+        assert_eq!(h.cpr_us, 0.0);
+    }
+
+    #[test]
+    fn compress_mode_spec_attaches_and_forces() {
+        assert_eq!(CompressMode::Off.spec(), None);
+        let spec = Compression::new(0.5, 0.12);
+        assert_eq!(CompressMode::Joint(spec).spec(), Some(spec));
+        let f = CompressMode::Forced(spec).spec().unwrap();
+        assert!(f.always);
+        assert_eq!(f.ratio_q, 0.5);
+    }
+
+    #[test]
+    fn compressed_dram_bytes_stay_monotone_in_budget() {
+        let mut prev = 0u64;
+        for budget in (0..=12_000u64).step_by(37) {
+            let p = Plan::resolve(PlacementPolicy::Budget { dram_bytes: budget }, cclasses());
+            let b = p.dram_bytes();
+            assert!(b <= budget, "joint placement overshot: {b} > {budget}");
+            assert!(b >= prev, "dram bytes fell as budget grew: {prev} -> {b}");
+            prev = b;
+        }
     }
 
     #[test]

@@ -43,7 +43,7 @@
 //! even when slots are recycled mid-scan.
 
 use super::common::{fnv1a, DriveCounts, KvStats, NIL};
-use super::placement::{AccessProfile, Plan, PlacementPolicy, StructClass};
+use super::placement::{AccessProfile, CompressMode, Plan, PlacementPolicy, StructClass};
 use super::wal::{Durable, Wal, WalConfig, WalKind, WalRecord};
 use crate::model::KindCost;
 use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
@@ -126,6 +126,13 @@ pub struct TreeKvConfig {
     /// (the default) is the legacy single-tenant path, bit-identical to
     /// pre-tenant behaviour.
     pub tenants: Option<TenantSet>,
+    /// Joint placement×compression (`kvs::placement` module docs): when not
+    /// `Off`, every offloadable level class carries the given
+    /// [`super::placement::Compression`] spec and the `Budget` knapsack may
+    /// place levels compressed-in-DRAM — fewer resident bytes, an inline
+    /// decompress `Compute` charged on every access. `Off` (the default)
+    /// is bit-identical to pre-compression behaviour.
+    pub compression: CompressMode,
 }
 
 impl Default for TreeKvConfig {
@@ -146,6 +153,7 @@ impl Default for TreeKvConfig {
             n_locks: 64,
             wal: WalConfig::default(),
             tenants: None,
+            compression: CompressMode::Off,
         }
     }
 }
@@ -173,6 +181,10 @@ pub struct TreeKv {
     /// ticks its level class) — the input to [`TreeKv::replan`].
     pub profile: AccessProfile,
     pub stats: KvStats,
+    /// Pending inline decompress CPU from the last access to a
+    /// compressed-in-DRAM entry, charged as the next step's `Compute`
+    /// (dependent work on the op's critical path — never prefetch-hidden).
+    pending_cpu: Option<Dur>,
     /// The store's write-ahead log (`kvs::wal`; inert when disabled).
     pub wal: Wal,
     /// `tid % bg_threads_per_core == bg_tid_floor` marks a background
@@ -290,7 +302,7 @@ pub enum TreeOp {
 impl TreeKv {
     pub fn new(cfg: TreeKvConfig, rng: &mut Rng) -> TreeKv {
         let keygen = KeyGen::new(cfg.n_items, cfg.key_dist);
-        let plan = Plan::resolve(cfg.placement, Self::level_classes(cfg.n_items, cfg.sprigs));
+        let plan = Plan::resolve(cfg.placement, Self::placement_classes(&cfg));
         let n_classes = plan.classes().len();
         let mut kv = TreeKv {
             roots: vec![NIL; cfg.sprigs as usize],
@@ -302,6 +314,7 @@ impl TreeKv {
             plan,
             profile: AccessProfile::new(n_classes),
             stats: KvStats::default(),
+            pending_cpu: None,
             wal: Wal::new(cfg.wal.clone()),
             bg_tid_floor: usize::MAX,
             bg_threads_per_core: 1,
@@ -371,15 +384,21 @@ impl TreeKv {
 
     /// One simulated access to entry `id`: tag its level class in the
     /// [`AccessProfile`] and return the access step at the entry's tier.
+    /// Accesses to a compressed-in-DRAM class additionally queue the
+    /// class's inline decompress CPU, charged as the next step's `Compute`.
     #[inline]
     fn entry_access(&mut self, id: u32) -> Step {
         let n = &self.nodes[id as usize];
-        self.profile.tick(Self::level_class(n.depth as u32));
-        Step::MemAccess(if n.in_dram {
-            Tier::Dram
+        let class = Self::level_class(n.depth as u32);
+        self.profile.tick(class);
+        if n.in_dram {
+            if self.plan.is_compressed(class) {
+                self.pending_cpu = Some(Dur::us(self.plan.decompress_us(class)));
+            }
+            Step::MemAccess(Tier::Dram)
         } else {
-            Tier::Secondary
-        })
+            Step::MemAccess(Tier::Secondary)
+        }
     }
 
     /// The resolved placement plan (static, or measured after
@@ -397,7 +416,7 @@ impl TreeKv {
     pub fn replan(&mut self, profile: &AccessProfile) {
         self.plan = Plan::replan(
             self.cfg.placement,
-            Self::level_classes(self.cfg.n_items, self.cfg.sprigs),
+            Self::placement_classes(&self.cfg),
             profile,
         );
         if !matches!(
@@ -479,6 +498,21 @@ impl TreeKv {
             width = width.saturating_mul(2);
         }
         classes
+    }
+
+    /// The level classes with the configured compression spec attached —
+    /// the planner's knapsack items (`kvs::placement`, joint
+    /// placement×compression).
+    fn placement_classes(cfg: &TreeKvConfig) -> Vec<StructClass> {
+        Self::level_classes(cfg.n_items, cfg.sprigs)
+            .into_iter()
+            .map(|c| c.with_compression(cfg.compression.spec()))
+            .collect()
+    }
+
+    /// Modeled per-hop decompress CPU (µs) for compressed-in-DRAM hops.
+    fn t_cpu_us(&self) -> f64 {
+        self.cfg.compression.spec().map_or(0.0, |s| s.decompress_us)
     }
 
     fn place_in_dram(&self, depth: u32, rng: &mut Rng) -> bool {
@@ -653,9 +687,46 @@ impl TreeKv {
 
     /// Simulated DRAM bytes the placement consumes: 64 bytes per
     /// DRAM-resident entry (exact, entry-granular — freed slots are
-    /// cleared when recycled into the free list).
+    /// cleared when recycled into the free list). Entries of a
+    /// compressed-in-DRAM level class count at the compressed ratio
+    /// (⌈q·bytes⌉ per class, matching `Plan::dram_bytes` accounting);
+    /// with compression off this is exactly `64 × resident entries`.
     pub fn dram_bytes(&self) -> u64 {
-        self.nodes.iter().filter(|n| n.in_dram).count() as u64 * 64
+        let mut per_class = [0u64; 64];
+        for n in self.nodes.iter().filter(|n| n.in_dram) {
+            per_class[Self::level_class(n.depth as u32)] += 64;
+        }
+        per_class
+            .iter()
+            .enumerate()
+            .map(|(class, &bytes)| {
+                if self.plan.is_compressed(class) {
+                    let q = self
+                        .plan
+                        .classes()
+                        .get(class)
+                        .and_then(|c| c.compression)
+                        .map_or(1.0, |s| s.ratio_q);
+                    ((q * bytes as f64).ceil() as u64).min(bytes)
+                } else {
+                    bytes
+                }
+            })
+            .sum()
+    }
+
+    /// Fraction of index entries resident compressed-in-DRAM (the walk-side
+    /// analog of [`TreeKv::dram_entry_fraction`] for the scan split).
+    fn compressed_entry_fraction(&self) -> f64 {
+        if self.nodes.is_empty() {
+            return 0.0;
+        }
+        let cpr = self
+            .nodes
+            .iter()
+            .filter(|n| n.in_dram && self.plan.is_compressed(Self::level_class(n.depth as u32)))
+            .count();
+        cpr as f64 / self.nodes.len() as f64
     }
 
     /// Total offloadable index bytes (the `AllDram` footprint).
@@ -837,12 +908,13 @@ impl TreeKv {
     /// Deterministic structural probe of the descent cost: walk the index
     /// for a fixed stride of the keyspace (no RNG — snapshots must be
     /// reproducible) and average the hops a point lookup performs. Returns
-    /// `(hops, secondary_hops)`: they differ only under a tiering policy
-    /// that pins some levels/entries to DRAM.
-    fn probe_descent(&self) -> (f64, f64) {
+    /// `(hops, secondary_hops, compressed_hops)`: the parts differ only
+    /// under a tiering policy that pins some levels/entries to DRAM (and,
+    /// for the third, places some of those levels compressed).
+    fn probe_descent(&self) -> (f64, f64, f64) {
         let n = self.cfg.n_items.max(1);
         let step = (n / 2048).max(1);
-        let (mut hops, mut sec, mut probes) = (0u64, 0u64, 0u64);
+        let (mut hops, mut sec, mut cpr, mut probes) = (0u64, 0u64, 0u64, 0u64);
         let mut key = 0u64;
         while key < n {
             let digest = fnv1a(key);
@@ -852,6 +924,8 @@ impl TreeKv {
                 hops += 1;
                 if !node.in_dram {
                     sec += 1;
+                } else if self.plan.is_compressed(Self::level_class(node.depth as u32)) {
+                    cpr += 1;
                 }
                 if digest == node.digest {
                     break;
@@ -866,7 +940,7 @@ impl TreeKv {
             key += step;
         }
         let p = probes.max(1) as f64;
-        (hops as f64 / p, sec as f64 / p)
+        (hops as f64 / p, sec as f64 / p, cpr as f64 / p)
     }
 
     /// Θ_scan cost vector for an explicit scan length (the
@@ -875,7 +949,7 @@ impl TreeKv {
     /// lengths including zero here). The in-order walk visits ≈ descent +
     /// `len` nodes, and values are read `SCAN_IO_BATCH` records per IO.
     pub fn scan_model_params(&self, len: f64) -> KindCost {
-        let (hops, sec_hops) = self.probe_descent();
+        let (hops, sec_hops, cpr_hops) = self.probe_descent();
         let vbytes = self.cfg.value_size.mean().max(64.0);
         let c = KindCost::scan(
             hops,
@@ -886,14 +960,14 @@ impl TreeKv {
             IO_SCAN_PRE,
             IO_SCAN_POST,
         );
-        self.split_scan_hops(c, hops, sec_hops)
+        self.split_scan_hops(c, hops, sec_hops, cpr_hops)
     }
 
     /// The `model_params(Scan)` snapshot: the configured scan-length
     /// distribution's first two moments feed `KindCost::scan_dist`, so
     /// uniform scan mixes stop biasing the batched IO count (the PR 3
     /// follow-up on scan-length distributions beyond the mean).
-    fn scan_cost_dist(&self, hops: f64, sec_hops: f64) -> KindCost {
+    fn scan_cost_dist(&self, hops: f64, sec_hops: f64, cpr_hops: f64) -> KindCost {
         let vbytes = self.cfg.value_size.mean().max(64.0);
         let c = KindCost::scan_dist(
             hops,
@@ -905,7 +979,7 @@ impl TreeKv {
             IO_SCAN_PRE,
             IO_SCAN_POST,
         );
-        self.split_scan_hops(c, hops, sec_hops)
+        self.split_scan_hops(c, hops, sec_hops, cpr_hops)
     }
 
     /// Tier placement splits the scan's hops in two parts: the anchor
@@ -914,15 +988,21 @@ impl TreeKv {
     /// node-count proportion — dominated by the deep levels, so its DRAM
     /// share is the entry-granular capacity fraction, not the descent
     /// ratio (which would overstate the walk's DRAM side under top-levels
-    /// placement).
-    fn split_scan_hops(&self, mut c: KindCost, hops: f64, sec_hops: f64) -> KindCost {
+    /// placement). Compressed-in-DRAM hops split the same way: the descent
+    /// at the probed compressed ratio, the walk at the entry-granular
+    /// compressed fraction — each such hop carries the inline `t_cpu`.
+    fn split_scan_hops(&self, mut c: KindCost, hops: f64, sec_hops: f64, cpr_hops: f64) -> KindCost {
         let descent_sec = if hops > 0.0 { sec_hops / hops } else { 1.0 };
+        let descent_cpr = if hops > 0.0 { cpr_hops / hops } else { 0.0 };
         let total = c.m;
         let walk = (total - hops).max(0.0);
         let walk_sec = 1.0 - self.dram_entry_fraction();
+        let walk_cpr = self.compressed_entry_fraction();
         let m_sec = (total - walk) * descent_sec + walk * walk_sec;
+        let m_cpr = (total - walk) * descent_cpr + walk * walk_cpr;
         c.m = m_sec;
-        c.with_m_dram(total - m_sec)
+        c.with_m_dram((total - m_sec - m_cpr).max(0.0))
+            .with_compressed(m_cpr, self.t_cpu_us())
     }
 }
 
@@ -936,8 +1016,9 @@ impl super::ModelCosts for TreeKv {
     /// defragmenter is not part of the per-op model (its IOs ride on
     /// separate threads).
     fn model_params(&self, kind: OpKind) -> KindCost {
-        let (hops, sec_hops) = self.probe_descent();
-        let dram_hops = (hops - sec_hops).max(0.0);
+        let (hops, sec_hops, cpr_hops) = self.probe_descent();
+        let dram_hops = (hops - sec_hops - cpr_hops).max(0.0);
+        let t_cpu = self.t_cpu_us();
         let t_mem = self.cfg.t_node.as_us();
         let vbytes = self.cfg.value_size.mean().max(64.0);
         // The leaf attach/unlink access happens at the deepest level of its
@@ -961,6 +1042,7 @@ impl super::ModelCosts for TreeKv {
             OpKind::Read => {
                 KindCost::point(sec_hops, 1.0, vbytes, t_mem, IO_READ_PRE, IO_READ_POST)
                     .with_m_dram(dram_hops)
+                    .with_compressed(cpr_hops, t_cpu)
             }
             // Log append IO + locked re-descent + entry write.
             OpKind::Write => KindCost::point(
@@ -971,12 +1053,14 @@ impl super::ModelCosts for TreeKv {
                 IO_WRITE_PRE,
                 IO_WRITE_POST,
             )
-            .with_m_dram(dram_hops + leaf_dram),
+            .with_m_dram(dram_hops + leaf_dram)
+            .with_compressed(cpr_hops, t_cpu),
             // Locked descent + unlink (occasional successor walk folded into
             // the +1); no synchronous IO — the block is reclaimed by defrag.
             OpKind::Delete => KindCost::memory_only(sec_hops + leaf_sec, t_mem, t_mem)
-                .with_m_dram(dram_hops + leaf_dram),
-            OpKind::Scan => self.scan_cost_dist(hops, sec_hops),
+                .with_m_dram(dram_hops + leaf_dram)
+                .with_compressed(cpr_hops, t_cpu),
+            OpKind::Scan => self.scan_cost_dist(hops, sec_hops, cpr_hops),
             // Full read path chained into the full write path.
             OpKind::Rmw => KindCost::point(
                 2.0 * sec_hops + leaf_sec,
@@ -986,7 +1070,8 @@ impl super::ModelCosts for TreeKv {
                 (IO_READ_PRE + IO_WRITE_PRE) / 2.0,
                 (IO_READ_POST + IO_WRITE_POST) / 2.0,
             )
-            .with_m_dram(2.0 * dram_hops + leaf_dram),
+            .with_m_dram(2.0 * dram_hops + leaf_dram)
+            .with_compressed(2.0 * cpr_hops, t_cpu),
         }
     }
 }
@@ -1038,6 +1123,12 @@ impl Service for TreeKv {
     }
 
     fn step(&mut self, _tid: usize, op: &mut TreeOp, rng: &mut Rng) -> Step {
+        // Inline decompress CPU owed by the previous compressed-class
+        // access: a dependent Compute on the op's critical path (the op
+        // state already advanced, so this purely adds busy time).
+        if let Some(d) = self.pending_cpu.take() {
+            return Step::Compute(d);
+        }
         match op {
             TreeOp::Descend {
                 kind,
@@ -1810,6 +1901,73 @@ mod tests {
         );
         assert_eq!(all.dram_bytes(), all.offload_bytes_total());
         assert_eq!(all.dram_entry_fraction(), 1.0);
+    }
+
+    #[test]
+    fn compressed_budget_packs_more_levels_and_stays_correct() {
+        use super::super::placement::{CompressMode, Compression};
+        let spec = Compression::new(0.5, 0.12);
+        // 20k items / 16 sprigs: level 0 is 16 entries (1024 B), level 1 is
+        // 32 (2048 B). A 1536 B budget fits only level 0 plain, but both
+        // top levels compressed at q = 0.5 (512 + 1024 B).
+        let budget = 1536u64;
+        let mut rng = Rng::new(70);
+        let plain = TreeKv::new(
+            TreeKvConfig {
+                placement: PlacementPolicy::Budget {
+                    dram_bytes: budget,
+                },
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        let mut rng = Rng::new(70);
+        let mut joint = TreeKv::new(
+            TreeKvConfig {
+                placement: PlacementPolicy::Budget {
+                    dram_bytes: budget,
+                },
+                compression: CompressMode::Joint(spec),
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        assert_eq!(plain.plan().dram_classes(), 1);
+        assert_eq!(plain.dram_bytes(), 1024);
+        assert_eq!(joint.plan().dram_classes(), 2);
+        assert_eq!(joint.plan().compressed_classes(), 2);
+        assert_eq!(joint.dram_bytes(), 1536);
+        assert!(joint.dram_entry_fraction() > plain.dram_entry_fraction());
+        // The compressed store still reads correctly — the decompress is
+        // pure added Compute, invisible to drive_op's result accounting.
+        let mut rng = Rng::new(71);
+        for key in [1u64, 999, 7_777] {
+            let before = joint.stats.verified;
+            let op = joint.op_get(key);
+            drive(&mut joint, op, &mut rng);
+            assert_eq!(joint.stats.verified, before + 1);
+        }
+        assert_eq!(joint.stats.corruptions, 0);
+        // The model snapshot sees the compressed hops inline.
+        use super::super::ModelCosts;
+        let read = joint.model_params(OpKind::Read);
+        assert!(read.m_cpr > 0.5, "m_cpr = {}", read.m_cpr);
+        assert!((read.t_cpu - 0.12).abs() < 1e-12);
+        // Degenerate ratio 1.0 normalizes away: identical accounting to
+        // compression off.
+        let mut rng = Rng::new(70);
+        let noop = TreeKv::new(
+            TreeKvConfig {
+                placement: PlacementPolicy::Budget {
+                    dram_bytes: budget,
+                },
+                compression: CompressMode::Joint(Compression::new(1.0, 0.5)),
+                ..small_cfg()
+            },
+            &mut rng,
+        );
+        assert_eq!(noop.plan().compressed_classes(), 0);
+        assert_eq!(noop.dram_bytes(), plain.dram_bytes());
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //!
 //! Experiments: fig3 fig10 fig11micro fig11kvs fig12 fig14 fig15 fig16
 //!              fig17 fig18 table6 val1404 ycsb ssdscale modelcheck
-//!              placement planner adaptive durability tenants
+//!              placement planner adaptive durability tenants ablation
+//!              compress
 //! (The offline image has no argument-parsing crate; parsing is by hand.)
 //!
 //! `modelcheck` validates the Θ_scan-extended analytic model against the
@@ -36,13 +37,25 @@
 //! point tenant's p99 leaves the documented isolation band versus its solo
 //! baseline, a per-tenant latency lane is empty or non-monotone, or the
 //! completed-ops split drifts from the scheduler's weight ratio.
+//! `ablation` pits random residency against the hotness-ranked knapsack at
+//! equal DRAM bytes (with an Eq 15 ρ-interpolation overlay column) and
+//! exits non-zero when the ranked arm loses beyond the slack, the treekv
+//! discriminator never separates, the arms' byte accounting diverges, or
+//! the split-hop model drifts outside its bands. `compress` sweeps budget ×
+//! L_mem × compression ratio through the joint placement×compression
+//! planner and exits non-zero unless the model-predicted crossover shows up
+//! in the simulator: compressed arms win (within slack) at tight budgets
+//! and long latencies, forced compression loses where there is nothing to
+//! buy, the joint plan folds to the uncompressed plan bit-identically at a
+//! loose budget, the ratio-1.0 passthrough is bit-identical to compression
+//! off, and the t_cpu-extended Eq 14 stays within its documented band.
 
 use cxlkvs::coordinator::experiments::{self, ModelBackend};
 
 const EXPERIMENTS: &[&str] = &[
     "fig3", "fig10", "fig11micro", "fig11kvs", "fig12", "fig14", "fig15", "fig16", "fig17",
     "fig18", "table6", "val1404", "ycsb", "ssdscale", "modelcheck", "placement", "planner",
-    "adaptive", "durability", "tenants",
+    "adaptive", "durability", "tenants", "ablation", "compress",
 ];
 
 fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
@@ -134,6 +147,33 @@ fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
                      the isolation band vs its solo baseline, an empty/non-monotone \
                      tenant latency lane, or completed-ops share off the weight \
                      ratio — see the GATE FAILED notes)"
+                );
+                std::process::exit(1);
+            }
+        }
+        "ablation" => {
+            let (r, ok) = experiments::ablation(fast);
+            r.print();
+            if !ok {
+                eprintln!(
+                    "ablation: a placement-ablation gate failed (ranked placement \
+                     lost to random at equal bytes, the treekv discriminator never \
+                     separated, byte accounting diverged between arms, or model \
+                     drift — see the GATE FAILED notes)"
+                );
+                std::process::exit(1);
+            }
+        }
+        "compress" => {
+            let (r, ok) = experiments::compress(fast);
+            r.print();
+            if !ok {
+                eprintln!(
+                    "compress: a compression-crossover gate failed (no compressed \
+                     win at tight budget/long L_mem, forced compression beating \
+                     uncompressed with nothing to buy, joint plan not folding to \
+                     off at a loose budget, ratio-1.0 passthrough not bit-identical, \
+                     or t_cpu-extended model drift — see the GATE FAILED notes)"
                 );
                 std::process::exit(1);
             }

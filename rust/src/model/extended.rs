@@ -305,6 +305,34 @@ pub fn theta_extended_recip(op: &OpParams, l_mem: f64, ext: &ExtParams, sys: &Sy
 /// costing `T_mem + L_DRAM` each, additive like `t_fixed` and never hidden
 /// behind the prefetch queue. Stores derive both counts from their live
 /// policy in `ModelCosts::model_params`.
+///
+/// ## The compression extension (`t_cpu` in Eq 14's busy time)
+///
+/// The joint placement×compression planner (`kvs::placement` module docs)
+/// places some classes in DRAM **compressed**: their hops are inline DRAM
+/// loads that additionally run a decompressor on the accessing core.
+/// `m_cpr` counts those hops and `t_cpu` is the mean decompress cost per
+/// compressed hop, so the compressed bucket contributes
+///
+/// ```text
+/// M_cpr · (T_mem + L_DRAM + t_cpu)
+/// ```
+///
+/// of **busy** time per whole operation. The derivation is one line on
+/// top of the split-hop Θ: a compressed access is a dependent inline load
+/// (no prefetch enqueue — the next hop's address is inside the compressed
+/// line, so there is nothing to prefetch behind; no `T_sw` — the core
+/// never yields; no window term — the decompressor occupies the core, not
+/// the memory device), whose service time is the DRAM load `T_mem +
+/// L_DRAM` extended by the decompress CPU `t_cpu`. Like `M_dram` and
+/// `T_fixed` it is additive outside the `max` floors of Eq 14: decompress
+/// work is CPU time, invisible to the SSD bandwidth/IOPS ceilings and to
+/// the memory-latency split unit, and it can never be hidden behind the
+/// prefetch queue — which is exactly why compression *loses* at loose
+/// budgets (pure added busy time at equal placement) and wins only when
+/// the bytes it frees absorb secondary hops whose cost `Δ(L)` exceeds
+/// `t_cpu`. With `m_cpr = 0` or `t_cpu = 0` every formula below is
+/// bit-identical to the pre-compression model (pinned by test).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct KindCost {
     /// Secondary-memory accesses per whole operation (M_sec,k).
@@ -312,6 +340,12 @@ pub struct KindCost {
     /// DRAM-placed accesses per whole operation (M_dram,k): inline, no
     /// prefetch/switch path — costed at `t_mem + L_DRAM` each.
     pub m_dram: f64,
+    /// Compressed-DRAM accesses per whole operation (M_cpr,k): inline
+    /// loads that also pay `t_cpu` of decompress CPU each (struct docs).
+    pub m_cpr: f64,
+    /// Mean decompress CPU per compressed hop, µs — core-busy, never
+    /// prefetch-hidden. `0.0` when nothing is compressed.
+    pub t_cpu: f64,
     /// IOs per whole operation (S_k).
     pub s: f64,
     /// Average bytes per IO of this kind (A_IO,k).
@@ -332,6 +366,8 @@ impl KindCost {
         KindCost {
             m: m.max(0.0),
             m_dram: 0.0,
+            m_cpr: 0.0,
+            t_cpu: 0.0,
             s: s.max(0.0),
             a_io: a_io.max(0.0),
             t_mem,
@@ -347,6 +383,8 @@ impl KindCost {
         KindCost {
             m: m.max(0.0),
             m_dram: 0.0,
+            m_cpr: 0.0,
+            t_cpu: 0.0,
             s: 0.0,
             a_io: 0.0,
             t_mem,
@@ -360,6 +398,17 @@ impl KindCost {
     /// struct docs). Constructors default it to zero.
     pub fn with_m_dram(mut self, m_dram: f64) -> KindCost {
         self.m_dram = m_dram.max(0.0);
+        self
+    }
+
+    /// Attach the compressed-DRAM hop count and its mean decompress cost
+    /// (the compression extension; see the struct docs). Constructors
+    /// default both to zero — `with_compressed(0.0, _)` is the identity,
+    /// and `with_compressed(x, 0.0)` costs exactly like
+    /// `with_m_dram(m_dram + x)`.
+    pub fn with_compressed(mut self, m_cpr: f64, t_cpu: f64) -> KindCost {
+        self.m_cpr = m_cpr.max(0.0);
+        self.t_cpu = t_cpu.max(0.0);
         self
     }
 
@@ -452,6 +501,8 @@ impl KindCost {
         KindCost {
             m: descend_m.max(0.0) + len,
             m_dram: 0.0,
+            m_cpr: 0.0,
+            t_cpu: 0.0,
             s: ios,
             a_io,
             t_mem,
@@ -486,9 +537,14 @@ fn mean_ceil_div(lo: u64, hi: u64, b: u64) -> f64 {
 /// (secondary hops) enters the per-IO split and its prefetch window;
 /// `m_dram` hops are inline DRAM loads costing `t_mem + L_DRAM` each,
 /// additive like `t_fixed` — they never pay `T_sw`, never occupy a prefetch
-/// slot, and are independent of `l_mem`.
+/// slot, and are independent of `l_mem`. Compressed-DRAM hops (`m_cpr`)
+/// take the same inline path extended by `t_cpu` of decompress CPU each
+/// (the compression extension; `KindCost` struct docs) — with
+/// `m_cpr = 0` both branches are bit-identical to the pre-compression
+/// model.
 pub fn theta_kind_recip(cost: &KindCost, l_mem: f64, ext: &ExtParams, sys: &SysParams) -> f64 {
-    let dram_hops = cost.m_dram * (cost.t_mem + ext.l_dram);
+    let dram_hops = cost.m_dram * (cost.t_mem + ext.l_dram)
+        + cost.m_cpr * (cost.t_mem + ext.l_dram + cost.t_cpu);
     if cost.s <= S_EPS {
         return memonly_recip(cost.m, cost.t_mem, l_mem, ext, sys) + dram_hops + cost.t_fixed;
     }
@@ -883,6 +939,45 @@ mod tests {
         let r = theta_kind_recip(&memonly, 5.0, &ext, &sys);
         let plain = theta_kind_recip(&KindCost::memory_only(5.0, 0.1, 0.5), 5.0, &ext, &sys);
         assert!((r - plain - 3.0 * (0.1 + ext.l_dram)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compressed_hops_are_inline_and_t_cpu_zero_is_bit_identical() {
+        // The compression extension: m_cpr hops add t_mem + L_DRAM + t_cpu
+        // each, additive and latency-independent; t_cpu = 0 makes a
+        // compressed hop cost exactly a DRAM hop, and m_cpr = 0 is the
+        // identity (bit-identical, not just close — pinned here).
+        let sys = sys();
+        let ext = ext_unbound();
+        let base = KindCost::point(10.0, 1.0, 1536.0, 0.1, 3.5, 2.5);
+        for l in [0.1, 1.0, 5.0, 10.0] {
+            let r0 = theta_kind_recip(&base, l, &ext, &sys);
+            // m_cpr = 0: bit-identical regardless of t_cpu.
+            let noop = theta_kind_recip(&base.with_compressed(0.0, 99.0), l, &ext, &sys);
+            assert_eq!(r0, noop, "L={l}: m_cpr=0 must be the identity");
+            // t_cpu = 0: a compressed hop == a DRAM hop, bit-identical.
+            let cpr0 = theta_kind_recip(&base.with_compressed(4.0, 0.0), l, &ext, &sys);
+            let dram = theta_kind_recip(&base.with_m_dram(4.0), l, &ext, &sys);
+            assert_eq!(cpr0, dram, "L={l}: t_cpu=0 must equal with_m_dram");
+            // The full term: 4 hops at t_mem + L_DRAM + t_cpu, additive.
+            let r1 = theta_kind_recip(&base.with_compressed(4.0, 0.12), l, &ext, &sys);
+            let want = 4.0 * (0.1 + ext.l_dram + 0.12);
+            assert!((r1 - r0 - want).abs() < 1e-9, "L={l}: {r1} - {r0}");
+        }
+        // The S=0 branch takes the same inline term.
+        let memonly = KindCost::memory_only(5.0, 0.1, 0.5).with_compressed(3.0, 0.12);
+        let r = theta_kind_recip(&memonly, 5.0, &ext, &sys);
+        let plain = theta_kind_recip(&KindCost::memory_only(5.0, 0.1, 0.5), 5.0, &ext, &sys);
+        assert!((r - plain - 3.0 * (0.1 + ext.l_dram + 0.12)).abs() < 1e-9);
+        // Mixed buckets compose: dram and compressed hops add independently.
+        let both = base.with_m_dram(2.0).with_compressed(3.0, 0.2);
+        let r = theta_kind_recip(&both, 2.0, &ext, &sys);
+        let r0 = theta_kind_recip(&base, 2.0, &ext, &sys);
+        let want = 2.0 * (0.1 + ext.l_dram) + 3.0 * (0.1 + ext.l_dram + 0.2);
+        assert!((r - r0 - want).abs() < 1e-9);
+        // Negative inputs clamp like the other builders.
+        let c = base.with_compressed(-1.0, -0.5);
+        assert_eq!((c.m_cpr, c.t_cpu), (0.0, 0.0));
     }
 
     #[test]

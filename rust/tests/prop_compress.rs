@@ -1,0 +1,428 @@
+//! Compression invariants (`kvs::placement`'s joint placement×compression
+//! planner), the guards this PR's trade rides on:
+//!
+//! 1. **KV-invisible**: compression never changes KV-visible results — a
+//!    forced-compressed store and its uncompressed twin, driven over the
+//!    same get/scan sequences at the same seeds, report identical KV stats
+//!    and conserve memory hops (the decompress charge rides as `Compute`,
+//!    never as an extra memory access and never as an RNG draw).
+//! 2. **Ratio-1.0 passthrough**: a spec at ratio ≥ 1 normalizes away at
+//!    plan resolution, so a machine-window run is bit-identical to
+//!    compression off on all three stores.
+//! 3. **Crash recovery**: a WAL-enabled forced-compressed store passes the
+//!    same crash→rebuild→replay drill as the uncompressed path.
+//! 4. **Accounting**: compressed classes bill their compressed footprint
+//!    against the budget; reported DRAM bytes stay policy + pinned
+//!    residual; and at equal budget the joint plan never holds fewer
+//!    DRAM-resident classes than the two-state knapsack.
+
+use cxlkvs::coordinator::runner::crash_recover_check;
+use cxlkvs::kvs::{
+    drive_op_tiers, CacheKv, CacheKvConfig, CompressMode, Compression, LsmKv, LsmKvConfig,
+    PlacementPolicy, TreeKv, TreeKvConfig, WalConfig,
+};
+use cxlkvs::sim::{Dur, Machine, MachineConfig, MemConfig, Rng};
+use cxlkvs::workload::OpMix;
+
+fn machine(l_us: f64) -> MachineConfig {
+    MachineConfig {
+        threads_per_core: 32,
+        n_locks: 64,
+        mem: MemConfig::fpga(Dur::us(l_us)),
+        seed: 0x9a7e,
+        ..Default::default()
+    }
+}
+
+/// Same fingerprint as `prop_placement::summarize`: every machine- and
+/// KV-visible counter that two bit-identical runs must agree on.
+fn summarize(st: &cxlkvs::sim::RunStats, kv: &cxlkvs::kvs::KvStats) -> String {
+    format!(
+        "ops={} m={} m_dram={} s={} ior={} iow={} gets={} sets={} hits={} misses={} verified={}",
+        st.ops,
+        (st.mean_m * 1e6).round(),
+        (st.mean_m_dram * 1e6).round(),
+        (st.mean_s * 1e6).round(),
+        st.io_reads,
+        st.io_writes,
+        kv.gets,
+        kv.sets,
+        kv.hits,
+        kv.misses,
+        kv.verified
+    )
+}
+
+const SPEC: Compression = Compression {
+    ratio_q: 0.5,
+    decompress_us: 0.12,
+    always: false,
+};
+
+// ---------------------------------------------------------------------------
+// 1. Forced compression is KV-invisible on drive loops.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn forced_compression_never_changes_treekv_results() {
+    let total = 30_000u64 * 64;
+    // Unbounded budget (identical residency, every class compressed) and a
+    // tight one (the compressed plan packs deeper levels, hops move tiers).
+    for budget in [u64::MAX, total / 4] {
+        let build = |mode: CompressMode| {
+            let mut rng = Rng::new(0x7e57);
+            TreeKv::new(
+                TreeKvConfig {
+                    n_items: 30_000,
+                    sprigs: 32,
+                    placement: PlacementPolicy::Budget { dram_bytes: budget },
+                    compression: mode,
+                    ..Default::default()
+                },
+                &mut rng,
+            )
+        };
+        let mut plain = build(CompressMode::Off);
+        let mut cpr = build(CompressMode::Forced(SPEC));
+        assert_eq!(plain.plan().compressed_classes(), 0);
+        assert!(cpr.plan().compressed_classes() > 0, "budget {budget}");
+        let mut ra = Rng::new(0x11);
+        let mut rb = Rng::new(0x11);
+        for key in [7u64, 999, 12_345, 29_999] {
+            let op = plain.op_get(key);
+            let ca = drive_op_tiers(&mut plain, op, &mut ra);
+            let op = cpr.op_get(key);
+            let cb = drive_op_tiers(&mut cpr, op, &mut rb);
+            assert_eq!(
+                ca.dram + ca.secondary,
+                cb.dram + cb.secondary,
+                "hops must move tiers, not vanish (key {key})"
+            );
+            assert_eq!((ca.reads, ca.writes), (cb.reads, cb.writes));
+        }
+        for (key, len) in [(5u64, 16u32), (20_000, 64)] {
+            let op = plain.op_scan(key, len);
+            let ca = drive_op_tiers(&mut plain, op, &mut ra);
+            let op = cpr.op_scan(key, len);
+            let cb = drive_op_tiers(&mut cpr, op, &mut rb);
+            assert_eq!(ca.dram + ca.secondary, cb.dram + cb.secondary);
+            assert_eq!((ca.reads, ca.writes), (cb.reads, cb.writes));
+        }
+        assert_eq!(plain.stats, cpr.stats, "KV-visible stats must match");
+    }
+}
+
+#[test]
+fn forced_compression_never_changes_lsmkv_results() {
+    let cfg_of = |mode: CompressMode, budget: u64| LsmKvConfig {
+        n_items: 100_000,
+        cache_blocks: 1024,
+        shards: 16,
+        buckets_per_shard: 64,
+        placement: PlacementPolicy::Budget { dram_bytes: budget },
+        compression: mode,
+        ..Default::default()
+    };
+    let total = {
+        let mut rng = Rng::new(0x15a1);
+        LsmKv::new(cfg_of(CompressMode::Off, 0), &mut rng).offload_bytes_total()
+    };
+    for budget in [u64::MAX, total / 2] {
+        let mut rng = Rng::new(0x15a1);
+        let mut plain = LsmKv::new(cfg_of(CompressMode::Off, budget), &mut rng);
+        let mut rng = Rng::new(0x15a1);
+        let mut cpr = LsmKv::new(cfg_of(CompressMode::Forced(SPEC), budget), &mut rng);
+        assert!(cpr.plan().compressed_classes() > 0, "budget {budget}");
+        let mut ra = Rng::new(0x22);
+        let mut rb = Rng::new(0x22);
+        for key in [3u64, 4_242, 77_777, 99_999] {
+            let op = plain.op_get(key);
+            let ca = drive_op_tiers(&mut plain, op, &mut ra);
+            let op = cpr.op_get(key);
+            let cb = drive_op_tiers(&mut cpr, op, &mut rb);
+            assert_eq!(ca.dram + ca.secondary, cb.dram + cb.secondary, "key {key}");
+            assert_eq!((ca.reads, ca.writes), (cb.reads, cb.writes));
+        }
+        for (start, len) in [(10u64, 20u32), (50_000, 50)] {
+            let op = plain.op_scan(start, len);
+            let ca = drive_op_tiers(&mut plain, op, &mut ra);
+            let op = cpr.op_scan(start, len);
+            let cb = drive_op_tiers(&mut cpr, op, &mut rb);
+            assert_eq!(ca.dram + ca.secondary, cb.dram + cb.secondary);
+            assert_eq!((ca.reads, ca.writes), (cb.reads, cb.writes));
+        }
+        assert_eq!(plain.stats, cpr.stats, "KV-visible stats must match");
+    }
+}
+
+#[test]
+fn forced_compression_never_changes_cachekv_results() {
+    let cfg_of = |mode: CompressMode, budget: u64| CacheKvConfig {
+        n_items: 20_000,
+        t1_items: 2_400,
+        t2_items: 11_000,
+        buckets: 4_096,
+        placement: PlacementPolicy::Budget { dram_bytes: budget },
+        compression: mode,
+        ..Default::default()
+    };
+    let total = {
+        let mut rng = Rng::new(0xcac4);
+        CacheKv::new(cfg_of(CompressMode::Off, 0), &mut rng).offload_bytes_total()
+    };
+    for budget in [u64::MAX, total / 2] {
+        let mut rng = Rng::new(0xcac4);
+        let mut plain = CacheKv::new(cfg_of(CompressMode::Off, budget), &mut rng);
+        let mut rng = Rng::new(0xcac4);
+        let mut cpr = CacheKv::new(cfg_of(CompressMode::Forced(SPEC), budget), &mut rng);
+        assert!(cpr.plan().compressed_classes() > 0, "budget {budget}");
+        let mut ra = Rng::new(0x33);
+        let mut rb = Rng::new(0x33);
+        for key in [5u64, 1_234, 9_999, 19_999] {
+            let op = plain.op_get(key);
+            let ca = drive_op_tiers(&mut plain, op, &mut ra);
+            let op = cpr.op_get(key);
+            let cb = drive_op_tiers(&mut cpr, op, &mut rb);
+            assert_eq!(ca.dram + ca.secondary, cb.dram + cb.secondary, "key {key}");
+            assert_eq!((ca.reads, ca.writes), (cb.reads, cb.writes));
+        }
+        assert_eq!(plain.stats, cpr.stats, "KV-visible stats must match");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Ratio ≥ 1 normalizes away: machine windows bit-identical to Off.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ratio_one_spec_is_bit_identical_to_compression_off() {
+    let pass = CompressMode::Joint(Compression::new(1.0, 0.5));
+
+    let run_tree = |mode: CompressMode| {
+        let mut rng = Rng::new(0x7ee7);
+        let kv = TreeKv::new(
+            TreeKvConfig {
+                n_items: 30_000,
+                sprigs: 32,
+                placement: PlacementPolicy::Budget {
+                    dram_bytes: 30_000 * 64 / 3,
+                },
+                compression: mode,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let mut m = Machine::new(machine(2.0), kv);
+        let st = m.run(Dur::ms(2.0), Dur::ms(6.0));
+        assert_eq!(
+            m.service.plan().compressed_classes(),
+            0,
+            "a ratio >= 1 spec must normalize away at plan resolution"
+        );
+        summarize(&st, &m.service.stats)
+    };
+    assert_eq!(
+        run_tree(CompressMode::Off),
+        run_tree(pass),
+        "treekv: ratio-1.0 passthrough must be bit-identical"
+    );
+
+    let run_lsm = |mode: CompressMode| {
+        let mut rng = Rng::new(0x15a1);
+        let kv = LsmKv::new(
+            LsmKvConfig {
+                n_items: 100_000,
+                cache_blocks: 1024,
+                shards: 16,
+                buckets_per_shard: 64,
+                placement: PlacementPolicy::Budget {
+                    dram_bytes: 512 * 1024,
+                },
+                compression: mode,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let mut m = Machine::new(machine(2.0), kv);
+        let st = m.run(Dur::ms(2.0), Dur::ms(6.0));
+        assert_eq!(m.service.plan().compressed_classes(), 0);
+        summarize(&st, &m.service.stats)
+    };
+    assert_eq!(
+        run_lsm(CompressMode::Off),
+        run_lsm(pass),
+        "lsmkv: ratio-1.0 passthrough must be bit-identical"
+    );
+
+    let run_cache = |mode: CompressMode| {
+        let mut rng = Rng::new(0xcac4);
+        let kv = CacheKv::new(
+            CacheKvConfig {
+                n_items: 20_000,
+                t1_items: 2_400,
+                t2_items: 11_000,
+                buckets: 4_096,
+                placement: PlacementPolicy::Budget {
+                    dram_bytes: 2_400 * 32,
+                },
+                compression: mode,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let mut m = Machine::new(machine(2.0), kv);
+        let st = m.run(Dur::ms(2.0), Dur::ms(6.0));
+        assert_eq!(m.service.plan().compressed_classes(), 0);
+        summarize(&st, &m.service.stats)
+    };
+    assert_eq!(
+        run_cache(CompressMode::Off),
+        run_cache(pass),
+        "cachekv: ratio-1.0 passthrough must be bit-identical"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. Crash recovery holds on a forced-compressed store.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn forced_compressed_store_survives_the_crash_drill() {
+    // Same drill as the runner's own: lsmkv, 1:3 read:write, WAL on — but
+    // with every placed class forced compressed, so recovery replays
+    // through stores whose hot path charges the decompress Compute.
+    let build = |rng: &mut Rng| {
+        LsmKv::new(
+            LsmKvConfig {
+                mix: OpMix::ratio(1, 3),
+                wal: WalConfig::on(),
+                placement: PlacementPolicy::Budget {
+                    dram_bytes: u64::MAX,
+                },
+                compression: CompressMode::Forced(SPEC),
+                ..Default::default()
+            },
+            rng,
+        )
+    };
+    {
+        let mut rng = Rng::new(0xc4a5);
+        let probe = build(&mut rng);
+        assert!(probe.plan().compressed_classes() > 0);
+    }
+    let mcfg = MachineConfig {
+        threads_per_core: 32,
+        n_locks: 64,
+        ..MachineConfig::default()
+    };
+    for crash_ms in [0.5, 4.0] {
+        let c = crash_recover_check(build, mcfg.clone(), 0xc4a5, Dur::ms(crash_ms));
+        assert!(
+            c.holds_for_index_store(),
+            "compressed crash drill at {crash_ms}ms violated recovery: {c:?}"
+        );
+        if crash_ms > 1.0 {
+            assert!(c.durable_lsn > 0, "a busy run must have durable records");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Byte accounting stays consistent under compression.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn compressed_byte_accounting_is_consistent() {
+    // lsmkv + cachekv report policy + pinned residual; treekv is pure
+    // policy. At half the offloadable footprint with a ratio-1/2 spec the
+    // joint plan must fit at least as many classes as the plain knapsack
+    // without ever exceeding the budget.
+    let spec_mode = CompressMode::Joint(SPEC);
+
+    // treekv
+    let total = 30_000u64 * 64;
+    let budget = total / 2;
+    let tree = |mode: CompressMode| {
+        let mut rng = Rng::new(0x7e57);
+        TreeKv::new(
+            TreeKvConfig {
+                n_items: 30_000,
+                sprigs: 32,
+                placement: PlacementPolicy::Budget { dram_bytes: budget },
+                compression: mode,
+                ..Default::default()
+            },
+            &mut rng,
+        )
+    };
+    let plain = tree(CompressMode::Off);
+    let joint = tree(spec_mode);
+    assert!(plain.plan().policy_dram_bytes() <= budget);
+    assert!(joint.plan().policy_dram_bytes() <= budget);
+    assert!(joint.plan().compressed_classes() > 0);
+    assert!(
+        joint.plan().dram_classes() + joint.plan().compressed_classes()
+            >= plain.plan().dram_classes(),
+        "the compressed variant can only pack more classes at equal budget"
+    );
+    assert_eq!(joint.dram_bytes(), joint.plan().policy_dram_bytes());
+
+    // lsmkv
+    let mut rng = Rng::new(0x15a1);
+    let probe = LsmKv::new(LsmKvConfig::default(), &mut rng);
+    let budget = probe.offload_bytes_total() / 2;
+    let lsm = |mode: CompressMode| {
+        let mut rng = Rng::new(0x15a1);
+        LsmKv::new(
+            LsmKvConfig {
+                placement: PlacementPolicy::Budget { dram_bytes: budget },
+                compression: mode,
+                ..Default::default()
+            },
+            &mut rng,
+        )
+    };
+    let plain = lsm(CompressMode::Off);
+    let joint = lsm(spec_mode);
+    assert!(plain.plan().policy_dram_bytes() <= budget);
+    assert!(joint.plan().policy_dram_bytes() <= budget);
+    assert!(joint.plan().compressed_classes() > 0);
+    assert!(
+        joint.plan().dram_classes() + joint.plan().compressed_classes()
+            >= plain.plan().dram_classes()
+    );
+    assert_eq!(
+        joint.dram_bytes(),
+        joint.plan().policy_dram_bytes() + joint.residual_dram_bytes(),
+        "reported DRAM = policy bytes + pinned residual"
+    );
+
+    // cachekv
+    let mut rng = Rng::new(0xcac4);
+    let probe = CacheKv::new(CacheKvConfig::default(), &mut rng);
+    let budget = probe.offload_bytes_total() / 2;
+    let cache = |mode: CompressMode| {
+        let mut rng = Rng::new(0xcac4);
+        CacheKv::new(
+            CacheKvConfig {
+                placement: PlacementPolicy::Budget { dram_bytes: budget },
+                compression: mode,
+                ..Default::default()
+            },
+            &mut rng,
+        )
+    };
+    let plain = cache(CompressMode::Off);
+    let joint = cache(spec_mode);
+    assert!(plain.plan().policy_dram_bytes() <= budget);
+    assert!(joint.plan().policy_dram_bytes() <= budget);
+    assert!(joint.plan().compressed_classes() > 0);
+    assert!(
+        joint.plan().dram_classes() + joint.plan().compressed_classes()
+            >= plain.plan().dram_classes()
+    );
+    assert_eq!(
+        joint.dram_bytes(),
+        joint.plan().policy_dram_bytes() + joint.residual_dram_bytes()
+    );
+}
