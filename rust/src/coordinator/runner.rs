@@ -5,14 +5,14 @@
 
 use crate::kvs::{
     model_mix, should_replan, AccessProfile, CacheKv, CacheKvConfig, CompressMode, DriveCounts,
-    Durable, LsmKv, LsmKvConfig, Plan, PlacementPolicy, TreeKv, TreeKvConfig, WalConfig, WalKind,
-    WalStats,
+    Durable, LsmKv, LsmKvConfig, Plan, PlacementPolicy, TreeKv, TreeKvConfig, WalConfig,
+    WalKind, WalStats,
 };
 use crate::microbench::{Microbench, MicrobenchConfig};
 use crate::model::{ExtParams, KindCost};
 use crate::sim::{
-    Dur, Machine, MachineConfig, MemConfig, RetryPolicy, Rng, RunStats, Service, SsdConfig,
-    TailProfile,
+    BgShare, Dur, Machine, MachineConfig, MemConfig, RetryPolicy, Rng, RunStats, Service,
+    SsdConfig, TailProfile,
 };
 use crate::workload::{PhasedWorkload, TenantSet, YcsbWorkload};
 
@@ -158,6 +158,11 @@ impl SweepCfg {
             w_log: 0.0,
             s_log: 0.0,
             retry_factor: 1.0,
+            // Interference terms default off; `ExtParams::with_bg_traffic`
+            // attaches measured per-class lane rates where a run compacts.
+            w_bg: 0.0,
+            s_bg: 0.0,
+            bg_share: 0.0,
         }
     }
 
@@ -371,6 +376,71 @@ pub fn run_store_ycsb_compressed(
             let bytes = m.service.dram_bytes();
             (st, model_mix(&m.service, &w), bytes)
         }
+    }
+}
+
+/// Result of one interference arm ([`run_lsm_interference`]): the window
+/// stats (with per-traffic-class IO lanes) plus the store's **window-only**
+/// flush/compaction byte ledger — the side the write-amplification gate
+/// cross-checks against the device lanes, which also cover the window only.
+pub struct InterferenceRun {
+    pub stats: RunStats,
+    /// Memtable-flush bytes written during the window (store ledger).
+    pub flush_write_bytes: u64,
+    /// Compaction bytes read during the window (store ledger).
+    pub compact_read_bytes: u64,
+    /// Compaction bytes written during the window (store ledger).
+    pub compact_write_bytes: u64,
+    /// Post-run per-kind model snapshot for `model::theta_mix_recip`.
+    pub mix: Vec<(f64, KindCost)>,
+}
+
+/// Run lsmkv under one YCSB preset with the interference knobs: an optional
+/// `memtable_cap` override (a huge cap never rotates the memtable, so no
+/// flush/compaction fires inside the window — the idle arm) and a
+/// [`BgShare`] policy on every device of the array. Same seeds and store
+/// construction as [`run_store_ycsb_placed`]'s lsmkv arm, so
+/// `(None, BgShare::None)` is bit-identical to that path (pinned by
+/// `tests/prop_interference.rs`).
+pub fn run_lsm_interference(
+    wl: YcsbWorkload,
+    sweep: &SweepCfg,
+    threads: usize,
+    memtable_cap: Option<u32>,
+    share: BgShare,
+) -> InterferenceRun {
+    let mut mcfg = sweep.machine(threads);
+    mcfg.ssd.bg_share = share;
+    let mut rng = Rng::new(sweep.seed ^ 0xfeed ^ wl.tag().as_bytes()[0] as u64);
+    let w = wl.weights();
+    let base = ycsb_lsm_cfg(wl);
+    let cfg = LsmKvConfig {
+        placement: sweep.placement,
+        memtable_cap: memtable_cap.unwrap_or(base.memtable_cap),
+        ..base
+    };
+    let kv = LsmKv::new(cfg, &mut rng).with_background(threads);
+    let mut m = Machine::new(mcfg, kv);
+    // Slice the measurement by hand — the same warmup / start_window /
+    // run_until sequence as `Machine::run`, so the slicing is bit-identical
+    // to it — purely so the store's byte ledger can be snapshotted at the
+    // instant the device lane counters reset. Both sides of the
+    // write-amplification gate then cover exactly the measured window.
+    let t0 = m.now();
+    m.run_until(t0 + sweep.warmup);
+    m.start_window(sweep.window);
+    let w_end = m.now() + sweep.window;
+    let ledger0 = m.service.stats.clone();
+    m.run_until(w_end);
+    let stats = m.window_stats(sweep.window);
+    let ledger = &m.service.stats;
+    let mix = model_mix(&m.service, &w);
+    InterferenceRun {
+        stats,
+        flush_write_bytes: ledger.flush_write_bytes - ledger0.flush_write_bytes,
+        compact_read_bytes: ledger.compact_read_bytes - ledger0.compact_read_bytes,
+        compact_write_bytes: ledger.compact_write_bytes - ledger0.compact_write_bytes,
+        mix,
     }
 }
 
@@ -1241,6 +1311,7 @@ mod tests {
             io_errors: 0,
             lock_contention: 0.0,
             tenants: Vec::new(),
+            io_classes: Vec::new(),
         }
     }
 

@@ -32,7 +32,7 @@ use super::common::{fnv1a, DriveCounts, KvStats, NIL};
 use super::placement::{AccessProfile, CompressMode, HopSplit, Plan, PlacementPolicy, StructClass};
 use super::wal::{Durable, Wal, WalConfig, WalKind, WalRecord};
 use crate::model::KindCost;
-use crate::sim::{Dur, IoKind, Rng, Service, Step};
+use crate::sim::{BgKind, Dur, IoKind, Rng, Service, Step, TrafficClass};
 use crate::workload::{
     KeyDist, KeyGen, OpKind, OpMix, OpWeights, TenantRouter, TenantSet, TenantTracker, ValueSize,
 };
@@ -767,6 +767,7 @@ impl Service for CacheKv {
                     extra_post: Dur::us(PAGE_READ_EXTRA_POST_US),
                     // The key's SOC slab hash picks the owning device.
                     shard: fnv1a(k),
+                    class: TrafficClass::Foreground,
                 }
             }
             CacheOp::Backend { key, durable } => {
@@ -847,6 +848,9 @@ impl Service for CacheKv {
                     extra_pre: Dur::us(PAGE_WRITE_EXTRA_PRE_US),
                     extra_post: Dur::us(PAGE_WRITE_EXTRA_POST_US),
                     shard: s,
+                    // SOC slab refill: a buffered eviction-path page write —
+                    // the cache's flush lane, not foreground service.
+                    class: TrafficClass::Background(BgKind::Flush),
                 }
             }
             CacheOp::Delete {
@@ -936,6 +940,7 @@ impl Service for CacheKv {
                         extra_pre: Dur::ZERO,
                         extra_post: Dur::ZERO,
                         shard: self.wal.cfg.log_shard,
+                        class: TrafficClass::Background(BgKind::WalFlush),
                     };
                 }
                 self.wal.note_poll();

@@ -91,6 +91,14 @@ pub struct KvStats {
     pub t1_probes: u64,
     /// Background work performed.
     pub bg_ops: u64,
+    /// Store-side background-IO byte ledger (the write-amplification
+    /// columns): bytes the store wrote flushing memtables, and bytes it
+    /// read/wrote compacting or defragmenting. Each counter increments at
+    /// the same site that tags the IO's `TrafficClass`, so in a fault-free
+    /// run (no retries) they match the device's bg lanes byte-for-byte.
+    pub flush_write_bytes: u64,
+    pub compact_read_bytes: u64,
+    pub compact_write_bytes: u64,
     /// IO errors surfaced to this store (`Service::io_failed` deliveries).
     pub io_errors: u64,
     /// Operations that finished with an error instead of a result (the

@@ -36,7 +36,7 @@ use super::common::{fnv1a, DriveCounts, KvStats, NIL};
 use super::placement::{AccessProfile, CompressMode, HopSplit, Plan, PlacementPolicy, StructClass};
 use super::wal::{Durable, Wal, WalConfig, WalKind, WalRecord};
 use crate::model::KindCost;
-use crate::sim::{Dur, IoKind, Rng, Service, Step};
+use crate::sim::{BgKind, Dur, IoKind, Rng, Service, Step, TrafficClass};
 use crate::workload::{
     KeyDist, KeyGen, OpKind, OpMix, OpWeights, ScanLen, TenantRouter, TenantSet, TenantTracker,
     ValueSize,
@@ -1099,6 +1099,7 @@ impl Service for LsmKv {
                     extra_pre: Dur::us(BLOCK_EXTRA_PRE_US),
                     extra_post: Dur::us(BLOCK_EXTRA_POST_US),
                     shard,
+                    class: TrafficClass::Foreground,
                 }
             }
             LsmOp::Insert { key, hops, rmw } => {
@@ -1282,6 +1283,7 @@ impl Service for LsmKv {
                             extra_pre: Dur::us(BLOCK_EXTRA_PRE_US),
                             extra_post: Dur::us(BLOCK_EXTRA_POST_US),
                             shard: block as u64,
+                            class: TrafficClass::Foreground,
                         };
                     }
                     self.stats.hits += 1;
@@ -1328,12 +1330,35 @@ impl Service for LsmKv {
                     IoKind::Read
                 };
                 *write = !*write;
+                let bytes = 32 * 1024; // bulk compaction IO
+                // Traffic-class split of the 8-IO cycle: the *first* write
+                // (entry ios_left == 7) persists the sealed memtable — the
+                // flush; every other IO is the L0→L1 merge — compaction
+                // reads of existing SSTables and rewritten-output writes.
+                // The byte ledger increments at exactly these sites so the
+                // interference experiment can cross-check the device's bg
+                // lanes against store-side write-amplification accounting.
+                let class = match kind {
+                    IoKind::Write if shard == 7 => {
+                        self.stats.flush_write_bytes += bytes as u64;
+                        TrafficClass::Background(BgKind::Flush)
+                    }
+                    IoKind::Write => {
+                        self.stats.compact_write_bytes += bytes as u64;
+                        TrafficClass::Background(BgKind::Compaction)
+                    }
+                    IoKind::Read => {
+                        self.stats.compact_read_bytes += bytes as u64;
+                        TrafficClass::Background(BgKind::Compaction)
+                    }
+                };
                 Step::Io {
                     kind,
-                    bytes: 32 * 1024, // bulk compaction IO
+                    bytes,
                     extra_pre: Dur::ns(500.0),
                     extra_post: Dur::us(2.0), // merge work
                     shard,
+                    class,
                 }
             }
             LsmOp::BgPause => {
@@ -1361,6 +1386,7 @@ impl Service for LsmKv {
                         extra_pre: Dur::ZERO,
                         extra_post: Dur::ZERO,
                         shard: self.wal.cfg.log_shard,
+                        class: TrafficClass::Background(BgKind::WalFlush),
                     };
                 }
                 // A flush is in flight: commit-wait (one T_sw poll).

@@ -46,7 +46,7 @@ use super::common::{fnv1a, DriveCounts, KvStats, NIL};
 use super::placement::{AccessProfile, CompressMode, Plan, PlacementPolicy, StructClass};
 use super::wal::{Durable, Wal, WalConfig, WalKind, WalRecord};
 use crate::model::KindCost;
-use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
+use crate::sim::{BgKind, Dur, IoKind, Rng, Service, Step, Tier, TrafficClass};
 use crate::workload::{
     KeyDist, KeyGen, OpKind, OpMix, OpWeights, ScanLen, TenantRouter, TenantSet, TenantTracker,
     ValueSize,
@@ -1200,6 +1200,7 @@ impl Service for TreeKv {
                     extra_pre: Dur::us(READ_EXTRA_PRE_US),
                     extra_post: Dur::us(READ_EXTRA_POST_US),
                     shard,
+                    class: TrafficClass::Foreground,
                 }
             }
             TreeOp::Verify {
@@ -1249,6 +1250,7 @@ impl Service for TreeKv {
                     extra_post: Dur::us(WRITE_EXTRA_POST_US),
                     // The appended block's device owns the write.
                     shard: new_block as u64,
+                    class: TrafficClass::Foreground,
                 }
             }
             TreeOp::UpdateIndex {
@@ -1489,6 +1491,7 @@ impl Service for TreeKv {
                     extra_pre: Dur::us(SCAN_EXTRA_PRE_US),
                     extra_post: Dur::us(SCAN_EXTRA_POST_US),
                     shard,
+                    class: TrafficClass::Foreground,
                 }
             }
             TreeOp::Unlock { lock, commit } => {
@@ -1514,6 +1517,7 @@ impl Service for TreeKv {
                         extra_pre: Dur::ZERO,
                         extra_post: Dur::ZERO,
                         shard: self.wal.cfg.log_shard,
+                        class: TrafficClass::Background(BgKind::WalFlush),
                     };
                 }
                 self.wal.note_poll();
@@ -1537,6 +1541,7 @@ impl Service for TreeKv {
                     extra_pre: Dur::ns(300.0),
                     extra_post: Dur::us(1.0), // sift live entries
                     shard,
+                    class: TrafficClass::Background(BgKind::Defrag),
                 }
             }
             TreeOp::DefragWrite => {
@@ -1552,6 +1557,7 @@ impl Service for TreeKv {
                     extra_pre: Dur::ns(300.0),
                     extra_post: Dur::ns(200.0),
                     shard: b as u64,
+                    class: TrafficClass::Background(BgKind::Defrag),
                 }
             }
             TreeOp::DefragPause => {

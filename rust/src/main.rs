@@ -8,7 +8,7 @@
 //! Experiments: fig3 fig10 fig11micro fig11kvs fig12 fig14 fig15 fig16
 //!              fig17 fig18 table6 val1404 ycsb ssdscale modelcheck
 //!              placement planner adaptive durability tenants ablation
-//!              compress
+//!              compress interference
 //! (The offline image has no argument-parsing crate; parsing is by hand.)
 //!
 //! `modelcheck` validates the Θ_scan-extended analytic model against the
@@ -49,13 +49,20 @@
 //! buy, the joint plan folds to the uncompressed plan bit-identically at a
 //! loose budget, the ratio-1.0 passthrough is bit-identical to compression
 //! off, and the t_cpu-extended Eq 14 stays within its documented band.
+//! `interference` drives lsmkv compaction storms against YCSB A foreground
+//! traffic under the fg/bg bandwidth-sharing policies and exits non-zero
+//! unless the storm depresses foreground throughput on shared servers, the
+//! device's per-class lanes match the store's own flush/compaction byte
+//! ledger exactly, the idle arm is background-free, `Cap{0.5}` recovers a
+//! documented fraction of the foreground IO-p99 inflation (monotone in the
+//! cap), and the Eq 14 interference term holds its documented band.
 
 use cxlkvs::coordinator::experiments::{self, ModelBackend};
 
 const EXPERIMENTS: &[&str] = &[
     "fig3", "fig10", "fig11micro", "fig11kvs", "fig12", "fig14", "fig15", "fig16", "fig17",
     "fig18", "table6", "val1404", "ycsb", "ssdscale", "modelcheck", "placement", "planner",
-    "adaptive", "durability", "tenants", "ablation", "compress",
+    "adaptive", "durability", "tenants", "ablation", "compress", "interference",
 ];
 
 fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
@@ -174,6 +181,20 @@ fn run_one(name: &str, backend: &mut ModelBackend, fast: bool) -> bool {
                      uncompressed with nothing to buy, joint plan not folding to \
                      off at a loose budget, ratio-1.0 passthrough not bit-identical, \
                      or t_cpu-extended model drift — see the GATE FAILED notes)"
+                );
+                std::process::exit(1);
+            }
+        }
+        "interference" => {
+            let (r, ok) = experiments::interference(fast);
+            r.print();
+            if !ok {
+                eprintln!(
+                    "interference: a traffic-class gate failed (no storm bite on \
+                     shared servers, device lanes not matching the store's \
+                     flush/compaction ledger, background IO in the idle arm, cap \
+                     not recovering fg io_p99 or non-monotone, or Eq 14 \
+                     interference-term drift — see the GATE FAILED notes)"
                 );
                 std::process::exit(1);
             }

@@ -9,7 +9,7 @@
 //! and `T_sw` via Eq 3; `m: 0` gives the IO-only benchmark used to estimate
 //! `T_IO^pre`/`T_IO^post`.
 
-use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier};
+use crate::sim::{Dur, IoKind, Rng, Service, Step, Tier, TrafficClass};
 
 /// Microbenchmark parameters (one §4.1.2 combination).
 #[derive(Debug, Clone)]
@@ -142,6 +142,7 @@ impl Service for Microbench {
                     bytes: self.cfg.io_bytes,
                     extra_pre: self.cfg.extra_pre,
                     extra_post: self.cfg.extra_post,
+                    class: TrafficClass::Foreground,
                     // The op's chain position doubles as its block address:
                     // uniform across the array, no extra RNG draw.
                     shard: op.cur as u64,

@@ -53,6 +53,49 @@
 //! fanout, measured hit ratios); `cxlkvs run modelcheck` and
 //! `tests/model_vs_sim.rs` validate the composed prediction against the
 //! simulator per store × workload × latency.
+//!
+//! # The foreground/background interference term
+//!
+//! Real SSD KV stores spend a large share of `R_IO`/`B_IO` on background
+//! work — compaction, memtable flush, value-log defragmentation, WAL
+//! flushes (the `sim::ssd::TrafficClass` lanes). Let `w_bg` be background
+//! bytes and `s_bg` background IOs generated **per completed foreground
+//! operation** (steady state: compaction debt is proportional to the write
+//! rate, so per-op normalization is well-defined). Two sharing regimes,
+//! matching `sim::ssd::BgShare`:
+//!
+//! **Shared servers** (`BgShare::None` / `Weighted`, `bg_share = 0`): every
+//! class draws from the same device servers, so background traffic joins
+//! the aggregate floors additively — the direct generalization of PR 7's
+//! `w_log`/`s_log` WAL terms, which are now just the WAL lane of the same
+//! ledger:
+//!
+//! ```text
+//! Θ⁻¹ ≥ (S·r_retry + s_log + s_bg) / (n_ssd·R_IO)
+//! Θ⁻¹ ≥ (S·A_IO    + w_log + w_bg) / (n_ssd·B_IO)
+//! ```
+//!
+//! **Capacity partition** (`BgShare::Cap{frac}`, `bg_share = frac > 0`):
+//! the device splits its rate servers — background runs on a dedicated
+//! `frac·R_IO`/`frac·B_IO` pair, foreground keeps `(1-frac)` of each. Per
+//! foreground op the fg partition must serve its own claim and the bg
+//! partition must *keep up* with the bg debt that op generates (or the
+//! backlog diverges), so the floors become a max of two drain rates. Log
+//! traffic rides the bg partition (WAL flushes are tagged
+//! `Background(WalFlush)` and the device routes by tag):
+//!
+//! ```text
+//! Θ⁻¹ ≥ max( S·r_retry / (1-f),  (s_log + s_bg) / f ) / (n_ssd·R_IO)
+//! Θ⁻¹ ≥ max( S·A_IO    / (1-f),  (w_log + w_bg) / f ) / (n_ssd·B_IO)
+//! ```
+//!
+//! The cap trades ceilings for isolation: foreground's floor rises by
+//! `1/(1-f)` (worse peak throughput) but becomes *independent of the
+//! background burst size* — a compaction storm inflates `w_bg` and under
+//! shared servers drags the foreground floor with it, while under `Cap`
+//! only the bg keep-up term moves. That is exactly the p99-vs-throughput
+//! trade `cxlkvs run interference` measures. With `w_bg = s_bg = 0` and
+//! `bg_share = 0` everything reduces to the PR 7 model bit-for-bit.
 
 use super::analytic::{theta_mem_recip, OpParams, SysParams};
 
@@ -96,6 +139,20 @@ pub struct ExtParams {
     /// transient-error windows re-submit failed IOs, consuming device IOPS
     /// without advancing any operation. `1.0` = fault-free.
     pub retry_factor: f64,
+    /// Non-WAL background bytes per (whole) foreground KV operation —
+    /// compaction + flush + defrag traffic (`w_bg = bg_bytes/ops`). Joins
+    /// the bandwidth floor per the module docs' interference derivation.
+    /// `0.0` = no background work; existing results are unchanged.
+    pub w_bg: f64,
+    /// Non-WAL background IOs per (whole) foreground KV operation
+    /// (`s_bg = bg_ios/ops`) — the IOPS-side interference term.
+    pub s_bg: f64,
+    /// Background capacity fraction `f` of `sim::ssd::BgShare::Cap{frac}`:
+    /// `0.0` models shared servers (`None`/`Weighted` — background joins
+    /// the floors additively); `f > 0` models the static partition
+    /// (foreground floors divided by `1-f`, background keep-up floors
+    /// divided by `f`). Clamped like the device to `[1/64, 63/64]`.
+    pub bg_share: f64,
 }
 
 impl ExtParams {
@@ -115,6 +172,9 @@ impl ExtParams {
             w_log: 0.0,
             s_log: 0.0,
             retry_factor: 1.0,
+            w_bg: 0.0,
+            s_bg: 0.0,
+            bg_share: 0.0,
         }
     }
 
@@ -126,6 +186,18 @@ impl ExtParams {
         self.w_log = w_log.max(0.0);
         self.s_log = s_log.max(0.0);
         self.retry_factor = retry_factor.max(1.0);
+        self
+    }
+
+    /// Attach the interference terms (module docs): per-op background bytes
+    /// `w_bg`, per-op background IOs `s_bg` (both from measured per-class
+    /// device lanes or predicted amplification), and the `BgShare` capacity
+    /// fraction `bg_share` (`0.0` = shared servers, `BgShare::Cap{frac}` →
+    /// `frac`). Zeros recover the background-free model bit-for-bit.
+    pub fn with_bg_traffic(mut self, w_bg: f64, s_bg: f64, bg_share: f64) -> ExtParams {
+        self.w_bg = w_bg.max(0.0);
+        self.s_bg = s_bg.max(0.0);
+        self.bg_share = bg_share.clamp(0.0, 63.0 / 64.0);
         self
     }
 }
@@ -280,8 +352,29 @@ fn memonly_recip(m: f64, t_mem: f64, l_mem: f64, ext: &ExtParams, sys: &SysParam
 pub fn theta_extended_recip(op: &OpParams, l_mem: f64, ext: &ExtParams, sys: &SysParams) -> f64 {
     let n_ssd = ext.n_ssd.max(1.0);
     let retry = ext.retry_factor.max(1.0);
-    let bw_floor = (ext.s * ext.a_io + ext.w_log) / (ext.b_io * n_ssd);
-    let iops_floor = (ext.s * retry + ext.s_log) / (ext.r_io * n_ssd);
+    // The interference generalization (module docs): foreground claims and
+    // the per-op background debt (log + compaction/flush/defrag lanes)
+    // either share the device servers additively (`bg_share = 0`) or drain
+    // through a static capacity partition (`bg_share = f > 0`), where the
+    // binding floor is whichever partition keeps up worse. Defaults
+    // (`w_bg = s_bg = 0`, `bg_share = 0`) reduce to the PR 7 formulas
+    // bit-for-bit: `fg + (w_log + 0.0)` is the same f64 sum.
+    let fg_bw = ext.s * ext.a_io;
+    let fg_iops = ext.s * retry;
+    let bg_bw = ext.w_log + ext.w_bg;
+    let bg_iops = ext.s_log + ext.s_bg;
+    let (bw_floor, iops_floor) = if ext.bg_share > 0.0 {
+        let f = ext.bg_share.clamp(1.0 / 64.0, 63.0 / 64.0);
+        (
+            (fg_bw / (1.0 - f)).max(bg_bw / f) / (ext.b_io * n_ssd),
+            (fg_iops / (1.0 - f)).max(bg_iops / f) / (ext.r_io * n_ssd),
+        )
+    } else {
+        (
+            (fg_bw + bg_bw) / (ext.b_io * n_ssd),
+            (fg_iops + bg_iops) / (ext.r_io * n_ssd),
+        )
+    };
     if ext.s <= S_EPS {
         let mem = memonly_recip(op.m, op.t_mem, l_mem, ext, sys);
         return mem.max(bw_floor).max(iops_floor);
@@ -1103,6 +1196,73 @@ mod tests {
 
     fn memonly_recip_probe(ext: &ExtParams, sys: &SysParams) -> f64 {
         op().m * theta_mem_recip(op().t_mem, 0.1, sys) + ext.eps * op().m * 0.1
+    }
+
+    #[test]
+    fn bg_traffic_widens_the_shared_floors() {
+        let sys = sys();
+        // IOPS-bound baseline at DRAM-class latency.
+        let base = ExtParams {
+            r_io: 0.075,
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        };
+        let clean = theta_extended_recip(&op(), 0.1, &base, &sys);
+        assert!((clean - 1.0 / 0.075).abs() < 1e-9);
+        // Shared servers: s_bg joins additively, like s_log.
+        let shared = base.with_bg_traffic(0.0, 0.5, 0.0);
+        let r = theta_extended_recip(&op(), 0.1, &shared, &sys);
+        assert!((r - 1.5 / 0.075).abs() < 1e-9, "r={r}");
+        // ...and composes with the WAL terms into one ledger.
+        let both = base.with_log_traffic(0.0, 0.25, 1.0).with_bg_traffic(0.0, 0.5, 0.0);
+        let rb = theta_extended_recip(&op(), 0.1, &both, &sys);
+        assert!((rb - 1.75 / 0.075).abs() < 1e-9, "rb={rb}");
+        // Bandwidth side: per-op bg bytes join S·A_IO against n_ssd·B_IO.
+        let bw = ExtParams {
+            a_io: 128.0 * 1024.0,
+            b_io: 2_500.0,
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        }
+        .with_bg_traffic(64.0 * 1024.0, 0.0, 0.0);
+        let rbw = theta_extended_recip(&op(), 0.1, &bw, &sys);
+        assert!((rbw - (128.0 + 64.0) * 1024.0 / 2_500.0).abs() < 1e-9);
+        // Zeros recover the background-free model bit-for-bit.
+        let noop = base.with_bg_traffic(0.0, 0.0, 0.0);
+        assert_eq!(theta_extended_recip(&op(), 0.1, &noop, &sys), clean);
+    }
+
+    #[test]
+    fn cap_partition_floors_trade_ceiling_for_isolation() {
+        let sys = sys();
+        let base = ExtParams {
+            r_io: 0.075,
+            b_mem: 1e12,
+            ..ExtParams::table2_example()
+        };
+        // f = 0.5, light bg debt: the fg partition binds — its floor is
+        // S/( (1-f)·R_IO ) = 2/R_IO.
+        let capped = base.with_bg_traffic(0.0, 0.1, 0.5);
+        let r = theta_extended_recip(&op(), 0.1, &capped, &sys);
+        assert!((r - (1.0 / 0.5) / 0.075).abs() < 1e-9, "fg-bound: {r}");
+        // Heavy bg debt: the bg keep-up term binds — s_bg/(f·R_IO).
+        let storm = base.with_bg_traffic(0.0, 4.0, 0.5);
+        let rs = theta_extended_recip(&op(), 0.1, &storm, &sys);
+        assert!((rs - (4.0 / 0.5) / 0.075).abs() < 1e-9, "bg-bound: {rs}");
+        // Isolation: under shared servers the storm drags the whole floor
+        // (S + s_bg); under Cap the fg claim is storm-independent until the
+        // keep-up term crosses it.
+        let shared_storm = base.with_bg_traffic(0.0, 4.0, 0.0);
+        let rss = theta_extended_recip(&op(), 0.1, &shared_storm, &sys);
+        assert!((rss - 5.0 / 0.075).abs() < 1e-9);
+        // WAL traffic rides the bg partition under Cap.
+        let logged = base.with_log_traffic(0.0, 1.5, 1.0).with_bg_traffic(0.0, 1.5, 0.5);
+        let rl = theta_extended_recip(&op(), 0.1, &logged, &sys);
+        assert!((rl - (3.0 / 0.5) / 0.075).abs() < 1e-9, "log joins bg: {rl}");
+        // Degenerate fractions clamp instead of dividing by zero.
+        let c = base.with_bg_traffic(1.0, 1.0, 2.0);
+        assert!(c.bg_share <= 63.0 / 64.0);
+        assert!(theta_extended_recip(&op(), 0.1, &c, &sys).is_finite());
     }
 
     #[test]

@@ -38,7 +38,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use super::mem::{MemConfig, MemDevice};
 use super::metrics::{CoreBreakdown, Metrics};
 use super::rng::Rng;
-use super::ssd::{IoError, IoKind, SsdArray, SsdConfig};
+use super::ssd::{IoError, IoKind, SsdArray, SsdConfig, TrafficClass, N_TRAFFIC_LANES};
 use super::time::{Dur, Time};
 
 /// Which memory a (simulated) pointer dereference goes to.
@@ -63,12 +63,17 @@ pub enum Step {
     /// `shard` is the placement key routing the IO to one device of the SSD
     /// array (value-log block / SSTable id / slab hash — see `sim::ssd`);
     /// with a single-device array every value routes to device 0.
+    /// `class` tags the IO foreground or background for the SSD's
+    /// bandwidth-sharing policy and the per-class accounting lanes; under
+    /// the default `BgShare::None` it is pure accounting (bit-identical
+    /// timing — see `sim::ssd`).
     Io {
         kind: IoKind,
         bytes: u32,
         extra_pre: Dur,
         extra_post: Dur,
         shard: u64,
+        class: TrafficClass,
     },
     /// Acquire a simulated lock (FIFO; blocks if held).
     Lock(u32),
@@ -425,7 +430,14 @@ impl<S: Service> Machine<S> {
         }
         done = done.max(t0 + Dur(self.cfg.dram_latency.0 * dram_lines as u64));
         for i in 0..refill_reads as u64 {
-            let d = self.ssd.submit(t0, i, IoKind::Read, io_bytes, &mut self.rng);
+            let d = self.ssd.submit(
+                t0,
+                i,
+                IoKind::Read,
+                TrafficClass::Foreground,
+                io_bytes,
+                &mut self.rng,
+            );
             done = done.max(d);
         }
         self.metrics.dram_accesses += dram_lines as u64;
@@ -681,6 +693,7 @@ impl<S: Service> Machine<S> {
                     extra_pre,
                     extra_post,
                     shard,
+                    class,
                 } => {
                     let t_pre = self.scaled(self.cfg.ssd.t_pre + extra_pre);
                     let core = &mut self.cores[core_id];
@@ -688,7 +701,8 @@ impl<S: Service> Machine<S> {
                     core.breakdown.busy += t_pre;
                     let submit = core.time;
                     let mut comp =
-                        self.ssd.submit_checked(submit, shard, kind, bytes, &mut self.rng);
+                        self.ssd
+                            .submit_checked(submit, shard, kind, class, bytes, &mut self.rng);
                     // Transient errors: resubmit after capped exponential
                     // backoff. The whole ladder resolves synchronously at
                     // submit time (the device model is a time function) but
@@ -704,9 +718,9 @@ impl<S: Service> Machine<S> {
                             let resubmit = comp.at + pol.backoff(attempt);
                             attempt += 1;
                             self.metrics.io_retries += 1;
-                            comp = self
-                                .ssd
-                                .submit_checked(resubmit, shard, kind, bytes, &mut self.rng);
+                            comp = self.ssd.submit_checked(
+                                resubmit, shard, kind, class, bytes, &mut self.rng,
+                            );
                         }
                         if comp.error.is_some() {
                             self.metrics.io_errors += 1;
@@ -725,6 +739,7 @@ impl<S: Service> Machine<S> {
                     th.op_compute += self.cfg.ssd.t_pre + extra_pre;
                     self.metrics.ios += 1;
                     self.metrics.io_latency.record(completion - submit);
+                    self.metrics.class_io_latency[class.lane()].record(completion - submit);
                     self.push_event(completion, EventKind::IoDone(tid, comp.error.is_none()));
                     return;
                 }
@@ -839,6 +854,28 @@ pub struct RunStats {
     /// Per-tenant lanes, indexed by tenant id (empty on the single-tenant
     /// path — names live in the tenant set, not the machine).
     pub tenants: Vec<TenantStats>,
+    /// Per-traffic-class IO lanes in `TrafficClass::lane()` order (fg,
+    /// compaction, flush, defrag, wal). Device-side counters are
+    /// authoritative (they count every retry attempt); `io_p99` comes from
+    /// the machine's per-class latency lanes (one record per `Step::Io`,
+    /// including the whole retry ladder).
+    pub io_classes: Vec<IoClassStats>,
+}
+
+/// One traffic class's slice of a measurement window's IO activity.
+#[derive(Debug, Clone)]
+pub struct IoClassStats {
+    /// Lane name (`TrafficClass::lane_name`): fg / compaction / flush /
+    /// defrag / wal.
+    pub name: &'static str,
+    /// Device-side IOs served for this class (retry attempts included).
+    pub ios: u64,
+    /// Device-side bytes transferred for this class.
+    pub bytes: u64,
+    /// Mean pre-service wait (queue depth + rate servers) per IO.
+    pub queue_wait_mean: Dur,
+    /// p99 of submit→completion latency as seen by the issuing thread.
+    pub io_p99: Dur,
 }
 
 /// One tenant's slice of a measurement window (see `workload::tenants`).
@@ -856,6 +893,25 @@ impl RunStats {
     fn from_metrics(m: &Metrics, window: Dur, _mem: &MemDevice, ssd: &SsdArray) -> RunStats {
         let ops = m.ops;
         let secs = window.as_secs();
+        // Every IO a store issues must be tagged: per-class device lanes sum
+        // exactly to the device totals, or an untagged call site slipped in.
+        ssd.check_flow_conservation();
+        let class_ios = ssd.class_ios();
+        let class_bytes = ssd.class_bytes();
+        let class_wait = ssd.class_wait();
+        let io_classes = (0..N_TRAFFIC_LANES)
+            .map(|lane| IoClassStats {
+                name: TrafficClass::lane_name(lane),
+                ios: class_ios[lane],
+                bytes: class_bytes[lane],
+                queue_wait_mean: if class_ios[lane] > 0 {
+                    Dur(class_wait[lane].0 / class_ios[lane])
+                } else {
+                    Dur::ZERO
+                },
+                io_p99: m.class_io_latency[lane].quantile(0.99),
+            })
+            .collect();
         RunStats {
             ops_per_sec: ops as f64 / secs,
             ops,
@@ -913,6 +969,7 @@ impl RunStats {
                     p999: h.quantile(0.999),
                 })
                 .collect(),
+            io_classes,
         }
     }
 }
@@ -965,6 +1022,7 @@ mod tests {
                     extra_pre: Dur::ZERO,
                     extra_post: Dur::ZERO,
                     shard: 0,
+                    class: TrafficClass::Foreground,
                 };
             }
             Step::Done
@@ -1334,6 +1392,7 @@ mod tests {
                         extra_pre: Dur::ZERO,
                         extra_post: Dur::ZERO,
                         shard: 0,
+                        class: TrafficClass::Foreground,
                     };
                 }
                 Step::Done

@@ -1,6 +1,7 @@
 //! Measurement-window counters and histograms collected by the machine.
 
 use super::hist::LatencyHist;
+use super::ssd::N_TRAFFIC_LANES;
 use super::time::{Dur, Time};
 
 /// Per-core time breakdown (busy = useful CPU work incl. context switches,
@@ -48,6 +49,12 @@ pub struct Metrics {
     pub op_latency: LatencyHist,
     /// Distribution of device-side IO latency.
     pub io_latency: LatencyHist,
+    /// Per-traffic-class IO-latency lanes (`TrafficClass::lane()` order:
+    /// fg, compaction, flush, defrag, wal), same bucket layout as
+    /// `io_latency` so lanes merge with it cleanly. Under `BgShare::None`
+    /// the lanes are pure accounting; under `Cap`/`Weighted` they expose
+    /// the per-class service-time split.
+    pub class_io_latency: Vec<LatencyHist>,
     /// Per-tenant completed ops (indexed by tenant id; grown on demand —
     /// empty on the single-tenant path, where `record_op` sees no tenant).
     pub tenant_ops: Vec<u64>,
@@ -78,7 +85,10 @@ impl Metrics {
             sum_compute: Dur::ZERO,
             load_wait: LatencyHist::new(),
             op_latency: Metrics::op_latency_hist(),
-            io_latency: LatencyHist::with_range(Dur::ns(100.0), Dur::ms(10.0), 120),
+            io_latency: Metrics::io_latency_hist(),
+            class_io_latency: (0..N_TRAFFIC_LANES)
+                .map(|_| Metrics::io_latency_hist())
+                .collect(),
             tenant_ops: Vec::new(),
             tenant_latency: Vec::new(),
             cores,
@@ -89,6 +99,12 @@ impl Metrics {
     /// histograms so `LatencyHist::merge`'s range check always passes).
     pub fn op_latency_hist() -> LatencyHist {
         LatencyHist::with_range(Dur::ns(10.0), Dur::ms(10.0), 160)
+    }
+
+    /// The IO-latency bucket layout (shared by the global histogram and the
+    /// per-traffic-class lanes so `LatencyHist::merge` always accepts them).
+    pub fn io_latency_hist() -> LatencyHist {
+        LatencyHist::with_range(Dur::ns(100.0), Dur::ms(10.0), 120)
     }
 
     pub fn reset(&mut self) {
@@ -139,6 +155,24 @@ mod tests {
         m.reset();
         assert_eq!(m.ops, 0);
         assert_eq!(m.op_latency.total(), 0);
+    }
+
+    #[test]
+    fn class_io_lanes_merge_with_global() {
+        let mut m = Metrics::new(1);
+        assert_eq!(m.class_io_latency.len(), N_TRAFFIC_LANES);
+        m.io_latency.record(Dur::us(12.0));
+        m.class_io_latency[0].record(Dur::us(12.0));
+        m.io_latency.record(Dur::us(40.0));
+        m.class_io_latency[1].record(Dur::us(40.0));
+        let mut merged = Metrics::io_latency_hist();
+        for h in &m.class_io_latency {
+            merged.merge(h); // same layout: must never panic
+        }
+        assert_eq!(merged.total(), m.io_latency.total());
+        assert_eq!(merged.max(), m.io_latency.max());
+        m.reset();
+        assert!(m.class_io_latency.iter().all(|h| h.total() == 0));
     }
 
     #[test]

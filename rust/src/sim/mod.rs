@@ -14,12 +14,14 @@ pub mod ssd;
 pub mod time;
 
 pub use hist::LatencyHist;
-pub use machine::{Machine, MachineConfig, RetryPolicy, RunStats, Service, Step, TenantStats, Tier};
+pub use machine::{
+    IoClassStats, Machine, MachineConfig, RetryPolicy, RunStats, Service, Step, TenantStats, Tier,
+};
 pub use mem::{MemConfig, MemDevice, TailProfile};
 pub use metrics::{CoreBreakdown, Metrics};
 pub use rng::Rng;
 pub use ssd::{
-    DeviceStats, ErrorWindow, FaultPlan, IoCompletion, IoError, IoKind, LatencySpike, SsdArray,
-    SsdConfig, SsdDevice,
+    BgKind, BgShare, DeviceStats, ErrorWindow, FaultPlan, IoCompletion, IoError, IoKind,
+    LatencySpike, SsdArray, SsdConfig, SsdDevice, TrafficClass, N_TRAFFIC_LANES,
 };
 pub use time::{Dur, Time};

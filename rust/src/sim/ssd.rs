@@ -39,6 +39,37 @@
 //! same array are unaffected. With an empty plan every check is a pure
 //! comparison and zero extra RNG draws: the fault layer is bit-invisible
 //! unless configured.
+//!
+//! ## Traffic classes and foreground/background sharing
+//!
+//! Every IO carries a [`TrafficClass`]: `Foreground` for work on a client
+//! op's critical path, `Background(BgKind)` for the store's own maintenance
+//! traffic (LSM compaction, memtable flush, value-log defrag, WAL group
+//! flushes). The device keeps per-class IO / byte / queue-wait counters —
+//! the lane sums are pinned to the untyped totals
+//! ([`SsdDevice::check_flow_conservation`]), so an untagged call site
+//! cannot silently leak traffic out of the accounting.
+//!
+//! [`BgShare`] selects how the two classes share the device's rate servers:
+//!
+//! - [`BgShare::None`] (default): both classes run through the same
+//!   IOPS/bandwidth servers at full rate — today's behavior, pinned
+//!   bit-identical (the class tag is pure accounting).
+//! - [`BgShare::Cap { frac }`](BgShare::Cap): a **static capacity
+//!   partition**. Background runs on a dedicated server pair at
+//!   `frac · R_IO` / `frac · B_IO`; foreground keeps `(1-frac)` of each.
+//!   Deterministic and trivially monotone — shrinking `frac` can only speed
+//!   foreground up — at the cost of work conservation (an idle background
+//!   partition is not lent to foreground). This is deliberate: pacing
+//!   background into the *shared* FIFO call-order servers is provably
+//!   non-monotone (a delayed background start pushes the shared server's
+//!   free-time later, which can delay subsequent foreground IOs).
+//! - [`BgShare::Weighted { fg_w, bg_w }`](BgShare::Weighted): shared
+//!   full-rate servers plus a command/byte **pacer** holding background to
+//!   its weighted share `bg_w/(fg_w+bg_w)` (a RocksDB-rate-limiter-style
+//!   throttle). Foreground is never paced, so it is work-conserving for
+//!   foreground; background is throttled to its share even when foreground
+//!   is idle.
 
 use super::rng::Rng;
 use super::time::{Dur, Time};
@@ -47,6 +78,119 @@ use super::time::{Dur, Time};
 pub enum IoKind {
     Read,
     Write,
+}
+
+/// Which background subsystem issued an IO (see [`TrafficClass`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BgKind {
+    /// LSM compaction bulk IO (merge reads + output writes).
+    Compaction,
+    /// Memtable / dirty-slab flush writes (lsmkv flush, cachekv SOC slab
+    /// refill writes).
+    Flush,
+    /// Value-log defragmentation (treekv garbage collection).
+    Defrag,
+    /// WAL group-commit flushes (`kvs::wal`).
+    WalFlush,
+}
+
+/// Number of accounting lanes: foreground plus one per [`BgKind`].
+pub const N_TRAFFIC_LANES: usize = 5;
+
+/// Who an IO belongs to: client-op critical path, or the store's own
+/// background maintenance. Pure accounting under [`BgShare::None`]; under
+/// the other policies it also selects the rate servers the IO runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficClass {
+    Foreground,
+    Background(BgKind),
+}
+
+impl TrafficClass {
+    /// Stable accounting-lane index: [Foreground, Compaction, Flush,
+    /// Defrag, WalFlush].
+    #[inline]
+    pub fn lane(self) -> usize {
+        match self {
+            TrafficClass::Foreground => 0,
+            TrafficClass::Background(BgKind::Compaction) => 1,
+            TrafficClass::Background(BgKind::Flush) => 2,
+            TrafficClass::Background(BgKind::Defrag) => 3,
+            TrafficClass::Background(BgKind::WalFlush) => 4,
+        }
+    }
+
+    #[inline]
+    pub fn is_background(self) -> bool {
+        !matches!(self, TrafficClass::Foreground)
+    }
+
+    /// Human-readable lane name for reports (index = [`TrafficClass::lane`]).
+    pub fn lane_name(lane: usize) -> &'static str {
+        ["fg", "compaction", "flush", "defrag", "wal"][lane]
+    }
+}
+
+/// Foreground/background bandwidth-sharing policy (module docs, "Traffic
+/// classes and foreground/background sharing").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BgShare {
+    /// Shared servers at full rate for both classes (the historical
+    /// behavior; the class tag is pure accounting). Default.
+    None,
+    /// Static partition: background gets a dedicated server pair at
+    /// `frac` of each rate, foreground keeps `1 - frac`. `frac` is
+    /// clamped to `[1/64, 63/64]` so neither partition degenerates.
+    Cap { frac: f64 },
+    /// Shared full-rate servers plus a background pacer at share
+    /// `bg_w / (fg_w + bg_w)` of each rate.
+    Weighted { fg_w: u32, bg_w: u32 },
+}
+
+impl Default for BgShare {
+    fn default() -> BgShare {
+        BgShare::None
+    }
+}
+
+impl BgShare {
+    /// Resolve this policy for one IO: (rate multiplier on the servers the
+    /// IO runs through, run on the dedicated background server pair?,
+    /// pacer share — 0.0 = unpaced).
+    #[inline]
+    fn route(self, background: bool) -> (f64, bool, f64) {
+        match self {
+            BgShare::None => (1.0, false, 0.0),
+            BgShare::Cap { frac } => {
+                let f = frac.clamp(1.0 / 64.0, 63.0 / 64.0);
+                if background {
+                    (f, true, 0.0)
+                } else {
+                    (1.0 - f, false, 0.0)
+                }
+            }
+            BgShare::Weighted { fg_w, bg_w } => {
+                if background {
+                    let share = (bg_w.max(1) as f64) / ((fg_w + bg_w).max(1) as f64);
+                    (1.0, false, share.clamp(1.0 / 64.0, 1.0))
+                } else {
+                    (1.0, false, 0.0)
+                }
+            }
+        }
+    }
+
+    /// The background fraction this policy reserves/paces (`0.0` for
+    /// `None`) — the `bg_share` knob the extended model consumes.
+    pub fn bg_frac(self) -> f64 {
+        match self {
+            BgShare::None => 0.0,
+            BgShare::Cap { frac } => frac.clamp(1.0 / 64.0, 63.0 / 64.0),
+            BgShare::Weighted { fg_w, bg_w } => {
+                ((bg_w.max(1) as f64) / ((fg_w + bg_w).max(1) as f64)).clamp(1.0 / 64.0, 1.0)
+            }
+        }
+    }
 }
 
 /// Why a submitted IO failed.
@@ -142,6 +286,9 @@ pub struct SsdConfig {
     /// Per-device fault schedules: device `i` runs `faults[i]` (missing
     /// entries mean fault-free). Empty by default.
     pub faults: Vec<FaultPlan>,
+    /// Foreground/background bandwidth-sharing policy. `BgShare::None`
+    /// (default) is bit-identical to the pre-traffic-class device.
+    pub bg_share: BgShare,
 }
 
 impl SsdConfig {
@@ -159,6 +306,7 @@ impl SsdConfig {
             jitter_frac: 0.15,
             n_ssd: 1,
             faults: Vec::new(),
+            bg_share: BgShare::None,
         }
     }
 
@@ -184,6 +332,7 @@ impl SsdConfig {
             jitter_frac: 0.3,
             n_ssd: 1,
             faults: Vec::new(),
+            bg_share: BgShare::None,
         }
     }
 
@@ -205,6 +354,12 @@ impl SsdConfig {
             self.faults.resize(device + 1, FaultPlan::default());
         }
         self.faults[device] = plan;
+        self
+    }
+
+    /// Set the foreground/background sharing policy.
+    pub fn with_bg_share(mut self, share: BgShare) -> SsdConfig {
+        self.bg_share = share;
         self
     }
 }
@@ -230,6 +385,12 @@ pub struct SsdDevice {
     bw_free: Time,
     /// IOPS server: time the command processor frees up.
     iops_free: Time,
+    /// Background bandwidth server: the dedicated partition channel under
+    /// [`BgShare::Cap`], the byte pacer under [`BgShare::Weighted`]; idle
+    /// under [`BgShare::None`].
+    bg_bw_free: Time,
+    /// Background IOPS server (partition / pacer counterpart of the above).
+    bg_iops_free: Time,
     /// Completion times of in-flight IOs (bounded by queue_depth), kept
     /// sorted ascending. Submissions arrive at per-core clocks that are not
     /// globally monotone, so completions are inserted in sorted position —
@@ -245,6 +406,14 @@ pub struct SsdDevice {
     attempts: u64,
     /// Sum of submit→resolve latencies (for `DeviceStats::mean_latency`).
     lat_sum: Dur,
+    /// Per-traffic-class served IOs (lane order: [`TrafficClass::lane`]).
+    /// Lane sums are pinned to `reads + writes` / `bytes` — see
+    /// [`SsdDevice::check_flow_conservation`].
+    pub class_ios: [u64; N_TRAFFIC_LANES],
+    pub class_bytes: [u64; N_TRAFFIC_LANES],
+    /// Per-class summed pre-service wait (queue-depth + rate-server +
+    /// pacer delays before the command starts service).
+    pub class_wait: [Dur; N_TRAFFIC_LANES],
 }
 
 impl SsdDevice {
@@ -261,6 +430,8 @@ impl SsdDevice {
             fault,
             bw_free: Time::ZERO,
             iops_free: Time::ZERO,
+            bg_bw_free: Time::ZERO,
+            bg_iops_free: Time::ZERO,
             inflight: std::collections::VecDeque::new(),
             reads: 0,
             writes: 0,
@@ -268,6 +439,9 @@ impl SsdDevice {
             errors: 0,
             attempts: 0,
             lat_sum: Dur::ZERO,
+            class_ios: [0; N_TRAFFIC_LANES],
+            class_bytes: [0; N_TRAFFIC_LANES],
+            class_wait: [Dur::ZERO; N_TRAFFIC_LANES],
         }
     }
 
@@ -279,18 +453,27 @@ impl SsdDevice {
 
     /// Submit one IO at time `submit`; returns its completion time. Assumes
     /// success — fault-aware callers use [`SsdDevice::submit_checked`].
-    pub fn submit(&mut self, submit: Time, kind: IoKind, bytes: u32, rng: &mut Rng) -> Time {
-        self.submit_checked(submit, kind, bytes, rng).at
+    pub fn submit(
+        &mut self,
+        submit: Time,
+        kind: IoKind,
+        class: TrafficClass,
+        bytes: u32,
+        rng: &mut Rng,
+    ) -> Time {
+        self.submit_checked(submit, kind, class, bytes, rng).at
     }
 
     /// Submit one IO at time `submit`; returns its resolution time and
-    /// error status (see [`IoCompletion`]). With an empty fault plan this
-    /// is exactly the historical `submit` path: same servers, same single
-    /// jitter draw, never an error.
+    /// error status (see [`IoCompletion`]). With an empty fault plan and
+    /// `BgShare::None` this is exactly the historical `submit` path: same
+    /// servers, same single jitter draw, never an error — whatever the
+    /// traffic class (the tag is then pure accounting).
     pub fn submit_checked(
         &mut self,
         submit: Time,
         kind: IoKind,
+        class: TrafficClass,
         bytes: u32,
         rng: &mut Rng,
     ) -> IoCompletion {
@@ -324,13 +507,36 @@ impl SsdDevice {
             start = self.inflight.pop_front().unwrap().max(start);
         }
 
-        // IOPS server.
-        if self.cfg.iops.is_finite() && self.cfg.iops > 0.0 {
-            let gap = Dur::secs(1.0 / self.cfg.iops);
-            if start < self.iops_free {
-                start = self.iops_free;
+        // Sharing policy: rate multiplier, server-pair selection, and the
+        // Weighted pacer share for this IO's class. Under `BgShare::None`
+        // this resolves to (1.0, primary servers, unpaced) — multiplying a
+        // rate by exactly 1.0 keeps the arithmetic bit-identical to the
+        // pre-traffic-class device.
+        let (rate_mult, bg_servers, pace_share) =
+            self.cfg.bg_share.route(class.is_background());
+
+        // Weighted command pacer: holds background to its share of R_IO
+        // before it reaches the shared command processor.
+        if pace_share > 0.0 && self.cfg.iops.is_finite() && self.cfg.iops > 0.0 {
+            let gap = Dur::secs(1.0 / (self.cfg.iops * pace_share));
+            if start < self.bg_iops_free {
+                start = self.bg_iops_free;
             }
-            self.iops_free = start + gap;
+            self.bg_iops_free = start + gap;
+        }
+
+        // IOPS server (the partitioned background pair under `Cap`).
+        if self.cfg.iops.is_finite() && self.cfg.iops > 0.0 {
+            let gap = Dur::secs(1.0 / (self.cfg.iops * rate_mult));
+            let free = if bg_servers {
+                &mut self.bg_iops_free
+            } else {
+                &mut self.iops_free
+            };
+            if start < *free {
+                start = *free;
+            }
+            *free = start + gap;
         }
 
         // Device latency: base, times any scheduled spike window, times
@@ -353,14 +559,29 @@ impl SsdDevice {
             base
         };
 
-        // Bandwidth server: transfer occupies bytes/B_IO of channel time.
+        // Bandwidth server: transfer occupies bytes/B_IO of channel time
+        // (the partitioned background channel under `Cap`).
         let mut done = start + lat;
         if self.cfg.bandwidth_bps.is_finite() && self.cfg.bandwidth_bps > 0.0 {
-            let xfer = Dur::secs(bytes as f64 / self.cfg.bandwidth_bps);
-            let chan_start = self.bw_free.max(start);
+            let xfer = Dur::secs(bytes as f64 / (self.cfg.bandwidth_bps * rate_mult));
+            let chan = if bg_servers {
+                &mut self.bg_bw_free
+            } else {
+                &mut self.bw_free
+            };
+            let chan_start = (*chan).max(start);
             let chan_done = chan_start + xfer;
-            self.bw_free = chan_done;
+            *chan = chan_done;
             done = done.max(chan_done);
+            // Weighted byte pacer: the transfer also claims pacer-channel
+            // time at the background share of B_IO.
+            if pace_share > 0.0 {
+                let xfer_pace = Dur::secs(bytes as f64 / (self.cfg.bandwidth_bps * pace_share));
+                let p_start = self.bg_bw_free.max(start);
+                let p_done = p_start + xfer_pace;
+                self.bg_bw_free = p_done;
+                done = done.max(p_done);
+            }
         }
 
         // Sorted insert (equivalent to push_back when completions happen to
@@ -374,6 +595,10 @@ impl SsdDevice {
         self.bytes += bytes as u64;
         self.attempts += 1;
         self.lat_sum += done - submit;
+        let lane = class.lane();
+        self.class_ios[lane] += 1;
+        self.class_bytes[lane] += bytes as u64;
+        self.class_wait[lane] += start - submit;
 
         // Transient-error window: the attempt occupied the servers above
         // (a failed read costs its latency); the draw happens only for
@@ -408,6 +633,27 @@ impl SsdDevice {
         self.errors = 0;
         self.attempts = 0;
         self.lat_sum = Dur::ZERO;
+        self.class_ios = [0; N_TRAFFIC_LANES];
+        self.class_bytes = [0; N_TRAFFIC_LANES];
+        self.class_wait = [Dur::ZERO; N_TRAFFIC_LANES];
+    }
+
+    /// Flow-conservation invariant: the per-class lanes must sum exactly to
+    /// the untyped served totals. Every served IO increments exactly one
+    /// lane, so a violation means a counting path bypassed the class
+    /// accounting — panic loudly rather than report skewed lanes.
+    pub fn check_flow_conservation(&self) {
+        let lane_ios: u64 = self.class_ios.iter().sum();
+        let lane_bytes: u64 = self.class_bytes.iter().sum();
+        assert_eq!(
+            lane_ios,
+            self.reads + self.writes,
+            "traffic-class IO lanes out of sync with device totals"
+        );
+        assert_eq!(
+            lane_bytes, self.bytes,
+            "traffic-class byte lanes out of sync with device totals"
+        );
     }
 }
 
@@ -453,10 +699,11 @@ impl SsdArray {
         submit: Time,
         shard: u64,
         kind: IoKind,
+        class: TrafficClass,
         bytes: u32,
         rng: &mut Rng,
     ) -> Time {
-        self.submit_checked(submit, shard, kind, bytes, rng).at
+        self.submit_checked(submit, shard, kind, class, bytes, rng).at
     }
 
     /// Submit one IO routed by `shard`, with fault reporting. When the
@@ -471,6 +718,7 @@ impl SsdArray {
         submit: Time,
         shard: u64,
         kind: IoKind,
+        class: TrafficClass,
         bytes: u32,
         rng: &mut Rng,
     ) -> IoCompletion {
@@ -485,7 +733,7 @@ impl SsdArray {
                 }
             }
         }
-        self.devices[d].submit_checked(submit, kind, bytes, rng)
+        self.devices[d].submit_checked(submit, kind, class, bytes, rng)
     }
 
     pub fn reads(&self) -> u64 {
@@ -502,6 +750,58 @@ impl SsdArray {
 
     pub fn errors(&self) -> u64 {
         self.devices.iter().map(|d| d.errors).sum()
+    }
+
+    /// Array-wide per-traffic-class served IOs (lane order:
+    /// [`TrafficClass::lane`]).
+    pub fn class_ios(&self) -> [u64; N_TRAFFIC_LANES] {
+        let mut out = [0u64; N_TRAFFIC_LANES];
+        for d in &self.devices {
+            for (o, v) in out.iter_mut().zip(d.class_ios.iter()) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Array-wide per-traffic-class bytes.
+    pub fn class_bytes(&self) -> [u64; N_TRAFFIC_LANES] {
+        let mut out = [0u64; N_TRAFFIC_LANES];
+        for d in &self.devices {
+            for (o, v) in out.iter_mut().zip(d.class_bytes.iter()) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Array-wide per-traffic-class summed pre-service wait.
+    pub fn class_wait(&self) -> [Dur; N_TRAFFIC_LANES] {
+        let mut out = [Dur::ZERO; N_TRAFFIC_LANES];
+        for d in &self.devices {
+            for (o, v) in out.iter_mut().zip(d.class_wait.iter()) {
+                *o += *v;
+            }
+        }
+        out
+    }
+
+    /// Total background-lane IOs (every lane except foreground).
+    pub fn bg_ios(&self) -> u64 {
+        self.class_ios()[1..].iter().sum()
+    }
+
+    /// Total background-lane bytes.
+    pub fn bg_bytes(&self) -> u64 {
+        self.class_bytes()[1..].iter().sum()
+    }
+
+    /// Assert the per-class lanes sum to the untyped totals on every
+    /// device (see [`SsdDevice::check_flow_conservation`]).
+    pub fn check_flow_conservation(&self) {
+        for d in &self.devices {
+            d.check_flow_conservation();
+        }
     }
 
     /// Per-device total IO counts (reads + writes), for balance reporting.
@@ -525,6 +825,8 @@ impl SsdArray {
 mod tests {
     use super::*;
 
+    const FG: TrafficClass = TrafficClass::Foreground;
+
     #[test]
     fn jitter_symmetric_and_bounded() {
         let mut d = SsdDevice::new(SsdConfig {
@@ -538,7 +840,7 @@ mod tests {
         for i in 0..n {
             // Space submissions so the queue-depth server stays idle.
             let t = Time::ZERO + Dur::us(20.0) * i;
-            let done = d.submit(t, IoKind::Read, 512, &mut rng);
+            let done = d.submit(t, IoKind::Read, FG, 512, &mut rng);
             let lat = (done - t).as_us();
             assert!((8.5..=11.5).contains(&lat), "lat {lat}");
             sum += lat;
@@ -555,7 +857,7 @@ mod tests {
         });
         let mut rng = Rng::new(1);
         let t0 = Time::ZERO + Dur::us(100.0);
-        let done = d.submit(t0, IoKind::Read, 4096, &mut rng);
+        let done = d.submit(t0, IoKind::Read, FG, 4096, &mut rng);
         assert_eq!(done, t0 + Dur::us(10.0));
         assert_eq!(d.reads, 1);
     }
@@ -572,9 +874,9 @@ mod tests {
         let mut d = SsdDevice::new(cfg);
         let mut rng = Rng::new(1);
         let t0 = Time::ZERO;
-        let c1 = d.submit(t0, IoKind::Read, 512, &mut rng);
-        let c2 = d.submit(t0, IoKind::Read, 512, &mut rng);
-        let c3 = d.submit(t0, IoKind::Read, 512, &mut rng);
+        let c1 = d.submit(t0, IoKind::Read, FG, 512, &mut rng);
+        let c2 = d.submit(t0, IoKind::Read, FG, 512, &mut rng);
+        let c3 = d.submit(t0, IoKind::Read, FG, 512, &mut rng);
         assert_eq!(c2 - c1, Dur::us(1.0));
         assert_eq!(c3 - c2, Dur::us(1.0));
     }
@@ -591,8 +893,8 @@ mod tests {
         let mut d = SsdDevice::new(cfg);
         let mut rng = Rng::new(1);
         let t0 = Time::ZERO;
-        let c1 = d.submit(t0, IoKind::Read, 1_000_000, &mut rng);
-        let c2 = d.submit(t0, IoKind::Read, 1_000_000, &mut rng);
+        let c1 = d.submit(t0, IoKind::Read, FG, 1_000_000, &mut rng);
+        let c2 = d.submit(t0, IoKind::Read, FG, 1_000_000, &mut rng);
         assert_eq!(c1, t0 + Dur::ms(1.0));
         assert_eq!(c2, t0 + Dur::ms(2.0));
     }
@@ -609,10 +911,10 @@ mod tests {
         let mut d = SsdDevice::new(cfg);
         let mut rng = Rng::new(1);
         let t0 = Time::ZERO;
-        let c1 = d.submit(t0, IoKind::Read, 512, &mut rng);
-        let _c2 = d.submit(t0, IoKind::Read, 512, &mut rng);
+        let c1 = d.submit(t0, IoKind::Read, FG, 512, &mut rng);
+        let _c2 = d.submit(t0, IoKind::Read, FG, 512, &mut rng);
         // Third IO at t0 with QD=2 waits for c1 to finish.
-        let c3 = d.submit(t0, IoKind::Read, 512, &mut rng);
+        let c3 = d.submit(t0, IoKind::Read, FG, 512, &mut rng);
         assert_eq!(c3, c1 + Dur::us(10.0));
     }
 
@@ -632,16 +934,16 @@ mod tests {
         };
         let mut d = SsdDevice::new(cfg);
         let mut rng = Rng::new(1);
-        let w = d.submit(Time::ZERO, IoKind::Write, 512, &mut rng);
+        let w = d.submit(Time::ZERO, IoKind::Write, FG, 512, &mut rng);
         assert_eq!(w, Time::ZERO + Dur::us(100.0));
         // A read submitted 1us later (by another core) completes at 11us —
         // long before the write.
-        let r1 = d.submit(Time::ZERO + Dur::us(1.0), IoKind::Read, 512, &mut rng);
+        let r1 = d.submit(Time::ZERO + Dur::us(1.0), IoKind::Read, FG, 512, &mut rng);
         assert_eq!(r1, Time::ZERO + Dur::us(11.0));
         // Queue full: the third IO waits for the read slot at 11us and
         // completes at 21us. The old pop_front-of-submission-order queue
         // waited on the 100us write instead (completion at 110us).
-        let r2 = d.submit(Time::ZERO + Dur::us(2.0), IoKind::Read, 512, &mut rng);
+        let r2 = d.submit(Time::ZERO + Dur::us(2.0), IoKind::Read, FG, 512, &mut rng);
         assert_eq!(r2, Time::ZERO + Dur::us(21.0));
     }
 
@@ -659,12 +961,12 @@ mod tests {
         };
         let mut d = SsdDevice::new(cfg);
         let mut rng = Rng::new(1);
-        let w = d.submit(Time::ZERO + Dur::us(5.0), IoKind::Write, 512, &mut rng);
+        let w = d.submit(Time::ZERO + Dur::us(5.0), IoKind::Write, FG, 512, &mut rng);
         assert_eq!(w, Time::ZERO + Dur::us(105.0));
         // Earlier-clock core submits at 1us: slot frees at 105us.
-        let r1 = d.submit(Time::ZERO + Dur::us(1.0), IoKind::Read, 512, &mut rng);
+        let r1 = d.submit(Time::ZERO + Dur::us(1.0), IoKind::Read, FG, 512, &mut rng);
         assert_eq!(r1, Time::ZERO + Dur::us(115.0));
-        let r2 = d.submit(Time::ZERO + Dur::us(2.0), IoKind::Read, 512, &mut rng);
+        let r2 = d.submit(Time::ZERO + Dur::us(2.0), IoKind::Read, FG, 512, &mut rng);
         assert_eq!(r2, Time::ZERO + Dur::us(125.0));
     }
 
@@ -672,7 +974,7 @@ mod tests {
     fn write_counts() {
         let mut d = SsdDevice::new(SsdConfig::optane_array());
         let mut rng = Rng::new(1);
-        d.submit(Time::ZERO, IoKind::Write, 2048, &mut rng);
+        d.submit(Time::ZERO, IoKind::Write, FG, 2048, &mut rng);
         assert_eq!(d.writes, 1);
         assert_eq!(d.bytes, 2048);
     }
@@ -689,8 +991,8 @@ mod tests {
         for i in 0..5_000u64 {
             let t = Time::ZERO + Dur::ns(730.0) * i;
             let kind = if i % 3 == 0 { IoKind::Write } else { IoKind::Read };
-            let a = dev.submit(t, kind, 1536, &mut r1);
-            let b = arr.submit(t, i.wrapping_mul(0x9e37), kind, 1536, &mut r2);
+            let a = dev.submit(t, kind, FG, 1536, &mut r1);
+            let b = arr.submit(t, i.wrapping_mul(0x9e37), kind, FG, 1536, &mut r2);
             assert_eq!(a, b, "io {i}");
         }
         assert_eq!(dev.reads, arr.reads());
@@ -710,8 +1012,8 @@ mod tests {
         let mut r2 = Rng::new(9);
         for i in 0..2_000u64 {
             let t = Time::ZERO + Dur::ns(900.0) * i;
-            let a = d1.submit_checked(t, IoKind::Read, 1024, &mut r1);
-            let b = d2.submit_checked(t, IoKind::Read, 1024, &mut r2);
+            let a = d1.submit_checked(t, IoKind::Read, FG, 1024, &mut r1);
+            let b = d2.submit_checked(t, IoKind::Read, FG, 1024, &mut r2);
             assert_eq!(a, b, "io {i}");
             assert!(a.is_ok());
         }
@@ -736,14 +1038,14 @@ mod tests {
         let mut d = SsdDevice::new(cfg);
         let mut rng = Rng::new(11);
         // Before the window: success.
-        let ok = d.submit_checked(Time::ZERO + Dur::us(50.0), IoKind::Read, 512, &mut rng);
+        let ok = d.submit_checked(Time::ZERO + Dur::us(50.0), IoKind::Read, FG, 512, &mut rng);
         assert!(ok.is_ok());
         // Inside: Transient, and the failed attempt still costs its latency.
-        let bad = d.submit_checked(Time::ZERO + Dur::us(150.0), IoKind::Read, 512, &mut rng);
+        let bad = d.submit_checked(Time::ZERO + Dur::us(150.0), IoKind::Read, FG, 512, &mut rng);
         assert_eq!(bad.error, Some(IoError::Transient));
         assert_eq!(bad.at, Time::ZERO + Dur::us(160.0));
         // After: success again.
-        let ok2 = d.submit_checked(Time::ZERO + Dur::us(250.0), IoKind::Read, 512, &mut rng);
+        let ok2 = d.submit_checked(Time::ZERO + Dur::us(250.0), IoKind::Read, FG, 512, &mut rng);
         assert!(ok2.is_ok());
         assert_eq!(d.errors, 1);
         assert_eq!(d.reads, 3, "failed attempts still occupy the device");
@@ -766,11 +1068,11 @@ mod tests {
         .with_fault(0, plan);
         let mut d = SsdDevice::new(cfg);
         let mut rng = Rng::new(2);
-        let fast = d.submit_checked(Time::ZERO, IoKind::Read, 512, &mut rng);
+        let fast = d.submit_checked(Time::ZERO, IoKind::Read, FG, 512, &mut rng);
         assert_eq!(fast.at, Time::ZERO + Dur::us(10.0));
-        let slow = d.submit_checked(Time::ZERO + Dur::ms(1.5), IoKind::Read, 512, &mut rng);
+        let slow = d.submit_checked(Time::ZERO + Dur::ms(1.5), IoKind::Read, FG, 512, &mut rng);
         assert_eq!(slow.at, Time::ZERO + Dur::ms(1.5) + Dur::us(100.0));
-        let after = d.submit_checked(Time::ZERO + Dur::ms(3.0), IoKind::Read, 512, &mut rng);
+        let after = d.submit_checked(Time::ZERO + Dur::ms(3.0), IoKind::Read, FG, 512, &mut rng);
         assert_eq!(after.at, Time::ZERO + Dur::ms(3.0) + Dur::us(10.0));
     }
 
@@ -785,7 +1087,7 @@ mod tests {
         let mut d = SsdDevice::new(cfg);
         let mut rng = Rng::new(13);
         let mut shadow = Rng::new(13);
-        let c = d.submit_checked(Time::ZERO + Dur::us(5.0), IoKind::Read, 512, &mut rng);
+        let c = d.submit_checked(Time::ZERO + Dur::us(5.0), IoKind::Read, FG, 512, &mut rng);
         assert_eq!(c.error, Some(IoError::DeviceDead));
         assert_eq!(c.at, Time::ZERO + Dur::us(15.0), "timeout = one read latency");
         assert_eq!(d.errors, 1);
@@ -808,7 +1110,7 @@ mod tests {
         let mut arr = SsdArray::new(cfg);
         let mut rng = Rng::new(3);
         // Shard 0 routes to the dead device 0; the array re-routes to 1.
-        let c = arr.submit_checked(Time::ZERO, 0, IoKind::Read, 512, &mut rng);
+        let c = arr.submit_checked(Time::ZERO, 0, IoKind::Read, FG, 512, &mut rng);
         assert!(c.is_ok());
         let per = arr.per_device_ios();
         assert_eq!(per, vec![0, 1], "survivor absorbed the re-routed IO");
@@ -827,7 +1129,7 @@ mod tests {
             },
         );
         let mut lone = SsdArray::new(cfg1);
-        let c = lone.submit_checked(Time::ZERO, 0, IoKind::Read, 512, &mut rng);
+        let c = lone.submit_checked(Time::ZERO, 0, IoKind::Read, FG, 512, &mut rng);
         assert_eq!(c.error, Some(IoError::DeviceDead));
     }
 
@@ -841,7 +1143,7 @@ mod tests {
         let mut arr = SsdArray::new(cfg);
         let mut rng = Rng::new(8);
         for i in 0..10u64 {
-            arr.submit(Time::ZERO + Dur::us(20.0) * i, i % 2, IoKind::Read, 4096, &mut rng);
+            arr.submit(Time::ZERO + Dur::us(20.0) * i, i % 2, IoKind::Read, FG, 4096, &mut rng);
         }
         let stats = arr.per_device_stats();
         assert_eq!(stats.len(), 2);
@@ -869,7 +1171,7 @@ mod tests {
             let mut rng = Rng::new(3);
             let mut last = Time::ZERO;
             for i in 0..80_000u64 {
-                last = last.max(arr.submit(Time::ZERO, i, IoKind::Read, 512, &mut rng));
+                last = last.max(arr.submit(Time::ZERO, i, IoKind::Read, FG, 512, &mut rng));
             }
             last.as_secs()
         };
@@ -913,10 +1215,155 @@ mod tests {
         let mut arr = SsdArray::new(cfg);
         let mut rng = Rng::new(4);
         for _ in 0..100 {
-            arr.submit(Time::ZERO, 42, IoKind::Read, 512, &mut rng);
+            arr.submit(Time::ZERO, 42, IoKind::Read, FG, 512, &mut rng);
         }
         let per = arr.per_device_ios();
         assert_eq!(per.iter().sum::<u64>(), 100);
         assert_eq!(per[2], 100, "shard 42 % 4 = 2 owns every IO");
+    }
+
+    #[test]
+    fn bg_class_under_none_is_bit_identical() {
+        // Under BgShare::None the traffic class is pure accounting: a
+        // mixed fg/bg stream must produce the same completions and RNG
+        // draw order as the same stream tagged all-foreground.
+        let cfg = SsdConfig::optane_array(); // jittered: exercises the RNG path
+        let mut d1 = SsdDevice::new(cfg.clone());
+        let mut d2 = SsdDevice::new(cfg);
+        let mut r1 = Rng::new(21);
+        let mut r2 = Rng::new(21);
+        let classes = [
+            TrafficClass::Foreground,
+            TrafficClass::Background(BgKind::Compaction),
+            TrafficClass::Background(BgKind::Flush),
+            TrafficClass::Background(BgKind::Defrag),
+            TrafficClass::Background(BgKind::WalFlush),
+        ];
+        for i in 0..5_000u64 {
+            let t = Time::ZERO + Dur::ns(640.0) * i;
+            let kind = if i % 4 == 0 { IoKind::Write } else { IoKind::Read };
+            let a = d1.submit(t, kind, classes[(i % 5) as usize], 2048, &mut r1);
+            let b = d2.submit(t, kind, FG, 2048, &mut r2);
+            assert_eq!(a, b, "io {i}");
+        }
+        assert_eq!(r1.next_u64(), r2.next_u64(), "RNG streams must stay in sync");
+        // ... while the lanes differ: d1 spread its IOs, d2 put all in fg.
+        assert_eq!(d1.class_ios.iter().sum::<u64>(), 5_000);
+        assert_eq!(d1.class_ios[0], 1_000);
+        assert_eq!(d2.class_ios[0], 5_000);
+        d1.check_flow_conservation();
+        d2.check_flow_conservation();
+    }
+
+    #[test]
+    fn lane_counters_conserve_flow() {
+        let cfg = SsdConfig {
+            jitter_frac: 0.0,
+            n_ssd: 2,
+            ..SsdConfig::optane_array()
+        };
+        let mut arr = SsdArray::new(cfg);
+        let mut rng = Rng::new(6);
+        for i in 0..30u64 {
+            let class = match i % 3 {
+                0 => FG,
+                1 => TrafficClass::Background(BgKind::Compaction),
+                _ => TrafficClass::Background(BgKind::WalFlush),
+            };
+            arr.submit(Time::ZERO + Dur::us(30.0) * i, i, IoKind::Write, class, 4096, &mut rng);
+        }
+        let ios = arr.class_ios();
+        let bytes = arr.class_bytes();
+        assert_eq!(ios, [10, 10, 0, 0, 10]);
+        assert_eq!(ios.iter().sum::<u64>(), arr.reads() + arr.writes());
+        assert_eq!(bytes.iter().sum::<u64>(), arr.bytes());
+        assert_eq!(arr.bg_ios(), 20);
+        assert_eq!(arr.bg_bytes(), 20 * 4096);
+        arr.check_flow_conservation();
+        // Uncontended stream: no pre-service waits accumulate.
+        assert_eq!(arr.class_wait()[0], Dur::ZERO);
+    }
+
+    #[test]
+    fn cap_partitions_rate_servers() {
+        // Cap{0.5} at 1 MIOPS: each class gets its own 0.5 MIOPS command
+        // server (2 us gaps), and background never queues foreground.
+        let cfg = SsdConfig {
+            iops: 1e6,
+            bandwidth_bps: f64::INFINITY,
+            jitter_frac: 0.0,
+            bg_share: BgShare::Cap { frac: 0.5 },
+            ..SsdConfig::optane_array()
+        };
+        let mut d = SsdDevice::new(cfg);
+        let mut rng = Rng::new(1);
+        let t0 = Time::ZERO;
+        let bg = TrafficClass::Background(BgKind::Compaction);
+        // Load the background partition first...
+        let b1 = d.submit(t0, IoKind::Write, bg, 512, &mut rng);
+        let b2 = d.submit(t0, IoKind::Write, bg, 512, &mut rng);
+        assert_eq!(b2 - b1, Dur::us(2.0), "bg partition at frac*R_IO");
+        // ...then foreground: served immediately on its own pair.
+        let f1 = d.submit(t0, IoKind::Read, FG, 512, &mut rng);
+        let f2 = d.submit(t0, IoKind::Read, FG, 512, &mut rng);
+        assert_eq!(f1, t0 + Dur::us(10.0), "fg start unaffected by bg load");
+        assert_eq!(f2 - f1, Dur::us(2.0), "fg partition at (1-frac)*R_IO");
+    }
+
+    #[test]
+    fn cap_fg_makespan_monotone_in_frac() {
+        // Shrinking the background cap can only speed foreground up: the
+        // foreground makespan of a fixed interleaved stream must be
+        // non-increasing as frac shrinks.
+        let run = |frac: f64| {
+            let cfg = SsdConfig {
+                bandwidth_bps: 1e9,
+                iops: f64::INFINITY,
+                jitter_frac: 0.0,
+                queue_depth: u32::MAX,
+                bg_share: BgShare::Cap { frac },
+                ..SsdConfig::optane_array()
+            };
+            let mut d = SsdDevice::new(cfg);
+            let mut rng = Rng::new(5);
+            let bg = TrafficClass::Background(BgKind::Compaction);
+            let mut last_fg = Time::ZERO;
+            for i in 0..200u64 {
+                let t = Time::ZERO + Dur::us(1.0) * i;
+                d.submit(t, IoKind::Write, bg, 32 * 1024, &mut rng);
+                last_fg = last_fg.max(d.submit(t, IoKind::Read, FG, 4096, &mut rng));
+            }
+            last_fg
+        };
+        let m25 = run(0.25);
+        let m50 = run(0.5);
+        let m75 = run(0.75);
+        assert!(m25 <= m50, "frac 0.25 fg makespan {m25:?} > 0.5's {m50:?}");
+        assert!(m50 <= m75, "frac 0.5 fg makespan {m50:?} > 0.75's {m75:?}");
+        assert!(m25 < m75, "caps must actually change fg service");
+    }
+
+    #[test]
+    fn weighted_paces_background_only() {
+        // Weighted{3,1} at 1 MIOPS: background commands are paced to a
+        // 0.25 MIOPS share (4 us apart); foreground is never paced.
+        let cfg = SsdConfig {
+            iops: 1e6,
+            bandwidth_bps: f64::INFINITY,
+            jitter_frac: 0.0,
+            bg_share: BgShare::Weighted { fg_w: 3, bg_w: 1 },
+            ..SsdConfig::optane_array()
+        };
+        let mut d = SsdDevice::new(cfg);
+        let mut rng = Rng::new(7);
+        let t0 = Time::ZERO;
+        let f1 = d.submit(t0, IoKind::Read, FG, 512, &mut rng);
+        let f2 = d.submit(t0, IoKind::Read, FG, 512, &mut rng);
+        assert_eq!(f1, t0 + Dur::us(10.0));
+        assert_eq!(f2 - f1, Dur::us(1.0), "fg at the full shared R_IO");
+        let bg = TrafficClass::Background(BgKind::Defrag);
+        let b1 = d.submit(t0 + Dur::us(2.0), IoKind::Write, bg, 512, &mut rng);
+        let b2 = d.submit(t0 + Dur::us(2.0), IoKind::Write, bg, 512, &mut rng);
+        assert_eq!(b2 - b1, Dur::us(4.0), "bg paced to bg_w/(fg_w+bg_w)");
     }
 }
